@@ -1,0 +1,30 @@
+//! Shared bench plumbing (criterion is not vendored; these binaries are
+//! `harness = false` drivers over `recycle_serve::bench`).
+
+use std::path::{Path, PathBuf};
+
+/// Artifact dir when built (None -> benches degrade to the mock model).
+pub fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+pub fn data_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("data")
+}
+
+pub fn results_dir() -> PathBuf {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("results");
+    std::fs::create_dir_all(&dir).ok();
+    dir
+}
+
+/// `--quick` flag: fewer repetitions (used by `make test`-style smoke runs).
+pub fn quick() -> bool {
+    std::env::args().any(|a| a == "--quick")
+}
+
+pub fn banner(name: &str, what: &str) {
+    println!("\n######## bench: {name} ########");
+    println!("# regenerates: {what}\n");
+}

@@ -1,0 +1,52 @@
+//! E2 — the paper's §5.2 figure: per-prompt latency, baseline vs recycled
+//! (printed as two aligned series + a table; CSV in results/).
+
+mod common;
+
+use recycle_serve::bench::{paper_cache_prompts, paper_test_prompts, run_comparison,
+                           EvalOptions, Table, Workload};
+use recycle_serve::runtime::Runtime;
+
+fn main() {
+    common::banner("fig_latency", "paper §5.2 per-prompt latency comparison");
+    let Some(artifacts) = common::artifacts_dir() else {
+        println!("artifacts/ missing — run `make artifacts`; skipping");
+        return;
+    };
+    let data = common::data_dir();
+    let workload = Workload {
+        cache_prompts: paper_cache_prompts(&data),
+        test_prompts: paper_test_prompts(&data),
+    };
+    let rt0 = Runtime::load(&artifacts).expect("artifacts");
+    let tokenizer = rt0.tokenizer();
+    drop(rt0);
+    let opts = EvalOptions {
+        max_new_tokens: 32,
+        ..Default::default()
+    };
+    let report = run_comparison(
+        || Runtime::load(&artifacts).expect("reload"),
+        tokenizer,
+        &workload,
+        &opts,
+    )
+    .expect("eval");
+
+    let mut t = Table::new(&["prompt", "m toks", "k reused", "base s", "recycled s", "S %"]);
+    for (b, r) in report.baseline_rows.iter().zip(&report.recycled_rows) {
+        let s = (b.latency_s - r.latency_s) / b.latency_s * 100.0;
+        t.row(vec![
+            b.prompt.chars().take(40).collect(),
+            r.prompt_tokens.to_string(),
+            r.reused_tokens.to_string(),
+            format!("{:.4}", b.latency_s),
+            format!("{:.4}", r.latency_s),
+            format!("{s:+.1}"),
+        ]);
+    }
+    println!("{}", t.render());
+    std::fs::write(common::results_dir().join("fig_latency.csv"), t.to_csv()).ok();
+    println!("series written to results/fig_latency.csv");
+    println!("paper shape: recycled <= baseline on every prompt, biggest gaps at larger k");
+}

@@ -1,0 +1,79 @@
+//! E4 — the paper's §5.5 figure: speedup vs reuse depth, S ≈ α·k/m.
+//!
+//! Sweeps the k/m ratio at several prompt lengths m on the real model,
+//! prints the (k/m, S) series, and fits α the way the paper's empirical
+//! constant (1.2-1.5) was obtained.
+
+mod common;
+
+use recycle_serve::bench::format_row_series;
+use recycle_serve::engine::Engine;
+use recycle_serve::runtime::Runtime;
+use recycle_serve::sim::fit_alpha;
+use recycle_serve::util::timing::Samples;
+
+fn main() {
+    common::banner("fig_speedup_depth", "paper §5.5 speedup vs reuse depth + alpha fit");
+    let Some(artifacts) = common::artifacts_dir() else {
+        println!("artifacts/ missing — run `make artifacts`; skipping");
+        return;
+    };
+    let reps = if common::quick() { 1 } else { 3 };
+    let max_new = 8; // short generations isolate the encode-side effect (§3.3)
+
+    let rt = Runtime::load(&artifacts).expect("artifacts");
+    let cfg = rt.config().clone();
+    let mut engine = Engine::new(rt);
+    let v = cfg.vocab_size as u32;
+
+    let mut samples: Vec<(usize, usize, f64)> = Vec::new();
+    let mut series: Vec<(f64, f64)> = Vec::new();
+
+    for &m in &[64usize, 128, 192] {
+        // deterministic pseudo-prompt of m tokens
+        let ids: Vec<u32> = (0..m as u32).map(|i| 1 + (i * 31 + 7) % (v - 1)).collect();
+        for &ratio_pct in &[0usize, 25, 50, 75, 90] {
+            let k = m * ratio_pct / 100;
+            // median-of-reps timing for both arms
+            let mut base_s = Samples::new();
+            let mut rec_s = Samples::new();
+            for _ in 0..reps {
+                let b = engine
+                    .generate(&ids, engine.empty_kv(), 0, max_new, false)
+                    .expect("baseline");
+                base_s.push(b.latency_s);
+                if k > 0 {
+                    let mut kv = engine.empty_kv();
+                    engine.prefill(&ids[..k], &mut kv, 0).expect("warm");
+                    let r = engine.generate(&ids, kv, k, max_new, false).expect("rec");
+                    assert_eq!(r.ids, b.ids, "fidelity at k={k} m={m}");
+                    rec_s.push(r.latency_s);
+                } else {
+                    rec_s.push(b.latency_s);
+                }
+            }
+            let s = (base_s.median() - rec_s.median()) / base_s.median();
+            println!(
+                "m={m:<4} k={k:<4} k/m={:<5.2} base={:.4}s rec={:.4}s S={:+.1}%",
+                k as f64 / m as f64,
+                base_s.median(),
+                rec_s.median(),
+                s * 100.0
+            );
+            if k > 0 {
+                samples.push((k, m, s));
+            }
+            series.push((k as f64 / m as f64, s));
+        }
+    }
+
+    println!();
+    println!("{}", format_row_series("fig §5.5 (k/m, speedup fraction)", &series));
+    let alpha = fit_alpha(&samples);
+    println!("alpha fit: {alpha:.3}   (paper: 1.2-1.5; shape: S grows ~linearly in k/m)");
+
+    let csv: String = std::iter::once("k_over_m,speedup\n".to_string())
+        .chain(series.iter().map(|(x, y)| format!("{x:.4},{y:.4}\n")))
+        .collect();
+    std::fs::write(common::results_dir().join("fig_speedup_depth.csv"), csv).ok();
+}

@@ -1,0 +1,79 @@
+//! A4 — runtime microbenchmarks: the primitive costs every other number
+//! decomposes into. Used by the §Perf iteration log in EXPERIMENTS.md.
+
+mod common;
+
+use recycle_serve::config::ModelConfig;
+use recycle_serve::engine::ForwardModel;
+use recycle_serve::index::{Embedder, FlatIndex, NgramEmbedder};
+use recycle_serve::kvcache::KvRecord;
+use recycle_serve::runtime::Runtime;
+use recycle_serve::tokenizer::Tokenizer;
+use recycle_serve::util::timing::measure;
+
+fn main() {
+    common::banner("microbench", "A4 runtime primitive costs");
+    let reps = if common::quick() { 20 } else { 100 };
+
+    // --- pure-Rust primitives (no artifacts needed) ---
+    let cfg = ModelConfig::nano();
+    let emb = NgramEmbedder::new(128);
+    let text = "What is the capital of France? Also mention a nearby tourist destination.";
+    let s = measure(3, reps, || {
+        std::hint::black_box(emb.embed(text));
+    });
+    println!("ngram embed (74 chars)        : {}", s.summary_us());
+
+    let mut index = FlatIndex::new(128);
+    for i in 0..64 {
+        index.add(i, &emb.embed(&format!("prompt number {i} with words")));
+    }
+    let q = emb.embed(text);
+    let s = measure(3, reps, || {
+        std::hint::black_box(index.top_k(&q, 1));
+    });
+    println!("flat index top-1 (64 entries) : {}", s.summary_us());
+
+    let full: Vec<f32> = (0..cfg.kv_elems()).map(|i| i as f32 * 0.5).collect();
+    let tokens: Vec<u32> = (0..32).collect();
+    let s = measure(3, reps, || {
+        std::hint::black_box(KvRecord::from_full_buffer(
+            &cfg, "p", tokens.clone(), vec![1.0], &full,
+        ));
+    });
+    println!("KV trim (32 tok of 256)       : {}", s.summary_us());
+    let rec = KvRecord::from_full_buffer(&cfg, "p", tokens.clone(), vec![1.0], &full);
+    let s = measure(3, reps, || {
+        std::hint::black_box(rec.to_full_buffer(&cfg));
+    });
+    println!("KV inflate (32 tok -> full)   : {}", s.summary_us());
+
+    // --- artifact-backed primitives ---
+    let Some(artifacts) = common::artifacts_dir() else {
+        println!("\nartifacts/ missing — PJRT microbenches skipped");
+        return;
+    };
+    let rt = Runtime::load(&artifacts).expect("artifacts");
+    let rcfg = rt.config().clone();
+    let tok = Tokenizer::from_file(&artifacts.join("tokenizer.json")).expect("tok");
+
+    let s = measure(3, reps, || {
+        std::hint::black_box(tok.encode(text));
+    });
+    println!("BPE encode (74 chars)         : {}", s.summary_us());
+
+    for &c in &rcfg.chunk_sizes.clone() {
+        let toks: Vec<u32> = vec![5; c];
+        let mut kv = vec![0f32; rcfg.kv_elems()];
+        let s = measure(2, reps.min(40), || {
+            std::hint::black_box(rt.forward_chunk(&toks, c, &mut kv, 0).expect("fwd"));
+        });
+        println!("forward_chunk c={c:<3}           : {}", s.summary_us());
+    }
+
+    let ids = tok.encode(text);
+    let s = measure(2, reps.min(40), || {
+        std::hint::black_box(rt.embedder().embed_tokens(&ids).expect("embed"));
+    });
+    println!("HLO embed exec                : {}", s.summary_us());
+}

@@ -1,0 +1,101 @@
+//! Context-capacity extension demo — the paper's title claim.
+//!
+//! A multi-turn dialogue re-submits its growing transcript every turn.
+//! Without recycling, turn N re-encodes the whole transcript (O(N²) total
+//! prefill work over a conversation); with recycling, each turn re-encodes
+//! only the new text, so the *same compute budget* sustains a much longer
+//! conversation inside the fixed context window — "expanding usable
+//! context capacity".
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example context_extension
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use recycle_serve::bench::{session_workload, Table};
+use recycle_serve::config::{CacheConfig, ServerConfig};
+use recycle_serve::coordinator::Coordinator;
+use recycle_serve::engine::Engine;
+use recycle_serve::index::NgramEmbedder;
+use recycle_serve::recycler::{RecyclePolicy, Recycler};
+use recycle_serve::runtime::Runtime;
+
+fn run_conversation(
+    artifacts: PathBuf,
+    policy: RecyclePolicy,
+    turns: &[String],
+    max_new: usize,
+) -> Result<(Table, u64, f64)> {
+    let coordinator = Coordinator::spawn(
+        move || {
+            let rt = Runtime::load(&artifacts).expect("artifacts");
+            let tok = rt.tokenizer();
+            Recycler::new(
+                Engine::new(rt),
+                tok,
+                Box::new(NgramEmbedder::new(128)),
+                CacheConfig::default(),
+                policy,
+            )
+        },
+        ServerConfig::default(),
+    );
+    let mut table = Table::new(&["turn", "prompt toks", "reused", "prefilled", "latency s"]);
+    let mut total_latency = 0.0;
+    for (i, msg) in turns.iter().enumerate() {
+        let out = coordinator.chat("demo", msg, max_new)?;
+        table.row(vec![
+            (i + 1).to_string(),
+            out.prompt_tokens.to_string(),
+            out.reuse_depth.to_string(),
+            (out.prompt_tokens - out.reuse_depth).to_string(),
+            format!("{:.4}", out.latency_s),
+        ]);
+        total_latency += out.latency_s;
+    }
+    let prefilled = coordinator.stats().engine.tokens_prefilled;
+    coordinator.shutdown();
+    Ok((table, prefilled, total_latency))
+}
+
+fn main() -> Result<()> {
+    let artifacts = PathBuf::from(
+        std::env::args().nth(1).unwrap_or_else(|| "artifacts".into()),
+    );
+    anyhow::ensure!(
+        artifacts.join("manifest.json").exists(),
+        "run `make artifacts` first"
+    );
+    let turns = session_workload(5, 7);
+    let max_new = 12;
+
+    println!("=== multi-turn conversation, recycling OFF ===\n");
+    let (t_off, prefilled_off, lat_off) =
+        run_conversation(artifacts.clone(), RecyclePolicy::Off, &turns, max_new)?;
+    println!("{}", t_off.render());
+
+    println!("=== same conversation, recycling ON (strict) ===\n");
+    let (t_on, prefilled_on, lat_on) =
+        run_conversation(artifacts.clone(), RecyclePolicy::Strict, &turns, max_new)?;
+    println!("{}", t_on.render());
+
+    println!("total prompt tokens prefilled (encode work):");
+    println!("  recycling OFF: {prefilled_off}");
+    println!(
+        "  recycling ON : {prefilled_on}  ({:.1}% of baseline)",
+        100.0 * prefilled_on as f64 / prefilled_off.max(1) as f64
+    );
+    println!(
+        "total latency: OFF {lat_off:.3}s -> ON {lat_on:.3}s ({:.1}% faster)",
+        (lat_off - lat_on) / lat_off * 100.0
+    );
+    println!(
+        "\nInterpretation: the encode budget saved per turn is capacity the\n\
+         fixed context window can spend on *new* dialogue instead of\n\
+         re-encoding history — the paper's 'expanded usable context'."
+    );
+    Ok(())
+}

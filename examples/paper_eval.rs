@@ -1,0 +1,86 @@
+//! Regenerate the paper's §5 results on the real model:
+//! the §5.1 summary table plus the per-prompt series behind the three
+//! figures. Writes results/baseline.csv and results/recycled.csv exactly
+//! like the paper's notebook.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example paper_eval
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use recycle_serve::bench::{format_row_series, format_table, paper_cache_prompts,
+                           paper_test_prompts, run_comparison, EvalOptions, Workload};
+use recycle_serve::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let artifacts = PathBuf::from(
+        std::env::args().nth(1).unwrap_or_else(|| "artifacts".into()),
+    );
+    let data = PathBuf::from("data");
+    let results = PathBuf::from("results");
+    std::fs::create_dir_all(&results)?;
+
+    let rt0 = Runtime::load(&artifacts).context("run `make artifacts` first")?;
+    let tokenizer = rt0.tokenizer();
+    drop(rt0);
+
+    let workload = Workload {
+        cache_prompts: paper_cache_prompts(&data),
+        test_prompts: paper_test_prompts(&data),
+    };
+    let opts = EvalOptions {
+        max_new_tokens: 32,
+        results_dir: Some(results.clone()),
+        ..Default::default()
+    };
+    let report = run_comparison(
+        || Runtime::load(&artifacts).expect("reload artifacts"),
+        tokenizer,
+        &workload,
+        &opts,
+    )?;
+
+    // §5.1 summary table
+    println!("{}", format_table("Paper §5.1 summary (measured)", &report.summary_rows()));
+
+    // §5.2 latency figure series
+    let lat: Vec<(f64, f64)> = report
+        .baseline_rows
+        .iter()
+        .zip(&report.recycled_rows)
+        .enumerate()
+        .map(|(i, (b, _r))| (i as f64, b.latency_s))
+        .collect();
+    let lat_rec: Vec<(f64, f64)> = report
+        .recycled_rows
+        .iter()
+        .enumerate()
+        .map(|(i, r)| (i as f64, r.latency_s))
+        .collect();
+    println!("{}", format_row_series("fig §5.2 baseline latency (prompt idx, s)", &lat));
+    println!("{}", format_row_series("fig §5.2 recycled latency (prompt idx, s)", &lat_rec));
+
+    // §5.4 output-similarity figure series
+    let sim: Vec<(f64, f64)> = report
+        .comparison
+        .output_similarity
+        .iter()
+        .enumerate()
+        .map(|(i, s)| (i as f64, *s))
+        .collect();
+    println!("{}", format_row_series("fig §5.4 output similarity (prompt idx, cos)", &sim));
+
+    // §5.5 speedup-vs-depth series + alpha
+    let sd: Vec<(f64, f64)> = report
+        .speedup_samples
+        .iter()
+        .map(|&(k, m, s)| (k as f64 / m as f64, s))
+        .collect();
+    println!("{}", format_row_series("fig §5.5 speedup vs k/m (ratio, fraction)", &sd));
+    println!("alpha fit (paper: 1.2-1.5 on a T4): {:.3}", report.alpha);
+    println!("\nresults written to {}", results.display());
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Quickstart: load the AOT artifacts, serve one baseline generation and
+//! one recycled generation, and print the speedup.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use recycle_serve::config::CacheConfig;
+use recycle_serve::engine::Engine;
+use recycle_serve::index::NgramEmbedder;
+use recycle_serve::recycler::{RecyclePolicy, Recycler};
+use recycle_serve::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let rt = Runtime::load(&artifacts)
+        .with_context(|| format!("run `make artifacts` first (looked in {artifacts})"))?;
+    let tokenizer = rt.tokenizer();
+    println!(
+        "loaded model '{}' ({} layers, context {})",
+        rt.config().name,
+        rt.config().n_layer,
+        rt.config().max_seq
+    );
+
+    let mut recycler = Recycler::new(
+        Engine::new(rt),
+        Arc::clone(&tokenizer),
+        Box::new(NgramEmbedder::new(128)),
+        CacheConfig::default(),
+        RecyclePolicy::Strict,
+    );
+
+    // 1. Build the cache from one prompt (the paper's cache-construction pass).
+    let cache_prompt = "User: What is the capital of France?\nBot:";
+    recycler.warm(&[cache_prompt])?;
+    println!("\ncached: {cache_prompt:?}");
+
+    // 2. A test prompt extending the cached one: baseline vs recycled.
+    let test_prompt = "User: What is the capital of France?\nBot: The capital";
+
+    recycler.policy = RecyclePolicy::Off;
+    let baseline = recycler.generate(test_prompt, 24)?;
+    recycler.policy = RecyclePolicy::Strict;
+    let recycled = recycler.generate(test_prompt, 24)?;
+
+    println!("\nbaseline  ({:.4}s): {:?}", baseline.latency_s, baseline.text);
+    println!(
+        "recycled  ({:.4}s): {:?}  [reused {} of {} prompt tokens]",
+        recycled.latency_s, recycled.text, recycled.reuse_depth, recycled.prompt_tokens
+    );
+    assert_eq!(baseline.ids, recycled.ids, "fidelity: outputs must be identical");
+    let speedup = (baseline.latency_s - recycled.latency_s) / baseline.latency_s * 100.0;
+    println!("\nspeedup: {speedup:.1}%  (outputs token-identical ✓)");
+    Ok(())
+}

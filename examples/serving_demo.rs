@@ -1,0 +1,166 @@
+//! END-TO-END VALIDATION DRIVER (EXPERIMENTS.md §E2E).
+//!
+//! Loads the trained nano model through the full production stack —
+//! PJRT runtime → engine → recycler → coordinator → TCP server — then
+//! drives a batched request stream over real sockets and reports
+//! latency/throughput with recycling on vs off.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serving_demo
+//! ```
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use recycle_serve::bench::{paper_cache_prompts, paper_test_prompts};
+use recycle_serve::config::{CacheConfig, ServerConfig};
+use recycle_serve::coordinator::Coordinator;
+use recycle_serve::engine::Engine;
+use recycle_serve::index::NgramEmbedder;
+use recycle_serve::recycler::{RecyclePolicy, Recycler};
+use recycle_serve::runtime::Runtime;
+use recycle_serve::server::{Server, TcpClient};
+use recycle_serve::util::timing::{Samples, Stopwatch};
+
+fn spawn_stack(artifacts: PathBuf, policy: RecyclePolicy) -> Result<(Arc<Coordinator>, Server)> {
+    let coordinator = Arc::new(Coordinator::spawn(
+        move || {
+            let rt = Runtime::load(&artifacts).expect("artifacts");
+            let tok = rt.tokenizer();
+            let mut r = Recycler::new(
+                Engine::new(rt),
+                tok,
+                Box::new(NgramEmbedder::new(128)),
+                CacheConfig::default(),
+                policy,
+            );
+            r.populate_cache = true;
+            r
+        },
+        ServerConfig {
+            max_batch: 4,
+            ..Default::default()
+        },
+    ));
+    let server = Server::start(Arc::clone(&coordinator), "127.0.0.1:0")?;
+    Ok((coordinator, server))
+}
+
+fn drive(
+    server_addr: std::net::SocketAddr,
+    prompts: &[String],
+    max_new: usize,
+) -> Result<(Samples, usize, usize)> {
+    let mut client = TcpClient::connect(server_addr)?;
+    let mut lat = Samples::new();
+    let mut hits = 0;
+    let mut reused = 0;
+    for p in prompts {
+        let resp = client.request(p, max_new, None)?;
+        anyhow::ensure!(
+            resp.get("ok").and_then(|v| v.as_bool()) == Some(true),
+            "request failed: {}",
+            resp.to_json()
+        );
+        lat.push(resp.get("latency_s").and_then(|v| v.as_f64()).unwrap_or(0.0));
+        if resp.get("cache_hit").and_then(|v| v.as_bool()) == Some(true) {
+            hits += 1;
+            reused += resp
+                .get("reuse_depth")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(0);
+        }
+    }
+    Ok((lat, hits, reused))
+}
+
+fn main() -> Result<()> {
+    let artifacts = PathBuf::from(
+        std::env::args().nth(1).unwrap_or_else(|| "artifacts".into()),
+    );
+    anyhow::ensure!(
+        artifacts.join("manifest.json").exists(),
+        "run `make artifacts` first"
+    );
+    let data = PathBuf::from("data");
+    let max_new = 24;
+
+    // The request stream: the paper's 6 test prompts, repeated in 3 waves
+    // (wave 2+ also benefits from online cache population).
+    let mut stream: Vec<String> = Vec::new();
+    for _ in 0..3 {
+        stream.extend(paper_test_prompts(&data));
+    }
+
+    println!("=== serving_demo: end-to-end over TCP (trained nano model) ===\n");
+
+    // --- arm 1: recycling OFF ---
+    let (c_off, s_off) = spawn_stack(artifacts.clone(), RecyclePolicy::Off)?;
+    {
+        // warmup ping: absorbs the worker's Runtime::load (HLO compile)
+        // so wallclock timing measures serving, not startup
+        let mut ping = TcpClient::connect(s_off.addr())?;
+        ping.request("warmup", 1, None)?;
+    }
+    let sw = Stopwatch::start();
+    let (lat_off, _, _) = drive(s_off.addr(), &stream, max_new)?;
+    let wall_off = sw.elapsed_secs();
+    let stats_off = c_off.stats();
+    s_off.stop();
+
+    // --- arm 2: recycling ON (strict), warmed with the cache prompts ---
+    let (c_on, s_on) = spawn_stack(artifacts.clone(), RecyclePolicy::Strict)?;
+    {
+        // warm via the same public interface: serve the cache prompts once
+        let mut warm_client = TcpClient::connect(s_on.addr())?;
+        for p in paper_cache_prompts(&data) {
+            warm_client.request(&p, 1, None)?;
+        }
+    }
+    let sw = Stopwatch::start();
+    let (lat_on, hits, reused) = drive(s_on.addr(), &stream, max_new)?;
+    let wall_on = sw.elapsed_secs();
+    let stats_on = c_on.stats();
+    s_on.stop();
+
+    // --- report ---
+    let n = stream.len();
+    println!("requests per arm      : {n}");
+    println!("generated per request : {max_new} tokens (greedy)\n");
+    println!("                         recycling OFF   recycling ON");
+    println!(
+        "mean latency           : {:>9.4}s      {:>9.4}s",
+        lat_off.mean(),
+        lat_on.mean()
+    );
+    println!(
+        "p95 latency            : {:>9.4}s      {:>9.4}s",
+        lat_off.percentile(95.0),
+        lat_on.percentile(95.0)
+    );
+    println!(
+        "throughput             : {:>9.2} req/s {:>9.2} req/s",
+        n as f64 / wall_off,
+        n as f64 / wall_on
+    );
+    println!(
+        "cache hits             : {:>9}       {:>9}",
+        0, hits
+    );
+    println!("tokens reused          : {:>9}       {:>9}", 0, reused);
+    println!(
+        "engine tokens prefilled: {:>9}       {:>9}",
+        stats_off.engine.tokens_prefilled, stats_on.engine.tokens_prefilled
+    );
+    let speedup = (lat_off.mean() - lat_on.mean()) / lat_off.mean() * 100.0;
+    println!("\nmean-latency speedup   : {speedup:.1}%");
+    println!(
+        "hit rate               : {}/{} ({:.0}%)",
+        hits,
+        n,
+        100.0 * hits as f64 / n as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,324 @@
+"""AOT pipeline: corpus -> tokenizer -> trained weights -> HLO text artifacts.
+
+Python's ONLY role in the system: this script runs once under
+`make artifacts` and emits everything the Rust runtime needs. Nothing here
+is ever imported on the request path.
+
+Interchange format is HLO *text*, not `.serialize()`: jax >= 0.5 writes
+HloModuleProto with 64-bit instruction ids, which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (artifacts/):
+  forward_c{C}.hlo.txt  one per chunk bucket C in cfg.chunk_sizes
+  embed.hlo.txt         sentence-embedding encoder
+  weights.bin           flat little-endian f32 tensors (order = param_spec)
+  embed_weights.bin     same for the embed encoder
+  manifest.json         config + tensor table + artifact names
+  tokenizer.json        byte-level BPE merges
+  fixtures.json         cross-language goldens (tokenizer, forward, greedy,
+                        recycling equivalence, embedding)
+  train_log.csv         step,loss curve from the build-time training run
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus as corpus_mod
+from .embedmodel import embed_forward, embed_param_spec, init_embed_params
+from .model import (ModelConfig, PRESETS, empty_kv, flatten_params,
+                    forward_chunk, greedy_generate, init_params, param_spec,
+                    unflatten_params)
+from .tokenizer import Tokenizer, train_bpe
+from .train import train
+
+
+def to_hlo_text(lowered) -> str:
+    """jax lowered -> stablehlo -> XlaComputation -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def make_forward_fn(cfg: ModelConfig):
+    """Forward wrapper lowered per bucket.
+
+    Returns (logits [C, V], new_kv_rows [L, 2, H, C, D]) — only the chunk's
+    freshly-written KV rows, NOT the whole buffer: the Rust engine keeps the
+    authoritative host-side KV buffer and splices these rows in at cur_len,
+    halving device<->host traffic per step (see runtime/executor.rs).
+    """
+    n = len(param_spec(cfg))
+
+    def fn(*args):
+        flat = args[:n]
+        tokens, valid_len, kv, cur_len = args[n:]
+        params = unflatten_params(cfg, flat)
+        c = tokens.shape[0]
+        logits, kv2 = forward_chunk(cfg, params, tokens, valid_len, kv, cur_len,
+                                    use_pallas=True)
+        rows = jax.lax.dynamic_slice(
+            kv2, (0, 0, 0, cur_len, 0),
+            (cfg.n_layer, 2, cfg.n_head, c, cfg.head_dim))
+        return logits, rows
+
+    return fn
+
+
+def lower_forward(cfg: ModelConfig, c: int, seq: int | None = None) -> str:
+    """Lower one (chunk, seq-capacity) bucket. `seq` defaults to max_seq.
+
+    The seq-bucketed variants run the same computation against a truncated
+    KV buffer [L, 2, H, seq, D]: when the live context fits in a smaller
+    bucket the runtime uploads (and the attention kernel scans) only `seq`
+    rows — the §Perf optimization for short contexts.
+    """
+    seq = seq or cfg.max_seq
+    f32, i32 = jnp.float32, jnp.int32
+    kv_shape = (cfg.n_layer, 2, cfg.n_head, seq, cfg.head_dim)
+    specs = [jax.ShapeDtypeStruct(s, f32) for _, s in param_spec(cfg)]
+    specs += [
+        jax.ShapeDtypeStruct((c,), i32),        # tokens
+        jax.ShapeDtypeStruct((), i32),          # valid_len
+        jax.ShapeDtypeStruct(kv_shape, f32),    # kv (seq-bucketed)
+        jax.ShapeDtypeStruct((), i32),          # cur_len
+    ]
+    lowered = jax.jit(make_forward_fn(cfg), keep_unused=True).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def lower_embed(cfg: ModelConfig) -> str:
+    f32, i32 = jnp.float32, jnp.int32
+    n = len(embed_param_spec(cfg))
+
+    def fn(*args):
+        eparams = {name: a for (name, _), a in zip(embed_param_spec(cfg), args[:n])}
+        tokens, length = args[n:]
+        return (embed_forward(cfg, eparams, tokens, length),)
+
+    specs = [jax.ShapeDtypeStruct(s, f32) for _, s in embed_param_spec(cfg)]
+    specs += [jax.ShapeDtypeStruct((cfg.embed_seq,), i32),
+              jax.ShapeDtypeStruct((), i32)]
+    return to_hlo_text(jax.jit(fn, keep_unused=True).lower(*specs))
+
+
+def write_weights(path: str, arrays: list[np.ndarray],
+                  spec: list[tuple[str, tuple[int, ...]]]) -> list[dict]:
+    """Concatenate f32 little-endian tensors; return the manifest table."""
+    table = []
+    offset = 0
+    with open(path, "wb") as f:
+        for (name, shape), arr in zip(spec, arrays):
+            a = np.ascontiguousarray(np.asarray(arr, dtype="<f4"))
+            assert tuple(a.shape) == tuple(shape), (name, a.shape, shape)
+            raw = a.tobytes()
+            f.write(raw)
+            table.append({"name": name, "shape": list(shape),
+                          "offset": offset, "bytes": len(raw)})
+            offset += len(raw)
+    return table
+
+
+def build_fixtures(cfg: ModelConfig, tok: Tokenizer, params, eparams) -> dict:
+    """Cross-language goldens asserted by both pytest and cargo test."""
+    texts = [
+        "Hello world",
+        "User: What is the capital of France?\nBot:",
+        "Explain machine learning in simple terms.",
+        "  leading spaces and\n\nnewlines\n",
+        "punctuation, quotes \"x\" and unicode: café → あ",
+        "",
+        " ",
+        "\n",
+        "aaaaaaaaaaaaaaaaaaaaaaaa",
+    ] + corpus_mod.CACHE_PROMPTS[:4] + corpus_mod.TEST_PROMPTS[:3]
+    tok_cases = [{"text": t, "ids": tok.encode(t)} for t in texts]
+
+    # Greedy generation golden (the Rust engine must reproduce these tokens).
+    prompt = "User: What is the capital of France?\nBot:"
+    pids = tok.encode(prompt)
+    gen_ids, kv, plen = greedy_generate(cfg, params, pids, 16, eot_id=tok.eot_id,
+                                        use_pallas=True)
+
+    # Forward-logits golden: last-row logits after prefilling the prompt.
+    kv0 = empty_kv(cfg)
+    toks = jnp.asarray(pids + [0] * (64 - len(pids)), jnp.int32) if len(pids) <= 64 \
+        else jnp.asarray(pids[:64], jnp.int32)
+    logits, _ = forward_chunk(cfg, params, toks,
+                              jnp.asarray(len(pids), jnp.int32), kv0,
+                              jnp.asarray(0, jnp.int32), use_pallas=True)
+    last = np.asarray(logits[len(pids) - 1])
+
+    # Recycling-equivalence golden: cached prompt is an exact prefix of the
+    # test prompt; recycled continuation must equal the from-scratch one.
+    cache_text = corpus_mod.CACHE_PROMPTS[1]
+    test_text = corpus_mod.TEST_PROMPTS[1]
+    cids, tids = tok.encode(cache_text), tok.encode(test_text)
+    depth = 0
+    for a, b in zip(cids, tids):
+        if a != b:
+            break
+        depth += 1
+    assert depth == len(cids), "test prompt must extend its cache prompt"
+    base_ids, _, _ = greedy_generate(cfg, params, tids, 12, eot_id=tok.eot_id,
+                                     use_pallas=True)
+    _, kvc, clen = greedy_generate(cfg, params, cids, 0, eot_id=tok.eot_id,
+                                   use_pallas=True)
+    rec_ids, _, _ = greedy_generate(cfg, params, tids, 12, kv=kvc, cur_len=clen,
+                                    eot_id=tok.eot_id, use_pallas=True)
+    assert rec_ids == base_ids, "recycled generation diverged from baseline"
+
+    # Embedding golden.
+    etoks = tok.encode(cache_text)[:cfg.embed_seq]
+    epad = etoks + [0] * (cfg.embed_seq - len(etoks))
+    evec = np.asarray(embed_forward(cfg, eparams, jnp.asarray(epad, jnp.int32),
+                                    jnp.asarray(len(etoks), jnp.int32)))
+
+    return {
+        "tokenizer": tok_cases,
+        "greedy": {
+            "prompt": prompt,
+            "prompt_ids": pids,
+            "generated_ids": gen_ids,
+            "generated_text": tok.decode(gen_ids),
+            "final_len": plen,
+        },
+        "forward_logits": {
+            "prompt_ids": pids,
+            "chunk": int(toks.shape[0]),
+            "last_row_first8": [float(x) for x in last[:8]],
+            "last_row_argmax": int(np.argmax(last)),
+            "last_row_sum": float(np.sum(last)),
+        },
+        "recycle": {
+            "cache_text": cache_text,
+            "test_text": test_text,
+            "cache_ids": cids,
+            "test_ids": tids,
+            "reuse_depth": depth,
+            "baseline_ids": base_ids,
+            "recycled_ids": rec_ids,
+        },
+        "embed": {
+            "text": cache_text,
+            "first8": [float(x) for x in evec[:8]],
+            "norm": float(np.linalg.norm(evec)),
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--model", default="nano", choices=sorted(PRESETS))
+    ap.add_argument("--steps", type=int, default=400,
+                    help="build-time training steps (0 = random init)")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--data-dir", default="../data")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = PRESETS[args.model]
+    os.makedirs(args.out_dir, exist_ok=True)
+    t0 = time.time()
+
+    # 1. Corpus + the paper's prompt files.
+    text = corpus_mod.build_corpus(seed=args.seed)
+    corpus_mod.write_prompt_files(args.data_dir)
+
+    # 2. Tokenizer.
+    tok = train_bpe(text, cfg.vocab_size)
+    with open(os.path.join(args.out_dir, "tokenizer.json"), "w") as f:
+        f.write(tok.to_json())
+    print(f"tokenizer: {tok.vocab_size} tokens ({len(tok.merges)} merges)")
+
+    # 3. Weights (trained unless --steps 0). The stream interleaves
+    # exchanges with <|endoftext|> so the model learns to stop after an
+    # answer (DialoGPT-style EOS), which is what gives the paper its
+    # short-generation latency profile.
+    stream_ids: list[int] = []
+    for ex in corpus_mod.corpus_exchanges(seed=args.seed):
+        stream_ids.extend(tok.encode(ex))
+        stream_ids.append(tok.eot_id)
+    stream = np.asarray(stream_ids, np.int32)
+    print(f"corpus: {len(text)} chars -> {len(stream)} tokens (incl. EOT)")
+    if args.steps > 0:
+        params, log = train(cfg, stream, steps=args.steps, seed=args.seed)
+    else:
+        params, log = init_params(cfg, jax.random.PRNGKey(args.seed)), []
+    with open(os.path.join(args.out_dir, "train_log.csv"), "w") as f:
+        f.write("step,loss\n")
+        for s, l in log:
+            f.write(f"{s},{l:.6f}\n")
+    eparams = init_embed_params(cfg, jax.random.PRNGKey(args.seed + 1))
+
+    # 4. Weights files.
+    flat = [np.asarray(a) for a in flatten_params(cfg, params)]
+    table = write_weights(os.path.join(args.out_dir, "weights.bin"), flat,
+                          param_spec(cfg))
+    eflat = [np.asarray(eparams[name]) for name, _ in embed_param_spec(cfg)]
+    etable = write_weights(os.path.join(args.out_dir, "embed_weights.bin"),
+                           eflat, embed_param_spec(cfg))
+
+    # 5. HLO artifacts: one per (chunk, seq-capacity) bucket.
+    artifacts = {}
+    for c in cfg.chunk_sizes:
+        for s in cfg.seq_buckets:
+            if c > s:
+                continue  # chunk cannot exceed the KV capacity
+            name = f"forward_c{c}_s{s}.hlo.txt"
+            hlo = lower_forward(cfg, c, s)
+            with open(os.path.join(args.out_dir, name), "w") as f:
+                f.write(hlo)
+            artifacts[f"forward_c{c}_s{s}"] = name
+            print(f"lowered {name}: {len(hlo)} chars")
+    ehlo = lower_embed(cfg)
+    with open(os.path.join(args.out_dir, "embed.hlo.txt"), "w") as f:
+        f.write(ehlo)
+    artifacts["embed"] = "embed.hlo.txt"
+
+    # 6. Fixtures.
+    fixtures = build_fixtures(cfg, tok, params, eparams)
+    with open(os.path.join(args.out_dir, "fixtures.json"), "w") as f:
+        json.dump(fixtures, f)
+
+    # 7. Manifest (the Rust runtime's single entry point).
+    manifest = {
+        "version": 1,
+        "model": {
+            "name": cfg.name, "n_layer": cfg.n_layer, "n_head": cfg.n_head,
+            "d_model": cfg.d_model, "vocab_size": cfg.vocab_size,
+            "max_seq": cfg.max_seq, "d_ff": cfg.d_ff,
+            "head_dim": cfg.head_dim, "embed_dim": cfg.embed_dim,
+            "embed_seq": cfg.embed_seq,
+            "chunk_sizes": list(cfg.chunk_sizes),
+            "seq_buckets": list(cfg.seq_buckets),
+            "eot_id": tok.eot_id,
+        },
+        "tensors": table,
+        "embed_tensors": etable,
+        "artifacts": artifacts,
+        "weights": "weights.bin",
+        "embed_weights": "embed_weights.bin",
+        "tokenizer": "tokenizer.json",
+        "fixtures": "fixtures.json",
+        "corpus_sha256": hashlib.sha256(text.encode()).hexdigest(),
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"artifacts written to {args.out_dir} in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

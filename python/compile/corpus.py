@@ -1,0 +1,195 @@
+"""Deterministic synthetic dialogue corpus.
+
+Substitute for DialoGPT's 147M Reddit exchanges (unavailable offline): a
+templated question/answer corpus in the same conversational register as the
+paper's prompt sets (§4.3: capitals, machine learning, airplanes, ...). The
+generator is seeded and pure, so `make artifacts` is reproducible bit-for-bit.
+
+Also writes the paper's two prompt files:
+  data/cache_prompts.csv — 10 prompts used to build the activation cache.
+  data/test_prompts.csv  — 6 prompts, extended versions of cache prompts
+                           (near-duplicate / extended-prefix cases).
+"""
+
+from __future__ import annotations
+
+import os
+import random
+
+# --- topic bank -------------------------------------------------------------
+
+CAPITALS = [
+    ("France", "Paris", "the Eiffel Tower"),
+    ("Japan", "Tokyo", "the Shibuya crossing"),
+    ("Italy", "Rome", "the Colosseum"),
+    ("Spain", "Madrid", "the Prado museum"),
+    ("Germany", "Berlin", "the Brandenburg Gate"),
+    ("India", "New Delhi", "the Red Fort"),
+    ("Brazil", "Brasilia", "the national congress"),
+    ("Canada", "Ottawa", "the Rideau canal"),
+    ("Egypt", "Cairo", "the pyramids of Giza"),
+    ("Kenya", "Nairobi", "the national park"),
+    ("Norway", "Oslo", "the fjord museum"),
+    ("Greece", "Athens", "the Acropolis"),
+]
+
+CONCEPTS = [
+    ("machine learning", "computers learn patterns from data instead of following fixed rules",
+     "spam filters that learn from examples"),
+    ("deep learning", "neural networks with many layers learn features automatically",
+     "image recognition in photo apps"),
+    ("the internet", "computers exchange packets of data over shared networks",
+     "loading a web page from a server"),
+    ("gravity", "masses attract each other with a force that grows with mass",
+     "an apple falling from a tree"),
+    ("photosynthesis", "plants turn sunlight and carbon dioxide into sugar and oxygen",
+     "leaves making food for the plant"),
+    ("evolution", "species change over generations as useful traits spread",
+     "bacteria becoming resistant to drugs"),
+    ("inflation", "prices rise over time so money buys less",
+     "bread costing more each decade"),
+    ("a transformer model", "attention layers mix information between all tokens",
+     "a chatbot answering questions"),
+    ("a cache", "a small fast store keeps recent results close to the user",
+     "a browser keeping images on disk"),
+    ("recycling", "used materials are processed into new products",
+     "old bottles becoming new glass"),
+]
+
+MECHANISMS = [
+    ("airplanes fly", "their wings deflect air downward which pushes the wing up",
+     "lift grows with speed and wing area"),
+    ("boats float", "they displace water heavier than their own weight",
+     "a steel hull encloses mostly air"),
+    ("fridges cool", "a pump moves heat from inside to the coils outside",
+     "compressing a gas makes it hot"),
+    ("radios work", "antennas turn electric signals into waves and back",
+     "tuning selects a single frequency"),
+    ("batteries store energy", "chemical reactions push electrons through a circuit",
+     "charging reverses the reaction"),
+    ("vaccines protect", "they teach the immune system to recognize a pathogen",
+     "antibodies form before infection"),
+    ("rockets launch", "burning fuel throws mass down so the rocket goes up",
+     "thrust must exceed weight"),
+    ("computers add numbers", "logic gates combine bits with carries",
+     "an adder circuit chains gates"),
+]
+
+SMALLTALK = [
+    ("how are you today", "i am doing well, thanks for asking"),
+    ("what did you do this weekend", "i mostly read and went for a long walk"),
+    ("do you like coffee or tea", "i prefer tea in the morning and coffee after lunch"),
+    ("any plans for the holidays", "i want to visit family and rest a little"),
+    ("what music do you enjoy", "mostly jazz, but lately a lot of classical piano"),
+    ("did you watch the game", "i caught the second half, what a finish"),
+]
+
+Q_TEMPLATES_CAPITAL = [
+    "What is the capital of {c}?",
+    "Tell me the capital of {c}.",
+    "Which city is the capital of {c}?",
+]
+A_TEMPLATES_CAPITAL = [
+    "The capital of {c} is {cap}.",
+    "{cap} is the capital of {c}. You could also visit {sight}.",
+    "It is {cap}. Many visitors also enjoy {sight}.",
+]
+
+Q_TEMPLATES_CONCEPT = [
+    "Explain {t} in simple terms.",
+    "What is {t}?",
+    "Can you describe {t} briefly?",
+]
+A_TEMPLATES_CONCEPT = [
+    "In simple terms, {t} means that {d}.",
+    "{t} is when {d}. For example, {e}.",
+    "Think of it like this: {d}. A common example is {e}.",
+]
+
+Q_TEMPLATES_MECH = [
+    "How do {t}?",
+    "Why do {t}?",
+    "Explain how {t}.",
+]
+A_TEMPLATES_MECH = [
+    "They do because {d}.",
+    "It works like this: {d}. Remember that {e}.",
+    "The short answer is that {d}.",
+]
+
+
+def corpus_exchanges(seed: int = 0, n_exchanges: int = 2400) -> list[str]:
+    """One 'User: ...\nBot: ...\n' string per exchange. The trainer inserts
+    an <|endoftext|> token between exchanges so the model learns to stop
+    after answering (DialoGPT's EOS behaviour, which the paper's latency
+    profile depends on)."""
+    rng = random.Random(seed)
+    lines = []
+    for _ in range(n_exchanges):
+        kind = rng.randrange(4)
+        if kind == 0:
+            c, cap, sight = rng.choice(CAPITALS)
+            q = rng.choice(Q_TEMPLATES_CAPITAL).format(c=c)
+            a = rng.choice(A_TEMPLATES_CAPITAL).format(c=c, cap=cap, sight=sight)
+        elif kind == 1:
+            t, d, e = rng.choice(CONCEPTS)
+            q = rng.choice(Q_TEMPLATES_CONCEPT).format(t=t)
+            a = rng.choice(A_TEMPLATES_CONCEPT).format(t=t, d=d, e=e)
+        elif kind == 2:
+            t, d, e = rng.choice(MECHANISMS)
+            q = rng.choice(Q_TEMPLATES_MECH).format(t=t)
+            a = rng.choice(A_TEMPLATES_MECH).format(t=t, d=d, e=e)
+        else:
+            q, a = rng.choice(SMALLTALK)
+            q = q.capitalize() + "?"
+            a = a.capitalize() + "."
+        lines.append(f"User: {q}\nBot: {a}\n")
+    return lines
+
+
+def build_corpus(seed: int = 0, n_exchanges: int = 2400) -> str:
+    """The raw training text (tokenizer training; no special tokens)."""
+    return "".join(corpus_exchanges(seed, n_exchanges))
+
+
+# --- the paper's prompt sets (§4.3) ------------------------------------------
+
+CACHE_PROMPTS = [
+    "Explain machine learning in simple terms.",
+    "What is the capital of France?",
+    "How do airplanes fly?",
+    "What is deep learning?",
+    "Explain gravity in simple terms.",
+    "How do boats float?",
+    "What is the capital of Japan?",
+    "Explain photosynthesis in simple terms.",
+    "How do rockets launch?",
+    "What is a cache?",
+]
+
+TEST_PROMPTS = [
+    "Explain machine learning in simple terms. Give an example application.",
+    "What is the capital of France? Also mention a nearby tourist destination.",
+    "How do airplanes fly? Keep the answer short.",
+    "What is deep learning? Compare it with machine learning.",
+    "Explain gravity in simple terms. Why does the moon stay in orbit?",
+    "What is a cache? Why do browsers use one?",
+]
+
+
+def _write_csv(path: str, header: str, rows: list[str]) -> None:
+    def quote(s: str) -> str:
+        if any(ch in s for ch in ',"\n'):
+            return '"' + s.replace('"', '""') + '"'
+        return s
+
+    with open(path, "w") as f:
+        f.write(header + "\n")
+        for r in rows:
+            f.write(quote(r) + "\n")
+
+
+def write_prompt_files(data_dir: str) -> None:
+    os.makedirs(data_dir, exist_ok=True)
+    _write_csv(os.path.join(data_dir, "cache_prompts.csv"), "text", CACHE_PROMPTS)
+    _write_csv(os.path.join(data_dir, "test_prompts.csv"), "text", TEST_PROMPTS)

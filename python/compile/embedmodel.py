@@ -1,0 +1,48 @@
+"""Tiny sentence-embedding encoder (sentence-transformers substitute).
+
+The paper indexes cached prompts with sentence-transformer embeddings and
+retrieves by dot product. Offline we provide two interchangeable embedders:
+
+  * Rust `index::ngram` — hashed character-n-gram embedding on the request
+    path (default: deterministic, no model call).
+  * This module — a small mean-pooled token encoder exported as
+    `embed.hlo.txt`, demonstrating the "embedding model behind PJRT" path.
+
+The encoder is *untrained* (fixed-seed init): retrieval quality in our
+workloads comes from lexical overlap, which both embedders preserve. This is
+recorded as a substitution in DESIGN.md §2.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .model import ModelConfig
+
+
+def embed_param_spec(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    return [
+        ("ewte", (cfg.vocab_size, cfg.embed_dim)),
+        ("ewpe", (cfg.embed_seq, cfg.embed_dim)),
+        ("ew", (cfg.embed_dim, cfg.embed_dim)),
+    ]
+
+
+def init_embed_params(cfg: ModelConfig, key: jax.Array) -> dict[str, jax.Array]:
+    params = {}
+    for name, shape in embed_param_spec(cfg):
+        key, sub = jax.random.split(key)
+        params[name] = 0.1 * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def embed_forward(cfg: ModelConfig, params: dict[str, jax.Array],
+                  tokens: jax.Array, length: jax.Array) -> jax.Array:
+    """tokens: [E] int32 right-padded; length: scalar int32. Returns [De] unit vec."""
+    e = cfg.embed_seq
+    x = params["ewte"][tokens] + params["ewpe"][jnp.arange(e)]
+    mask = (jnp.arange(e) < length)[:, None].astype(jnp.float32)
+    pooled = jnp.sum(x * mask, axis=0) / jnp.maximum(length.astype(jnp.float32), 1.0)
+    h = jnp.tanh(pooled @ params["ew"])
+    return h / jnp.maximum(jnp.linalg.norm(h), 1e-6)

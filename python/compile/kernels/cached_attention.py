@@ -1,0 +1,147 @@
+"""Pallas flash-style cached attention — the L1 compute hot-spot.
+
+Computes causal attention of a chunk of C new query tokens against a KV
+buffer of capacity S whose first `cur_len` rows hold a previously-computed
+(possibly *recycled*, i.e. loaded from the cross-prompt cache) prefix.
+
+TPU mapping of the paper's idea (the paper ran CUDA via HF/torch; we rethink
+for the MXU/VMEM model — see DESIGN.md §3):
+
+  * grid = (heads, S / BK): one program instance per (head, key-block).
+  * BlockSpec streams K/V HBM->VMEM one [BK, D] tile at a time; the C-row
+    query tile stays resident in VMEM across all key blocks of a head.
+  * online softmax (flash attention): running max `m`, denominator `l`, and
+    unnormalized accumulator live in the output refs, which Pallas keeps in
+    VMEM across sequential grid steps because their index map ignores the
+    key-block axis (revisiting semantics).
+  * masking is positional: key j is visible to chunk query i iff
+    j <= cur_len + i — exactly the paper's "cached prompt is a full prefix"
+    condition expressed at the kernel level.
+
+interpret=True is mandatory here: real-TPU lowering emits a Mosaic
+custom-call that the CPU PJRT plugin cannot execute. The kernel is still
+*structured* for TPU (tile sizes, VMEM footprint) and those estimates are
+what sim::roofline reports.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+
+def _attn_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *, block_k: int):
+    """One (head, key-block) step of online-softmax attention.
+
+    Refs (leading head axis of size 1 comes from the BlockSpec):
+      len_ref: [1] int32 — cur_len.
+      q_ref:   [1, C, D] queries (resident across key blocks).
+      k_ref:   [1, BK, D] this key block.
+      v_ref:   [1, BK, D] this value block.
+      o_ref:   [1, C, D] unnormalized accumulator; normalized in the epilogue.
+      m_ref:   [1, C] running row max.
+      l_ref:   [1, C] running row denominator.
+    """
+    kb = pl.program_id(1)
+    nkb = pl.num_programs(1)
+    cur_len = len_ref[0]
+
+    q = q_ref[0]  # [C, D]
+    k = k_ref[0]  # [BK, D]
+    v = v_ref[0]  # [BK, D]
+    c, d = q.shape
+
+    @pl.when(kb == 0)
+    def _init():
+        m_ref[0] = jnp.full((c,), NEG_INF, jnp.float32)
+        l_ref[0] = jnp.zeros((c,), jnp.float32)
+        o_ref[0] = jnp.zeros((c, d), jnp.float32)
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    s = (q @ k.T) * scale  # [C, BK] — MXU matmul on real TPU
+
+    # Positional causal mask with recycled-prefix offset.
+    j = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, (c, block_k), 1)
+    i = jax.lax.broadcasted_iota(jnp.int32, (c, block_k), 0)
+    s = jnp.where(j <= cur_len + i, s, NEG_INF)
+
+    m_prev = m_ref[0]
+    l_prev = l_ref[0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])  # [C, BK]
+    l_new = l_prev * corr + jnp.sum(p, axis=-1)
+    o_new = o_ref[0] * corr[:, None] + p @ v  # second MXU matmul
+
+    m_ref[0] = m_new
+    l_ref[0] = l_new
+    o_ref[0] = o_new
+
+    @pl.when(kb == nkb - 1)
+    def _epilogue():
+        l_fin = l_ref[0]
+        # Fully-masked rows (can only happen for padded queries when
+        # cur_len + i targets an empty window, which causality prevents for
+        # real rows) get denominator 1 to stay finite.
+        l_safe = jnp.where(l_fin == 0.0, 1.0, l_fin)
+        o_ref[0] = o_ref[0] / l_safe[:, None]
+
+
+def cached_attention(q, k, v, cur_len, *, block_k: int = 64, interpret: bool = True):
+    """Flash-style causal attention over a prefix-cached KV buffer.
+
+    Args:
+      q: [H, C, D] float32 — queries for the new chunk.
+      k, v: [H, S, D] float32 — KV buffer (prefix of cur_len rows is live;
+        rows [cur_len, cur_len + C) were just written for this chunk).
+      cur_len: scalar int32 — live prefix length (the recycled depth).
+      block_k: key tile size (S must be a multiple).
+      interpret: must stay True on CPU PJRT; see module docstring.
+
+    Returns: [H, C, D] float32 attention output.
+    """
+    h, c, d = q.shape
+    s = k.shape[1]
+    if s % block_k != 0:
+        raise ValueError(f"S={s} not a multiple of block_k={block_k}")
+    nkb = s // block_k
+    cur_len_arr = jnp.reshape(jnp.asarray(cur_len, jnp.int32), (1,))
+
+    kernel = functools.partial(_attn_kernel, block_k=block_k)
+    out, _m, _l = pl.pallas_call(
+        kernel,
+        grid=(h, nkb),
+        in_specs=[
+            pl.BlockSpec((1,), lambda hh, kb: (0,)),
+            pl.BlockSpec((1, c, d), lambda hh, kb: (hh, 0, 0)),
+            pl.BlockSpec((1, block_k, d), lambda hh, kb: (hh, kb, 0)),
+            pl.BlockSpec((1, block_k, d), lambda hh, kb: (hh, kb, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, c, d), lambda hh, kb: (hh, 0, 0)),
+            pl.BlockSpec((1, c), lambda hh, kb: (hh, 0)),
+            pl.BlockSpec((1, c), lambda hh, kb: (hh, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, c, d), jnp.float32),
+            jax.ShapeDtypeStruct((h, c), jnp.float32),
+            jax.ShapeDtypeStruct((h, c), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cur_len_arr, q, k, v)
+    return out
+
+
+def vmem_bytes(c: int, d: int, block_k: int) -> int:
+    """Estimated VMEM working set per program instance, in bytes (f32).
+
+    q tile + k tile + v tile + o accumulator + m/l vectors + p scratch.
+    Used by sim::roofline (Rust mirrors this formula) and the perf notes.
+    """
+    f = 4
+    return f * (c * d + 2 * block_k * d + c * d + 2 * c + c * block_k)

@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must match its `ref_*` twin to float32 tolerance across the shape/dtype sweep
+in python/tests/test_kernels.py. The oracles are written for clarity, not
+speed; they also serve as the spec for the Rust-side golden fixtures.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Mask value used instead of -inf so that exp(m_prev - m_new) never sees a
+# (-inf) - (-inf) NaN when an entire key block is masked.
+NEG_INF = -1e30
+
+
+def ref_cached_attention(q, k, v, cur_len, valid_len):
+    """Causal attention of a chunk of new queries against a KV buffer.
+
+    Args:
+      q: [H, C, D] queries for the C new (possibly right-padded) tokens.
+      k: [H, S, D] key buffer; rows [0, cur_len) hold the cached prefix and
+         rows [cur_len, cur_len + valid_len) hold the new tokens' keys.
+      v: [H, S, D] value buffer, same layout.
+      cur_len: scalar int32, number of valid cached positions.
+      valid_len: scalar int32, number of valid tokens in the chunk (<= C).
+        Only used to document the garbage region; masking is causal.
+
+    Returns:
+      [H, C, D] attention outputs. Rows i >= valid_len are garbage-but-finite
+      (they attend over the causal window as if real) and must be ignored by
+      the caller.
+    """
+    del valid_len  # rows beyond valid_len are ignored downstream
+    h, c, d = q.shape
+    s = k.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    scores = jnp.einsum("hcd,hsd->hcs", q, k) * scale  # [H, C, S]
+    # Query i sits at absolute position cur_len + i; it may attend to any
+    # key j with j <= cur_len + i.
+    j = jnp.arange(s)[None, None, :]
+    i = jnp.arange(c)[None, :, None]
+    mask = j <= (cur_len + i)
+    scores = jnp.where(mask, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("hcs,hsd->hcd", p / l, v)
+
+
+def ref_similarity_scores(embeddings, query):
+    """Dot-product similarity of one query against a bank of embeddings.
+
+    Args:
+      embeddings: [N, D] (assumed L2-normalized by the caller).
+      query: [D].
+
+    Returns: [N] scores.
+    """
+    return embeddings @ query
+
+
+def ref_layernorm(x, gamma, beta, eps=1e-5):
+    """LayerNorm over the last axis: (x - mu) / sqrt(var + eps) * gamma + beta."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta

@@ -1,0 +1,48 @@
+"""Pallas retrieval kernel: dot-product similarity scores against a bank.
+
+The paper retrieves the candidate cache entry with faiss-cpu over
+sentence-transformer embeddings. Our bank is tiny (tens of entries), so the
+exact algorithm is a dense matvec over L2-normalized embeddings; this kernel
+is the TPU-shaped version (tiled over bank rows so the bank streams
+HBM->VMEM while the query stays resident). Top-k selection happens outside
+the kernel (jnp.argmax / Rust) — k is 1 in the paper.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _scores_kernel(e_ref, q_ref, o_ref):
+    o_ref[...] = e_ref[...] @ q_ref[...]
+
+
+def similarity_scores(embeddings, query, *, block_n: int = 128, interpret: bool = True):
+    """scores[i] = <embeddings[i], query>.
+
+    Args:
+      embeddings: [N, D] float32 (caller normalizes for cosine similarity).
+      query: [D] float32.
+      block_n: bank tile rows per program instance; N is padded up to a
+        multiple internally.
+
+    Returns: [N] float32 scores.
+    """
+    n, d = embeddings.shape
+    n_pad = -(-n // block_n) * block_n
+    if n_pad != n:
+        embeddings = jnp.pad(embeddings, ((0, n_pad - n), (0, 0)))
+    out = pl.pallas_call(
+        _scores_kernel,
+        grid=(n_pad // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+        interpret=interpret,
+    )(embeddings, query)
+    return out[:n]

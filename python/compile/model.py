@@ -1,0 +1,307 @@
+"""L2: GPT-2-family decoder with an external KV buffer (the recycling surface).
+
+The paper uses DialoGPT-medium (GPT-2, 345M) through HF `generate`
+(past_key_values injection). We rebuild the same architecture family with the
+KV cache as an *explicit argument*: `forward_chunk` consumes and returns the
+whole [L, 2, H, S, D] buffer plus a `cur_len` scalar, which is exactly the
+object the Rust coordinator caches, serializes, retrieves and re-injects
+across prompts.
+
+Two forward paths share one parameter set:
+  * `forward_chunk`  — inference path; calls the Pallas kernels
+    (cached_attention, fused_layernorm); this is what `aot.py` lowers to HLO
+    per chunk-size bucket.
+  * `forward_train`  — plain-jnp full-sequence path used by the build-time
+    trainer (fast under jit, no KV buffer).
+The equivalence of the two paths (and of 1-chunk vs N-chunk encodings) is
+asserted in python/tests/test_model.py — that equivalence IS the paper's
+correctness claim for KV reuse.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.cached_attention import cached_attention
+from .kernels.fused_ln import fused_layernorm
+from .kernels.ref import NEG_INF
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters (GPT-2 family)."""
+
+    name: str
+    n_layer: int
+    n_head: int
+    d_model: int
+    vocab_size: int
+    max_seq: int
+    d_ff: int
+    # Prefill chunk-size buckets exported as separate HLO executables.
+    chunk_sizes: tuple[int, ...] = (1, 8, 32, 64)
+    # KV sequence-capacity buckets: each (chunk, seq) pair gets its own
+    # executable. Short live contexts run against a small KV buffer —
+    # less host->device traffic AND less attention compute (the kernel
+    # scans only seq rows). The largest must equal max_seq.
+    seq_buckets: tuple[int, ...] = (64, 128, 256)
+    # Embedding-encoder dims (see embedmodel.py).
+    embed_dim: int = 64
+    embed_seq: int = 64
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_head == 0
+        return self.d_model // self.n_head
+
+    def kv_shape(self) -> tuple[int, ...]:
+        return (self.n_layer, 2, self.n_head, self.max_seq, self.head_dim)
+
+    def kv_bytes(self) -> int:
+        n = 1
+        for d in self.kv_shape():
+            n *= d
+        return 4 * n
+
+    def n_params(self) -> int:
+        return sum(math.prod(s) for _, s in param_spec(self))
+
+
+PRESETS: dict[str, ModelConfig] = {
+    # Build-time-trainable testbed (the DialoGPT-medium stand-in).
+    "nano": ModelConfig("nano", n_layer=4, n_head=4, d_model=128,
+                        vocab_size=512, max_seq=256, d_ff=512),
+    # Mid-size config for scaling experiments.
+    "small": ModelConfig("small", n_layer=6, n_head=8, d_model=256,
+                         vocab_size=1024, max_seq=512, d_ff=1024,
+                         seq_buckets=(64, 256, 512)),
+    # Shape-identical to DialoGPT-medium; used for roofline analysis only
+    # (too slow to train or serve on the single-core CPU CI substrate).
+    "dialogpt-medium": ModelConfig("dialogpt-medium", n_layer=24, n_head=16,
+                                   d_model=1024, vocab_size=50257,
+                                   max_seq=1024, d_ff=4096,
+                                   seq_buckets=(64, 256, 1024)),
+}
+
+
+def param_spec(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Ordered (name, shape) list — the single source of truth for the
+    weights.bin layout consumed by rust/src/runtime/artifacts.rs."""
+    spec: list[tuple[str, tuple[int, ...]]] = [
+        ("wte", (cfg.vocab_size, cfg.d_model)),
+        ("wpe", (cfg.max_seq, cfg.d_model)),
+    ]
+    for l in range(cfg.n_layer):
+        p = f"h{l}."
+        spec += [
+            (p + "ln1.g", (cfg.d_model,)),
+            (p + "ln1.b", (cfg.d_model,)),
+            (p + "attn.wqkv", (cfg.d_model, 3 * cfg.d_model)),
+            (p + "attn.bqkv", (3 * cfg.d_model,)),
+            (p + "attn.wo", (cfg.d_model, cfg.d_model)),
+            (p + "attn.bo", (cfg.d_model,)),
+            (p + "ln2.g", (cfg.d_model,)),
+            (p + "ln2.b", (cfg.d_model,)),
+            (p + "mlp.wfc", (cfg.d_model, cfg.d_ff)),
+            (p + "mlp.bfc", (cfg.d_ff,)),
+            (p + "mlp.wproj", (cfg.d_ff, cfg.d_model)),
+            (p + "mlp.bproj", (cfg.d_model,)),
+        ]
+    spec += [("lnf.g", (cfg.d_model,)), ("lnf.b", (cfg.d_model,))]
+    return spec
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict[str, jax.Array]:
+    """GPT-2 style init: N(0, 0.02) weights, zero biases, unit LN gains."""
+    params: dict[str, jax.Array] = {}
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith((".g",)):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith((".b", ".bqkv", ".bo", ".bfc", ".bproj")):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            std = 0.02
+            if name.endswith(("attn.wo", "mlp.wproj")):
+                # GPT-2 residual-branch scaling.
+                std = 0.02 / math.sqrt(2 * cfg.n_layer)
+            params[name] = std * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def flatten_params(cfg: ModelConfig, params: dict[str, jax.Array]) -> list[jax.Array]:
+    return [params[name] for name, _ in param_spec(cfg)]
+
+
+def unflatten_params(cfg: ModelConfig, flat: tuple[jax.Array, ...]) -> dict[str, jax.Array]:
+    return {name: arr for (name, _), arr in zip(param_spec(cfg), flat)}
+
+
+def _gelu(x: jax.Array) -> jax.Array:
+    # tanh approximation, as in GPT-2.
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x * x * x)))
+
+
+def forward_chunk(cfg: ModelConfig, params: dict[str, jax.Array],
+                  tokens: jax.Array, valid_len: jax.Array,
+                  kv: jax.Array, cur_len: jax.Array,
+                  *, use_pallas: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Process one chunk of C new tokens given a KV buffer with cur_len live rows.
+
+    Args:
+      tokens: [C] int32, right-padded; only the first valid_len are real.
+      valid_len: scalar int32.
+      kv: [L, 2, H, S, D] float32 KV buffer.
+      cur_len: scalar int32, live prefix length (recycled depth on a cache hit).
+
+    Returns:
+      logits: [C, V] float32 (rows >= valid_len are garbage; the sampler reads
+        row valid_len - 1).
+      kv': updated buffer; live length becomes cur_len + valid_len.
+    """
+    c = tokens.shape[0]
+    cur_len = jnp.asarray(cur_len, jnp.int32)
+    positions = cur_len + jnp.arange(c, dtype=jnp.int32)
+    # Clamp padded-row positions into range (their outputs are discarded).
+    positions = jnp.minimum(positions, cfg.max_seq - 1)
+    x = params["wte"][tokens] + params["wpe"][positions]  # [C, Dm]
+
+    def ln(x2d, g, b):
+        if use_pallas:
+            return fused_layernorm(x2d, g, b, block_rows=min(32, c))
+        mu = jnp.mean(x2d, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(x2d - mu), axis=-1, keepdims=True)
+        return (x2d - mu) / jnp.sqrt(var + 1e-5) * g + b
+
+    for l in range(cfg.n_layer):
+        p = f"h{l}."
+        h = ln(x, params[p + "ln1.g"], params[p + "ln1.b"])
+        qkv = h @ params[p + "attn.wqkv"] + params[p + "attn.bqkv"]  # [C, 3Dm]
+        q, k_new, v_new = jnp.split(qkv, 3, axis=-1)
+        # [C, Dm] -> [H, C, D]
+        def heads(t):
+            return t.reshape(c, cfg.n_head, cfg.head_dim).transpose(1, 0, 2)
+        q, k_new, v_new = heads(q), heads(k_new), heads(v_new)
+        # Write the chunk's K/V into the buffer at [cur_len, cur_len + C).
+        upd = jnp.stack([k_new, v_new])[None]  # [1, 2, H, C, D]
+        kv = jax.lax.dynamic_update_slice(kv, upd, (l, 0, 0, cur_len, 0))
+        if use_pallas:
+            attn = cached_attention(q, kv[l, 0], kv[l, 1], cur_len)
+        else:
+            from .kernels.ref import ref_cached_attention
+            attn = ref_cached_attention(q, kv[l, 0], kv[l, 1], cur_len, valid_len)
+        attn = attn.transpose(1, 0, 2).reshape(c, cfg.d_model)
+        x = x + attn @ params[p + "attn.wo"] + params[p + "attn.bo"]
+        h2 = ln(x, params[p + "ln2.g"], params[p + "ln2.b"])
+        x = x + _gelu(h2 @ params[p + "mlp.wfc"] + params[p + "mlp.bfc"]) \
+            @ params[p + "mlp.wproj"] + params[p + "mlp.bproj"]
+
+    x = ln(x, params["lnf.g"], params["lnf.b"])
+    logits = x @ params["wte"].T  # weight tying, as GPT-2
+    return logits, kv
+
+
+def forward_train(cfg: ModelConfig, params: dict[str, jax.Array],
+                  tokens: jax.Array) -> jax.Array:
+    """Full-sequence training forward (plain jnp, batched). tokens: [B, T]."""
+    b, t = tokens.shape
+    x = params["wte"][tokens] + params["wpe"][jnp.arange(t)]
+
+    def ln(x3d, g, b_):
+        mu = jnp.mean(x3d, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(x3d - mu), axis=-1, keepdims=True)
+        return (x3d - mu) / jnp.sqrt(var + 1e-5) * g + b_
+
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    for l in range(cfg.n_layer):
+        p = f"h{l}."
+        h = ln(x, params[p + "ln1.g"], params[p + "ln1.b"])
+        qkv = h @ params[p + "attn.wqkv"] + params[p + "attn.bqkv"]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+
+        def heads(z):
+            return z.reshape(b, t, cfg.n_head, cfg.head_dim).transpose(0, 2, 1, 3)
+        q, k, v = heads(q), heads(k), heads(v)
+        s = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+        s = jnp.where(causal, s, NEG_INF)
+        a = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", a, v)
+        o = o.transpose(0, 2, 1, 3).reshape(b, t, cfg.d_model)
+        x = x + o @ params[p + "attn.wo"] + params[p + "attn.bo"]
+        h2 = ln(x, params[p + "ln2.g"], params[p + "ln2.b"])
+        x = x + _gelu(h2 @ params[p + "mlp.wfc"] + params[p + "mlp.bfc"]) \
+            @ params[p + "mlp.wproj"] + params[p + "mlp.bproj"]
+
+    x = ln(x, params["lnf.g"], params["lnf.b"])
+    return x @ params["wte"].T
+
+
+def empty_kv(cfg: ModelConfig) -> jax.Array:
+    return jnp.zeros(cfg.kv_shape(), jnp.float32)
+
+
+@functools.lru_cache(maxsize=64)
+def _jitted_forward(cfg: ModelConfig, c: int, use_pallas: bool):
+    """jit-compiled forward per (config, chunk size): interpret-mode Pallas
+    lowers to plain HLO under jit, so repeated build-time calls are fast."""
+    del c  # keyed for cache identity; shape specializes on first call
+
+    def fn(params, tokens, valid_len, kv, cur_len):
+        return forward_chunk(cfg, params, tokens, valid_len, kv, cur_len,
+                             use_pallas=use_pallas)
+
+    return jax.jit(fn)
+
+
+def greedy_generate(cfg: ModelConfig, params: dict[str, jax.Array],
+                    prompt_ids: list[int], max_new_tokens: int,
+                    kv: jax.Array | None = None, cur_len: int = 0,
+                    eot_id: int = 0, use_pallas: bool = False):
+    """Reference greedy decoder (build-time only; mirrors rust engine::generate).
+
+    Returns (generated_ids, kv, new_len). Used to produce golden fixtures that
+    the Rust engine must reproduce token-for-token.
+    """
+    if kv is None:
+        kv = empty_kv(cfg)
+    ids = list(prompt_ids)
+    # Prefill the prompt suffix one greedy chunk at a time using the largest
+    # bucket that fits (same schedule as rust engine::plan_chunks).
+    pos = cur_len
+    pending = ids[cur_len:]
+    logits = None
+    while pending:
+        # Smallest bucket that covers everything pending (padded), else the
+        # largest bucket. Minimizes call count — each call re-uploads the KV
+        # buffer, so fewer calls beat fewer padded rows. Mirrors rust
+        # engine::plan_chunks.
+        fits = [cs for cs in cfg.chunk_sizes if cs >= len(pending)]
+        csize = min(fits) if fits else max(cfg.chunk_sizes)
+        chunk = pending[:csize]
+        pending = pending[csize:]
+        pad = csize - len(chunk)
+        toks = jnp.asarray(chunk + [0] * pad, jnp.int32)
+        fwd = _jitted_forward(cfg, csize, use_pallas)
+        logits, kv = fwd(params, toks, jnp.asarray(len(chunk), jnp.int32),
+                         kv, jnp.asarray(pos, jnp.int32))
+        logits = logits[len(chunk) - 1]
+        pos += len(chunk)
+    out: list[int] = []
+    for _ in range(max_new_tokens):
+        nxt = int(jnp.argmax(logits))
+        if nxt == eot_id or pos >= cfg.max_seq:
+            break
+        out.append(nxt)
+        toks = jnp.asarray([nxt], jnp.int32)
+        fwd = _jitted_forward(cfg, 1, use_pallas)
+        logits, kv = fwd(params, toks, jnp.asarray(1, jnp.int32),
+                         kv, jnp.asarray(pos, jnp.int32))
+        logits = logits[0]
+        pos += 1
+    return out, kv, pos

@@ -1,0 +1,201 @@
+"""Byte-level BPE tokenizer: trainer + encoder/decoder.
+
+Build-time twin of `rust/src/tokenizer/` — the two implementations MUST agree
+token-for-token (the Rust side runs on the request path; this side runs once
+to train merges on the synthetic corpus and to emit cross-check fixtures).
+
+Design points shared with the Rust port:
+  * GPT-2 byte<->unicode table (every byte maps to a printable code point).
+  * Pre-tokenization is a small hand-rolled scanner (NOT the GPT-2 regex) so
+    both languages implement the exact same character-class logic:
+      - a run of newlines is one piece;
+      - a run of non-newline whitespace followed by a word is glued to the
+        word (" hello" is one piece);
+      - a trailing/isolated whitespace run is its own piece.
+  * Merge ties break lexicographically, making training deterministic.
+  * Vocabulary layout: specials, then the 256 byte symbols, then merges.
+"""
+
+from __future__ import annotations
+
+import json
+
+END_OF_TEXT = "<|endoftext|>"
+SPECIALS = [END_OF_TEXT]
+
+
+def bytes_to_unicode() -> dict[int, str]:
+    """GPT-2's reversible byte -> printable-unicode map."""
+    bs = list(range(ord("!"), ord("~") + 1)) + \
+         list(range(ord("\xa1"), ord("\xac") + 1)) + \
+         list(range(ord("\xae"), ord("\xff") + 1))
+    cs = bs[:]
+    n = 0
+    for b in range(256):
+        if b not in bs:
+            bs.append(b)
+            cs.append(256 + n)
+            n += 1
+    return dict(zip(bs, [chr(c) for c in cs]))
+
+
+BYTE_TO_UNI = bytes_to_unicode()
+UNI_TO_BYTE = {v: k for k, v in BYTE_TO_UNI.items()}
+
+
+# Explicit space class shared with the Rust port (NOT str.isspace(), whose
+# semantics differ between Python and Rust on exotic code points).
+_SPACE = frozenset(" \t\r\x0b\x0c")
+
+
+def _is_space(c: str) -> bool:
+    return c in _SPACE
+
+
+def pretokenize(text: str) -> list[str]:
+    """Split text into BPE word pieces. Mirrors rust tokenizer::pretokenize."""
+    pieces: list[str] = []
+    i, n = 0, len(text)
+    while i < n:
+        c = text[i]
+        if c == "\n":
+            j = i
+            while j < n and text[j] == "\n":
+                j += 1
+            pieces.append(text[i:j])
+            i = j
+        elif _is_space(c):
+            j = i
+            while j < n and _is_space(text[j]):
+                j += 1
+            if j < n and text[j] != "\n":
+                k = j
+                while k < n and not _is_space(text[k]) and text[k] != "\n":
+                    k += 1
+                pieces.append(text[i:k])
+                i = k
+            else:
+                pieces.append(text[i:j])
+                i = j
+        else:
+            j = i
+            while j < n and not _is_space(text[j]) and text[j] != "\n":
+                j += 1
+            pieces.append(text[i:j])
+            i = j
+    return pieces
+
+
+def _to_symbols(piece: str) -> tuple[str, ...]:
+    return tuple(BYTE_TO_UNI[b] for b in piece.encode("utf-8"))
+
+
+def train_bpe(text: str, vocab_size: int) -> "Tokenizer":
+    """Train merges until `vocab_size` is reached or no pair repeats."""
+    n_merges = vocab_size - 256 - len(SPECIALS)
+    if n_merges < 0:
+        raise ValueError("vocab_size too small for byte alphabet + specials")
+    word_freq: dict[tuple[str, ...], int] = {}
+    for piece in pretokenize(text):
+        sym = _to_symbols(piece)
+        word_freq[sym] = word_freq.get(sym, 0) + 1
+
+    merges: list[tuple[str, str]] = []
+    words = dict(word_freq)
+    for _ in range(n_merges):
+        pairs: dict[tuple[str, str], int] = {}
+        for w, f in words.items():
+            for a, b in zip(w, w[1:]):
+                pairs[(a, b)] = pairs.get((a, b), 0) + f
+        if not pairs:
+            break
+        # Highest count; ties broken by lexicographic order for determinism.
+        best = min(pairs.items(), key=lambda kv: (-kv[1], kv[0]))[0]
+        if pairs[best] < 2:
+            break
+        merges.append(best)
+        merged = best[0] + best[1]
+        new_words: dict[tuple[str, ...], int] = {}
+        for w, f in words.items():
+            out: list[str] = []
+            i = 0
+            while i < len(w):
+                if i + 1 < len(w) and w[i] == best[0] and w[i + 1] == best[1]:
+                    out.append(merged)
+                    i += 2
+                else:
+                    out.append(w[i])
+                    i += 1
+            t = tuple(out)
+            new_words[t] = new_words.get(t, 0) + f
+        words = new_words
+    return Tokenizer(merges)
+
+
+class Tokenizer:
+    """Byte-level BPE encoder/decoder over a fixed merge list."""
+
+    def __init__(self, merges: list[tuple[str, str]]):
+        self.merges = merges
+        self.rank = {m: i for i, m in enumerate(merges)}
+        vocab: list[str] = list(SPECIALS)
+        vocab += [BYTE_TO_UNI[b] for b in range(256)]
+        vocab += [a + b for a, b in merges]
+        self.token_to_id = {t: i for i, t in enumerate(vocab)}
+        self.id_to_token = vocab
+        self._cache: dict[str, list[int]] = {}
+
+    @property
+    def vocab_size(self) -> int:
+        return len(self.id_to_token)
+
+    @property
+    def eot_id(self) -> int:
+        return self.token_to_id[END_OF_TEXT]
+
+    def _bpe(self, piece: str) -> list[str]:
+        word = [BYTE_TO_UNI[b] for b in piece.encode("utf-8")]
+        while len(word) > 1:
+            best_rank, best_i = None, -1
+            for i in range(len(word) - 1):
+                r = self.rank.get((word[i], word[i + 1]))
+                if r is not None and (best_rank is None or r < best_rank):
+                    best_rank, best_i = r, i
+            if best_rank is None:
+                break
+            word[best_i:best_i + 2] = [word[best_i] + word[best_i + 1]]
+        return word
+
+    def encode(self, text: str) -> list[int]:
+        ids: list[int] = []
+        for piece in pretokenize(text):
+            cached = self._cache.get(piece)
+            if cached is None:
+                cached = [self.token_to_id[t] for t in self._bpe(piece)]
+                self._cache[piece] = cached
+            ids.extend(cached)
+        return ids
+
+    def decode(self, ids: list[int]) -> str:
+        out = bytearray()
+        for i in ids:
+            tok = self.id_to_token[i]
+            if tok in SPECIALS:
+                continue
+            for ch in tok:
+                out.append(UNI_TO_BYTE[ch])
+        return out.decode("utf-8", errors="replace")
+
+    def to_json(self) -> str:
+        return json.dumps(
+            {
+                "specials": SPECIALS,
+                "merges": [[a, b] for a, b in self.merges],
+            },
+            ensure_ascii=False,
+        )
+
+    @staticmethod
+    def from_json(s: str) -> "Tokenizer":
+        obj = json.loads(s)
+        return Tokenizer([tuple(m) for m in obj["merges"]])

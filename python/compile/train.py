@@ -1,0 +1,72 @@
+"""Build-time LM training (the 'load a small real model' requirement).
+
+Trains the nano/small GPT-2-family config on the synthetic dialogue corpus
+with a hand-rolled Adam (optax is not vendored). Runs once inside
+`make artifacts`; the resulting weights are what the Rust server loads, so
+the served model is a *trained* conversational model, not noise. The loss
+curve is written to artifacts/train_log.csv and summarized in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .model import ModelConfig, forward_train, init_params
+
+
+def batches(token_ids: np.ndarray, batch: int, seq: int, steps: int, seed: int = 0):
+    """Deterministic sampler of [batch, seq+1] windows from the token stream."""
+    rng = np.random.default_rng(seed)
+    n = len(token_ids) - seq - 1
+    for _ in range(steps):
+        idx = rng.integers(0, n, size=batch)
+        yield np.stack([token_ids[i:i + seq + 1] for i in idx])
+
+
+def make_loss_fn(cfg: ModelConfig):
+    def loss_fn(params, window):
+        x, y = window[:, :-1], window[:, 1:]
+        logits = forward_train(cfg, params, x)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+        return -jnp.mean(ll)
+    return loss_fn
+
+
+def train(cfg: ModelConfig, token_ids: np.ndarray, *, steps: int = 300,
+          batch: int = 8, seq: int = 64, lr: float = 3e-3, seed: int = 0,
+          log_every: int = 10):
+    """Adam training loop. Returns (params, [(step, loss), ...])."""
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    loss_fn = make_loss_fn(cfg)
+
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    @jax.jit
+    def step_fn(params, m, v, window, t):
+        loss, grads = jax.value_and_grad(loss_fn)(params, window)
+        m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+        v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+        mhat = jax.tree.map(lambda a: a / (1 - b1 ** t), m)
+        vhat = jax.tree.map(lambda a: a / (1 - b2 ** t), v)
+        params = jax.tree.map(lambda p, a, b: p - lr * a / (jnp.sqrt(b) + eps),
+                              params, mhat, vhat)
+        return params, m, v, loss
+
+    log: list[tuple[int, float]] = []
+    t0 = time.time()
+    for i, window in enumerate(batches(token_ids, batch, seq, steps, seed)):
+        t = jnp.asarray(i + 1, jnp.float32)
+        params, m, v, loss = step_fn(params, m, v, jnp.asarray(window), t)
+        if i % log_every == 0 or i == steps - 1:
+            log.append((i, float(loss)))
+    dt = time.time() - t0
+    print(f"train[{cfg.name}]: {steps} steps in {dt:.1f}s, "
+          f"loss {log[0][1]:.3f} -> {log[-1][1]:.3f}")
+    return params, log

@@ -1,0 +1,99 @@
+"""AOT artifact contract: HLO text is parseable, manifest matches weights,
+fixtures are internally consistent. Validates artifacts/ when present (built
+by `make artifacts`); lowering itself is exercised on a throwaway config.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.aot import lower_embed, lower_forward, make_forward_fn
+from compile.model import ModelConfig, PRESETS, param_spec
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+HAVE_ART = os.path.exists(os.path.join(ART, "manifest.json"))
+
+TINY = ModelConfig("tiny-aot", n_layer=1, n_head=2, d_model=32,
+                   vocab_size=64, max_seq=64, d_ff=64, chunk_sizes=(1, 4))
+
+
+def test_lower_forward_emits_hlo_text():
+    hlo = lower_forward(TINY, 4)
+    assert "ENTRY" in hlo and "HloModule" in hlo
+    # all params + tokens/valid_len/kv/cur_len appear as entry parameters
+    # (fusion sub-computations also use `parameter(`, so >= not ==)
+    assert hlo.count("parameter(") >= len(param_spec(TINY)) + 4
+
+
+def test_lower_embed_emits_hlo_text():
+    hlo = lower_embed(TINY)
+    assert "ENTRY" in hlo
+
+
+@pytest.mark.skipif(not HAVE_ART, reason="run `make artifacts` first")
+def test_manifest_tensor_table_is_contiguous():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        m = json.load(f)
+    offset = 0
+    for t in m["tensors"]:
+        assert t["offset"] == offset
+        n = 1
+        for d in t["shape"]:
+            n *= d
+        assert t["bytes"] == 4 * n
+        offset += t["bytes"]
+    assert offset == os.path.getsize(os.path.join(ART, m["weights"]))
+
+
+@pytest.mark.skipif(not HAVE_ART, reason="run `make artifacts` first")
+def test_manifest_artifacts_exist():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        m = json.load(f)
+    for name in m["artifacts"].values():
+        path = os.path.join(ART, name)
+        assert os.path.exists(path), name
+        with open(path) as f:
+            head = f.read(200)
+        assert "HloModule" in head
+
+
+@pytest.mark.skipif(not HAVE_ART, reason="run `make artifacts` first")
+def test_fixture_recycle_consistency():
+    with open(os.path.join(ART, "fixtures.json")) as f:
+        fx = json.load(f)
+    rec = fx["recycle"]
+    assert rec["test_ids"][:rec["reuse_depth"]] == rec["cache_ids"]
+    assert rec["baseline_ids"] == rec["recycled_ids"]
+    assert fx["greedy"]["generated_ids"], "greedy fixture must be non-empty"
+
+
+@pytest.mark.skipif(not HAVE_ART, reason="run `make artifacts` first")
+def test_fixture_logits_reproduce():
+    """Recompute the forward golden from weights.bin — pins the serialized
+    weights to the lowered computation."""
+    with open(os.path.join(ART, "manifest.json")) as f:
+        m = json.load(f)
+    with open(os.path.join(ART, "fixtures.json")) as f:
+        fx = json.load(f)
+    cfg = PRESETS[m["model"]["name"]]
+    raw = np.fromfile(os.path.join(ART, m["weights"]), dtype="<f4")
+    params = {}
+    for t in m["tensors"]:
+        n = t["bytes"] // 4
+        params[t["name"]] = jnp.asarray(
+            raw[t["offset"] // 4: t["offset"] // 4 + n].reshape(t["shape"]))
+    fn = make_forward_fn(cfg)
+    flat = [params[name] for name, _ in param_spec(cfg)]
+    g = fx["forward_logits"]
+    c = g["chunk"]
+    toks = jnp.asarray(g["prompt_ids"] + [0] * (c - len(g["prompt_ids"])), jnp.int32)
+    kv = jnp.zeros(cfg.kv_shape(), jnp.float32)
+    logits, _ = fn(*flat, toks, jnp.asarray(len(g["prompt_ids"]), jnp.int32),
+                   kv, jnp.asarray(0, jnp.int32))
+    row = np.asarray(logits[len(g["prompt_ids"]) - 1])
+    np.testing.assert_allclose(row[:8], g["last_row_first8"], rtol=1e-4, atol=1e-4)
+    assert int(row.argmax()) == g["last_row_argmax"]

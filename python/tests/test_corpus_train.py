@@ -1,0 +1,61 @@
+"""Corpus determinism, prompt-file contract, and trainer sanity."""
+
+import os
+
+import numpy as np
+
+from compile.corpus import (CACHE_PROMPTS, TEST_PROMPTS, build_corpus,
+                            write_prompt_files)
+from compile.model import ModelConfig
+from compile.tokenizer import train_bpe
+from compile.train import batches, train
+
+
+def test_corpus_deterministic():
+    assert build_corpus(seed=0, n_exchanges=50) == build_corpus(seed=0, n_exchanges=50)
+    assert build_corpus(seed=1, n_exchanges=50) != build_corpus(seed=0, n_exchanges=50)
+
+
+def test_corpus_is_dialogue_shaped():
+    text = build_corpus(seed=0, n_exchanges=100)
+    assert text.count("User: ") == 100
+    assert text.count("Bot: ") == 100
+
+
+def test_prompt_sets_match_paper_scale():
+    """§4.6: 10 cached and 6 test prompts."""
+    assert len(CACHE_PROMPTS) == 10
+    assert len(TEST_PROMPTS) == 6
+
+
+def test_test_prompts_extend_cache_prompts():
+    """§4.3: test prompts are extended versions of cache prompts — every test
+    prompt must have some cache prompt as a strict text prefix."""
+    for t in TEST_PROMPTS:
+        assert any(t.startswith(c) and len(t) > len(c) for c in CACHE_PROMPTS), t
+
+
+def test_write_prompt_files(tmp_path):
+    write_prompt_files(str(tmp_path))
+    cache = (tmp_path / "cache_prompts.csv").read_text().splitlines()
+    test = (tmp_path / "test_prompts.csv").read_text().splitlines()
+    assert cache[0] == "text" and len(cache) == 11
+    assert test[0] == "text" and len(test) == 7
+
+
+def test_batches_shape_and_determinism():
+    ids = np.arange(1000, dtype=np.int32) % 50
+    a = list(batches(ids, batch=4, seq=16, steps=3, seed=2))
+    b = list(batches(ids, batch=4, seq=16, steps=3, seed=2))
+    assert all((x == y).all() for x, y in zip(a, b))
+    assert a[0].shape == (4, 17)
+
+
+def test_train_loss_decreases():
+    cfg = ModelConfig("tiny-train", n_layer=1, n_head=2, d_model=32,
+                      vocab_size=300, max_seq=64, d_ff=64, chunk_sizes=(1, 8))
+    corpus = build_corpus(seed=0, n_exchanges=200)
+    tok = train_bpe(corpus, cfg.vocab_size)
+    stream = np.asarray(tok.encode(corpus), np.int32)
+    _, log = train(cfg, stream, steps=25, batch=4, seq=32, log_every=5)
+    assert log[-1][1] < log[0][1] * 0.9, log

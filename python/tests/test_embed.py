@@ -1,0 +1,40 @@
+"""Embedding encoder: unit norm, padding mask, determinism."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.embedmodel import embed_forward, init_embed_params
+from compile.model import PRESETS
+
+CFG = PRESETS["nano"]
+EP = init_embed_params(CFG, jax.random.PRNGKey(42))
+
+
+def emb(ids):
+    pad = ids + [0] * (CFG.embed_seq - len(ids))
+    return np.asarray(embed_forward(CFG, EP, jnp.asarray(pad, jnp.int32),
+                                    jnp.asarray(len(ids), jnp.int32)))
+
+
+def test_unit_norm():
+    np.testing.assert_allclose(np.linalg.norm(emb([5, 9, 200])), 1.0, rtol=1e-5)
+
+
+def test_padding_is_masked():
+    a = emb([5, 9, 200])
+    pad = [5, 9, 200] + [77] * 20
+    x = jnp.asarray([5, 9, 200] + [77] * 20 + [0] * (CFG.embed_seq - 23), jnp.int32)
+    b = np.asarray(embed_forward(CFG, EP, x, jnp.asarray(3, jnp.int32)))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_similar_inputs_closer_than_dissimilar():
+    a = emb([5, 9, 200, 31])
+    b = emb([5, 9, 200, 32])   # one-token difference
+    c = emb([400, 401, 402, 403])
+    assert a @ b > a @ c
+
+
+def test_deterministic():
+    np.testing.assert_array_equal(emb([1, 2, 3]), emb([1, 2, 3]))

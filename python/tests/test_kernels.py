@@ -1,0 +1,161 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+hypothesis sweeps shapes (heads, chunk, head-dim, buffer size, block sizes)
+and the cur_len offset; assert_allclose against ref.py at f32 tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.cached_attention import cached_attention, vmem_bytes
+from compile.kernels.fused_ln import fused_layernorm
+from compile.kernels.ref import (ref_cached_attention, ref_layernorm,
+                                 ref_similarity_scores)
+from compile.kernels.sim_topk import similarity_scores
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+# --- cached_attention --------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    h=st.sampled_from([1, 2, 4]),
+    c=st.sampled_from([1, 3, 8, 16]),
+    d=st.sampled_from([8, 16, 32]),
+    nkb=st.integers(1, 4),
+    block_k=st.sampled_from([16, 32, 64]),
+    cur_frac=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_cached_attention_matches_ref(h, c, d, nkb, block_k, cur_frac, seed):
+    s = nkb * block_k
+    cur_len = min(int(cur_frac * (s - c)), s - c)
+    q = rand(seed, (h, c, d))
+    k = rand(seed + 1, (h, s, d))
+    v = rand(seed + 2, (h, s, d))
+    out = cached_attention(q, k, v, cur_len, block_k=block_k)
+    ref = ref_cached_attention(q, k, v, cur_len, c)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_cached_attention_zero_prefix_is_plain_causal():
+    """cur_len=0 must equal plain causal self-attention over the chunk."""
+    h, c, d, s = 2, 8, 16, 64
+    q = rand(0, (h, c, d))
+    kf = rand(1, (h, s, d))
+    vf = rand(2, (h, s, d))
+    out = cached_attention(q, kf, vf, 0, block_k=32)
+    # plain causal attention over first c keys only
+    scale = 1.0 / np.sqrt(d)
+    sc = np.einsum("hcd,hsd->hcs", np.asarray(q), np.asarray(kf[:, :c])) * scale
+    mask = np.tril(np.ones((c, c), bool))
+    sc = np.where(mask, sc, -1e30)
+    p = np.exp(sc - sc.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    ref = np.einsum("hcs,hsd->hcd", p, np.asarray(vf[:, :c]))
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-5, atol=2e-5)
+
+
+def test_cached_attention_ignores_garbage_beyond_window():
+    """Keys beyond cur_len + i must not affect the output at all."""
+    h, c, d, s = 2, 4, 16, 64
+    q = rand(0, (h, c, d))
+    k = rand(1, (h, s, d))
+    v = rand(2, (h, s, d))
+    cur = 10
+    out1 = cached_attention(q, k, v, cur, block_k=32)
+    # Poison everything beyond the furthest visible key (cur + c - 1).
+    k2 = k.at[:, cur + c:].set(1e9)
+    v2 = v.at[:, cur + c:].set(-1e9)
+    out2 = cached_attention(q, k2, v2, cur, block_k=32)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_cached_attention_decode_step():
+    """C=1 (decode) against ref at several depths."""
+    h, d, s = 4, 32, 128
+    k = rand(1, (h, s, d))
+    v = rand(2, (h, s, d))
+    for cur in [0, 1, 63, 100, 126]:
+        q = rand(cur + 7, (h, 1, d))
+        out = cached_attention(q, k, v, cur, block_k=64)
+        ref = ref_cached_attention(q, k, v, cur, 1)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_cached_attention_rejects_bad_block():
+    with pytest.raises(ValueError):
+        cached_attention(rand(0, (1, 1, 8)), rand(1, (1, 100, 8)),
+                         rand(2, (1, 100, 8)), 0, block_k=64)
+
+
+def test_vmem_estimate_positive_and_monotonic():
+    a = vmem_bytes(8, 32, 64)
+    b = vmem_bytes(8, 32, 128)
+    assert 0 < a < b
+
+
+# --- similarity_scores -------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 200),
+    d=st.sampled_from([16, 64, 128]),
+    block_n=st.sampled_from([8, 32, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_similarity_scores_matches_ref(n, d, block_n, seed):
+    e = rand(seed, (n, d))
+    q = rand(seed + 1, (d,))
+    out = similarity_scores(e, q, block_n=block_n)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref_similarity_scores(e, q)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_similarity_identical_vector_wins():
+    d = 32
+    e = rand(0, (10, d))
+    e = e / jnp.linalg.norm(e, axis=1, keepdims=True)
+    q = e[7]
+    scores = np.asarray(similarity_scores(e, q, block_n=8))
+    assert scores.argmax() == 7
+    np.testing.assert_allclose(scores[7], 1.0, rtol=1e-5)
+
+
+# --- fused_layernorm ---------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    r=st.integers(1, 70),
+    d=st.sampled_from([16, 128, 256]),
+    block_rows=st.sampled_from([1, 4, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_fused_layernorm_matches_ref(r, d, block_rows, seed):
+    x = rand(seed, (r, d)) * 3.0 + 0.5
+    g = rand(seed + 1, (d,))
+    b = rand(seed + 2, (d,))
+    out = fused_layernorm(x, g, b, block_rows=block_rows)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref_layernorm(x, g, b)),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_fused_layernorm_output_stats():
+    """With unit gain / zero shift, rows are ~zero-mean unit-var."""
+    x = rand(3, (16, 256)) * 7 + 2
+    out = np.asarray(fused_layernorm(x, jnp.ones(256), jnp.zeros(256)))
+    np.testing.assert_allclose(out.mean(-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(out.std(-1), 1.0, atol=1e-2)

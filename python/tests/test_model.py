@@ -1,0 +1,117 @@
+"""L2 model invariants — the paper's correctness claims, asserted in jnp.
+
+Central claim (paper §2.1/§3.1): encoding tokens 1..m from scratch equals
+encoding 1..k, caching KV, then encoding k+1..m with the cache injected.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (PRESETS, ModelConfig, empty_kv, flatten_params,
+                           forward_chunk, forward_train, greedy_generate,
+                           init_params, param_spec, unflatten_params)
+
+CFG = PRESETS["nano"]
+PARAMS = init_params(CFG, jax.random.PRNGKey(0))
+IDS = [int(x) for x in
+       np.random.default_rng(7).integers(1, CFG.vocab_size, size=48)]
+
+TOL = dict(rtol=3e-4, atol=3e-4)
+
+
+def prefill(ids, kv, cur, chunk, use_pallas=False):
+    pad = chunk - len(ids)
+    toks = jnp.asarray(list(ids) + [0] * pad, jnp.int32)
+    logits, kv = forward_chunk(CFG, PARAMS, toks, jnp.asarray(len(ids), jnp.int32),
+                               kv, jnp.asarray(cur, jnp.int32),
+                               use_pallas=use_pallas)
+    return logits[len(ids) - 1], kv
+
+
+def test_param_spec_counts():
+    spec = param_spec(CFG)
+    assert spec[0][0] == "wte"
+    assert len(spec) == 2 + 12 * CFG.n_layer + 2
+    assert CFG.n_params() > 0.8e6  # nano is ~1M params
+
+
+def test_flatten_unflatten_roundtrip():
+    flat = flatten_params(CFG, PARAMS)
+    params2 = unflatten_params(CFG, tuple(flat))
+    for name, _ in param_spec(CFG):
+        assert params2[name] is PARAMS[name]
+
+
+def test_kv_shape_and_bytes():
+    assert CFG.kv_shape() == (4, 2, 4, 256, 32)
+    assert CFG.kv_bytes() == 4 * 2 * 4 * 256 * 32 * 4
+
+
+@pytest.mark.parametrize("split", [1, 8, 20, 40])
+def test_recycled_prefill_equals_full(split):
+    """THE paper claim: KV computed for a prefix can be reused exactly."""
+    m = len(IDS)
+    full_logits, _ = prefill(IDS, empty_kv(CFG), 0, 64)
+    _, kv = prefill(IDS[:split], empty_kv(CFG), 0, 64)
+    rec_logits, _ = prefill(IDS[split:], kv, split, 64)
+    np.testing.assert_allclose(np.asarray(full_logits),
+                               np.asarray(rec_logits), **TOL)
+
+
+def test_many_small_chunks_equal_one_big():
+    _, kv = prefill(IDS[:8], empty_kv(CFG), 0, 8)
+    _, kv = prefill(IDS[8:16], kv, 8, 8)
+    _, kv = prefill(IDS[16:24], kv, 16, 8)
+    lg_a, _ = prefill(IDS[24:32], kv, 24, 8)
+    lg_b, _ = prefill(IDS[:32], empty_kv(CFG), 0, 32)
+    np.testing.assert_allclose(np.asarray(lg_a), np.asarray(lg_b), **TOL)
+
+
+def test_padding_does_not_change_logits():
+    """Right-padding a chunk must not affect the valid rows."""
+    lg_a, _ = prefill(IDS[:10], empty_kv(CFG), 0, 16)
+    lg_b, _ = prefill(IDS[:10], empty_kv(CFG), 0, 64)
+    np.testing.assert_allclose(np.asarray(lg_a), np.asarray(lg_b), **TOL)
+
+
+def test_train_path_matches_kv_path():
+    lg_train = forward_train(CFG, PARAMS, jnp.asarray([IDS], jnp.int32))
+    lg_kv, _ = prefill(IDS, empty_kv(CFG), 0, 64)
+    np.testing.assert_allclose(np.asarray(lg_train[0, -1]),
+                               np.asarray(lg_kv), **TOL)
+
+
+def test_pallas_path_matches_jnp_path():
+    lg_a, _ = prefill(IDS[:16], empty_kv(CFG), 0, 16, use_pallas=True)
+    lg_b, _ = prefill(IDS[:16], empty_kv(CFG), 0, 16, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(lg_a), np.asarray(lg_b), **TOL)
+
+
+def test_greedy_generate_deterministic():
+    a, _, _ = greedy_generate(CFG, PARAMS, IDS[:12], 6)
+    b, _, _ = greedy_generate(CFG, PARAMS, IDS[:12], 6)
+    assert a == b
+    assert len(a) <= 6
+
+
+def test_greedy_recycled_equals_baseline():
+    """End-to-end recycling equivalence at the generation level."""
+    cache_ids, test_ids = IDS[:20], IDS[:32]
+    base, _, _ = greedy_generate(CFG, PARAMS, test_ids, 8)
+    _, kv, clen = greedy_generate(CFG, PARAMS, cache_ids, 0)
+    assert clen == 20
+    rec, _, _ = greedy_generate(CFG, PARAMS, test_ids, 8, kv=kv, cur_len=clen)
+    assert rec == base
+
+
+def test_context_capacity_guard():
+    """Generation stops at the context window (max_seq) rather than
+    writing out of bounds."""
+    small = ModelConfig("t", n_layer=1, n_head=2, d_model=32, vocab_size=64,
+                        max_seq=32, d_ff=64, chunk_sizes=(1, 8))
+    p = init_params(small, jax.random.PRNGKey(1))
+    ids = [1] * 30
+    out, _, pos = greedy_generate(small, p, ids, 10)
+    assert pos <= small.max_seq

@@ -1,0 +1,74 @@
+"""BPE tokenizer: roundtrip, determinism, and pretokenizer invariants.
+
+The Rust port is cross-checked against the same fixtures in
+artifacts/fixtures.json; these tests pin the Python side.
+"""
+
+import json
+
+from hypothesis import given, settings, strategies as st
+
+from compile.corpus import build_corpus
+from compile.tokenizer import (SPECIALS, Tokenizer, bytes_to_unicode,
+                               pretokenize, train_bpe)
+
+_CORPUS = build_corpus(seed=0, n_exchanges=300)
+_TOK = train_bpe(_CORPUS, 512)
+
+text_strategy = st.text(
+    alphabet=st.characters(codec="utf-8", exclude_characters="\r"),
+    max_size=200,
+)
+
+
+def test_byte_unicode_table_bijective():
+    t = bytes_to_unicode()
+    assert len(t) == 256
+    assert len(set(t.values())) == 256
+
+
+@settings(max_examples=200, deadline=None)
+@given(text_strategy)
+def test_pretokenize_concat_identity(text):
+    assert "".join(pretokenize(text)) == text
+
+
+@settings(max_examples=200, deadline=None)
+@given(text_strategy)
+def test_encode_decode_roundtrip(text):
+    assert _TOK.decode(_TOK.encode(text)) == text
+
+
+def test_encode_deterministic_and_cached():
+    a = _TOK.encode("User: How do airplanes fly?\nBot:")
+    b = _TOK.encode("User: How do airplanes fly?\nBot:")
+    assert a == b
+
+
+def test_vocab_layout():
+    assert _TOK.vocab_size == 512
+    assert _TOK.id_to_token[0] == "<|endoftext|>"
+    # byte tokens occupy [len(SPECIALS), len(SPECIALS)+256)
+    assert len(_TOK.id_to_token) == len(SPECIALS) + 256 + len(_TOK.merges)
+
+
+def test_prefix_tokenization_stability():
+    """The paper's prefix condition needs: tokens(cache) is a prefix of
+    tokens(cache + suffix) when the suffix starts at a piece boundary."""
+    cache = "What is the capital of France?"
+    test = cache + " Also mention a nearby tourist destination."
+    c, t = _TOK.encode(cache), _TOK.encode(test)
+    assert t[:len(c)] == c
+
+
+def test_json_roundtrip():
+    tok2 = Tokenizer.from_json(_TOK.to_json())
+    s = "Explain machine learning in simple terms."
+    assert tok2.encode(s) == _TOK.encode(s)
+    json.loads(_TOK.to_json())  # valid JSON
+
+
+def test_training_compresses_corpus():
+    """Merges must actually compress: fewer tokens than bytes."""
+    sample = _CORPUS[:2000]
+    assert len(_TOK.encode(sample)) < 0.6 * len(sample.encode())

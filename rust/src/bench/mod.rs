@@ -1,0 +1,14 @@
+//! Benchmark support: workload generation, the baseline-vs-recycled
+//! evaluation harness, and table formatting. The `benches/` binaries are
+//! thin drivers over this module so the same code also backs the
+//! `paper_eval` example and the integration tests.
+
+mod eval;
+mod tables;
+mod workload;
+
+pub use eval::{config_or_fallback, eval_recycler, run_comparison,
+               tokenizer_or_fallback, ComparisonReport, EvalOptions};
+pub use tables::{format_row_series, format_table, Table};
+pub use workload::{overlap_workload, paper_cache_prompts, paper_test_prompts,
+                   session_workload, OverlapSpec, Workload};

@@ -1,0 +1,118 @@
+//! Plain-text table/series formatting for the bench binaries (the repo's
+//! stand-in for the paper's matplotlib figures: each figure is regenerated
+//! as a printed series plus a CSV).
+
+/// A simple column-aligned table.
+#[derive(Debug, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render column-aligned text.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = line(&self.header);
+        out.push('\n');
+        out.push_str(&"-".repeat(out.len().saturating_sub(1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render CSV (for results/ files).
+    pub fn to_csv(&self) -> String {
+        let mut all = vec![self.header.clone()];
+        all.extend(self.rows.iter().cloned());
+        crate::util::csv::to_string(&all)
+    }
+}
+
+/// Format a `(x, y)` series the way the figures are reported in
+/// EXPERIMENTS.md: one `x<TAB>y` line each.
+pub fn format_row_series(name: &str, series: &[(f64, f64)]) -> String {
+    let mut out = format!("# {name}\n");
+    for (x, y) in series {
+        out.push_str(&format!("{x:.4}\t{y:.4}\n"));
+    }
+    out
+}
+
+/// Two-column key/value table (the paper's §5.1 summary).
+pub fn format_table(title: &str, rows: &[(&str, String)]) -> String {
+    let mut t = Table::new(&["Metric", "Value"]);
+    for (k, v) in rows {
+        t.row(vec![k.to_string(), v.clone()]);
+    }
+    format!("== {title} ==\n{}", t.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_alignment() {
+        let mut t = Table::new(&["a", "long-header"]);
+        t.row(vec!["xxxxx".into(), "1".into()]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].contains("long-header"));
+        assert!(lines[2].starts_with("xxxxx"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_arity() {
+        Table::new(&["a", "b"]).row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn csv_rendering() {
+        let mut t = Table::new(&["x", "y"]);
+        t.row(vec!["1".into(), "a,b".into()]);
+        assert_eq!(t.to_csv(), "x,y\n1,\"a,b\"\n");
+    }
+
+    #[test]
+    fn series_format() {
+        let s = format_row_series("fig", &[(1.0, 2.0), (3.0, 4.5)]);
+        assert!(s.starts_with("# fig\n"));
+        assert!(s.contains("3.0000\t4.5000"));
+    }
+}

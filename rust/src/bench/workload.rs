@@ -1,0 +1,189 @@
+//! Workload generation.
+//!
+//! * The paper's exact prompt sets (§4.3): 10 cache prompts + 6 test
+//!   prompts, loaded from `data/*.csv` when present, with the same
+//!   built-in constants as fallback (they're written by the artifact
+//!   build from the same source of truth).
+//! * Synthetic overlap workloads with a controlled k/m ratio for the §5.5
+//!   sweep and the ablations.
+
+use std::path::Path;
+
+use crate::util::csv;
+use crate::util::rng::Rng;
+
+/// A cache-prompts + test-prompts pair.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub cache_prompts: Vec<String>,
+    pub test_prompts: Vec<String>,
+}
+
+const PAPER_CACHE: [&str; 10] = [
+    "Explain machine learning in simple terms.",
+    "What is the capital of France?",
+    "How do airplanes fly?",
+    "What is deep learning?",
+    "Explain gravity in simple terms.",
+    "How do boats float?",
+    "What is the capital of Japan?",
+    "Explain photosynthesis in simple terms.",
+    "How do rockets launch?",
+    "What is a cache?",
+];
+
+const PAPER_TEST: [&str; 6] = [
+    "Explain machine learning in simple terms. Give an example application.",
+    "What is the capital of France? Also mention a nearby tourist destination.",
+    "How do airplanes fly? Keep the answer short.",
+    "What is deep learning? Compare it with machine learning.",
+    "Explain gravity in simple terms. Why does the moon stay in orbit?",
+    "What is a cache? Why do browsers use one?",
+];
+
+fn load_or(path: &Path, fallback: &[&str]) -> Vec<String> {
+    csv::read_single_column(path)
+        .unwrap_or_else(|_| fallback.iter().map(|s| s.to_string()).collect())
+}
+
+/// The paper's 10 cache prompts (data/cache_prompts.csv when available).
+pub fn paper_cache_prompts(data_dir: &Path) -> Vec<String> {
+    load_or(&data_dir.join("cache_prompts.csv"), &PAPER_CACHE)
+}
+
+/// The paper's 6 test prompts (data/test_prompts.csv when available).
+pub fn paper_test_prompts(data_dir: &Path) -> Vec<String> {
+    load_or(&data_dir.join("test_prompts.csv"), &PAPER_TEST)
+}
+
+/// Parameters for a synthetic overlap workload.
+#[derive(Debug, Clone, Copy)]
+pub struct OverlapSpec {
+    /// Number of (cache, test) prompt pairs.
+    pub pairs: usize,
+    /// Words in the shared prefix (≈ reuse depth k in tokens).
+    pub prefix_words: usize,
+    /// Extra words appended to the test prompt (m - k).
+    pub suffix_words: usize,
+    /// Fraction of test prompts that should NOT match any cache prompt.
+    pub miss_rate: f64,
+    pub seed: u64,
+}
+
+const WORDS: [&str; 32] = [
+    "signal", "engine", "garden", "window", "planet", "cache", "memory",
+    "token", "river", "mountain", "bridge", "circuit", "market", "forest",
+    "needle", "harbor", "crystal", "lantern", "meadow", "rocket", "anchor",
+    "compass", "granite", "whistle", "violet", "thunder", "saddle", "ribbon",
+    "copper", "marble", "falcon", "ember",
+];
+
+fn sentence(rng: &mut Rng, words: usize) -> String {
+    (0..words)
+        .map(|_| *rng.choice(&WORDS))
+        .collect::<Vec<_>>()
+        .join(" ")
+}
+
+/// Build a workload where each test prompt extends its cache prompt by
+/// `suffix_words` (hit) or is freshly random (miss).
+pub fn overlap_workload(spec: OverlapSpec) -> Workload {
+    let mut rng = Rng::new(spec.seed);
+    let mut cache_prompts = Vec::with_capacity(spec.pairs);
+    let mut test_prompts = Vec::with_capacity(spec.pairs);
+    for i in 0..spec.pairs {
+        let prefix = format!("q{i} {}", sentence(&mut rng, spec.prefix_words));
+        cache_prompts.push(prefix.clone());
+        if rng.chance(spec.miss_rate) {
+            test_prompts.push(format!("z{i} {}", sentence(&mut rng,
+                spec.prefix_words + spec.suffix_words)));
+        } else {
+            test_prompts.push(format!("{prefix} {}", sentence(&mut rng, spec.suffix_words)));
+        }
+    }
+    Workload {
+        cache_prompts,
+        test_prompts,
+    }
+}
+
+/// Multi-turn user messages for the session/e2e demo.
+pub fn session_workload(turns: usize, seed: u64) -> Vec<String> {
+    let mut rng = Rng::new(seed);
+    let questions = [
+        "What is the capital of France?",
+        "How do airplanes fly?",
+        "Explain machine learning in simple terms.",
+        "What is a cache?",
+        "How do boats float?",
+        "Explain gravity in simple terms.",
+    ];
+    (0..turns).map(|_| rng.choice(&questions).to_string()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_sets_have_paper_sizes() {
+        let dir = Path::new("definitely-not-a-dir");
+        assert_eq!(paper_cache_prompts(dir).len(), 10);
+        assert_eq!(paper_test_prompts(dir).len(), 6);
+    }
+
+    #[test]
+    fn every_paper_test_prompt_extends_a_cache_prompt() {
+        let dir = Path::new("definitely-not-a-dir");
+        let cache = paper_cache_prompts(dir);
+        for t in paper_test_prompts(dir) {
+            assert!(
+                cache.iter().any(|c| t.starts_with(c.as_str()) && t.len() > c.len()),
+                "{t}"
+            );
+        }
+    }
+
+    #[test]
+    fn overlap_workload_hits_share_prefix() {
+        let w = overlap_workload(OverlapSpec {
+            pairs: 20,
+            prefix_words: 8,
+            suffix_words: 4,
+            miss_rate: 0.0,
+            seed: 3,
+        });
+        for (c, t) in w.cache_prompts.iter().zip(&w.test_prompts) {
+            assert!(t.starts_with(c.as_str()));
+            assert!(t.len() > c.len());
+        }
+    }
+
+    #[test]
+    fn overlap_workload_misses_diverge() {
+        let w = overlap_workload(OverlapSpec {
+            pairs: 30,
+            prefix_words: 6,
+            suffix_words: 3,
+            miss_rate: 1.0,
+            seed: 4,
+        });
+        for (c, t) in w.cache_prompts.iter().zip(&w.test_prompts) {
+            assert!(!t.starts_with(c.as_str()));
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let spec = OverlapSpec {
+            pairs: 5,
+            prefix_words: 5,
+            suffix_words: 2,
+            miss_rate: 0.5,
+            seed: 9,
+        };
+        let a = overlap_workload(spec);
+        let b = overlap_workload(spec);
+        assert_eq!(a.test_prompts, b.test_prompts);
+    }
+}

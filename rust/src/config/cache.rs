@@ -1,0 +1,160 @@
+//! KV-cache policy configuration.
+
+use crate::error::{Error, Result};
+use crate::util::json::Value;
+
+/// Which entry to evict when the store exceeds capacity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EvictionPolicy {
+    /// Least recently used (default; matches serving intuition).
+    Lru,
+    /// Least frequently used, ties broken by recency.
+    Lfu,
+    /// First in, first out (the paper's implicit append-only behaviour,
+    /// bounded).
+    Fifo,
+    /// Evict the entry with the lowest (hits + 1) * token_len score — an
+    /// approximation of "cheapest to recompute, least useful" (cost-aware).
+    CostAware,
+}
+
+impl EvictionPolicy {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "lru" => Ok(Self::Lru),
+            "lfu" => Ok(Self::Lfu),
+            "fifo" => Ok(Self::Fifo),
+            "cost" | "cost-aware" => Ok(Self::CostAware),
+            _ => Err(Error::Config(format!("unknown eviction policy '{s}'"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Lru => "lru",
+            Self::Lfu => "lfu",
+            Self::Fifo => "fifo",
+            Self::CostAware => "cost-aware",
+        }
+    }
+
+    pub const ALL: [EvictionPolicy; 4] =
+        [Self::Lru, Self::Lfu, Self::Fifo, Self::CostAware];
+}
+
+/// KV store sizing + persistence knobs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CacheConfig {
+    /// Max number of cached prompts (0 = unbounded).
+    pub max_entries: usize,
+    /// Max total bytes of cached KV (0 = unbounded). Entries are accounted
+    /// by their *trimmed* size `kv_bytes_for_len(tokens)`.
+    pub max_bytes: usize,
+    pub eviction: EvictionPolicy,
+    /// Retrieval similarity floor: candidates below this are treated as a
+    /// miss before the prefix test even runs (paper uses top-1 retrieval
+    /// with no floor; 0.0 reproduces that).
+    pub min_similarity: f32,
+    /// Compress KV payloads with DEFLATE when persisting to disk.
+    pub compress: bool,
+    /// Directory for persisted entries (None = RAM only).
+    pub persist_dir: Option<String>,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig {
+            max_entries: 64,
+            max_bytes: 0,
+            eviction: EvictionPolicy::Lru,
+            min_similarity: 0.0,
+            compress: false,
+            persist_dir: None,
+        }
+    }
+}
+
+impl CacheConfig {
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let mut c = CacheConfig::default();
+        if let Some(x) = v.get("max_entries") {
+            c.max_entries = x
+                .as_usize()
+                .ok_or_else(|| Error::Config("max_entries must be a number".into()))?;
+        }
+        if let Some(x) = v.get("max_bytes") {
+            c.max_bytes = x
+                .as_usize()
+                .ok_or_else(|| Error::Config("max_bytes must be a number".into()))?;
+        }
+        if let Some(x) = v.get("eviction") {
+            c.eviction = EvictionPolicy::parse(
+                x.as_str()
+                    .ok_or_else(|| Error::Config("eviction must be a string".into()))?,
+            )?;
+        }
+        if let Some(x) = v.get("min_similarity") {
+            c.min_similarity = x
+                .as_f64()
+                .ok_or_else(|| Error::Config("min_similarity must be a number".into()))?
+                as f32;
+        }
+        if let Some(x) = v.get("compress") {
+            c.compress = x
+                .as_bool()
+                .ok_or_else(|| Error::Config("compress must be a bool".into()))?;
+        }
+        if let Some(x) = v.get("persist_dir") {
+            c.persist_dir = Some(
+                x.as_str()
+                    .ok_or_else(|| Error::Config("persist_dir must be a string".into()))?
+                    .to_string(),
+            );
+        }
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn defaults() {
+        let c = CacheConfig::default();
+        assert_eq!(c.eviction, EvictionPolicy::Lru);
+        assert_eq!(c.max_entries, 64);
+    }
+
+    #[test]
+    fn parse_policies() {
+        for (s, p) in [
+            ("lru", EvictionPolicy::Lru),
+            ("lfu", EvictionPolicy::Lfu),
+            ("fifo", EvictionPolicy::Fifo),
+            ("cost-aware", EvictionPolicy::CostAware),
+        ] {
+            assert_eq!(EvictionPolicy::parse(s).unwrap(), p);
+            assert_eq!(EvictionPolicy::parse(p.name()).unwrap(), p);
+        }
+        assert!(EvictionPolicy::parse("random").is_err());
+    }
+
+    #[test]
+    fn from_json_partial_overrides() {
+        let v = json::parse(r#"{"max_entries": 3, "eviction": "lfu", "compress": true}"#)
+            .unwrap();
+        let c = CacheConfig::from_json(&v).unwrap();
+        assert_eq!(c.max_entries, 3);
+        assert_eq!(c.eviction, EvictionPolicy::Lfu);
+        assert!(c.compress);
+        assert_eq!(c.min_similarity, 0.0);
+    }
+
+    #[test]
+    fn from_json_type_errors() {
+        let v = json::parse(r#"{"max_entries": "three"}"#).unwrap();
+        assert!(CacheConfig::from_json(&v).is_err());
+    }
+}

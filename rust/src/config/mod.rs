@@ -1,0 +1,12 @@
+//! Configuration system: model architecture (from the artifact manifest),
+//! cache policy, and server tuning. All config is plain JSON parsed with
+//! [`crate::util::json`]; every field has a production-sane default so a
+//! bare `artifacts/` directory is sufficient to serve.
+
+mod cache;
+mod model;
+mod server;
+
+pub use cache::{CacheConfig, EvictionPolicy};
+pub use model::ModelConfig;
+pub use server::ServerConfig;

@@ -1,0 +1,228 @@
+//! Model architecture config — mirrors `python/compile/model.py::ModelConfig`
+//! and is read from the `model` section of `artifacts/manifest.json`.
+
+use crate::error::{Error, Result};
+use crate::util::json::Value;
+
+/// GPT-2-family architecture hyper-parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub n_layer: usize,
+    pub n_head: usize,
+    pub d_model: usize,
+    pub vocab_size: usize,
+    /// Context window (the paper's fixed 1024-token window for
+    /// DialoGPT-medium; 256 for the nano testbed).
+    pub max_seq: usize,
+    pub d_ff: usize,
+    pub head_dim: usize,
+    pub embed_dim: usize,
+    pub embed_seq: usize,
+    /// Prefill chunk buckets with a dedicated HLO executable each.
+    pub chunk_sizes: Vec<usize>,
+    /// KV sequence-capacity buckets (each (chunk, seq) pair has its own
+    /// executable; short live contexts upload and scan less KV).
+    pub seq_buckets: Vec<usize>,
+    /// End-of-text token id (generation stop).
+    pub eot_id: u32,
+}
+
+impl ModelConfig {
+    /// Parse the `model` object of the manifest.
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let chunk_sizes = v
+            .req_arr("chunk_sizes")?
+            .iter()
+            .map(|c| {
+                c.as_usize()
+                    .ok_or_else(|| Error::ManifestInvalid("bad chunk size".into()))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let seq_buckets = v
+            .req_arr("seq_buckets")?
+            .iter()
+            .map(|c| {
+                c.as_usize()
+                    .ok_or_else(|| Error::ManifestInvalid("bad seq bucket".into()))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let cfg = ModelConfig {
+            name: v.req_str("name")?.to_string(),
+            n_layer: v.req_usize("n_layer")?,
+            n_head: v.req_usize("n_head")?,
+            d_model: v.req_usize("d_model")?,
+            vocab_size: v.req_usize("vocab_size")?,
+            max_seq: v.req_usize("max_seq")?,
+            d_ff: v.req_usize("d_ff")?,
+            head_dim: v.req_usize("head_dim")?,
+            embed_dim: v.req_usize("embed_dim")?,
+            embed_seq: v.req_usize("embed_seq")?,
+            chunk_sizes,
+            seq_buckets,
+            eot_id: v.req_usize("eot_id")? as u32,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.d_model != self.n_head * self.head_dim {
+            return Err(Error::ManifestInvalid(format!(
+                "d_model {} != n_head {} * head_dim {}",
+                self.d_model, self.n_head, self.head_dim
+            )));
+        }
+        if self.chunk_sizes.is_empty() {
+            return Err(Error::ManifestInvalid("no chunk sizes".into()));
+        }
+        let mut sorted = self.chunk_sizes.clone();
+        sorted.sort();
+        if sorted != self.chunk_sizes {
+            return Err(Error::ManifestInvalid("chunk_sizes must be ascending".into()));
+        }
+        if *self.chunk_sizes.last().unwrap() > self.max_seq {
+            return Err(Error::ManifestInvalid("chunk larger than context".into()));
+        }
+        if self.seq_buckets.is_empty()
+            || *self.seq_buckets.last().unwrap() != self.max_seq
+        {
+            return Err(Error::ManifestInvalid(
+                "seq_buckets must end at max_seq".into(),
+            ));
+        }
+        let mut sb = self.seq_buckets.clone();
+        sb.sort();
+        if sb != self.seq_buckets {
+            return Err(Error::ManifestInvalid("seq_buckets must be ascending".into()));
+        }
+        Ok(())
+    }
+
+    /// Smallest seq bucket that covers `live` positions (falls back to
+    /// max_seq, which validation guarantees is the last bucket).
+    pub fn seq_bucket_for(&self, live: usize) -> usize {
+        self.seq_buckets
+            .iter()
+            .copied()
+            .find(|&s| s >= live)
+            .unwrap_or(self.max_seq)
+    }
+
+    /// KV buffer shape `[L, 2, H, S, D]`.
+    pub fn kv_shape(&self) -> [usize; 5] {
+        [self.n_layer, 2, self.n_head, self.max_seq, self.head_dim]
+    }
+
+    /// Elements in one full KV buffer.
+    pub fn kv_elems(&self) -> usize {
+        self.kv_shape().iter().product()
+    }
+
+    /// Bytes of one full (f32) KV buffer — what the cache store accounts.
+    pub fn kv_bytes(&self) -> usize {
+        4 * self.kv_elems()
+    }
+
+    /// Bytes of KV actually *live* for a prefix of `len` tokens
+    /// (`[L, 2, H, len, D]`) — what a trimmed cache entry stores.
+    pub fn kv_bytes_for_len(&self, len: usize) -> usize {
+        4 * self.n_layer * 2 * self.n_head * len * self.head_dim
+    }
+
+    /// The nano testbed config (matches the artifact build defaults); used
+    /// by unit tests that don't load artifacts.
+    pub fn nano() -> Self {
+        ModelConfig {
+            name: "nano".into(),
+            n_layer: 4,
+            n_head: 4,
+            d_model: 128,
+            vocab_size: 512,
+            max_seq: 256,
+            d_ff: 512,
+            head_dim: 32,
+            embed_dim: 64,
+            embed_seq: 64,
+            chunk_sizes: vec![1, 8, 32, 64],
+            seq_buckets: vec![64, 128, 256],
+            eot_id: 0,
+        }
+    }
+
+    /// Shape-identical to DialoGPT-medium (the paper's testbed) — used by
+    /// the roofline estimator; never served on CPU CI.
+    pub fn dialogpt_medium() -> Self {
+        ModelConfig {
+            name: "dialogpt-medium".into(),
+            n_layer: 24,
+            n_head: 16,
+            d_model: 1024,
+            vocab_size: 50257,
+            max_seq: 1024,
+            d_ff: 4096,
+            head_dim: 64,
+            embed_dim: 64,
+            embed_seq: 64,
+            chunk_sizes: vec![1, 8, 32, 64],
+            seq_buckets: vec![64, 256, 1024],
+            eot_id: 50256,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn nano_is_valid() {
+        ModelConfig::nano().validate().unwrap();
+        assert_eq!(ModelConfig::nano().kv_shape(), [4, 2, 4, 256, 32]);
+        assert_eq!(ModelConfig::nano().kv_bytes(), 4 * 2 * 4 * 256 * 32 * 4);
+    }
+
+    #[test]
+    fn kv_bytes_for_len_scales_linearly() {
+        let c = ModelConfig::nano();
+        assert_eq!(c.kv_bytes_for_len(0), 0);
+        assert_eq!(c.kv_bytes_for_len(c.max_seq), c.kv_bytes());
+        assert_eq!(c.kv_bytes_for_len(10) * 2, c.kv_bytes_for_len(20));
+    }
+
+    #[test]
+    fn parses_manifest_model_section() {
+        let j = r#"{"name":"nano","n_layer":4,"n_head":4,"d_model":128,
+                    "vocab_size":512,"max_seq":256,"d_ff":512,"head_dim":32,
+                    "embed_dim":64,"embed_seq":64,"chunk_sizes":[1,8,32,64],
+                    "seq_buckets":[64,128,256],"eot_id":0}"#;
+        let cfg = ModelConfig::from_json(&json::parse(j).unwrap()).unwrap();
+        assert_eq!(cfg, ModelConfig::nano());
+    }
+
+    #[test]
+    fn rejects_inconsistent_heads() {
+        let mut c = ModelConfig::nano();
+        c.head_dim = 31;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_unsorted_chunks() {
+        let mut c = ModelConfig::nano();
+        c.chunk_sizes = vec![8, 1];
+        assert!(c.validate().is_err());
+        c.chunk_sizes = vec![1, 8, 512];
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn medium_matches_paper_shape() {
+        let c = ModelConfig::dialogpt_medium();
+        c.validate().unwrap();
+        assert_eq!(c.n_layer, 24);
+        assert_eq!(c.d_model, 1024);
+        assert_eq!(c.max_seq, 1024);
+    }
+}

@@ -1,0 +1,118 @@
+//! Server/coordinator tuning knobs.
+
+use crate::error::{Error, Result};
+use crate::util::json::Value;
+
+/// Coordinator + TCP server configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServerConfig {
+    /// TCP listen address for `server::tcp`.
+    pub listen: String,
+    /// Request queue capacity; submissions beyond this are rejected
+    /// (backpressure, paper-agnostic serving hygiene).
+    pub queue_capacity: usize,
+    /// Max requests drained per scheduling tick (the "batch" — the paper
+    /// fixes batch size 1; larger values amortize queue overhead while the
+    /// engine still executes sequentially on the single-stream runtime).
+    pub max_batch: usize,
+    /// How long the batcher waits to fill a batch before dispatching.
+    pub batch_window_ms: u64,
+    /// Default max_new_tokens when a request does not specify one.
+    pub default_max_new_tokens: usize,
+    /// Whether new prompts are inserted into the KV cache after prefill
+    /// (true = the paper's cache-building pass happens online).
+    pub populate_cache: bool,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            listen: "127.0.0.1:7077".into(),
+            queue_capacity: 256,
+            max_batch: 8,
+            batch_window_ms: 2,
+            default_max_new_tokens: 32,
+            populate_cache: true,
+        }
+    }
+}
+
+impl ServerConfig {
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let mut c = ServerConfig::default();
+        if let Some(x) = v.get("listen") {
+            c.listen = x
+                .as_str()
+                .ok_or_else(|| Error::Config("listen must be a string".into()))?
+                .to_string();
+        }
+        let usize_field = |field: &str| -> Result<Option<usize>> {
+            match v.get(field) {
+                None => Ok(None),
+                Some(x) => x
+                    .as_usize()
+                    .map(Some)
+                    .ok_or_else(|| Error::Config(format!("{field} must be a number"))),
+            }
+        };
+        if let Some(n) = usize_field("queue_capacity")? {
+            c.queue_capacity = n;
+        }
+        if let Some(n) = usize_field("max_batch")? {
+            c.max_batch = n;
+        }
+        if let Some(n) = usize_field("default_max_new_tokens")? {
+            c.default_max_new_tokens = n;
+        }
+        if let Some(x) = v.get("batch_window_ms") {
+            c.batch_window_ms = x
+                .as_usize()
+                .ok_or_else(|| Error::Config("batch_window_ms must be a number".into()))?
+                as u64;
+        }
+        if let Some(x) = v.get("populate_cache") {
+            c.populate_cache = x
+                .as_bool()
+                .ok_or_else(|| Error::Config("populate_cache must be a bool".into()))?;
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.max_batch == 0 || self.queue_capacity == 0 {
+            return Err(Error::Config("max_batch/queue_capacity must be > 0".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn defaults_valid() {
+        ServerConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parse_overrides() {
+        let v = json::parse(
+            r#"{"listen": "0.0.0.0:9", "max_batch": 4, "populate_cache": false}"#,
+        )
+        .unwrap();
+        let c = ServerConfig::from_json(&v).unwrap();
+        assert_eq!(c.listen, "0.0.0.0:9");
+        assert_eq!(c.max_batch, 4);
+        assert!(!c.populate_cache);
+        assert_eq!(c.queue_capacity, 256);
+    }
+
+    #[test]
+    fn rejects_zero_batch() {
+        let v = json::parse(r#"{"max_batch": 0}"#).unwrap();
+        assert!(ServerConfig::from_json(&v).is_err());
+    }
+}

@@ -1,0 +1,20 @@
+//! The serving coordinator: bounded request queue, batching scheduler,
+//! session manager, and the worker loop that drives the recycler.
+//!
+//! Threading model (tokio is not in the offline vendor set — and the PJRT
+//! CPU runtime is single-stream anyway): submitters enqueue into a bounded
+//! [`queue::RequestQueue`]; one worker thread drains batches
+//! ([`batcher::drain_batch`]) and executes them sequentially through the
+//! recycler; responses travel back over per-request channels.
+
+mod batcher;
+mod queue;
+mod request;
+mod service;
+mod session;
+
+pub use batcher::drain_batch;
+pub use queue::{QueueError, RequestQueue};
+pub use request::{Request, Response};
+pub use service::{Coordinator, CoordinatorStats};
+pub use session::{SessionManager, Turn};

@@ -1,0 +1,166 @@
+//! Bounded MPSC request queue with close semantics and backpressure.
+//!
+//! `std::sync::mpsc::sync_channel` cannot reject-instead-of-block or report
+//! depth, both of which the coordinator needs (reject = backpressure,
+//! depth = metrics), hence this small Mutex+Condvar queue.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// Why a push was refused.
+#[derive(Debug, PartialEq, Eq)]
+pub enum QueueError {
+    Full,
+    Closed,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Bounded MPSC queue.
+pub struct RequestQueue<T> {
+    inner: Mutex<Inner<T>>,
+    notify: Condvar,
+    capacity: usize,
+}
+
+impl<T> RequestQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        RequestQueue {
+            inner: Mutex::new(Inner {
+                items: VecDeque::new(),
+                closed: false,
+            }),
+            notify: Condvar::new(),
+            capacity,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Non-blocking push; rejects when full or closed (backpressure).
+    pub fn push(&self, item: T) -> Result<(), QueueError> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed {
+            return Err(QueueError::Closed);
+        }
+        if inner.items.len() >= self.capacity {
+            return Err(QueueError::Full);
+        }
+        inner.items.push_back(item);
+        self.notify.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop with timeout. None on timeout or when closed+drained.
+    pub fn pop_timeout(&self, timeout: Duration) -> Option<T> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = inner.items.pop_front() {
+                return Some(item);
+            }
+            if inner.closed {
+                return None;
+            }
+            let (guard, res) = self.notify.wait_timeout(inner, timeout).unwrap();
+            inner = guard;
+            if res.timed_out() && inner.items.is_empty() {
+                return None;
+            }
+        }
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<T> {
+        self.inner.lock().unwrap().items.pop_front()
+    }
+
+    /// Close: further pushes fail; poppers drain the backlog then get None.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.notify.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order() {
+        let q = RequestQueue::new(4);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.try_pop(), Some(1));
+        assert_eq!(q.try_pop(), Some(2));
+        assert_eq!(q.try_pop(), None);
+    }
+
+    #[test]
+    fn rejects_when_full() {
+        let q = RequestQueue::new(2);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.push(3), Err(QueueError::Full));
+        q.try_pop();
+        q.push(3).unwrap();
+    }
+
+    #[test]
+    fn close_semantics() {
+        let q = RequestQueue::new(2);
+        q.push(1).unwrap();
+        q.close();
+        assert_eq!(q.push(2), Err(QueueError::Closed));
+        // backlog still drains
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), Some(1));
+        assert_eq!(q.pop_timeout(Duration::from_millis(1)), None);
+    }
+
+    #[test]
+    fn pop_timeout_times_out() {
+        let q: RequestQueue<i32> = RequestQueue::new(1);
+        let t = std::time::Instant::now();
+        assert_eq!(q.pop_timeout(Duration::from_millis(20)), None);
+        assert!(t.elapsed() >= Duration::from_millis(15));
+    }
+
+    #[test]
+    fn cross_thread_handoff() {
+        let q = Arc::new(RequestQueue::new(64));
+        let q2 = Arc::clone(&q);
+        let producer = std::thread::spawn(move || {
+            for i in 0..100 {
+                while q2.push(i).is_err() {
+                    std::thread::yield_now();
+                }
+            }
+            q2.close();
+        });
+        let mut got = Vec::new();
+        while let Some(v) = q.pop_timeout(Duration::from_millis(200)) {
+            got.push(v);
+        }
+        producer.join().unwrap();
+        assert_eq!(got, (0..100).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,32 @@
+//! Request/response types crossing the queue boundary.
+
+use std::sync::mpsc;
+
+use crate::recycler::Outcome;
+
+/// A queued generation request.
+pub struct Request {
+    pub id: u64,
+    pub prompt: String,
+    pub max_new_tokens: usize,
+    /// Optional session for multi-turn context carry-over.
+    pub session: Option<String>,
+    /// Response channel (one-shot).
+    pub reply: mpsc::Sender<Response>,
+}
+
+/// What the worker sends back.
+#[derive(Debug)]
+pub enum Response {
+    Ok(Box<Outcome>),
+    Err(String),
+}
+
+impl Response {
+    pub fn ok(self) -> Result<Outcome, String> {
+        match self {
+            Response::Ok(o) => Ok(*o),
+            Response::Err(e) => Err(e),
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Multi-turn sessions: the "expand usable context capacity" half of the
+//! paper's title.
+//!
+//! Sessions are tracked at the *token* level: each turn's prompt ids are
+//! the previous turn's exact final ids (prompt + generated response) plus
+//! the newly-encoded user segment. Token-level continuation is what makes
+//! the cached-KV prefix match guaranteed — re-tokenizing the transcript
+//! text could split BPE merges differently at generation boundaries and
+//! silently break the prefix condition. The recycler caches the full
+//! prompt+response KV per turn (`admit_full`), so turn N+1 reuses all of
+//! turn N's computation; the `context_extension` example measures this.
+
+use std::collections::HashMap;
+
+/// One dialogue turn (bookkeeping/display).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Turn {
+    pub user: String,
+    pub bot: String,
+}
+
+/// Accumulated session state: the exact text AND token ids of the
+/// transcript so far (including the last bot response).
+#[derive(Debug, Clone, Default)]
+pub struct SessionState {
+    pub text: String,
+    pub ids: Vec<u32>,
+    pub turns: Vec<Turn>,
+}
+
+/// In-memory session registry.
+#[derive(Debug, Default)]
+pub struct SessionManager {
+    sessions: HashMap<String, SessionState>,
+}
+
+impl SessionManager {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+
+    /// The text segment appended for a new user message (the only part
+    /// that needs fresh tokenization).
+    pub fn segment_for(&self, session_id: &str, user_msg: &str) -> String {
+        let has_history = self
+            .sessions
+            .get(session_id)
+            .is_some_and(|s| !s.ids.is_empty());
+        if has_history {
+            format!("\nUser: {user_msg}\nBot:")
+        } else {
+            format!("User: {user_msg}\nBot:")
+        }
+    }
+
+    /// Current transcript (text, ids) — empty for a fresh session.
+    pub fn state_of(&self, session_id: &str) -> (String, Vec<u32>) {
+        match self.sessions.get(session_id) {
+            Some(s) => (s.text.clone(), s.ids.clone()),
+            None => (String::new(), Vec::new()),
+        }
+    }
+
+    /// Commit a completed turn: the transcript becomes the full prompt
+    /// text/ids plus the bot response.
+    pub fn commit(
+        &mut self,
+        session_id: &str,
+        user_msg: &str,
+        full_text: String,
+        full_ids: Vec<u32>,
+        bot_text: &str,
+    ) {
+        let s = self.sessions.entry(session_id.to_string()).or_default();
+        s.text = full_text;
+        s.ids = full_ids;
+        s.turns.push(Turn {
+            user: user_msg.to_string(),
+            bot: bot_text.to_string(),
+        });
+    }
+
+    pub fn turns(&self, session_id: &str) -> usize {
+        self.sessions.get(session_id).map_or(0, |s| s.turns.len())
+    }
+
+    /// Transcript token count (context usage).
+    pub fn context_tokens(&self, session_id: &str) -> usize {
+        self.sessions.get(session_id).map_or(0, |s| s.ids.len())
+    }
+
+    pub fn drop_session(&mut self, session_id: &str) -> bool {
+        self.sessions.remove(session_id).is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_turn_segment() {
+        let m = SessionManager::new();
+        assert_eq!(m.segment_for("s1", "hi"), "User: hi\nBot:");
+        assert_eq!(m.state_of("s1"), (String::new(), vec![]));
+    }
+
+    #[test]
+    fn committed_ids_are_the_next_turn_prefix() {
+        // the key property: turn N+1's prompt ids literally extend turn
+        // N's committed ids
+        let mut m = SessionManager::new();
+        let seg1 = m.segment_for("s", "hi");
+        let prompt1_ids = vec![1, 2, 3]; // encode(seg1), stand-in
+        let full1: Vec<u32> = vec![1, 2, 3, 9, 8]; // + generated
+        m.commit("s", "hi", format!("{seg1} yo!"), full1.clone(), " yo!");
+
+        let seg2 = m.segment_for("s", "more");
+        assert!(seg2.starts_with('\n'), "history -> newline-joined segment");
+        let (text2, ids2) = m.state_of("s");
+        assert_eq!(ids2, full1);
+        assert!(text2.ends_with(" yo!"));
+        assert_eq!(m.turns("s"), 1);
+        assert_eq!(m.context_tokens("s"), 5);
+        drop(prompt1_ids);
+    }
+
+    #[test]
+    fn sessions_are_isolated() {
+        let mut m = SessionManager::new();
+        m.commit("a", "x", "t".into(), vec![1], "y");
+        assert_eq!(m.state_of("b"), (String::new(), vec![]));
+        assert_eq!(m.segment_for("b", "hi"), "User: hi\nBot:");
+    }
+
+    #[test]
+    fn drop_session() {
+        let mut m = SessionManager::new();
+        m.commit("a", "x", "t".into(), vec![1], "y");
+        assert!(m.drop_session("a"));
+        assert!(!m.drop_session("a"));
+        assert!(m.is_empty());
+    }
+}

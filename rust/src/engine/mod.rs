@@ -1,0 +1,91 @@
+//! Generation engine: chunked prefill + greedy decode over a
+//! [`ForwardModel`].
+//!
+//! The engine is backend-agnostic: the PJRT [`crate::runtime::Runtime`]
+//! implements [`ForwardModel`] for production, and
+//! [`crate::testutil::MockModel`] implements it for coordinator/recycler
+//! unit tests that must run without artifacts.
+//!
+//! Chunk scheduling mirrors `python/compile/model.py::greedy_generate`
+//! exactly (largest bucket that fits, else the smallest bucket padded), so
+//! the Rust engine reproduces the Python golden fixtures token-for-token.
+
+mod generate;
+
+pub use generate::{Engine, Generated};
+
+use crate::config::ModelConfig;
+use crate::error::Result;
+
+/// A model that can process one chunk of new tokens against a host-side KV
+/// buffer. Implementations must guarantee the paper's exactness property:
+/// encoding a sequence in any chunk split yields the same logits and KV.
+///
+/// Deliberately NOT `Send`: the PJRT handles wrap `Rc` internally, so the
+/// production model lives on exactly one thread — the coordinator builds it
+/// *inside* its worker thread (see [`crate::coordinator::Coordinator::spawn`]).
+pub trait ForwardModel {
+    fn config(&self) -> &ModelConfig;
+
+    /// Process `tokens` (padded to a bucket size; `valid_len` real) at
+    /// position `cur_len`, writing new KV rows into `kv` (full buffer,
+    /// `[L, 2, H, S, D]` row-major) and returning logits `[C, V]` flat.
+    fn forward_chunk(
+        &self,
+        tokens: &[u32],
+        valid_len: usize,
+        kv: &mut [f32],
+        cur_len: usize,
+    ) -> Result<Vec<f32>>;
+}
+
+/// Pick the chunk bucket for `n` pending tokens: the smallest bucket that
+/// covers all of them (padded), else the largest bucket. Minimizes call
+/// count — every call re-uploads the KV buffer, so fewer calls beat fewer
+/// padded rows. Mirrors `python greedy_generate`'s scheduler.
+pub fn pick_chunk(buckets: &[usize], n: usize) -> usize {
+    assert!(!buckets.is_empty() && n > 0);
+    buckets
+        .iter()
+        .find(|&&b| b >= n)
+        .copied()
+        .unwrap_or_else(|| *buckets.last().unwrap())
+}
+
+/// Full chunk plan for `n` pending tokens.
+pub fn plan_chunks(buckets: &[usize], mut n: usize) -> Vec<usize> {
+    let mut plan = Vec::new();
+    while n > 0 {
+        let c = pick_chunk(buckets, n);
+        plan.push(c);
+        n = n.saturating_sub(c);
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_rounds_up_to_one_call() {
+        let b = vec![1, 8, 32, 64];
+        assert_eq!(plan_chunks(&b, 100), vec![64, 64]);
+        assert_eq!(plan_chunks(&b, 64), vec![64]);
+        assert_eq!(plan_chunks(&b, 7), vec![8]);
+        assert_eq!(plan_chunks(&b, 9), vec![32]);
+        assert_eq!(plan_chunks(&b, 1), vec![1]);
+        assert!(plan_chunks(&b, 0).is_empty());
+    }
+
+    #[test]
+    fn plan_total_covers() {
+        let b = vec![1, 8, 32];
+        for n in 1..200 {
+            let plan = plan_chunks(&b, n);
+            let total: usize = plan.iter().sum();
+            assert!(total >= n);
+            assert!(total - n < *b.last().unwrap(), "n={n} plan={plan:?}");
+        }
+    }
+}

@@ -1,0 +1,56 @@
+//! Crate-wide error type.
+//!
+//! Substrates return `Result<T, Error>`; the binary/examples use `anyhow`
+//! at the top level. Variants are grouped by subsystem so integration tests
+//! can assert on failure classes (e.g. corruption injection must yield
+//! `Error::Corrupt`, never a silent wrong answer).
+
+use thiserror::Error;
+
+#[derive(Error, Debug)]
+pub enum Error {
+    // --- artifacts / runtime ------------------------------------------------
+    #[error("artifact missing: {0}")]
+    ArtifactMissing(String),
+    #[error("manifest invalid: {0}")]
+    ManifestInvalid(String),
+    #[error("xla error: {0}")]
+    Xla(String),
+    #[error("shape mismatch: {0}")]
+    ShapeMismatch(String),
+
+    // --- serving ------------------------------------------------------------
+    #[error("prompt too long: {got} tokens > context window {max}")]
+    PromptTooLong { got: usize, max: usize },
+    #[error("context window exhausted at position {0}")]
+    ContextExhausted(usize),
+    #[error("request rejected: {0}")]
+    Rejected(String),
+    #[error("coordinator shut down")]
+    ShutDown,
+
+    // --- persistence ---------------------------------------------------------
+    #[error("corrupt cache file: {0}")]
+    Corrupt(String),
+    #[error("unsupported cache file version {0}")]
+    Version(u32),
+
+    // --- parsing -------------------------------------------------------------
+    #[error("json error: {0}")]
+    Json(String),
+    #[error("csv error: {0}")]
+    Csv(String),
+    #[error("config error: {0}")]
+    Config(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

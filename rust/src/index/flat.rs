@@ -1,0 +1,162 @@
+//! Exact top-k dot-product index over unit vectors.
+//!
+//! This is the retrieval stage of the paper (`i* = argmax_i <e_i, e_t>`),
+//! as an explicit, removal-capable structure: entries carry a caller key
+//! (the KV store id) so eviction keeps the two structures in sync. L1's
+//! `sim_topk.py` is the TPU-shaped twin of the scoring loop.
+
+/// Flat exact-search index. Keys are caller-owned u64s (KV store ids).
+#[derive(Debug, Default)]
+pub struct FlatIndex {
+    dim: usize,
+    keys: Vec<u64>,
+    /// Row-major [n, dim] matrix.
+    vectors: Vec<f32>,
+}
+
+impl FlatIndex {
+    pub fn new(dim: usize) -> Self {
+        FlatIndex {
+            dim,
+            keys: Vec::new(),
+            vectors: Vec::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Add a vector under a key. Panics on dimension mismatch (programmer
+    /// error — embedder dim is fixed at construction).
+    pub fn add(&mut self, key: u64, vector: &[f32]) {
+        assert_eq!(vector.len(), self.dim, "index dim mismatch");
+        self.keys.push(key);
+        self.vectors.extend_from_slice(vector);
+    }
+
+    /// Remove a key (swap-remove; O(dim)). Returns whether it existed.
+    pub fn remove(&mut self, key: u64) -> bool {
+        if let Some(i) = self.keys.iter().position(|&k| k == key) {
+            let last = self.keys.len() - 1;
+            self.keys.swap(i, last);
+            self.keys.pop();
+            if i != last {
+                let (head, tail) = self.vectors.split_at_mut(last * self.dim);
+                head[i * self.dim..(i + 1) * self.dim].copy_from_slice(tail);
+            }
+            self.vectors.truncate(last * self.dim);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Dot-product scores against all entries (the hot loop; L1 twin:
+    /// kernels/sim_topk.py).
+    pub fn scores(&self, query: &[f32]) -> Vec<f32> {
+        assert_eq!(query.len(), self.dim, "query dim mismatch");
+        let mut out = Vec::with_capacity(self.keys.len());
+        for row in self.vectors.chunks_exact(self.dim) {
+            let mut dot = 0f32;
+            for (&a, &b) in row.iter().zip(query) {
+                dot += a * b;
+            }
+            out.push(dot);
+        }
+        out
+    }
+
+    /// Top-k (key, score) pairs, best first. k=1 is the paper's retrieval.
+    pub fn top_k(&self, query: &[f32], k: usize) -> Vec<(u64, f32)> {
+        let scores = self.scores(query);
+        let mut pairs: Vec<(u64, f32)> = self.keys.iter().copied().zip(scores).collect();
+        pairs.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        pairs.truncate(k);
+        pairs
+    }
+
+    /// Best match, if any.
+    pub fn nearest(&self, query: &[f32]) -> Option<(u64, f32)> {
+        self.top_k(query, 1).into_iter().next()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unit(v: &[f32]) -> Vec<f32> {
+        let n: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+        v.iter().map(|x| x / n).collect()
+    }
+
+    #[test]
+    fn nearest_finds_identical() {
+        let mut ix = FlatIndex::new(3);
+        ix.add(10, &unit(&[1.0, 0.0, 0.0]));
+        ix.add(20, &unit(&[0.0, 1.0, 0.0]));
+        ix.add(30, &unit(&[1.0, 1.0, 0.0]));
+        let (k, s) = ix.nearest(&unit(&[0.0, 1.0, 0.0])).unwrap();
+        assert_eq!(k, 20);
+        assert!((s - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn top_k_ordering_and_truncation() {
+        let mut ix = FlatIndex::new(2);
+        ix.add(1, &[1.0, 0.0]);
+        ix.add(2, &[0.9, 0.1]);
+        ix.add(3, &[0.0, 1.0]);
+        let top = ix.top_k(&[1.0, 0.0], 2);
+        assert_eq!(top.len(), 2);
+        assert_eq!(top[0].0, 1);
+        assert_eq!(top[1].0, 2);
+    }
+
+    #[test]
+    fn remove_swaps_correctly() {
+        let mut ix = FlatIndex::new(2);
+        ix.add(1, &[1.0, 0.0]);
+        ix.add(2, &[0.0, 1.0]);
+        ix.add(3, &[-1.0, 0.0]);
+        assert!(ix.remove(1));
+        assert!(!ix.remove(1));
+        assert_eq!(ix.len(), 2);
+        // 2 and 3 must still be retrievable with correct vectors
+        assert_eq!(ix.nearest(&[0.0, 1.0]).unwrap().0, 2);
+        assert_eq!(ix.nearest(&[-1.0, 0.0]).unwrap().0, 3);
+    }
+
+    #[test]
+    fn remove_last_element() {
+        let mut ix = FlatIndex::new(2);
+        ix.add(1, &[1.0, 0.0]);
+        assert!(ix.remove(1));
+        assert!(ix.is_empty());
+        assert!(ix.nearest(&[1.0, 0.0]).is_none());
+    }
+
+    #[test]
+    fn empty_index() {
+        let ix = FlatIndex::new(4);
+        assert!(ix.nearest(&[0.0; 4]).is_none());
+        assert!(ix.top_k(&[0.0; 4], 3).is_empty());
+    }
+
+    #[test]
+    fn ties_break_by_key() {
+        let mut ix = FlatIndex::new(1);
+        ix.add(7, &[1.0]);
+        ix.add(3, &[1.0]);
+        assert_eq!(ix.nearest(&[1.0]).unwrap().0, 3);
+    }
+}

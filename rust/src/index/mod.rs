@@ -1,0 +1,57 @@
+//! Embedding index — the faiss-cpu + sentence-transformers substitute.
+//!
+//! * [`ngram::NgramEmbedder`] — hashed character-n-gram embedding on the
+//!   request path (deterministic, no model call).
+//! * [`flat::FlatIndex`] — exact top-k dot-product search over normalized
+//!   vectors (the same algorithm faiss's `IndexFlatIP` runs at this scale,
+//!   and the paper's `argmax_i <e_i, e_t>` retrieval).
+//!
+//! An alternative embedder backed by the AOT `embed.hlo.txt` artifact lives
+//! in `engine::embedder` (it needs the PJRT runtime).
+
+mod flat;
+mod ngram;
+
+pub use flat::FlatIndex;
+pub use ngram::NgramEmbedder;
+
+/// Anything that can embed text into a unit-norm vector.
+///
+/// Not `Send`/`Sync`-bounded: the HLO-backed embedder holds PJRT handles,
+/// which live on a single thread (the coordinator worker).
+pub trait Embedder {
+    fn dim(&self) -> usize;
+    fn embed(&self, text: &str) -> Vec<f32>;
+}
+
+/// Cosine similarity between two (not necessarily normalized) vectors.
+/// Two zero vectors compare as 1.0 (identical inputs, e.g. two empty
+/// texts); a zero vector against a non-zero one compares as 0.0.
+pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let (mut dot, mut na, mut nb) = (0f32, 0f32, 0f32);
+    for (&x, &y) in a.iter().zip(b) {
+        dot += x * y;
+        na += x * x;
+        nb += y * y;
+    }
+    match (na == 0.0, nb == 0.0) {
+        (true, true) => 1.0,
+        (true, false) | (false, true) => 0.0,
+        _ => dot / (na.sqrt() * nb.sqrt()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cosine_basics() {
+        assert!((cosine(&[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-6);
+        assert!(cosine(&[1.0, 0.0], &[0.0, 1.0]).abs() < 1e-6);
+        assert!((cosine(&[1.0, 0.0], &[-1.0, 0.0]) + 1.0).abs() < 1e-6);
+        assert_eq!(cosine(&[0.0, 0.0], &[1.0, 0.0]), 0.0);
+        assert_eq!(cosine(&[0.0, 0.0], &[0.0, 0.0]), 1.0);
+    }
+}

@@ -1,0 +1,122 @@
+//! Hashed character-n-gram embedder.
+//!
+//! Substitution for sentence-transformers (DESIGN.md §2): each character
+//! 3/4/5-gram hashes into one of `dim` buckets with a signed weight; the
+//! bucket histogram is L2-normalized. Prompts sharing long literal spans —
+//! exactly the paper's near-duplicate / extended-prefix workloads — land
+//! close in cosine space, which is all the retrieval stage needs.
+
+use super::Embedder;
+
+/// FNV-1a 64-bit (no external hash crates needed, stable across runs).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Hashed n-gram embedding with fixed output dimension.
+#[derive(Debug, Clone)]
+pub struct NgramEmbedder {
+    dim: usize,
+    ngram_sizes: Vec<usize>,
+}
+
+impl NgramEmbedder {
+    pub fn new(dim: usize) -> Self {
+        assert!(dim > 0);
+        NgramEmbedder {
+            dim,
+            ngram_sizes: vec![3, 4, 5],
+        }
+    }
+
+    pub fn with_ngram_sizes(dim: usize, sizes: Vec<usize>) -> Self {
+        assert!(!sizes.is_empty());
+        NgramEmbedder {
+            dim,
+            ngram_sizes: sizes,
+        }
+    }
+}
+
+impl Embedder for NgramEmbedder {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn embed(&self, text: &str) -> Vec<f32> {
+        let mut v = vec![0f32; self.dim];
+        let lower = text.to_lowercase();
+        let bytes = lower.as_bytes();
+        for &n in &self.ngram_sizes {
+            if bytes.len() < n {
+                continue;
+            }
+            for w in bytes.windows(n) {
+                let h = fnv1a(w);
+                let bucket = (h % self.dim as u64) as usize;
+                let sign = if (h >> 63) == 0 { 1.0 } else { -1.0 };
+                v[bucket] += sign;
+            }
+        }
+        let norm: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+        if norm > 0.0 {
+            for x in &mut v {
+                *x /= norm;
+            }
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::cosine;
+
+    #[test]
+    fn unit_norm() {
+        let e = NgramEmbedder::new(64);
+        let v = e.embed("What is the capital of France?");
+        let norm: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn deterministic() {
+        let e = NgramEmbedder::new(64);
+        assert_eq!(e.embed("hello"), e.embed("hello"));
+    }
+
+    #[test]
+    fn near_duplicates_score_higher_than_unrelated() {
+        let e = NgramEmbedder::new(128);
+        let cache = e.embed("What is the capital of France?");
+        let extended =
+            e.embed("What is the capital of France? Also mention a nearby tourist destination.");
+        let unrelated = e.embed("How do rockets launch?");
+        assert!(
+            cosine(&cache, &extended) > cosine(&cache, &unrelated) + 0.2,
+            "ext={} unrel={}",
+            cosine(&cache, &extended),
+            cosine(&cache, &unrelated)
+        );
+    }
+
+    #[test]
+    fn case_insensitive() {
+        let e = NgramEmbedder::new(64);
+        assert_eq!(e.embed("Hello World"), e.embed("hello world"));
+    }
+
+    #[test]
+    fn short_and_empty_inputs() {
+        let e = NgramEmbedder::new(64);
+        assert_eq!(e.embed("").iter().map(|x| x * x).sum::<f32>(), 0.0);
+        let _ = e.embed("ab"); // shorter than every n-gram: zero vector, no panic
+    }
+}

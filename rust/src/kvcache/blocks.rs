@@ -1,0 +1,204 @@
+//! PagedAttention-inspired KV block pool.
+//!
+//! The paper cites PagedAttention (Kwon et al. 2023) as the
+//! state-of-the-art for KV memory management; this module provides the
+//! corresponding substrate: fixed-size *token blocks* with reference
+//! counting so multiple cached prompts can share a common prefix's blocks
+//! instead of duplicating them. The radix recycling policy and the A2
+//! ablation build on it to quantify the memory saved by sharing —
+//! "expanding usable context capacity" in the paper's framing.
+//!
+//! Invariants (property-tested):
+//!  * free + Σ refcounts-held blocks == capacity
+//!  * a block is never on the free list while its refcount > 0
+//!  * dropping the last `BlockRef` returns the block to the free list
+
+use std::sync::{Arc, Mutex};
+
+/// Handle to one allocated block; cloning shares (bumps the refcount),
+/// dropping releases.
+pub struct BlockRef {
+    pool: Arc<Mutex<Inner>>,
+    pub block_id: usize,
+}
+
+impl Clone for BlockRef {
+    fn clone(&self) -> Self {
+        let mut inner = self.pool.lock().unwrap();
+        inner.refcounts[self.block_id] += 1;
+        BlockRef {
+            pool: Arc::clone(&self.pool),
+            block_id: self.block_id,
+        }
+    }
+}
+
+impl Drop for BlockRef {
+    fn drop(&mut self) {
+        let mut inner = self.pool.lock().unwrap();
+        inner.refcounts[self.block_id] -= 1;
+        if inner.refcounts[self.block_id] == 0 {
+            inner.free.push(self.block_id);
+        }
+    }
+}
+
+impl std::fmt::Debug for BlockRef {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "BlockRef({})", self.block_id)
+    }
+}
+
+struct Inner {
+    free: Vec<usize>,
+    refcounts: Vec<u32>,
+}
+
+/// Fixed-capacity pool of KV blocks of `block_tokens` positions each.
+pub struct BlockPool {
+    inner: Arc<Mutex<Inner>>,
+    capacity: usize,
+    block_tokens: usize,
+}
+
+impl BlockPool {
+    pub fn new(capacity: usize, block_tokens: usize) -> Self {
+        assert!(block_tokens > 0);
+        BlockPool {
+            inner: Arc::new(Mutex::new(Inner {
+                free: (0..capacity).rev().collect(),
+                refcounts: vec![0; capacity],
+            })),
+            capacity,
+            block_tokens,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.inner.lock().unwrap().free.len()
+    }
+
+    /// Blocks needed to hold `tokens` positions.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+
+    /// Allocate one block. None when exhausted.
+    pub fn alloc(&self) -> Option<BlockRef> {
+        let mut inner = self.inner.lock().unwrap();
+        let id = inner.free.pop()?;
+        debug_assert_eq!(inner.refcounts[id], 0);
+        inner.refcounts[id] = 1;
+        Some(BlockRef {
+            pool: Arc::clone(&self.inner),
+            block_id: id,
+        })
+    }
+
+    /// Allocate a run of blocks for a sequence of `tokens` positions.
+    /// All-or-nothing: on shortage, nothing is leaked.
+    pub fn alloc_seq(&self, tokens: usize) -> Option<Vec<BlockRef>> {
+        let need = self.blocks_for(tokens);
+        let mut out = Vec::with_capacity(need);
+        for _ in 0..need {
+            match self.alloc() {
+                Some(b) => out.push(b),
+                None => return None, // drops already-allocated refs -> freed
+            }
+        }
+        Some(out)
+    }
+
+    /// Bytes of KV that `n_seqs` sequences of `tokens` positions would
+    /// occupy with vs without prefix sharing of `shared_tokens` — the
+    /// headline "context capacity expansion" arithmetic used by the
+    /// ablation bench and EXPERIMENTS.md.
+    pub fn sharing_savings(
+        &self,
+        n_seqs: usize,
+        tokens: usize,
+        shared_tokens: usize,
+        bytes_per_token: usize,
+    ) -> (usize, usize) {
+        let unshared = n_seqs * self.blocks_for(tokens);
+        let shared = self.blocks_for(shared_tokens)
+            + n_seqs * self.blocks_for(tokens.saturating_sub(shared_tokens));
+        (
+            unshared * self.block_tokens * bytes_per_token,
+            shared * self.block_tokens * bytes_per_token,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_cycle() {
+        let p = BlockPool::new(4, 16);
+        assert_eq!(p.free_blocks(), 4);
+        let a = p.alloc().unwrap();
+        let b = p.alloc().unwrap();
+        assert_eq!(p.free_blocks(), 2);
+        drop(a);
+        assert_eq!(p.free_blocks(), 3);
+        drop(b);
+        assert_eq!(p.free_blocks(), 4);
+    }
+
+    #[test]
+    fn sharing_keeps_block_alive() {
+        let p = BlockPool::new(2, 16);
+        let a = p.alloc().unwrap();
+        let a2 = a.clone();
+        drop(a);
+        assert_eq!(p.free_blocks(), 1, "shared block must stay allocated");
+        drop(a2);
+        assert_eq!(p.free_blocks(), 2);
+    }
+
+    #[test]
+    fn exhaustion_returns_none() {
+        let p = BlockPool::new(1, 16);
+        let _a = p.alloc().unwrap();
+        assert!(p.alloc().is_none());
+    }
+
+    #[test]
+    fn alloc_seq_all_or_nothing() {
+        let p = BlockPool::new(3, 16);
+        assert!(p.alloc_seq(40).is_some()); // 3 blocks, dropped immediately
+        assert_eq!(p.free_blocks(), 3);
+        let _hold = p.alloc().unwrap();
+        assert!(p.alloc_seq(40).is_none()); // needs 3, only 2 free
+        assert_eq!(p.free_blocks(), 2, "failed alloc_seq must not leak");
+    }
+
+    #[test]
+    fn blocks_for_rounding() {
+        let p = BlockPool::new(8, 16);
+        assert_eq!(p.blocks_for(0), 0);
+        assert_eq!(p.blocks_for(1), 1);
+        assert_eq!(p.blocks_for(16), 1);
+        assert_eq!(p.blocks_for(17), 2);
+    }
+
+    #[test]
+    fn sharing_savings_math() {
+        let p = BlockPool::new(64, 16);
+        // 4 seqs of 64 tokens sharing a 32-token prefix
+        let (unshared, shared) = p.sharing_savings(4, 64, 32, 1);
+        assert_eq!(unshared, 4 * 4 * 16);
+        assert_eq!(shared, (2 + 4 * 2) * 16);
+        assert!(shared < unshared);
+    }
+}

@@ -1,0 +1,24 @@
+//! The cross-prompt KV cache — the paper's central data structure.
+//!
+//! * [`KvRecord`] — one cached prompt: token ids, embedding, and the
+//!   *trimmed* per-layer K/V tensors for exactly `token_len` positions
+//!   (`[L, 2, H, len, D]`), i.e. the paper's
+//!   `C[i] = (c_i, input_ids(c_i), {K_l, V_l})`.
+//! * [`KvStore`] — capacity-bounded store with pluggable eviction
+//!   (LRU / LFU / FIFO / cost-aware) and hit/miss accounting.
+//! * [`persist`] — torch.save's stand-in: a checksummed binary file format
+//!   with optional DEFLATE compression, so caches survive restarts and can
+//!   overflow to disk.
+//! * [`blocks`] — a PagedAttention-inspired block pool: fixed-size token
+//!   blocks with reference counting, enabling prefix *sharing* between
+//!   entries (the paper's future-work direction; exercised by the radix
+//!   policy and the ablation benches).
+
+pub mod blocks;
+pub mod persist;
+mod record;
+mod store;
+
+pub use blocks::{BlockPool, BlockRef};
+pub use record::KvRecord;
+pub use store::{KvStore, StoreStats};

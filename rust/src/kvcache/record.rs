@@ -1,0 +1,175 @@
+//! One cached prompt's activations.
+
+use std::sync::Arc;
+
+use crate::config::ModelConfig;
+
+/// A cached KV entry: the paper's `C[i] = (c_i, input_ids(c_i), {K_l, V_l})`.
+///
+/// The KV payload is stored *trimmed*: only `token_len` positions per layer
+/// (`[L, 2, H, token_len, D]`, row-major), not the full context window —
+/// this is what makes the cache footprint proportional to what was actually
+/// computed. The engine re-inflates into the runtime's `[L, 2, H, S, D]`
+/// buffer on injection.
+#[derive(Debug, Clone)]
+pub struct KvRecord {
+    /// The cached prompt text (`c_i`).
+    pub text: String,
+    /// `input_ids(c_i)`.
+    pub tokens: Vec<u32>,
+    /// L2-normalized sentence embedding (`e_i`).
+    pub embedding: Vec<f32>,
+    /// Trimmed KV payload, `[L, 2, H, token_len, D]` row-major f32.
+    /// Arc so cache hits hand out views without copying the tensor.
+    pub kv: Arc<Vec<f32>>,
+    /// Geometry the payload was produced under (guards against serving a
+    /// cache built for a different model).
+    pub n_layer: usize,
+    pub n_head: usize,
+    pub head_dim: usize,
+}
+
+impl KvRecord {
+    /// Number of cached prefix positions (the paper's reuse depth `k` when
+    /// this entry fully matches).
+    pub fn token_len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// Bytes of the trimmed payload.
+    pub fn kv_bytes(&self) -> usize {
+        self.kv.len() * 4
+    }
+
+    /// Expected payload element count for the geometry.
+    pub fn expected_elems(&self) -> usize {
+        self.n_layer * 2 * self.n_head * self.token_len() * self.head_dim
+    }
+
+    /// Check payload/geometry consistency and compatibility with `cfg`.
+    pub fn validate(&self, cfg: &ModelConfig) -> bool {
+        self.kv.len() == self.expected_elems()
+            && self.n_layer == cfg.n_layer
+            && self.n_head == cfg.n_head
+            && self.head_dim == cfg.head_dim
+            && self.token_len() <= cfg.max_seq
+            && self.embedding.len() > 0
+    }
+
+    /// Build a record from a *full* `[L, 2, H, S, D]` runtime buffer by
+    /// trimming to the first `len` positions.
+    pub fn from_full_buffer(
+        cfg: &ModelConfig,
+        text: &str,
+        tokens: Vec<u32>,
+        embedding: Vec<f32>,
+        full: &[f32],
+    ) -> Self {
+        let len = tokens.len();
+        let [l, two, h, s, d] = cfg.kv_shape();
+        debug_assert_eq!(full.len(), l * two * h * s * d);
+        let mut kv = Vec::with_capacity(l * two * h * len * d);
+        for li in 0..l {
+            for kvi in 0..two {
+                for hi in 0..h {
+                    let base = ((li * two + kvi) * h + hi) * s * d;
+                    kv.extend_from_slice(&full[base..base + len * d]);
+                }
+            }
+        }
+        KvRecord {
+            text: text.to_string(),
+            tokens,
+            embedding,
+            kv: Arc::new(kv),
+            n_layer: l,
+            n_head: h,
+            head_dim: d,
+        }
+    }
+
+    /// Inflate the trimmed payload back into a full `[L, 2, H, S, D]`
+    /// buffer (zero beyond `token_len`). Inverse of [`from_full_buffer`].
+    pub fn to_full_buffer(&self, cfg: &ModelConfig) -> Vec<f32> {
+        let [l, two, h, s, d] = cfg.kv_shape();
+        let len = self.token_len();
+        let mut full = vec![0f32; l * two * h * s * d];
+        for li in 0..l {
+            for kvi in 0..two {
+                for hi in 0..h {
+                    let src = ((li * two + kvi) * h + hi) * len * d;
+                    let dst = ((li * two + kvi) * h + hi) * s * d;
+                    full[dst..dst + len * d]
+                        .copy_from_slice(&self.kv[src..src + len * d]);
+                }
+            }
+        }
+        full
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig::nano()
+    }
+
+    fn fake_full(cfg: &ModelConfig) -> Vec<f32> {
+        (0..cfg.kv_elems()).map(|i| i as f32).collect()
+    }
+
+    #[test]
+    fn trim_inflate_roundtrip() {
+        let cfg = cfg();
+        let full = fake_full(&cfg);
+        let tokens: Vec<u32> = (0..10).collect();
+        let rec = KvRecord::from_full_buffer(&cfg, "p", tokens, vec![1.0], &full);
+        assert!(rec.validate(&cfg));
+        assert_eq!(rec.kv_bytes(), cfg.kv_bytes_for_len(10));
+        let inflated = rec.to_full_buffer(&cfg);
+        // live rows match the original
+        let [l, two, h, s, d] = cfg.kv_shape();
+        for li in 0..l {
+            for kvi in 0..two {
+                for hi in 0..h {
+                    let base = ((li * two + kvi) * h + hi) * s * d;
+                    assert_eq!(&inflated[base..base + 10 * d], &full[base..base + 10 * d]);
+                    // dead rows are zero
+                    assert!(inflated[base + 10 * d..base + s * d].iter().all(|&x| x == 0.0));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn validate_rejects_wrong_geometry() {
+        let cfg = cfg();
+        let full = fake_full(&cfg);
+        let mut rec =
+            KvRecord::from_full_buffer(&cfg, "p", vec![1, 2, 3], vec![1.0], &full);
+        assert!(rec.validate(&cfg));
+        rec.n_head = 2;
+        assert!(!rec.validate(&cfg));
+    }
+
+    #[test]
+    fn validate_rejects_truncated_payload() {
+        let cfg = cfg();
+        let full = fake_full(&cfg);
+        let mut rec =
+            KvRecord::from_full_buffer(&cfg, "p", vec![1, 2, 3], vec![1.0], &full);
+        rec.kv = Arc::new(vec![0.0; 5]);
+        assert!(!rec.validate(&cfg));
+    }
+
+    #[test]
+    fn zero_len_record() {
+        let cfg = cfg();
+        let full = fake_full(&cfg);
+        let rec = KvRecord::from_full_buffer(&cfg, "", vec![], vec![1.0], &full);
+        assert_eq!(rec.kv_bytes(), 0);
+        assert!(rec.validate(&cfg));
+    }
+}

@@ -1,0 +1,332 @@
+//! Capacity-bounded KV store with pluggable eviction.
+//!
+//! The paper appends cache entries without bound (10 prompts); a serving
+//! system needs bounded memory, so entries are accounted by trimmed KV
+//! bytes and evicted by policy when either `max_entries` or `max_bytes`
+//! would be exceeded. Invariants (property-tested in testutil):
+//!
+//!  * live bytes == sum of entry bytes,
+//!  * capacity never exceeded after any insert,
+//!  * a hit refreshes recency (LRU) and bumps frequency (LFU),
+//!  * eviction order respects the policy.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::config::{CacheConfig, EvictionPolicy};
+
+use super::KvRecord;
+
+/// Store statistics (exported to metrics + the paper's summary table).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StoreStats {
+    pub inserts: u64,
+    pub evictions: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub live_entries: usize,
+    pub live_bytes: usize,
+}
+
+struct Entry {
+    record: Arc<KvRecord>,
+    /// Monotonic insert sequence (FIFO order).
+    seq: u64,
+    /// Last touch sequence (LRU order).
+    last_used: u64,
+    /// Hit count (LFU / cost-aware).
+    hits: u64,
+}
+
+/// The cross-prompt KV cache store, keyed by entry id.
+pub struct KvStore {
+    cfg: CacheConfig,
+    entries: HashMap<u64, Entry>,
+    next_id: u64,
+    clock: u64,
+    stats: StoreStats,
+}
+
+impl KvStore {
+    pub fn new(cfg: CacheConfig) -> Self {
+        KvStore {
+            cfg,
+            entries: HashMap::new(),
+            next_id: 0,
+            clock: 0,
+            stats: StoreStats::default(),
+        }
+    }
+
+    pub fn config(&self) -> &CacheConfig {
+        &self.cfg
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn live_bytes(&self) -> usize {
+        self.stats.live_bytes
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        let mut s = self.stats;
+        s.live_entries = self.entries.len();
+        s
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Insert a record, evicting by policy if capacity would be exceeded.
+    /// Returns the new entry id and the evicted `(id, record)` pairs so the
+    /// caller (recycler) can drop them from its index/radix structures.
+    pub fn insert(&mut self, record: KvRecord) -> (u64, Vec<(u64, Arc<KvRecord>)>) {
+        let bytes = record.kv_bytes();
+        let mut evicted = Vec::new();
+        // Evict until the new entry fits (an oversized record may empty the
+        // store entirely and still be admitted — by design: one giant entry
+        // is better than none).
+        while !self.entries.is_empty() && self.would_overflow(bytes) {
+            if let Some(victim) = self.pick_victim() {
+                let rec = self.peek(victim).expect("victim exists");
+                self.remove(victim);
+                self.stats.evictions += 1;
+                evicted.push((victim, rec));
+            } else {
+                break;
+            }
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let now = self.tick();
+        self.stats.inserts += 1;
+        self.stats.live_bytes += bytes;
+        self.entries.insert(
+            id,
+            Entry {
+                record: Arc::new(record),
+                seq: now,
+                last_used: now,
+                hits: 0,
+            },
+        );
+        (id, evicted)
+    }
+
+    fn would_overflow(&self, incoming_bytes: usize) -> bool {
+        let over_entries =
+            self.cfg.max_entries > 0 && self.entries.len() + 1 > self.cfg.max_entries;
+        let over_bytes = self.cfg.max_bytes > 0
+            && self.stats.live_bytes + incoming_bytes > self.cfg.max_bytes;
+        over_entries || over_bytes
+    }
+
+    fn pick_victim(&self) -> Option<u64> {
+        let score = |e: &Entry| -> (u64, u64) {
+            match self.cfg.eviction {
+                EvictionPolicy::Lru => (e.last_used, e.seq),
+                EvictionPolicy::Fifo => (e.seq, e.seq),
+                EvictionPolicy::Lfu => (e.hits, e.last_used),
+                EvictionPolicy::CostAware => {
+                    // lowest (hits + 1) * token_len first: rarely-hit, short
+                    // (cheap to recompute) entries go first.
+                    ((e.hits + 1) * e.record.token_len() as u64, e.last_used)
+                }
+            }
+        };
+        self.entries
+            .iter()
+            .min_by_key(|(id, e)| (score(e), **id))
+            .map(|(id, _)| *id)
+    }
+
+    /// Remove an entry explicitly. Returns whether it existed.
+    pub fn remove(&mut self, id: u64) -> bool {
+        if let Some(e) = self.entries.remove(&id) {
+            self.stats.live_bytes -= e.record.kv_bytes();
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Fetch for reuse: refreshes recency and bumps hit counters.
+    pub fn hit(&mut self, id: u64) -> Option<Arc<KvRecord>> {
+        let now = self.tick();
+        match self.entries.get_mut(&id) {
+            Some(e) => {
+                e.last_used = now;
+                e.hits += 1;
+                self.stats.hits += 1;
+                Some(Arc::clone(&e.record))
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Read without touching recency/frequency (inspection, benches).
+    pub fn peek(&self, id: u64) -> Option<Arc<KvRecord>> {
+        self.entries.get(&id).map(|e| Arc::clone(&e.record))
+    }
+
+    /// Record a retrieval miss (no candidate passed the prefix test).
+    pub fn note_miss(&mut self) {
+        self.stats.misses += 1;
+    }
+
+    /// Iterate (id, record) pairs in unspecified order.
+    pub fn iter(&self) -> impl Iterator<Item = (u64, &Arc<KvRecord>)> {
+        self.entries.iter().map(|(id, e)| (*id, &e.record))
+    }
+
+    /// Ids in insertion order (stable for tests/benches).
+    pub fn ids(&self) -> Vec<u64> {
+        let mut ids: Vec<(u64, u64)> =
+            self.entries.iter().map(|(id, e)| (e.seq, *id)).collect();
+        ids.sort();
+        ids.into_iter().map(|(_, id)| id).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    fn rec(len: usize) -> KvRecord {
+        let cfg = ModelConfig::nano();
+        KvRecord {
+            text: format!("prompt-{len}"),
+            tokens: (0..len as u32).collect(),
+            embedding: vec![1.0],
+            kv: Arc::new(vec![0.0; cfg.n_layer * 2 * cfg.n_head * len * cfg.head_dim]),
+            n_layer: cfg.n_layer,
+            n_head: cfg.n_head,
+            head_dim: cfg.head_dim,
+        }
+    }
+
+    fn store(policy: EvictionPolicy, max_entries: usize) -> KvStore {
+        KvStore::new(CacheConfig {
+            max_entries,
+            eviction: policy,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn insert_and_hit() {
+        let mut s = store(EvictionPolicy::Lru, 4);
+        let (id, ev) = s.insert(rec(5));
+        assert!(ev.is_empty());
+        assert_eq!(s.len(), 1);
+        assert!(s.hit(id).is_some());
+        assert_eq!(s.stats().hits, 1);
+        assert!(s.hit(999).is_none());
+        assert_eq!(s.stats().misses, 1);
+    }
+
+    #[test]
+    fn lru_evicts_least_recent() {
+        let mut s = store(EvictionPolicy::Lru, 2);
+        let (a, _) = s.insert(rec(1));
+        let (b, _) = s.insert(rec(2));
+        s.hit(a); // refresh a; b is now LRU
+        let (_c, ev) = s.insert(rec(3));
+        assert_eq!(ev.iter().map(|(id, _)| *id).collect::<Vec<_>>(), vec![b]);
+        assert!(s.peek(a).is_some());
+    }
+
+    #[test]
+    fn fifo_evicts_oldest_insert() {
+        let mut s = store(EvictionPolicy::Fifo, 2);
+        let (a, _) = s.insert(rec(1));
+        let (_b, _) = s.insert(rec(2));
+        s.hit(a); // FIFO ignores recency
+        let (_c, ev) = s.insert(rec(3));
+        assert_eq!(ev.iter().map(|(id, _)| *id).collect::<Vec<_>>(), vec![a]);
+    }
+
+    #[test]
+    fn lfu_evicts_least_hit() {
+        let mut s = store(EvictionPolicy::Lfu, 2);
+        let (a, _) = s.insert(rec(1));
+        let (b, _) = s.insert(rec(2));
+        s.hit(a);
+        s.hit(a);
+        s.hit(b);
+        let (_c, ev) = s.insert(rec(3));
+        assert_eq!(ev.iter().map(|(id, _)| *id).collect::<Vec<_>>(), vec![b]);
+    }
+
+    #[test]
+    fn cost_aware_prefers_short_unhit_victims() {
+        let mut s = store(EvictionPolicy::CostAware, 2);
+        let (_long, _) = s.insert(rec(50));
+        let (short, _) = s.insert(rec(2));
+        let (_c, ev) = s.insert(rec(10));
+        assert_eq!(ev.iter().map(|(id, _)| *id).collect::<Vec<_>>(), vec![short]);
+    }
+
+    #[test]
+    fn byte_capacity_enforced() {
+        let cfg = ModelConfig::nano();
+        let mut s = KvStore::new(CacheConfig {
+            max_entries: 0,
+            max_bytes: cfg.kv_bytes_for_len(25),
+            ..Default::default()
+        });
+        s.insert(rec(10));
+        s.insert(rec(10));
+        assert_eq!(s.len(), 2);
+        let (_, ev) = s.insert(rec(10)); // 30 tokens > 25-token budget
+        assert_eq!(ev.len(), 1);
+        assert!(s.live_bytes() <= cfg.kv_bytes_for_len(25));
+    }
+
+    #[test]
+    fn bytes_accounting_exact() {
+        let mut s = store(EvictionPolicy::Lru, 0);
+        let (a, _) = s.insert(rec(3));
+        let (_b, _) = s.insert(rec(7));
+        let expect: usize = s.iter().map(|(_, r)| r.kv_bytes()).sum();
+        assert_eq!(s.live_bytes(), expect);
+        s.remove(a);
+        let expect: usize = s.iter().map(|(_, r)| r.kv_bytes()).sum();
+        assert_eq!(s.live_bytes(), expect);
+    }
+
+    #[test]
+    fn oversized_record_still_admitted() {
+        let cfg = ModelConfig::nano();
+        let mut s = KvStore::new(CacheConfig {
+            max_bytes: cfg.kv_bytes_for_len(5),
+            max_entries: 0,
+            ..Default::default()
+        });
+        s.insert(rec(3));
+        let (id, ev) = s.insert(rec(100)); // oversized
+        assert_eq!(ev.len(), 1);
+        assert!(s.peek(id).is_some());
+    }
+
+    #[test]
+    fn ids_in_insert_order() {
+        let mut s = store(EvictionPolicy::Lru, 0);
+        let (a, _) = s.insert(rec(1));
+        let (b, _) = s.insert(rec(2));
+        let (c, _) = s.insert(rec(3));
+        assert_eq!(s.ids(), vec![a, b, c]);
+    }
+}

@@ -1,0 +1,49 @@
+//! # recycle-serve
+//!
+//! A serving framework reproducing **"KV Cache Recycling to Expand Usable
+//! Context Capacity in Low Parameter LLMs"** (Pandey, 2025) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the coordinator: request routing, the
+//!   cross-prompt KV cache ([`kvcache`]), embedding retrieval ([`index`]),
+//!   exact-prefix matching ([`prefix`]), the recycling decision
+//!   ([`recycler`]), scheduling/batching ([`coordinator`]) and a TCP server
+//!   ([`server`]).
+//! * **L2 (python/compile/model.py)** — a GPT-2-family decoder with the KV
+//!   cache as an explicit `[L, 2, H, S, D]` argument, AOT-lowered to HLO
+//!   text once at build time.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels (flash-style cached
+//!   attention, retrieval matvec, fused layernorm) lowered into the same
+//!   HLO.
+//!
+//! Python never runs on the request path: [`runtime`] loads the HLO text
+//! artifacts through the PJRT C API (`xla` crate) and [`engine`] drives
+//! greedy generation entirely in Rust.
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod error;
+pub mod index;
+pub mod kvcache;
+pub mod metrics;
+pub mod prefix;
+pub mod recycler;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod testutil;
+pub mod tokenizer;
+pub mod util;
+
+/// Convenience re-exports for the common request-path types.
+pub mod prelude {
+    pub use crate::config::ModelConfig;
+    pub use crate::engine::{Engine, ForwardModel, Generated};
+    pub use crate::error::Error;
+    pub use crate::kvcache::{KvRecord, KvStore};
+    pub use crate::recycler::{RecyclePolicy, Recycler};
+    pub use crate::runtime::Runtime;
+    pub use crate::tokenizer::Tokenizer;
+}

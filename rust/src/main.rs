@@ -1,0 +1,197 @@
+//! recycle-serve CLI: the leader entrypoint.
+//!
+//! Subcommands:
+//!   serve  [--artifacts DIR] [--listen ADDR] [--policy strict|radix|off]
+//!          [--max-entries N] [--compress]   — run the TCP server.
+//!   eval   [--artifacts DIR] [--data DIR] [--results DIR] [--max-new N]
+//!          [--policy ...]                    — paper §4.4 two-arm evaluation.
+//!   info   [--artifacts DIR]                 — print manifest/config summary.
+//!
+//! (Arg parsing is hand-rolled: clap is not in the offline vendor set.)
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use recycle_serve::bench::{format_table, paper_cache_prompts, paper_test_prompts,
+                           run_comparison, EvalOptions, Workload};
+use recycle_serve::config::{CacheConfig, ServerConfig};
+use recycle_serve::coordinator::Coordinator;
+use recycle_serve::engine::Engine;
+use recycle_serve::index::NgramEmbedder;
+use recycle_serve::recycler::{RecyclePolicy, Recycler};
+use recycle_serve::runtime::Runtime;
+use recycle_serve::server::Server;
+use recycle_serve::sim::Roofline;
+
+/// Tiny flag parser: `--key value` and `--flag`.
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} must be a number")),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+/// Build the production recycler. Must run on the thread that will own the
+/// PJRT handles (the coordinator worker).
+fn build_recycler(artifacts: &PathBuf, policy: RecyclePolicy, cache: CacheConfig)
+                  -> Result<Recycler<Runtime>> {
+    let rt = Runtime::load(artifacts)
+        .with_context(|| format!("loading artifacts from {}", artifacts.display()))?;
+    let tokenizer = rt.tokenizer();
+    Ok(Recycler::new(
+        Engine::new(rt),
+        tokenizer,
+        Box::new(NgramEmbedder::new(128)),
+        cache,
+        policy,
+    ))
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let artifacts = PathBuf::from(args.get("artifacts", "artifacts"));
+    let policy = RecyclePolicy::parse(&args.get("policy", "strict"))
+        .context("--policy must be strict|radix|off")?;
+    let cache = CacheConfig {
+        max_entries: args.get_usize("max-entries", 64)?,
+        compress: args.has("compress"),
+        ..Default::default()
+    };
+    // Validate artifacts cheaply on the main thread for a clear error.
+    let manifest = recycle_serve::runtime::Manifest::load(&artifacts)?;
+    let cfg = ServerConfig {
+        listen: args.get("listen", "127.0.0.1:7077"),
+        max_batch: args.get_usize("max-batch", 8)?,
+        ..Default::default()
+    };
+    println!(
+        "recycle-serve: model '{}' from {} | policy {} | listening on {}",
+        manifest.model.name,
+        artifacts.display(),
+        policy.name(),
+        cfg.listen
+    );
+    let listen = cfg.listen.clone();
+    let coordinator = Arc::new(Coordinator::spawn(
+        move || build_recycler(&artifacts, policy, cache).expect("runtime init"),
+        cfg,
+    ));
+    let server = Server::start(Arc::clone(&coordinator), &listen)?;
+    println!("ready on {} — protocol: one JSON object per line", server.addr());
+    // Serve until killed.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let artifacts = PathBuf::from(args.get("artifacts", "artifacts"));
+    let data = PathBuf::from(args.get("data", "data"));
+    let results = PathBuf::from(args.get("results", "results"));
+    std::fs::create_dir_all(&results)?;
+    let policy = RecyclePolicy::parse(&args.get("policy", "strict"))
+        .context("--policy must be strict|radix|off")?;
+
+    let rt0 = Runtime::load(&artifacts)?;
+    let tokenizer = rt0.tokenizer();
+    drop(rt0);
+
+    let workload = Workload {
+        cache_prompts: paper_cache_prompts(&data),
+        test_prompts: paper_test_prompts(&data),
+    };
+    let opts = EvalOptions {
+        max_new_tokens: args.get_usize("max-new", 32)?,
+        policy,
+        results_dir: Some(results.clone()),
+        ..Default::default()
+    };
+    let report = run_comparison(
+        || Runtime::load(&artifacts).expect("reload artifacts"),
+        tokenizer,
+        &workload,
+        &opts,
+    )?;
+    println!("{}", format_table("Paper §5.1 summary", &report.summary_rows()));
+    println!("alpha (S ≈ α·k/m fit, §5.5): {:.3}", report.alpha);
+    println!("rows written to {}", results.display());
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let artifacts = PathBuf::from(args.get("artifacts", "artifacts"));
+    let rt = Runtime::load(&artifacts)?;
+    let cfg = rt.config();
+    let roof = Roofline::new(cfg.clone());
+    println!("model        : {}", cfg.name);
+    println!("layers/heads : {} / {}", cfg.n_layer, cfg.n_head);
+    println!("d_model/d_ff : {} / {}", cfg.d_model, cfg.d_ff);
+    println!("vocab        : {}", cfg.vocab_size);
+    println!("context      : {} tokens", cfg.max_seq);
+    println!("chunk buckets: {:?}", cfg.chunk_sizes);
+    println!("params       : {:.2}M", roof.param_count() as f64 / 1e6);
+    println!("kv buffer    : {:.2} MiB", cfg.kv_bytes() as f64 / (1 << 20) as f64);
+    println!(
+        "kv per token : {:.1} KiB",
+        cfg.kv_bytes_for_len(1) as f64 / 1024.0
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("serve") => cmd_serve(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("info") => cmd_info(&args),
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown command: {o}\n");
+            }
+            eprintln!("usage: recycle-serve <serve|eval|info> [--artifacts DIR] ...");
+            eprintln!("  serve --listen 127.0.0.1:7077 --policy strict|radix|off");
+            eprintln!("  eval  --data data --results results --max-new 32");
+            eprintln!("  info");
+            bail!("no command given");
+        }
+    }
+}

@@ -1,0 +1,241 @@
+//! Request metrics: per-request rows (the paper's baseline.csv /
+//! recycled.csv schema), aggregate counters, and the merged comparison
+//! table (§5.1).
+
+use std::path::Path;
+
+use crate::error::Result;
+use crate::util::csv;
+use crate::util::timing::Samples;
+
+/// One generation's record — the row schema the paper logs per prompt.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestRow {
+    pub prompt: String,
+    pub output: String,
+    pub latency_s: f64,
+    /// Reuse depth k in tokens (0 for baseline / miss).
+    pub reused_tokens: usize,
+    /// Retrieval similarity of the chosen candidate (NaN if none).
+    pub prompt_similarity: f64,
+    /// Whether the strict prefix test passed and KV was injected.
+    pub cache_hit: bool,
+    /// Prompt length m in tokens.
+    pub prompt_tokens: usize,
+    /// Generated tokens g.
+    pub new_tokens: usize,
+}
+
+impl RequestRow {
+    fn to_csv(&self) -> Vec<String> {
+        vec![
+            self.prompt.clone(),
+            self.output.clone(),
+            format!("{:.6}", self.latency_s),
+            self.reused_tokens.to_string(),
+            format!("{:.4}", self.prompt_similarity),
+            self.cache_hit.to_string(),
+            self.prompt_tokens.to_string(),
+            self.new_tokens.to_string(),
+        ]
+    }
+}
+
+const HEADER: [&str; 8] = [
+    "text", "output", "latency_s", "reused_tokens", "prompt_similarity",
+    "cache_hit", "prompt_tokens", "new_tokens",
+];
+
+/// Write rows in the paper's results-file format.
+pub fn write_rows(path: &Path, rows: &[RequestRow]) -> Result<()> {
+    let data: Vec<Vec<String>> = rows.iter().map(|r| r.to_csv()).collect();
+    csv::write_file(path, &HEADER, &data)
+}
+
+/// The merged baseline-vs-recycled comparison (paper §5.1 table).
+#[derive(Debug, Clone, Default)]
+pub struct Comparison {
+    pub total_prompts: usize,
+    pub cache_hits: usize,
+    pub total_tokens_reused: usize,
+    /// Per-prompt speedup percentages (the paper's S).
+    pub speedups_pct: Vec<f64>,
+    pub output_similarity: Vec<f64>,
+    pub prompt_similarity: Vec<f64>,
+    pub latency_baseline: Samples,
+    pub latency_recycled: Samples,
+}
+
+impl Comparison {
+    /// Merge per-prompt baseline and recycled rows by the prompt-text key
+    /// (the paper merges on `text`).
+    pub fn merge(
+        baseline: &[RequestRow],
+        recycled: &[RequestRow],
+        output_similarity: impl Fn(&str, &str) -> f64,
+    ) -> Comparison {
+        let mut cmp = Comparison {
+            total_prompts: recycled.len(),
+            ..Default::default()
+        };
+        for rec in recycled {
+            let Some(base) = baseline.iter().find(|b| b.prompt == rec.prompt) else {
+                continue;
+            };
+            if rec.cache_hit {
+                cmp.cache_hits += 1;
+                cmp.total_tokens_reused += rec.reused_tokens;
+            }
+            let s = (base.latency_s - rec.latency_s) / base.latency_s * 100.0;
+            cmp.speedups_pct.push(s);
+            cmp.output_similarity
+                .push(output_similarity(&base.output, &rec.output));
+            if rec.prompt_similarity.is_finite() {
+                cmp.prompt_similarity.push(rec.prompt_similarity);
+            }
+            cmp.latency_baseline.push(base.latency_s);
+            cmp.latency_recycled.push(rec.latency_s);
+        }
+        cmp
+    }
+
+    pub fn avg_speedup_pct(&self) -> f64 {
+        mean(&self.speedups_pct)
+    }
+
+    /// Average speedup restricted to hits / misses (paper rows 5-6).
+    pub fn avg_speedup_split(&self, recycled: &[RequestRow]) -> (f64, f64) {
+        let mut hit = Vec::new();
+        let mut miss = Vec::new();
+        for (s, r) in self.speedups_pct.iter().zip(recycled) {
+            if r.cache_hit {
+                hit.push(*s);
+            } else {
+                miss.push(*s);
+            }
+        }
+        (mean(&hit), mean(&miss))
+    }
+
+    pub fn avg_output_similarity(&self) -> f64 {
+        mean(&self.output_similarity)
+    }
+
+    pub fn avg_prompt_similarity(&self) -> f64 {
+        mean(&self.prompt_similarity)
+    }
+
+    pub fn high_similarity_count(&self, threshold: f64) -> usize {
+        self.prompt_similarity.iter().filter(|&&s| s > threshold).count()
+    }
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        f64::NAN
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Aggregate serving counters (engine + coordinator level).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Counters {
+    pub requests: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub tokens_prefilled: u64,
+    pub tokens_reused: u64,
+    pub tokens_generated: u64,
+    pub rejected: u64,
+}
+
+impl Counters {
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+
+    /// Fraction of prompt tokens that were NOT recomputed — the paper's
+    /// "compute saved over the fixed window" framing.
+    pub fn reuse_fraction(&self) -> f64 {
+        let total = self.tokens_prefilled + self.tokens_reused;
+        if total == 0 {
+            0.0
+        } else {
+            self.tokens_reused as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(prompt: &str, lat: f64, hit: bool, reused: usize) -> RequestRow {
+        RequestRow {
+            prompt: prompt.into(),
+            output: format!("out-{prompt}"),
+            latency_s: lat,
+            reused_tokens: reused,
+            prompt_similarity: if hit { 0.9 } else { f64::NAN },
+            cache_hit: hit,
+            prompt_tokens: 10,
+            new_tokens: 5,
+        }
+    }
+
+    #[test]
+    fn merge_computes_paper_metrics() {
+        let baseline = vec![row("a", 0.2, false, 0), row("b", 0.4, false, 0)];
+        let recycled = vec![row("a", 0.1, true, 6), row("b", 0.4, false, 0)];
+        let cmp = Comparison::merge(&baseline, &recycled, |_, _| 1.0);
+        assert_eq!(cmp.total_prompts, 2);
+        assert_eq!(cmp.cache_hits, 1);
+        assert_eq!(cmp.total_tokens_reused, 6);
+        assert!((cmp.speedups_pct[0] - 50.0).abs() < 1e-9);
+        assert!((cmp.avg_speedup_pct() - 25.0).abs() < 1e-9);
+        let (hit, miss) = cmp.avg_speedup_split(&recycled);
+        assert!((hit - 50.0).abs() < 1e-9);
+        assert!(miss.abs() < 1e-9);
+        assert_eq!(cmp.high_similarity_count(0.8), 1);
+    }
+
+    #[test]
+    fn merge_skips_unmatched_prompts() {
+        let baseline = vec![row("a", 0.2, false, 0)];
+        let recycled = vec![row("a", 0.1, true, 3), row("zzz", 0.1, true, 3)];
+        let cmp = Comparison::merge(&baseline, &recycled, |_, _| 1.0);
+        assert_eq!(cmp.speedups_pct.len(), 1);
+    }
+
+    #[test]
+    fn counters_rates() {
+        let c = Counters {
+            cache_hits: 3,
+            cache_misses: 1,
+            tokens_prefilled: 60,
+            tokens_reused: 40,
+            ..Default::default()
+        };
+        assert!((c.hit_rate() - 0.75).abs() < 1e-9);
+        assert!((c.reuse_fraction() - 0.4).abs() < 1e-9);
+        assert_eq!(Counters::default().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("recycle_serve_metrics_test");
+        let path = dir.join("rows.csv");
+        write_rows(&path, &[row("p, with comma", 0.5, true, 2)]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = crate::util::csv::parse(&text).unwrap();
+        assert_eq!(parsed.len(), 2);
+        assert_eq!(parsed[1][0], "p, with comma");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

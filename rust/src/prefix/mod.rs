@@ -1,0 +1,53 @@
+//! Token-prefix machinery.
+//!
+//! * [`common_prefix_len`] / [`reuse_depth`] — the paper's §3.1 prefix test:
+//!   `r = max{ r' <= min(m,k) : x_{1:r'}^{(t)} = x_{1:r'}^{(c)} }`, with the
+//!   strict condition `r == k` (cached prompt is a *full* prefix).
+//! * [`radix::RadixTree`] — SGLang-style token radix tree for the
+//!   longest-prefix extension (the paper's future work §6.2): instead of
+//!   retrieving one embedding candidate and demanding a full-prefix match,
+//!   find the deepest cached prefix across *all* entries in O(depth).
+
+pub mod radix;
+
+pub use radix::RadixTree;
+
+/// Length of the common prefix of two token sequences.
+pub fn common_prefix_len(a: &[u32], b: &[u32]) -> usize {
+    a.iter().zip(b).take_while(|(x, y)| x == y).count()
+}
+
+/// The paper's reuse depth: common prefix of cached prompt `c` and test
+/// prompt `t`, and whether the strict full-prefix condition `r == |c|`
+/// holds (with `|c| > 0`).
+pub fn reuse_depth(cached: &[u32], test: &[u32]) -> (usize, bool) {
+    let r = common_prefix_len(cached, test);
+    (r, !cached.is_empty() && r == cached.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn common_prefix_basics() {
+        assert_eq!(common_prefix_len(&[1, 2, 3], &[1, 2, 4]), 2);
+        assert_eq!(common_prefix_len(&[], &[1]), 0);
+        assert_eq!(common_prefix_len(&[1, 2], &[1, 2]), 2);
+        assert_eq!(common_prefix_len(&[5], &[6]), 0);
+    }
+
+    #[test]
+    fn strict_condition() {
+        // cached is a full prefix -> reusable
+        assert_eq!(reuse_depth(&[1, 2], &[1, 2, 3]), (2, true));
+        // equal sequences -> reusable (paper: r = k = m)
+        assert_eq!(reuse_depth(&[1, 2], &[1, 2]), (2, true));
+        // diverging mid-way -> NOT reusable even though r > 0
+        assert_eq!(reuse_depth(&[1, 2, 9], &[1, 2, 3]), (2, false));
+        // cached longer than test -> not a prefix of it
+        assert_eq!(reuse_depth(&[1, 2, 3], &[1, 2]), (2, false));
+        // empty cache entry is never a hit
+        assert_eq!(reuse_depth(&[], &[1, 2]), (0, false));
+    }
+}

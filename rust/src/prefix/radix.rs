@@ -1,0 +1,260 @@
+//! Token radix tree (compressed trie) for longest-prefix retrieval.
+//!
+//! Maps token sequences to entry keys. `longest_prefix(tokens)` returns the
+//! *deepest* stored sequence that is a full prefix of `tokens` — the
+//! SGLang-radix-cache generalization of the paper's single-candidate test.
+//! Operations are O(matched tokens); edges store token spans (path
+//! compression) so long prompts don't blow up node counts.
+
+use std::collections::HashMap;
+
+#[derive(Debug)]
+struct Node {
+    /// Children keyed by the first token of the edge.
+    children: HashMap<u32, Edge>,
+    /// Entry key terminating exactly at this node, if any.
+    key: Option<u64>,
+}
+
+#[derive(Debug)]
+struct Edge {
+    span: Vec<u32>,
+    node: Node,
+}
+
+impl Node {
+    fn new() -> Self {
+        Node {
+            children: HashMap::new(),
+            key: None,
+        }
+    }
+}
+
+/// Compressed token trie mapping sequences -> caller keys.
+#[derive(Debug)]
+pub struct RadixTree {
+    root: Node,
+    len: usize,
+}
+
+impl Default for RadixTree {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RadixTree {
+    pub fn new() -> Self {
+        RadixTree {
+            root: Node::new(),
+            len: 0,
+        }
+    }
+
+    /// Number of stored sequences.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Insert a sequence under `key`. Replaces (and returns) a previous key
+    /// stored for the identical sequence.
+    pub fn insert(&mut self, tokens: &[u32], key: u64) -> Option<u64> {
+        let mut node = &mut self.root;
+        let mut i = 0;
+        loop {
+            if i == tokens.len() {
+                let old = node.key.replace(key);
+                if old.is_none() {
+                    self.len += 1;
+                }
+                return old;
+            }
+            let first = tokens[i];
+            if !node.children.contains_key(&first) {
+                node.children.insert(
+                    first,
+                    Edge {
+                        span: tokens[i..].to_vec(),
+                        node: Node {
+                            children: HashMap::new(),
+                            key: Some(key),
+                        },
+                    },
+                );
+                self.len += 1;
+                return None;
+            }
+            let edge = node.children.get_mut(&first).unwrap();
+            let common = edge
+                .span
+                .iter()
+                .zip(&tokens[i..])
+                .take_while(|(a, b)| a == b)
+                .count();
+            if common < edge.span.len() {
+                // Split the edge at `common`.
+                let tail_span = edge.span.split_off(common);
+                let mut mid = Node::new();
+                let old_child = std::mem::replace(&mut edge.node, Node::new());
+                mid.children.insert(
+                    tail_span[0],
+                    Edge {
+                        span: tail_span,
+                        node: old_child,
+                    },
+                );
+                edge.node = mid;
+            }
+            i += common;
+            node = &mut node.children.get_mut(&first).unwrap().node;
+        }
+    }
+
+    /// Exact lookup: a terminal must sit at exactly `tokens.len()`.
+    pub fn get(&self, tokens: &[u32]) -> Option<u64> {
+        let (depth, key, _) = self.walk(tokens);
+        if depth == tokens.len() {
+            key
+        } else {
+            None
+        }
+    }
+
+    /// Longest stored sequence that is a full prefix of `tokens`:
+    /// returns `(depth, key)`.
+    pub fn longest_prefix(&self, tokens: &[u32]) -> Option<(usize, u64)> {
+        let (depth, key, _) = self.walk(tokens);
+        key.map(|k| (depth, k))
+    }
+
+    /// Walk as far as `tokens` allows; track the deepest terminal node.
+    /// Returns (terminal_depth, terminal_key, walked_to_end).
+    fn walk(&self, tokens: &[u32]) -> (usize, Option<u64>, bool) {
+        let mut node = &self.root;
+        let mut i = 0;
+        let mut best: (usize, Option<u64>) = (0, None);
+        if node.key.is_some() {
+            best = (0, node.key);
+        }
+        loop {
+            if i == tokens.len() {
+                return (best.0, best.1, true);
+            }
+            let Some(edge) = node.children.get(&tokens[i]) else {
+                return (best.0, best.1, false);
+            };
+            let rest = &tokens[i..];
+            if rest.len() < edge.span.len() || rest[..edge.span.len()] != edge.span[..] {
+                return (best.0, best.1, false);
+            }
+            i += edge.span.len();
+            node = &edge.node;
+            if node.key.is_some() {
+                best = (i, node.key);
+            }
+        }
+    }
+
+    /// Remove a sequence. Returns its key if present. (Nodes are left in
+    /// place — fine for serving-scale entry counts; eviction rebuilds.)
+    pub fn remove(&mut self, tokens: &[u32]) -> Option<u64> {
+        fn go(node: &mut Node, tokens: &[u32]) -> Option<u64> {
+            if tokens.is_empty() {
+                return node.key.take();
+            }
+            let edge = node.children.get_mut(&tokens[0])?;
+            if tokens.len() < edge.span.len() || tokens[..edge.span.len()] != edge.span[..] {
+                return None;
+            }
+            go(&mut edge.node, &tokens[edge.span.len()..])
+        }
+        let out = go(&mut self.root, tokens);
+        if out.is_some() {
+            self.len -= 1;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get() {
+        let mut t = RadixTree::new();
+        assert_eq!(t.insert(&[1, 2, 3], 10), None);
+        assert_eq!(t.insert(&[1, 2, 4], 20), None);
+        assert_eq!(t.insert(&[1, 2], 30), None);
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.get(&[1, 2, 3]), Some(10));
+        assert_eq!(t.get(&[1, 2, 4]), Some(20));
+        assert_eq!(t.get(&[1, 2]), Some(30));
+        assert_eq!(t.get(&[1]), None);
+        assert_eq!(t.get(&[1, 2, 5]), None);
+    }
+
+    #[test]
+    fn replace_same_sequence() {
+        let mut t = RadixTree::new();
+        assert_eq!(t.insert(&[5, 6], 1), None);
+        assert_eq!(t.insert(&[5, 6], 2), Some(1));
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.get(&[5, 6]), Some(2));
+    }
+
+    #[test]
+    fn longest_prefix_picks_deepest() {
+        let mut t = RadixTree::new();
+        t.insert(&[1, 2], 10);
+        t.insert(&[1, 2, 3, 4], 20);
+        assert_eq!(t.longest_prefix(&[1, 2, 3, 4, 5, 6]), Some((4, 20)));
+        assert_eq!(t.longest_prefix(&[1, 2, 3]), Some((2, 10)));
+        assert_eq!(t.longest_prefix(&[1, 2]), Some((2, 10)));
+        assert_eq!(t.longest_prefix(&[9]), None);
+    }
+
+    #[test]
+    fn longest_prefix_requires_full_entry() {
+        let mut t = RadixTree::new();
+        t.insert(&[1, 2, 3, 4], 20);
+        // query diverges inside the only entry: no terminal reached
+        assert_eq!(t.longest_prefix(&[1, 2, 3]), None);
+        assert_eq!(t.longest_prefix(&[1, 2, 9, 9]), None);
+    }
+
+    #[test]
+    fn edge_splitting() {
+        let mut t = RadixTree::new();
+        t.insert(&[1, 2, 3, 4, 5], 1);
+        t.insert(&[1, 2, 9], 2); // splits the 1-2-3-4-5 edge after [1,2]
+        assert_eq!(t.get(&[1, 2, 3, 4, 5]), Some(1));
+        assert_eq!(t.get(&[1, 2, 9]), Some(2));
+        assert_eq!(t.longest_prefix(&[1, 2, 9, 7]), Some((3, 2)));
+    }
+
+    #[test]
+    fn empty_sequence_as_root_key() {
+        let mut t = RadixTree::new();
+        t.insert(&[], 5);
+        assert_eq!(t.get(&[]), Some(5));
+        assert_eq!(t.longest_prefix(&[1, 2]), Some((0, 5)));
+    }
+
+    #[test]
+    fn remove() {
+        let mut t = RadixTree::new();
+        t.insert(&[1, 2, 3], 1);
+        t.insert(&[1, 2], 2);
+        assert_eq!(t.remove(&[1, 2, 3]), Some(1));
+        assert_eq!(t.remove(&[1, 2, 3]), None);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.get(&[1, 2, 3]), None);
+        assert_eq!(t.longest_prefix(&[1, 2, 3]), Some((2, 2)));
+    }
+}

@@ -1,0 +1,468 @@
+//! The paper's algorithm: cross-prompt KV recycling.
+//!
+//! Per request (paper §2.5/§3.1/§4.4):
+//!  1. embed the prompt,
+//!  2. retrieve the most similar cached prompt (`i* = argmax <e_i, e_t>`),
+//!  3. exact-prefix token test (`r == k`, strict),
+//!  4. on success inject the cached `past_key_values` and feed only the
+//!     suffix; otherwise run the baseline path,
+//!  5. optionally insert the new prompt's KV into the cache (the paper
+//!     builds the cache in a separate offline pass — [`Recycler::warm`] —
+//!     but online population is the serving-system generalization).
+//!
+//! Policies:
+//!  * [`RecyclePolicy::Off`]      — always baseline (the paper's control arm).
+//!  * [`RecyclePolicy::Strict`]   — the paper: embedding top-1 + full-prefix.
+//!  * [`RecyclePolicy::Radix`]    — future-work §6.2: longest cached prefix
+//!    across all entries via the token radix tree (no embedding involved in
+//!    the hit decision; the embedding is still logged for similarity
+//!    metrics).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::config::{CacheConfig, ModelConfig};
+use crate::engine::{Engine, ForwardModel};
+use crate::error::Result;
+use crate::index::{cosine, Embedder, FlatIndex, NgramEmbedder};
+use crate::kvcache::{KvRecord, KvStore};
+use crate::metrics::RequestRow;
+use crate::prefix::{reuse_depth, RadixTree};
+use crate::tokenizer::Tokenizer;
+use crate::util::timing::Stopwatch;
+
+/// Recycling decision policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecyclePolicy {
+    Off,
+    Strict,
+    Radix,
+}
+
+impl RecyclePolicy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "off" | "baseline" => Some(Self::Off),
+            "strict" | "paper" => Some(Self::Strict),
+            "radix" => Some(Self::Radix),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Off => "off",
+            Self::Strict => "strict",
+            Self::Radix => "radix",
+        }
+    }
+}
+
+/// Outcome of one request through the recycler.
+#[derive(Debug, Clone)]
+pub struct Outcome {
+    pub text: String,
+    pub ids: Vec<u32>,
+    pub prompt_tokens: usize,
+    pub reuse_depth: usize,
+    pub cache_hit: bool,
+    /// Similarity of the retrieved candidate (NaN when none).
+    pub similarity: f64,
+    pub latency_s: f64,
+    pub prefill_calls: usize,
+}
+
+impl Outcome {
+    /// Convert to the paper's per-request CSV row.
+    pub fn to_row(&self, prompt: &str) -> RequestRow {
+        RequestRow {
+            prompt: prompt.to_string(),
+            output: self.text.clone(),
+            latency_s: self.latency_s,
+            reused_tokens: self.reuse_depth,
+            prompt_similarity: self.similarity,
+            cache_hit: self.cache_hit,
+            prompt_tokens: self.prompt_tokens,
+            new_tokens: self.ids.len(),
+        }
+    }
+}
+
+/// The full recycling stack over any [`ForwardModel`].
+pub struct Recycler<M: ForwardModel> {
+    engine: Engine<M>,
+    tokenizer: Arc<Tokenizer>,
+    embedder: Box<dyn Embedder>,
+    store: KvStore,
+    index: FlatIndex,
+    radix: RadixTree,
+    /// id -> tokens side table for radix eviction.
+    tokens_of: HashMap<u64, Vec<u32>>,
+    pub policy: RecyclePolicy,
+    /// Insert served prompts into the cache (online population).
+    pub populate_cache: bool,
+}
+
+impl<M: ForwardModel> Recycler<M> {
+    pub fn new(
+        engine: Engine<M>,
+        tokenizer: Arc<Tokenizer>,
+        embedder: Box<dyn Embedder>,
+        cache_cfg: CacheConfig,
+        policy: RecyclePolicy,
+    ) -> Self {
+        let dim = embedder.dim();
+        Recycler {
+            engine,
+            tokenizer,
+            embedder,
+            store: KvStore::new(cache_cfg),
+            index: FlatIndex::new(dim),
+            radix: RadixTree::new(),
+            tokens_of: HashMap::new(),
+            policy,
+            populate_cache: true,
+        }
+    }
+
+    /// Default stack: n-gram embedder, default cache config, strict policy.
+    pub fn with_defaults(engine: Engine<M>, tokenizer: Arc<Tokenizer>) -> Self {
+        Self::new(
+            engine,
+            tokenizer,
+            Box::new(NgramEmbedder::new(128)),
+            CacheConfig::default(),
+            RecyclePolicy::Strict,
+        )
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        self.engine.config()
+    }
+
+    pub fn engine(&self) -> &Engine<M> {
+        &self.engine
+    }
+
+    pub fn store(&self) -> &KvStore {
+        &self.store
+    }
+
+    pub fn tokenizer(&self) -> Arc<Tokenizer> {
+        Arc::clone(&self.tokenizer)
+    }
+
+    pub fn cache_len(&self) -> usize {
+        self.store.len()
+    }
+
+    /// Embedding of a prompt (exposed for output-similarity metrics).
+    pub fn embed_text(&self, text: &str) -> Vec<f32> {
+        self.embedder.embed(text)
+    }
+
+    /// Cosine similarity of two texts under the configured embedder — the
+    /// paper's output-similarity metric.
+    pub fn text_similarity(&self, a: &str, b: &str) -> f64 {
+        cosine(&self.embedder.embed(a), &self.embedder.embed(b)) as f64
+    }
+
+    /// Build the cache from a prompt set (the paper's §4.4 cache
+    /// construction pass: one forward per prompt, `use_cache=True`).
+    pub fn warm(&mut self, prompts: &[&str]) -> Result<usize> {
+        let mut n = 0;
+        for p in prompts {
+            self.insert_prompt(p)?;
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    /// Prefill a prompt and insert its KV record into the cache.
+    pub fn insert_prompt(&mut self, text: &str) -> Result<u64> {
+        let ids = self.tokenizer.encode(text);
+        let mut kv = self.engine.empty_kv();
+        self.engine.prefill(&ids, &mut kv, 0)?;
+        Ok(self.admit(text, ids, kv))
+    }
+
+    /// Admit a prefilled (text, ids, full-kv) into store + index + radix.
+    fn admit(&mut self, text: &str, ids: Vec<u32>, full_kv: Vec<f32>) -> u64 {
+        let emb = self.embedder.embed(text);
+        let rec = KvRecord::from_full_buffer(
+            self.engine.config(),
+            text,
+            ids.clone(),
+            emb.clone(),
+            &full_kv,
+        );
+        let (id, evicted) = self.store.insert(rec);
+        for (eid, erec) in evicted {
+            self.index.remove(eid);
+            self.radix.remove(&erec.tokens);
+            self.tokens_of.remove(&eid);
+        }
+        self.index.add(id, &emb);
+        self.radix.insert(&ids, id);
+        self.tokens_of.insert(id, ids);
+        id
+    }
+
+    /// The retrieval + prefix test. Returns (record, reuse_depth,
+    /// similarity) on a hit; logs similarity of the candidate either way.
+    fn lookup(&mut self, ids: &[u32], emb: &[f32]) -> (Option<(Arc<KvRecord>, usize)>, f64) {
+        match self.policy {
+            RecyclePolicy::Off => (None, f64::NAN),
+            RecyclePolicy::Strict => {
+                let Some((cand, sim)) = self.index.nearest(emb) else {
+                    self.store.note_miss();
+                    return (None, f64::NAN);
+                };
+                if sim < self.store.config().min_similarity {
+                    self.store.note_miss();
+                    return (None, sim as f64);
+                }
+                let Some(rec) = self.store.peek(cand) else {
+                    self.store.note_miss();
+                    return (None, sim as f64);
+                };
+                let (r, full) = reuse_depth(&rec.tokens, ids);
+                if full {
+                    let rec = self.store.hit(cand).expect("peeked entry exists");
+                    (Some((rec, r)), sim as f64)
+                } else {
+                    self.store.note_miss();
+                    (None, sim as f64)
+                }
+            }
+            RecyclePolicy::Radix => {
+                let Some((depth, key)) = self.radix.longest_prefix(ids) else {
+                    self.store.note_miss();
+                    return (None, f64::NAN);
+                };
+                let Some(rec) = self.store.hit(key) else {
+                    return (None, f64::NAN);
+                };
+                debug_assert_eq!(depth, rec.token_len());
+                let sim = cosine(&rec.embedding, emb) as f64;
+                (Some((rec, depth)), sim)
+            }
+        }
+    }
+
+    /// Serve one prompt: the paper's per-test-prompt loop.
+    pub fn generate(&mut self, prompt: &str, max_new_tokens: usize) -> Result<Outcome> {
+        let ids = self.tokenizer.encode(prompt);
+        self.generate_ids(prompt, ids, max_new_tokens, false)
+    }
+
+    /// Serve a prompt whose token ids the caller already owns (session
+    /// continuation: ids may extend a previous turn's exact token sequence,
+    /// which text re-tokenization cannot guarantee at BPE merge
+    /// boundaries). With `admit_full`, the *entire* final sequence
+    /// (prompt + generated response) is inserted into the cache so the next
+    /// turn can reuse all of it.
+    pub fn generate_ids(
+        &mut self,
+        prompt: &str,
+        ids: Vec<u32>,
+        max_new_tokens: usize,
+        admit_full: bool,
+    ) -> Result<Outcome> {
+        let sw = Stopwatch::start();
+        let emb = self.embedder.embed(prompt);
+        let (hit, similarity) = self.lookup(&ids, &emb);
+
+        let (kv, cur_len, cache_hit, depth) = match hit {
+            Some((rec, depth)) => {
+                let kv = rec.to_full_buffer(self.engine.config());
+                (kv, depth, true, depth)
+            }
+            None => (self.engine.empty_kv(), 0, false, 0),
+        };
+
+        let want_capture = self.populate_cache && !cache_hit && !admit_full;
+        let g = self
+            .engine
+            .generate(&ids, kv, cur_len, max_new_tokens, want_capture)?;
+
+        if let Some(prompt_kv) = g.prompt_kv {
+            self.admit(prompt, ids.clone(), prompt_kv);
+        }
+        if admit_full && self.populate_cache {
+            // Cache prompt + response (token-exact), the session fast path.
+            let mut full_ids = ids.clone();
+            full_ids.extend_from_slice(&g.ids);
+            let full_text = format!("{prompt}{}", self.tokenizer.decode(&g.ids));
+            self.admit(&full_text, full_ids, g.final_kv.clone());
+        }
+
+        Ok(Outcome {
+            text: self.tokenizer.decode(&g.ids),
+            ids: g.ids,
+            prompt_tokens: g.prompt_tokens,
+            reuse_depth: depth,
+            cache_hit,
+            similarity,
+            latency_s: sw.elapsed_secs(),
+            prefill_calls: g.prefill_calls,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::EvictionPolicy;
+    use crate::testutil::MockModel;
+
+    fn toy_tokenizer() -> Arc<Tokenizer> {
+        Arc::new(Tokenizer::new(vec![
+            ("t".into(), "h".into()),
+            ("th".into(), "e".into()),
+        ]))
+    }
+
+    fn recycler(policy: RecyclePolicy) -> Recycler<MockModel> {
+        let engine = Engine::new(MockModel::new(ModelConfig::nano()));
+        Recycler::new(
+            engine,
+            toy_tokenizer(),
+            Box::new(NgramEmbedder::new(64)),
+            CacheConfig {
+                max_entries: 8,
+                eviction: EvictionPolicy::Lru,
+                ..Default::default()
+            },
+            policy,
+        )
+    }
+
+    const CACHE: &str = "what is the capital of france?";
+    const TEST: &str = "what is the capital of france? also mention a nearby town.";
+    const OTHER: &str = "how do rockets launch into orbit today?";
+
+    #[test]
+    fn strict_hit_on_extended_prompt() {
+        let mut r = recycler(RecyclePolicy::Strict);
+        r.warm(&[CACHE, OTHER]).unwrap();
+        let out = r.generate(TEST, 4).unwrap();
+        assert!(out.cache_hit);
+        let cache_len = r.tokenizer().encode(CACHE).len();
+        assert_eq!(out.reuse_depth, cache_len);
+        assert!(out.similarity > 0.5);
+    }
+
+    #[test]
+    fn recycled_output_identical_to_baseline() {
+        // the paper's fidelity claim, end-to-end through the recycler
+        let mut base = recycler(RecyclePolicy::Off);
+        let baseline = base.generate(TEST, 6).unwrap();
+        let mut rec = recycler(RecyclePolicy::Strict);
+        rec.warm(&[CACHE]).unwrap();
+        let recycled = rec.generate(TEST, 6).unwrap();
+        assert!(recycled.cache_hit);
+        assert_eq!(recycled.ids, baseline.ids);
+        assert_eq!(recycled.text, baseline.text);
+    }
+
+    #[test]
+    fn miss_on_unrelated_prompt_falls_back() {
+        let mut r = recycler(RecyclePolicy::Strict);
+        r.warm(&[CACHE]).unwrap();
+        let out = r.generate(OTHER, 4).unwrap();
+        assert!(!out.cache_hit);
+        assert_eq!(out.reuse_depth, 0);
+        // behaviour matches baseline
+        let mut b = recycler(RecyclePolicy::Off);
+        assert_eq!(b.generate(OTHER, 4).unwrap().ids, out.ids);
+    }
+
+    #[test]
+    fn diverging_prompt_with_high_similarity_is_rejected() {
+        // shares words (high embedding similarity) but not a token prefix
+        let mut r = recycler(RecyclePolicy::Strict);
+        r.warm(&["what is the capital of france?"]).unwrap();
+        let out = r
+            .generate("what is the capital of germany? france is nearby.", 4)
+            .unwrap();
+        assert!(!out.cache_hit, "prefix test must reject sim={}", out.similarity);
+    }
+
+    #[test]
+    fn off_policy_never_hits() {
+        let mut r = recycler(RecyclePolicy::Off);
+        r.warm(&[CACHE]).unwrap();
+        let out = r.generate(TEST, 4).unwrap();
+        assert!(!out.cache_hit);
+    }
+
+    #[test]
+    fn radix_hits_deepest_entry() {
+        let mut r = recycler(RecyclePolicy::Radix);
+        r.populate_cache = false;
+        r.warm(&["what is", "what is the capital of france?"]).unwrap();
+        let out = r.generate(TEST, 4).unwrap();
+        assert!(out.cache_hit);
+        let deep_len = r.tokenizer().encode("what is the capital of france?").len();
+        assert_eq!(out.reuse_depth, deep_len);
+    }
+
+    #[test]
+    fn radix_equals_baseline_output() {
+        let mut base = recycler(RecyclePolicy::Off);
+        let baseline = base.generate(TEST, 5).unwrap();
+        let mut r = recycler(RecyclePolicy::Radix);
+        r.warm(&[CACHE]).unwrap();
+        let out = r.generate(TEST, 5).unwrap();
+        assert!(out.cache_hit);
+        assert_eq!(out.ids, baseline.ids);
+    }
+
+    #[test]
+    fn online_population_enables_future_hits() {
+        let mut r = recycler(RecyclePolicy::Strict);
+        assert_eq!(r.cache_len(), 0);
+        r.generate(CACHE, 2).unwrap(); // miss, but populates
+        assert_eq!(r.cache_len(), 1);
+        let out = r.generate(TEST, 2).unwrap(); // now hits
+        assert!(out.cache_hit);
+    }
+
+    #[test]
+    fn eviction_keeps_index_and_radix_consistent() {
+        let engine = Engine::new(MockModel::new(ModelConfig::nano()));
+        let mut r = Recycler::new(
+            engine,
+            toy_tokenizer(),
+            Box::new(NgramEmbedder::new(64)),
+            CacheConfig {
+                max_entries: 2,
+                ..Default::default()
+            },
+            RecyclePolicy::Strict,
+        );
+        r.populate_cache = false;
+        r.warm(&["alpha beta gamma", "delta epsilon zeta", "eta theta iota"])
+            .unwrap();
+        assert_eq!(r.cache_len(), 2);
+        // "alpha beta gamma" was evicted: retrieving its extension must miss
+        let out = r.generate("alpha beta gamma delta", 2).unwrap();
+        assert!(!out.cache_hit);
+        // store/index sizes stay in lockstep
+        assert_eq!(r.index.len(), r.store.len());
+        assert_eq!(r.radix.len(), r.store.len());
+        assert_eq!(r.tokens_of.len(), r.store.len());
+    }
+
+    #[test]
+    fn exact_duplicate_prompt_hits_with_full_depth() {
+        let mut r = recycler(RecyclePolicy::Strict);
+        r.warm(&[CACHE]).unwrap();
+        let out = r.generate(CACHE, 3).unwrap();
+        assert!(out.cache_hit);
+        // baseline equivalence for the identical-prompt case
+        let mut b = recycler(RecyclePolicy::Off);
+        assert_eq!(b.generate(CACHE, 3).unwrap().ids, out.ids);
+    }
+}

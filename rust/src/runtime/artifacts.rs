@@ -1,0 +1,255 @@
+//! Artifact manifest + weight file loading.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::config::ModelConfig;
+use crate::error::{Error, Result};
+use crate::util::json::{self, Value};
+
+/// One tensor's slot in `weights.bin` (little-endian f32, contiguous).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub bytes: usize,
+}
+
+impl TensorMeta {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+fn parse_tensor_table(arr: &[Value]) -> Result<Vec<TensorMeta>> {
+    let mut table = Vec::with_capacity(arr.len());
+    let mut expect_offset = 0usize;
+    for t in arr {
+        let shape = t
+            .req_arr("shape")?
+            .iter()
+            .map(|d| {
+                d.as_usize()
+                    .ok_or_else(|| Error::ManifestInvalid("bad tensor dim".into()))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let meta = TensorMeta {
+            name: t.req_str("name")?.to_string(),
+            shape,
+            offset: t.req_usize("offset")?,
+            bytes: t.req_usize("bytes")?,
+        };
+        if meta.bytes != 4 * meta.elems() {
+            return Err(Error::ManifestInvalid(format!(
+                "tensor {}: bytes {} != 4 * elems {}",
+                meta.name,
+                meta.bytes,
+                meta.elems()
+            )));
+        }
+        if meta.offset != expect_offset {
+            return Err(Error::ManifestInvalid(format!(
+                "tensor {}: offset {} not contiguous (expected {})",
+                meta.name, meta.offset, expect_offset
+            )));
+        }
+        expect_offset += meta.bytes;
+        table.push(meta);
+    }
+    Ok(table)
+}
+
+/// Parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: ModelConfig,
+    pub tensors: Vec<TensorMeta>,
+    pub embed_tensors: Vec<TensorMeta>,
+    /// Logical artifact name ("forward_c8", "embed") -> file name.
+    pub artifacts: HashMap<String, String>,
+    pub weights_file: String,
+    pub embed_weights_file: String,
+    pub tokenizer_file: String,
+    pub fixtures_file: String,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::ArtifactMissing(format!("{}: {e}", path.display())))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = json::parse(text)?;
+        let version = v.req_usize("version")?;
+        if version != 1 {
+            return Err(Error::ManifestInvalid(format!("unknown version {version}")));
+        }
+        let model = ModelConfig::from_json(v.req("model")?)?;
+        let tensors = parse_tensor_table(v.req_arr("tensors")?)?;
+        let embed_tensors = parse_tensor_table(v.req_arr("embed_tensors")?)?;
+        let mut artifacts = HashMap::new();
+        if let Value::Obj(kvs) = v.req("artifacts")? {
+            for (k, file) in kvs {
+                artifacts.insert(
+                    k.clone(),
+                    file.as_str()
+                        .ok_or_else(|| Error::ManifestInvalid("artifact not a string".into()))?
+                        .to_string(),
+                );
+            }
+        } else {
+            return Err(Error::ManifestInvalid("artifacts must be an object".into()));
+        }
+        // Every (chunk, seq) bucket pair must have its artifact.
+        for c in &model.chunk_sizes {
+            for sq in &model.seq_buckets {
+                if c > sq {
+                    continue;
+                }
+                let key = format!("forward_c{c}_s{sq}");
+                if !artifacts.contains_key(&key) {
+                    return Err(Error::ManifestInvalid(format!("missing artifact {key}")));
+                }
+            }
+        }
+        Ok(Manifest {
+            model,
+            tensors,
+            embed_tensors,
+            artifacts,
+            weights_file: v.req_str("weights")?.to_string(),
+            embed_weights_file: v.req_str("embed_weights")?.to_string(),
+            tokenizer_file: v.req_str("tokenizer")?.to_string(),
+            fixtures_file: v.req_str("fixtures")?.to_string(),
+        })
+    }
+
+    pub fn model_config(&self) -> &ModelConfig {
+        &self.model
+    }
+
+    pub fn artifact_path(&self, dir: &Path, key: &str) -> Result<PathBuf> {
+        self.artifacts
+            .get(key)
+            .map(|f| dir.join(f))
+            .ok_or_else(|| Error::ArtifactMissing(key.to_string()))
+    }
+
+    /// Total bytes the tensor table declares.
+    pub fn weights_bytes(&self) -> usize {
+        self.tensors.iter().map(|t| t.bytes).sum()
+    }
+}
+
+/// Load a weights file and split it into per-tensor f32 vectors (ordered as
+/// the table — which is the calling convention of the forward HLO).
+pub fn load_weights(path: &Path, table: &[TensorMeta]) -> Result<Vec<Vec<f32>>> {
+    let raw = std::fs::read(path)
+        .map_err(|e| Error::ArtifactMissing(format!("{}: {e}", path.display())))?;
+    let want: usize = table.iter().map(|t| t.bytes).sum();
+    if raw.len() != want {
+        return Err(Error::ManifestInvalid(format!(
+            "{}: {} bytes on disk, manifest declares {}",
+            path.display(),
+            raw.len(),
+            want
+        )));
+    }
+    let mut out = Vec::with_capacity(table.len());
+    for t in table {
+        let bytes = &raw[t.offset..t.offset + t.bytes];
+        let vals: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        out.push(vals);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn minimal_manifest() -> String {
+        r#"{
+          "version": 1,
+          "model": {"name":"nano","n_layer":4,"n_head":4,"d_model":128,
+                    "vocab_size":512,"max_seq":256,"d_ff":512,"head_dim":32,
+                    "embed_dim":64,"embed_seq":64,"chunk_sizes":[1,8],
+                    "seq_buckets":[256],"eot_id":0},
+          "tensors": [
+            {"name":"a","shape":[2,3],"offset":0,"bytes":24},
+            {"name":"b","shape":[4],"offset":24,"bytes":16}
+          ],
+          "embed_tensors": [],
+          "artifacts": {"forward_c1_s256":"f1.hlo.txt",
+                        "forward_c8_s256":"f8.hlo.txt",
+                        "embed":"e.hlo.txt"},
+          "weights":"weights.bin",
+          "embed_weights":"embed_weights.bin",
+          "tokenizer":"tokenizer.json",
+          "fixtures":"fixtures.json"
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parse_ok() {
+        let m = Manifest::parse(&minimal_manifest()).unwrap();
+        assert_eq!(m.model.name, "nano");
+        assert_eq!(m.tensors.len(), 2);
+        assert_eq!(m.weights_bytes(), 40);
+        assert_eq!(m.artifacts["embed"], "e.hlo.txt");
+    }
+
+    #[test]
+    fn rejects_gap_in_offsets() {
+        let bad = minimal_manifest().replace("\"offset\":24", "\"offset\":28");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_byte_count() {
+        let bad = minimal_manifest().replace("\"bytes\":16", "\"bytes\":12");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_bucket_artifact() {
+        let bad = minimal_manifest()
+            .replace("\"forward_c8_s256\":\"f8.hlo.txt\",", "");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_version() {
+        let bad = minimal_manifest().replace("\"version\": 1", "\"version\": 9");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn load_weights_roundtrip() {
+        let dir = std::env::temp_dir().join("recycle_serve_weights_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        let vals: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let bytes: Vec<u8> = vals.iter().flat_map(|f| f.to_le_bytes()).collect();
+        std::fs::write(&path, &bytes).unwrap();
+        let table = vec![
+            TensorMeta { name: "a".into(), shape: vec![2, 3], offset: 0, bytes: 24 },
+            TensorMeta { name: "b".into(), shape: vec![4], offset: 24, bytes: 16 },
+        ];
+        let w = load_weights(&path, &table).unwrap();
+        assert_eq!(w[0], vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(w[1], vec![6.0, 7.0, 8.0, 9.0]);
+        // size mismatch detected
+        let short = vec![TensorMeta { name: "a".into(), shape: vec![2], offset: 0, bytes: 8 }];
+        assert!(load_weights(&path, &short).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

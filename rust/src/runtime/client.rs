@@ -1,0 +1,57 @@
+//! Thin PJRT client wrapper: compile HLO text files, create device buffers.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// PJRT CPU client handle (cheaply cloneable; the underlying client is
+/// reference-counted by the xla crate).
+#[derive(Clone)]
+pub struct Client {
+    inner: xla::PjRtClient,
+}
+
+impl Client {
+    /// Create the CPU client (the only backend in this environment; real
+    /// TPU deployment would switch on platform here).
+    pub fn new() -> Result<Self> {
+        Ok(Client {
+            inner: xla::PjRtClient::cpu()?,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.inner.platform_name()
+    }
+
+    pub fn raw(&self) -> &xla::PjRtClient {
+        &self.inner
+    }
+
+    /// Load HLO *text* (the AOT interchange format — serialized protos from
+    /// jax >= 0.5 are rejected by xla_extension 0.5.1, see DESIGN.md) and
+    /// compile it for this client.
+    pub fn compile_hlo_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        if !path.exists() {
+            return Err(Error::ArtifactMissing(path.display().to_string()));
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.inner.compile(&comp)?)
+    }
+
+    /// Upload an f32 tensor.
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.inner.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Upload an i32 tensor.
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.inner.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Upload an i32 scalar (rank-0).
+    pub fn upload_i32_scalar(&self, v: i32) -> Result<xla::PjRtBuffer> {
+        self.upload_i32(&[v], &[])
+    }
+}

@@ -1,0 +1,261 @@
+//! Bucketed forward executor + embedding executor.
+//!
+//! Model weights are uploaded to device ONCE at load and passed to every
+//! `execute_b` call as resident `PjRtBuffer`s — the request path never
+//! re-uploads parameters, only the (small) tokens/scalars and the KV
+//! buffer.
+
+use std::path::Path;
+
+use crate::config::ModelConfig;
+use crate::error::{Error, Result};
+use crate::index::Embedder;
+
+use super::artifacts::{load_weights, Manifest};
+use super::client::Client;
+
+/// One compiled forward bucket: (chunk size, KV sequence capacity).
+struct Bucket {
+    chunk: usize,
+    seq: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The per-bucket forward executables with device-resident weights.
+pub struct ForwardExec {
+    client: Client,
+    cfg: ModelConfig,
+    params: Vec<xla::PjRtBuffer>,
+    buckets: Vec<Bucket>,
+    /// Scratch for seq-bucketed KV uploads (avoids an alloc per call).
+    scratch: std::cell::RefCell<Vec<f32>>,
+}
+
+impl ForwardExec {
+    pub fn load(client: &Client, dir: &Path, manifest: &Manifest) -> Result<Self> {
+        let cfg = manifest.model.clone();
+        // Upload weights once.
+        let host = load_weights(&dir.join(&manifest.weights_file), &manifest.tensors)?;
+        let mut params = Vec::with_capacity(host.len());
+        for (vals, meta) in host.iter().zip(&manifest.tensors) {
+            params.push(client.upload_f32(vals, &meta.shape)?);
+        }
+        // Compile one executable per (chunk, seq) bucket pair.
+        let mut buckets = Vec::new();
+        for &c in &cfg.chunk_sizes {
+            for &sq in &cfg.seq_buckets {
+                if c > sq {
+                    continue;
+                }
+                let path = manifest.artifact_path(dir, &format!("forward_c{c}_s{sq}"))?;
+                let exe = client.compile_hlo_file(&path)?;
+                buckets.push(Bucket { chunk: c, seq: sq, exe });
+            }
+        }
+        Ok(ForwardExec {
+            client: client.clone(),
+            cfg,
+            params,
+            buckets,
+            scratch: std::cell::RefCell::new(Vec::new()),
+        })
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    /// Available chunk bucket sizes (ascending, deduped).
+    pub fn bucket_sizes(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.buckets.iter().map(|b| b.chunk).collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    fn bucket(&self, chunk: usize, seq: usize) -> Result<&Bucket> {
+        self.buckets
+            .iter()
+            .find(|b| b.chunk == chunk && b.seq == seq)
+            .ok_or_else(|| {
+                Error::ShapeMismatch(format!("no bucket for chunk {chunk} seq {seq}"))
+            })
+    }
+
+    /// Run one forward chunk.
+    ///
+    /// `tokens.len()` must equal a bucket size (right-pad before calling);
+    /// `valid_len` of them are real. `kv` is the full host KV buffer
+    /// `[L, 2, H, S, D]`; the returned rows are spliced into it at
+    /// `cur_len`. Returns the logits `[C, V]` (flat, row-major).
+    pub fn forward_chunk(
+        &self,
+        tokens: &[u32],
+        valid_len: usize,
+        kv: &mut [f32],
+        cur_len: usize,
+    ) -> Result<Vec<f32>> {
+        let c = tokens.len();
+        let [l, two, h, s, d] = self.cfg.kv_shape();
+        if kv.len() != self.cfg.kv_elems() {
+            return Err(Error::ShapeMismatch(format!(
+                "kv buffer has {} elems, expected {}",
+                kv.len(),
+                self.cfg.kv_elems()
+            )));
+        }
+        if valid_len == 0 || valid_len > c {
+            return Err(Error::ShapeMismatch(format!(
+                "valid_len {valid_len} out of range for chunk {c}"
+            )));
+        }
+        if cur_len + c > s {
+            // dynamic_update_slice would clamp and silently corrupt: refuse.
+            return Err(Error::ContextExhausted(cur_len + c));
+        }
+        // Seq-bucket selection: the smallest exported KV capacity covering
+        // the live span. Short contexts upload (and the attention kernel
+        // scans) a fraction of the full window — the §Perf optimization.
+        let sq = self.cfg.seq_bucket_for(cur_len + c);
+        let bucket = self.bucket(c, sq)?;
+
+        let tokens_i32: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        let tok_buf = self.client.upload_i32(&tokens_i32, &[c])?;
+        let valid_buf = self.client.upload_i32_scalar(valid_len as i32)?;
+        let kv_buf = if sq == s {
+            self.client.upload_f32(kv, &[l, two, h, s, d])?
+        } else {
+            // Strided copy of the first sq rows of every (layer, k/v, head)
+            // plane into the reusable scratch, then upload the small buffer.
+            let mut scratch = self.scratch.borrow_mut();
+            scratch.clear();
+            scratch.reserve(l * two * h * sq * d);
+            for plane in 0..l * two * h {
+                let src = plane * s * d;
+                scratch.extend_from_slice(&kv[src..src + sq * d]);
+            }
+            self.client.upload_f32(&scratch, &[l, two, h, sq, d])?
+        };
+        let cur_buf = self.client.upload_i32_scalar(cur_len as i32)?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = self.params.iter().collect();
+        args.push(&tok_buf);
+        args.push(&valid_buf);
+        args.push(&kv_buf);
+        args.push(&cur_buf);
+
+        let result = bucket.exe.execute_b(&args)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        if parts.len() != 2 {
+            return Err(Error::ShapeMismatch(format!(
+                "forward returned {}-tuple, expected 2",
+                parts.len()
+            )));
+        }
+        let logits = parts[0].to_vec::<f32>()?;
+        let rows = parts[1].to_vec::<f32>()?;
+        if logits.len() != c * self.cfg.vocab_size {
+            return Err(Error::ShapeMismatch("bad logits size".into()));
+        }
+        if rows.len() != l * two * h * c * d {
+            return Err(Error::ShapeMismatch("bad kv rows size".into()));
+        }
+        // Splice rows [L,2,H,C,D] into kv [L,2,H,S,D] at position cur_len.
+        // Only the valid_len real rows are written (the padded tail is
+        // garbage by contract).
+        for li in 0..l {
+            for kvi in 0..two {
+                for hi in 0..h {
+                    let src = ((li * two + kvi) * h + hi) * c * d;
+                    let dst = ((li * two + kvi) * h + hi) * s * d + cur_len * d;
+                    kv[dst..dst + valid_len * d]
+                        .copy_from_slice(&rows[src..src + valid_len * d]);
+                }
+            }
+        }
+        Ok(logits)
+    }
+}
+
+/// The sentence-embedding executable (`embed.hlo.txt`).
+pub struct EmbedExec {
+    client: Client,
+    cfg: ModelConfig,
+    params: Vec<xla::PjRtBuffer>,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl EmbedExec {
+    pub fn load(client: &Client, dir: &Path, manifest: &Manifest) -> Result<Self> {
+        let host = load_weights(
+            &dir.join(&manifest.embed_weights_file),
+            &manifest.embed_tensors,
+        )?;
+        let mut params = Vec::with_capacity(host.len());
+        for (vals, meta) in host.iter().zip(&manifest.embed_tensors) {
+            params.push(client.upload_f32(vals, &meta.shape)?);
+        }
+        let exe = client.compile_hlo_file(&manifest.artifact_path(dir, "embed")?)?;
+        Ok(EmbedExec {
+            client: client.clone(),
+            cfg: manifest.model.clone(),
+            params,
+            exe,
+        })
+    }
+
+    /// Embed a token sequence (truncated/padded to embed_seq) into a unit
+    /// vector of dim embed_dim.
+    pub fn embed_tokens(&self, tokens: &[u32]) -> Result<Vec<f32>> {
+        let e = self.cfg.embed_seq;
+        let n = tokens.len().min(e);
+        let mut padded: Vec<i32> = tokens[..n].iter().map(|&t| t as i32).collect();
+        padded.resize(e, 0);
+        let tok_buf = self.client.upload_i32(&padded, &[e])?;
+        let len_buf = self.client.upload_i32_scalar(n as i32)?;
+        let mut args: Vec<&xla::PjRtBuffer> = self.params.iter().collect();
+        args.push(&tok_buf);
+        args.push(&len_buf);
+        let result = self.exe.execute_b(&args)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let out = tuple.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// HLO-backed embedder usable wherever the n-gram embedder is (needs a
+/// tokenizer to get from text to tokens).
+pub struct HloEmbedder {
+    exec: std::sync::Arc<EmbedExec>,
+    tokenizer: std::sync::Arc<crate::tokenizer::Tokenizer>,
+    dim: usize,
+}
+
+impl HloEmbedder {
+    pub fn new(
+        exec: std::sync::Arc<EmbedExec>,
+        tokenizer: std::sync::Arc<crate::tokenizer::Tokenizer>,
+    ) -> Self {
+        let dim = exec.cfg.embed_dim;
+        HloEmbedder {
+            exec,
+            tokenizer,
+            dim,
+        }
+    }
+}
+
+impl Embedder for HloEmbedder {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn embed(&self, text: &str) -> Vec<f32> {
+        let ids = self.tokenizer.encode(text);
+        self.exec
+            .embed_tokens(&ids)
+            .unwrap_or_else(|_| vec![0.0; self.dim])
+    }
+}
+

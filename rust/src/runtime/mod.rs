@@ -1,0 +1,94 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/manifest.json` et al.)
+//! and executes the per-bucket forward HLO plus the embedding HLO on the
+//! PJRT CPU client. Python is never involved — this module is the whole
+//! model-side request path.
+//!
+//! Contract with `python/compile/aot.py` (per bucket C):
+//!
+//! ```text
+//! inputs : params…, tokens i32[C], valid_len i32[], kv f32[L,2,H,S,D], cur_len i32[]
+//! outputs: (logits f32[C,V], new_kv_rows f32[L,2,H,C,D])
+//! ```
+//!
+//! The engine owns the authoritative *host* KV buffer; the runtime uploads
+//! it per call and splices the returned rows back in — returning only the
+//! chunk's rows (not the whole buffer) halves device<->host traffic.
+
+mod artifacts;
+mod client;
+mod executor;
+
+pub use artifacts::{Manifest, TensorMeta};
+pub use client::Client;
+pub use executor::{EmbedExec, ForwardExec, HloEmbedder};
+
+use std::path::Path;
+
+use crate::config::ModelConfig;
+use crate::engine::ForwardModel;
+use crate::error::Result;
+use crate::tokenizer::Tokenizer;
+
+/// The fully-loaded serving runtime: tokenizer + forward executables +
+/// embedding executable, with weights resident on device.
+pub struct Runtime {
+    manifest: Manifest,
+    tokenizer: std::sync::Arc<Tokenizer>,
+    forward: ForwardExec,
+    embed: EmbedExec,
+}
+
+impl Runtime {
+    /// Load everything from an artifact directory (built by `make artifacts`).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let manifest = Manifest::load(dir)?;
+        let client = Client::new()?;
+        let tokenizer =
+            std::sync::Arc::new(Tokenizer::from_file(&dir.join(&manifest.tokenizer_file))?);
+        let forward = ForwardExec::load(&client, dir, &manifest)?;
+        let embed = EmbedExec::load(&client, dir, &manifest)?;
+        Ok(Runtime {
+            manifest,
+            tokenizer,
+            forward,
+            embed,
+        })
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.manifest.model
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn tokenizer(&self) -> std::sync::Arc<Tokenizer> {
+        std::sync::Arc::clone(&self.tokenizer)
+    }
+
+    pub fn embedder(&self) -> &EmbedExec {
+        &self.embed
+    }
+
+    pub fn forward_exec(&self) -> &ForwardExec {
+        &self.forward
+    }
+}
+
+impl ForwardModel for Runtime {
+    fn config(&self) -> &ModelConfig {
+        self.manifest().model_config()
+    }
+
+    fn forward_chunk(
+        &self,
+        tokens: &[u32],
+        valid_len: usize,
+        kv: &mut [f32],
+        cur_len: usize,
+    ) -> Result<Vec<f32>> {
+        self.forward.forward_chunk(tokens, valid_len, kv, cur_len)
+    }
+}

@@ -1,0 +1,10 @@
+//! Network front-end: a line-delimited JSON protocol over TCP.
+//!
+//! Request:  `{"prompt": "...", "max_new_tokens": 32, "session": "id?"}`
+//! Response: `{"ok": true, "output": "...", "latency_s": 0.01,
+//!             "reuse_depth": 7, "cache_hit": true, "prompt_tokens": 12}`
+//! or        `{"ok": false, "error": "..."}`
+
+mod tcp;
+
+pub use tcp::{Server, TcpClient};

@@ -1,0 +1,187 @@
+//! Blocking TCP server over the coordinator (one thread per connection —
+//! appropriate for the single-stream serving substrate; the coordinator
+//! queue is the real concurrency point).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::coordinator::Coordinator;
+use crate::error::{Error, Result};
+use crate::util::json::{self, Value};
+
+/// Running TCP server handle.
+pub struct Server {
+    addr: SocketAddr,
+    accept_thread: Option<JoinHandle<()>>,
+    shutdown: Arc<std::sync::atomic::AtomicBool>,
+}
+
+impl Server {
+    /// Bind and start serving on `listen` ("host:port"; port 0 picks a free
+    /// port — the bound address is available via [`Server::addr`]).
+    pub fn start(coordinator: Arc<Coordinator>, listen: &str) -> Result<Server> {
+        let listener = TcpListener::bind(listen)?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let flag = Arc::clone(&shutdown);
+        let accept_thread = std::thread::Builder::new()
+            .name("recycle-server-accept".into())
+            .spawn(move || {
+                loop {
+                    if flag.load(std::sync::atomic::Ordering::Relaxed) {
+                        break;
+                    }
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let c = Arc::clone(&coordinator);
+                            // Detached: a connection thread exits when its
+                            // client disconnects (or the coordinator shuts
+                            // down and requests start failing). Joining here
+                            // would deadlock stop() against clients that are
+                            // still connected.
+                            std::thread::Builder::new()
+                                .name("recycle-server-conn".into())
+                                .spawn(move || handle_conn(stream, c))
+                                .expect("spawn conn thread");
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+            .expect("spawn accept thread");
+        Ok(Server {
+            addr,
+            accept_thread: Some(accept_thread),
+            shutdown,
+        })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stop(mut self) {
+        self.shutdown
+            .store(true, std::sync::atomic::Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown
+            .store(true, std::sync::atomic::Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, coordinator: Arc<Coordinator>) {
+    let peer = stream.peer_addr().ok();
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = serve_line(&line, &coordinator);
+        if writer
+            .write_all((reply.to_json() + "\n").as_bytes())
+            .is_err()
+        {
+            break;
+        }
+    }
+    log::debug!("connection closed: {peer:?}");
+}
+
+/// One request line -> one response value (pure; unit-testable).
+pub fn serve_line(line: &str, coordinator: &Coordinator) -> Value {
+    match serve_line_inner(line, coordinator) {
+        Ok(v) => v,
+        Err(e) => json::obj(vec![
+            ("ok", json::b(false)),
+            ("error", json::s(&e.to_string())),
+        ]),
+    }
+}
+
+fn serve_line_inner(line: &str, coordinator: &Coordinator) -> Result<Value> {
+    let req = json::parse(line)?;
+    let prompt = req.req_str("prompt")?;
+    let max_new = req
+        .get("max_new_tokens")
+        .and_then(|v| v.as_usize())
+        .unwrap_or(0);
+    let session = req
+        .get("session")
+        .and_then(|v| v.as_str())
+        .map(|s| s.to_string());
+    let outcome = match session {
+        Some(sid) => coordinator.chat(&sid, prompt, max_new)?,
+        None => coordinator.generate(prompt, max_new)?,
+    };
+    Ok(json::obj(vec![
+        ("ok", json::b(true)),
+        ("output", json::s(&outcome.text)),
+        ("latency_s", json::n(outcome.latency_s)),
+        ("reuse_depth", json::n(outcome.reuse_depth as f64)),
+        ("cache_hit", json::b(outcome.cache_hit)),
+        ("prompt_tokens", json::n(outcome.prompt_tokens as f64)),
+        ("new_tokens", json::n(outcome.ids.len() as f64)),
+    ]))
+}
+
+/// Minimal blocking client for tests/examples.
+pub struct TcpClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl TcpClient {
+    pub fn connect(addr: SocketAddr) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        let writer = stream.try_clone()?;
+        Ok(TcpClient {
+            reader: BufReader::new(stream),
+            writer,
+        })
+    }
+
+    /// Send one request, wait for one response.
+    pub fn request(
+        &mut self,
+        prompt: &str,
+        max_new_tokens: usize,
+        session: Option<&str>,
+    ) -> Result<Value> {
+        let mut fields = vec![
+            ("prompt", json::s(prompt)),
+            ("max_new_tokens", json::n(max_new_tokens as f64)),
+        ];
+        if let Some(s) = session {
+            fields.push(("session", json::s(s)));
+        }
+        let line = json::obj(fields).to_json() + "\n";
+        self.writer.write_all(line.as_bytes())?;
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply)?;
+        if reply.is_empty() {
+            return Err(Error::ShutDown);
+        }
+        json::parse(&reply)
+    }
+}

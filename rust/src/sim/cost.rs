@@ -1,0 +1,128 @@
+//! The paper's §3.3 / §5.5 analytical latency model.
+//!
+//! Baseline ≈ T_enc(m) + T_dec(g); Recycled ≈ T_enc(m-k) + T_dec(g) +
+//! T_loadKV. Recycling wins iff T_enc(k) > T_loadKV. §5.5 approximates the
+//! speedup as S ≈ α·k/m; [`fit_alpha`] recovers α from measurements the way
+//! the paper's empirical constant (≈1.2–1.5) was obtained.
+
+/// Linear-cost latency model, fit from measurements by the benches.
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    /// Seconds per encoded prompt token (slope of T_enc).
+    pub enc_per_token: f64,
+    /// Fixed overhead per forward call (dispatch + literal marshalling).
+    pub call_overhead: f64,
+    /// Seconds per decoded token.
+    pub dec_per_token: f64,
+    /// Seconds to load + inject one cached KV token (T_loadKV slope).
+    pub load_per_token: f64,
+}
+
+impl CostModel {
+    /// Baseline latency for an m-token prompt and g generated tokens.
+    pub fn baseline(&self, m: usize, g: usize) -> f64 {
+        self.call_overhead + self.enc_per_token * m as f64 + self.dec_per_token * g as f64
+    }
+
+    /// Recycled latency with reuse depth k.
+    pub fn recycled(&self, m: usize, k: usize, g: usize) -> f64 {
+        assert!(k <= m);
+        self.call_overhead
+            + self.enc_per_token * (m - k) as f64
+            + self.load_per_token * k as f64
+            + self.dec_per_token * g as f64
+    }
+
+    /// Predicted speedup percentage S = (L_base - L_rec)/L_base * 100.
+    pub fn speedup_pct(&self, m: usize, k: usize, g: usize) -> f64 {
+        let b = self.baseline(m, g);
+        (b - self.recycled(m, k, g)) / b * 100.0
+    }
+
+    /// The k at which recycling starts to win: smallest k with
+    /// T_enc(k) > T_loadKV(k) (in this linear model, any k>0 iff
+    /// enc slope exceeds load slope — the paper's claim; returns None if
+    /// loading is never cheaper).
+    pub fn breakeven_k(&self) -> Option<usize> {
+        if self.enc_per_token > self.load_per_token {
+            Some(1)
+        } else {
+            None
+        }
+    }
+}
+
+/// Least-squares fit of α in S ≈ α·(k/m) from (k, m, speedup_fraction)
+/// samples — reproduces the paper's §5.5 empirical constant.
+pub fn fit_alpha(samples: &[(usize, usize, f64)]) -> f64 {
+    let mut num = 0f64;
+    let mut den = 0f64;
+    for &(k, m, s) in samples {
+        if m == 0 {
+            continue;
+        }
+        let x = k as f64 / m as f64;
+        num += x * s;
+        den += x * x;
+    }
+    if den == 0.0 {
+        f64::NAN
+    } else {
+        num / den
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> CostModel {
+        CostModel {
+            enc_per_token: 1e-3,
+            call_overhead: 2e-3,
+            dec_per_token: 3e-3,
+            load_per_token: 1e-5,
+        }
+    }
+
+    #[test]
+    fn recycled_is_faster_when_k_positive() {
+        let m = model();
+        assert!(m.recycled(32, 16, 10) < m.baseline(32, 10));
+        assert_eq!(m.recycled(32, 0, 10), m.baseline(32, 10));
+    }
+
+    #[test]
+    fn speedup_monotone_in_k() {
+        let m = model();
+        let s1 = m.speedup_pct(32, 8, 10);
+        let s2 = m.speedup_pct(32, 24, 10);
+        assert!(s2 > s1 && s1 > 0.0);
+    }
+
+    #[test]
+    fn breakeven() {
+        assert_eq!(model().breakeven_k(), Some(1));
+        let slow_load = CostModel {
+            load_per_token: 1.0,
+            ..model()
+        };
+        assert_eq!(slow_load.breakeven_k(), None);
+    }
+
+    #[test]
+    fn fit_alpha_recovers_planted_constant() {
+        // Plant S = 1.35 * k/m exactly.
+        let samples: Vec<(usize, usize, f64)> = (1..20)
+            .map(|k| (k, 20, 1.35 * k as f64 / 20.0))
+            .collect();
+        let a = fit_alpha(&samples);
+        assert!((a - 1.35).abs() < 1e-9, "{a}");
+    }
+
+    #[test]
+    fn fit_alpha_empty_is_nan() {
+        assert!(fit_alpha(&[]).is_nan());
+        assert!(fit_alpha(&[(0, 0, 1.0)]).is_nan());
+    }
+}

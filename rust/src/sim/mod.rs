@@ -1,0 +1,10 @@
+//! Analytical models: TPU roofline estimates for the L1 kernel (DESIGN.md
+//! §3 — interpret-mode wallclock is not a TPU proxy, so structure is
+//! estimated instead) and the paper's §3.3 efficiency model
+//! `T_base ≈ T_enc(m) + T_dec(g)` vs `T_rec ≈ T_enc(m-k) + T_dec(g) + T_loadKV`.
+
+mod cost;
+mod roofline;
+
+pub use cost::{CostModel, fit_alpha};
+pub use roofline::{AttentionTile, Roofline, TpuTarget};

@@ -1,0 +1,210 @@
+//! TPU roofline estimator for the cached-attention kernel and the model
+//! forward pass.
+//!
+//! Mirrors `python/compile/kernels/cached_attention.py::vmem_bytes` and adds
+//! FLOP / HBM-byte accounting so DESIGN.md can report estimated MXU
+//! utilization per config. Numbers are *estimates for a hypothetical TPU
+//! target* — the CPU CI substrate only validates numerics.
+
+use crate::config::ModelConfig;
+
+/// A TPU-like hardware target (defaults roughly TPU v4-lite class).
+#[derive(Debug, Clone, Copy)]
+pub struct TpuTarget {
+    /// Peak bf16 matmul throughput, FLOP/s.
+    pub peak_flops: f64,
+    /// HBM bandwidth, bytes/s.
+    pub hbm_bw: f64,
+    /// VMEM capacity per core, bytes.
+    pub vmem_bytes: usize,
+}
+
+impl Default for TpuTarget {
+    fn default() -> Self {
+        TpuTarget {
+            peak_flops: 137e12,
+            hbm_bw: 1.2e12,
+            vmem_bytes: 16 << 20,
+        }
+    }
+}
+
+/// One (head, key-block) program instance of the cached-attention kernel.
+#[derive(Debug, Clone, Copy)]
+pub struct AttentionTile {
+    /// Query rows resident in VMEM (chunk size C).
+    pub c: usize,
+    /// Head dim D.
+    pub d: usize,
+    /// Key tile rows BK.
+    pub block_k: usize,
+}
+
+impl AttentionTile {
+    /// VMEM working set in bytes (f32 on CPU validation; bf16 halves this
+    /// on a real TPU). Must match kernels/cached_attention.py::vmem_bytes.
+    pub fn vmem_bytes(&self) -> usize {
+        4 * (self.c * self.d          // q tile
+            + 2 * self.block_k * self.d // k + v tiles
+            + self.c * self.d          // o accumulator
+            + 2 * self.c               // m + l vectors
+            + self.c * self.block_k)   // p scratch
+    }
+
+    /// MXU FLOPs per program instance: two matmuls (QK^T and PV).
+    pub fn flops(&self) -> f64 {
+        (2.0 * self.c as f64 * self.block_k as f64 * self.d as f64) * 2.0
+    }
+
+    /// HBM bytes streamed per instance (K and V tiles; q/o stay resident
+    /// across the key-block axis).
+    pub fn hbm_bytes(&self) -> f64 {
+        (2 * self.block_k * self.d * 4) as f64
+    }
+
+    /// Arithmetic intensity (FLOP per HBM byte).
+    pub fn intensity(&self) -> f64 {
+        self.flops() / self.hbm_bytes()
+    }
+
+    /// Fraction of peak MXU this tile can sustain on `t`
+    /// (min(1, intensity / machine-balance) — classic roofline).
+    pub fn mxu_utilization(&self, t: &TpuTarget) -> f64 {
+        let balance = t.peak_flops / t.hbm_bw;
+        (self.intensity() / balance).min(1.0)
+    }
+
+    /// Does the working set fit VMEM?
+    pub fn fits(&self, t: &TpuTarget) -> bool {
+        self.vmem_bytes() <= t.vmem_bytes
+    }
+}
+
+/// Whole-model roofline summary for a prefill chunk.
+#[derive(Debug, Clone)]
+pub struct Roofline {
+    pub cfg: ModelConfig,
+    pub target: TpuTarget,
+}
+
+impl Roofline {
+    pub fn new(cfg: ModelConfig) -> Self {
+        Roofline {
+            cfg,
+            target: TpuTarget::default(),
+        }
+    }
+
+    /// FLOPs to encode a chunk of `c` new tokens against a live prefix of
+    /// `cur` positions (attention + MLPs + projections, fwd only).
+    pub fn chunk_flops(&self, c: usize, cur: usize) -> f64 {
+        let m = &self.cfg;
+        let dm = m.d_model as f64;
+        let dff = m.d_ff as f64;
+        let cf = c as f64;
+        let span = (cur + c) as f64;
+        let per_layer = 2.0 * cf * dm * (3.0 * dm)   // qkv proj
+            + 2.0 * cf * span * dm * 2.0              // QK^T + PV across heads
+            + 2.0 * cf * dm * dm                      // output proj
+            + 2.0 * cf * dm * dff * 2.0;              // mlp
+        per_layer * m.n_layer as f64 + 2.0 * cf * dm * m.vocab_size as f64
+    }
+
+    /// Estimated seconds for the chunk on the TPU target (max of compute
+    /// and memory time — roofline).
+    pub fn chunk_seconds(&self, c: usize, cur: usize) -> f64 {
+        let flops = self.chunk_flops(c, cur);
+        // weights + KV traffic dominate HBM
+        let weight_bytes = 2.0 * self.param_count() as f64; // bf16
+        let kv_bytes = (self.cfg.kv_bytes_for_len(cur + c)) as f64 / 2.0;
+        let t = &self.target;
+        (flops / t.peak_flops).max((weight_bytes + kv_bytes) / t.hbm_bw)
+    }
+
+    /// Parameter count (mirrors python param_spec arithmetic).
+    pub fn param_count(&self) -> usize {
+        let m = &self.cfg;
+        let per_layer = 2 * m.d_model                      // ln1
+            + m.d_model * 3 * m.d_model + 3 * m.d_model     // qkv
+            + m.d_model * m.d_model + m.d_model             // wo
+            + 2 * m.d_model                                 // ln2
+            + m.d_model * m.d_ff + m.d_ff                   // fc
+            + m.d_ff * m.d_model + m.d_model;               // proj
+        m.vocab_size * m.d_model + m.max_seq * m.d_model
+            + m.n_layer * per_layer + 2 * m.d_model
+    }
+
+    /// The fraction of prefill compute skipped by recycling a k-token
+    /// prefix of an m-token prompt — the paper's efficiency intuition with
+    /// real FLOP accounting instead of the linear approximation.
+    pub fn recycle_flop_saving(&self, m_tokens: usize, k: usize) -> f64 {
+        let full = self.chunk_flops(m_tokens, 0);
+        let rest = self.chunk_flops(m_tokens - k, k);
+        (full - rest) / full
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tile_vmem_matches_python_formula() {
+        // python: f * (c*d + 2*bk*d + c*d + 2*c + c*bk) with f=4
+        let t = AttentionTile { c: 8, d: 32, block_k: 64 };
+        assert_eq!(t.vmem_bytes(), 4 * (8 * 32 + 2 * 64 * 32 + 8 * 32 + 16 + 8 * 64));
+    }
+
+    #[test]
+    fn tile_fits_vmem_for_all_serving_shapes() {
+        let target = TpuTarget::default();
+        for c in [1, 8, 32, 64] {
+            for block_k in [64, 128, 256] {
+                let t = AttentionTile { c, d: 64, block_k };
+                assert!(t.fits(&target), "c={c} bk={block_k}");
+            }
+        }
+    }
+
+    #[test]
+    fn bigger_blocks_raise_intensity() {
+        let a = AttentionTile { c: 8, d: 64, block_k: 64 };
+        let b = AttentionTile { c: 32, d: 64, block_k: 64 };
+        // more query rows per tile => more FLOPs per streamed KV byte
+        assert!(b.intensity() > a.intensity());
+        assert!(b.mxu_utilization(&TpuTarget::default())
+            >= a.mxu_utilization(&TpuTarget::default()));
+    }
+
+    #[test]
+    fn param_count_nano_close_to_python() {
+        // nano is ~0.89M params (weight-tied head, incl. positional)
+        let r = Roofline::new(ModelConfig::nano());
+        let n = r.param_count();
+        assert!((850_000..1_200_000).contains(&n), "{n}");
+    }
+
+    #[test]
+    fn medium_param_count_is_dialogpt_scale() {
+        let r = Roofline::new(ModelConfig::dialogpt_medium());
+        let n = r.param_count();
+        // DialoGPT-medium is ~345M (355M with positional/tied variations)
+        assert!((300_000_000..420_000_000).contains(&n), "{n}");
+    }
+
+    #[test]
+    fn recycle_saving_grows_with_k() {
+        let r = Roofline::new(ModelConfig::nano());
+        let s1 = r.recycle_flop_saving(64, 16);
+        let s2 = r.recycle_flop_saving(64, 48);
+        assert!(s2 > s1);
+        assert!(s1 > 0.0 && s2 < 1.0);
+    }
+
+    #[test]
+    fn chunk_seconds_monotone_in_work() {
+        let r = Roofline::new(ModelConfig::dialogpt_medium());
+        assert!(r.chunk_seconds(64, 0) <= r.chunk_seconds(64, 512));
+        assert!(r.chunk_seconds(1, 0) <= r.chunk_seconds(64, 0));
+    }
+}

@@ -1,0 +1,158 @@
+//! Deterministic fake model.
+//!
+//! The mock satisfies the ForwardModel contract *including the paper's
+//! exactness property*: it stores a marker for each token into the KV
+//! buffer (plane `[layer 0, K, head 0, pos, 0]`) and derives logits purely
+//! from the markers of the visible prefix — so KV injection behaves exactly
+//! like the real model (recycled == baseline), and corrupted/shifted KV
+//! shows up as divergent outputs.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+use crate::config::ModelConfig;
+use crate::engine::ForwardModel;
+use crate::error::{Error, Result};
+
+pub struct MockModel {
+    cfg: ModelConfig,
+    /// Simulated per-token encode cost (for cost-model benches).
+    pub delay_per_token: Duration,
+    /// Fail the Nth forward call (failure injection).
+    fail_on_call: Option<usize>,
+    calls: AtomicUsize,
+}
+
+impl MockModel {
+    pub fn new(cfg: ModelConfig) -> Self {
+        MockModel {
+            cfg,
+            delay_per_token: Duration::ZERO,
+            fail_on_call: None,
+            calls: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn with_delay(cfg: ModelConfig, per_token: Duration) -> Self {
+        MockModel {
+            delay_per_token: per_token,
+            ..Self::new(cfg)
+        }
+    }
+
+    /// Make the `n`-th forward call (1-based) return an error.
+    pub fn fail_on_call(mut self, n: usize) -> Self {
+        self.fail_on_call = Some(n);
+        self
+    }
+
+    pub fn calls(&self) -> usize {
+        self.calls.load(Ordering::Relaxed)
+    }
+
+    fn marker_index(&self, pos: usize) -> usize {
+        // [L, 2, H, S, D] -> plane (0, 0, 0, pos, 0)
+        pos * self.cfg.head_dim
+    }
+}
+
+impl ForwardModel for MockModel {
+    fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    fn forward_chunk(
+        &self,
+        tokens: &[u32],
+        valid_len: usize,
+        kv: &mut [f32],
+        cur_len: usize,
+    ) -> Result<Vec<f32>> {
+        let n = self.calls.fetch_add(1, Ordering::Relaxed) + 1;
+        if self.fail_on_call == Some(n) {
+            return Err(Error::Xla("injected failure".into()));
+        }
+        let c = tokens.len();
+        let v = self.cfg.vocab_size;
+        if !self.cfg.chunk_sizes.contains(&c) {
+            return Err(Error::ShapeMismatch(format!("chunk {c} not a bucket")));
+        }
+        if kv.len() != self.cfg.kv_elems() {
+            return Err(Error::ShapeMismatch("kv size".into()));
+        }
+        if cur_len + c > self.cfg.max_seq {
+            return Err(Error::ContextExhausted(cur_len + c));
+        }
+        if valid_len == 0 || valid_len > c {
+            return Err(Error::ShapeMismatch("valid_len".into()));
+        }
+        if !self.delay_per_token.is_zero() {
+            std::thread::sleep(self.delay_per_token * valid_len as u32);
+        }
+        // Write markers for the new valid tokens.
+        for (i, &t) in tokens[..valid_len].iter().enumerate() {
+            kv[self.marker_index(cur_len + i)] = (t + 1) as f32;
+        }
+        // Logits for every chunk row from the visible marker prefix.
+        let mut logits = vec![0f32; c * v];
+        for i in 0..valid_len {
+            let pos = cur_len + i;
+            let mut h: u64 = 0xcbf29ce484222325;
+            for p in 0..=pos {
+                let m = kv[self.marker_index(p)] as u64;
+                h = h.wrapping_mul(1000003).wrapping_add(m);
+            }
+            // Avoid the EOT id so greedy runs don't stop early; ids stay
+            // in [1, v).
+            let id = 1 + (h % (v as u64 - 1)) as usize;
+            logits[i * v + id] = 1.0;
+        }
+        Ok(logits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunk_split_invariance() {
+        // one 8-chunk == two calls (8 then 1) for the logits at row 8
+        let m = MockModel::new(ModelConfig::nano());
+        let ids: Vec<u32> = (10..19).collect();
+
+        let mut kv1 = vec![0f32; m.config().kv_elems()];
+        let mut padded = ids.clone();
+        padded.resize(32, 0);
+        let l1 = m.forward_chunk(&padded, 9, &mut kv1, 0).unwrap();
+        let v = m.config().vocab_size;
+        let row8: Vec<f32> = l1[8 * v..9 * v].to_vec();
+
+        let mut kv2 = vec![0f32; m.config().kv_elems()];
+        let l2a = m.forward_chunk(&ids[..8], 8, &mut kv2, 0).unwrap();
+        let l2b = m.forward_chunk(&ids[8..9], 1, &mut kv2, 8).unwrap();
+        assert_eq!(row8, l2b[..v].to_vec());
+        drop(l2a);
+        assert_eq!(kv1[..9 * m.config().head_dim], kv2[..9 * m.config().head_dim]);
+    }
+
+    #[test]
+    fn injected_failure_fires_once() {
+        let m = MockModel::new(ModelConfig::nano()).fail_on_call(2);
+        let mut kv = vec![0f32; m.config().kv_elems()];
+        assert!(m.forward_chunk(&[1], 1, &mut kv, 0).is_ok());
+        assert!(m.forward_chunk(&[2], 1, &mut kv, 1).is_err());
+        assert!(m.forward_chunk(&[2], 1, &mut kv, 1).is_ok());
+    }
+
+    #[test]
+    fn guards_fire() {
+        let m = MockModel::new(ModelConfig::nano());
+        let mut kv = vec![0f32; m.config().kv_elems()];
+        assert!(m.forward_chunk(&[1, 2], 2, &mut kv, 0).is_err()); // 2 not a bucket
+        assert!(m.forward_chunk(&[1], 0, &mut kv, 0).is_err());
+        let mut short = vec![0f32; 3];
+        assert!(m.forward_chunk(&[1], 1, &mut short, 0).is_err());
+        assert!(m.forward_chunk(&[1], 1, &mut kv, 256).is_err());
+    }
+}

@@ -1,0 +1,8 @@
+//! Test infrastructure: a mini property-testing harness (proptest is not in
+//! the offline vendor set) and a deterministic mock [`ForwardModel`] so the
+//! coordinator/recycler stack can be tested without PJRT artifacts.
+
+mod mock;
+pub mod prop;
+
+pub use mock::MockModel;

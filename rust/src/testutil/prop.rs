@@ -1,0 +1,83 @@
+//! Mini property-testing harness (proptest substitute).
+//!
+//! `check(name, iters, |rng| ...)` runs a property over seeded random
+//! inputs; on failure it retries with the same seed to report the minimal
+//! reproduction seed. No shrinking — seeds are printed so a failing case is
+//! directly re-runnable, which is what debugging actually needs here.
+
+use crate::util::rng::Rng;
+
+/// Run `prop` for `iters` seeded iterations; panic with the failing seed.
+pub fn check<F: FnMut(&mut Rng) -> std::result::Result<(), String>>(
+    name: &str,
+    iters: u64,
+    mut prop: F,
+) {
+    for seed in 0..iters {
+        let mut rng = Rng::new(0x5EED_0000 + seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Assert helper for properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Random token sequence of length in [lo, hi) with ids in [1, vocab).
+pub fn tokens(rng: &mut Rng, lo: usize, hi: usize, vocab: u32) -> Vec<u32> {
+    let n = rng.range(lo, hi);
+    (0..n).map(|_| 1 + (rng.next_u64() % (vocab as u64 - 1)) as u32).collect()
+}
+
+/// Random printable ASCII-ish text (letters, digits, spaces, newlines).
+pub fn text(rng: &mut Rng, max_len: usize) -> String {
+    const ALPHABET: &[u8] = b"abcdefghijklmnopqrstuvwxyz ABCDEFGHIJ0123456789 \n.,?!";
+    let n = rng.below(max_len + 1);
+    (0..n)
+        .map(|_| ALPHABET[rng.below(ALPHABET.len())] as char)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("trivial", 50, |rng| {
+            let x = rng.below(10);
+            prop_assert!(x < 10, "x={x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'failing'")]
+    fn check_reports_failure() {
+        check("failing", 10, |rng| {
+            let x = rng.below(10);
+            prop_assert!(x < 5, "x={x} too big");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn generators_in_bounds() {
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let t = tokens(&mut rng, 1, 20, 512);
+            assert!(!t.is_empty() && t.len() < 20);
+            assert!(t.iter().all(|&x| (1..512).contains(&x)));
+            let s = text(&mut rng, 40);
+            assert!(s.len() <= 40);
+        }
+    }
+}

@@ -1,0 +1,258 @@
+//! BPE encoder/decoder over a fixed merge list (loaded from
+//! `artifacts/tokenizer.json`).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+use crate::util::json;
+
+use super::bytes::{byte_to_unicode, unicode_to_byte};
+use super::pretokenize;
+
+/// Vocabulary layout (must match Python): specials, 256 byte symbols, merges.
+pub const END_OF_TEXT: &str = "<|endoftext|>";
+
+/// Byte-level BPE tokenizer.
+pub struct Tokenizer {
+    merges: Vec<(String, String)>,
+    rank: HashMap<(String, String), usize>,
+    token_to_id: HashMap<String, u32>,
+    id_to_token: Vec<String>,
+    n_specials: usize,
+    /// piece -> ids memo (prompt workloads repeat pieces heavily).
+    cache: Mutex<HashMap<String, Vec<u32>>>,
+}
+
+impl Tokenizer {
+    /// Build from a merge list (order defines merge priority and vocab ids).
+    pub fn new(merges: Vec<(String, String)>) -> Self {
+        let specials = vec![END_OF_TEXT.to_string()];
+        let n_specials = specials.len();
+        let mut id_to_token = specials;
+        for b in 0..=255u8 {
+            id_to_token.push(byte_to_unicode(b).to_string());
+        }
+        for (a, b) in &merges {
+            id_to_token.push(format!("{a}{b}"));
+        }
+        let token_to_id = id_to_token
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (t.clone(), i as u32))
+            .collect();
+        let rank = merges
+            .iter()
+            .enumerate()
+            .map(|(i, m)| (m.clone(), i))
+            .collect();
+        Tokenizer {
+            merges,
+            rank,
+            token_to_id,
+            id_to_token,
+            n_specials,
+            cache: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Load `tokenizer.json` ({"specials": [...], "merges": [[a, b], ...]}).
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = json::parse(text)?;
+        let merges = v
+            .req_arr("merges")?
+            .iter()
+            .map(|m| {
+                let pair = m
+                    .as_arr()
+                    .filter(|a| a.len() == 2)
+                    .ok_or_else(|| Error::Json("merge entry is not a pair".into()))?;
+                let a = pair[0]
+                    .as_str()
+                    .ok_or_else(|| Error::Json("merge lhs not a string".into()))?;
+                let b = pair[1]
+                    .as_str()
+                    .ok_or_else(|| Error::Json("merge rhs not a string".into()))?;
+                Ok((a.to_string(), b.to_string()))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        // Sanity: specials must match our layout.
+        if let Some(sp) = v.get("specials").and_then(|s| s.as_arr()) {
+            if sp.len() != 1 || sp[0].as_str() != Some(END_OF_TEXT) {
+                return Err(Error::ManifestInvalid(
+                    "tokenizer specials layout mismatch".into(),
+                ));
+            }
+        }
+        Ok(Tokenizer::new(merges))
+    }
+
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::ArtifactMissing(format!("{}: {e}", path.display())))?;
+        Self::from_json(&text)
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.id_to_token.len()
+    }
+
+    pub fn eot_id(&self) -> u32 {
+        0
+    }
+
+    pub fn n_merges(&self) -> usize {
+        self.merges.len()
+    }
+
+    /// Encode text to token ids.
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut ids = Vec::new();
+        for piece in pretokenize(text) {
+            if let Some(cached) = self.cache.lock().unwrap().get(piece) {
+                ids.extend_from_slice(cached);
+                continue;
+            }
+            let piece_ids = self.encode_piece(piece);
+            ids.extend_from_slice(&piece_ids);
+            let mut cache = self.cache.lock().unwrap();
+            if cache.len() < 65_536 {
+                cache.insert(piece.to_string(), piece_ids);
+            }
+        }
+        ids
+    }
+
+    fn encode_piece(&self, piece: &str) -> Vec<u32> {
+        let mut word: Vec<String> = piece
+            .bytes()
+            .map(|b| byte_to_unicode(b).to_string())
+            .collect();
+        while word.len() > 1 {
+            let mut best: Option<(usize, usize)> = None; // (rank, index)
+            for i in 0..word.len() - 1 {
+                // Avoid cloning: look up by reference via a temporary pair.
+                let key = (word[i].clone(), word[i + 1].clone());
+                if let Some(&r) = self.rank.get(&key) {
+                    if best.map_or(true, |(br, _)| r < br) {
+                        best = Some((r, i));
+                    }
+                }
+            }
+            match best {
+                None => break,
+                Some((_, i)) => {
+                    let merged = format!("{}{}", word[i], word[i + 1]);
+                    word.splice(i..i + 2, [merged]);
+                }
+            }
+        }
+        word.iter()
+            .map(|t| {
+                *self
+                    .token_to_id
+                    .get(t)
+                    .expect("byte-level BPE symbol must be in vocab")
+            })
+            .collect()
+    }
+
+    /// Decode ids back to text (specials are dropped; invalid UTF-8 is
+    /// replaced, mirroring Python's errors="replace").
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            let Some(tok) = self.id_to_token.get(id as usize) else {
+                continue;
+            };
+            if (id as usize) < self.n_specials {
+                continue;
+            }
+            for c in tok.chars() {
+                if let Some(b) = unicode_to_byte(c) {
+                    bytes.push(b);
+                }
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// Token string for an id (debugging / cache explorer).
+    pub fn token(&self, id: u32) -> Option<&str> {
+        self.id_to_token.get(id as usize).map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Tokenizer {
+        // merges: "h"+"e" -> "he", "he"+"l" -> "hel"
+        Tokenizer::new(vec![
+            ("h".into(), "e".into()),
+            ("he".into(), "l".into()),
+        ])
+    }
+
+    #[test]
+    fn vocab_layout() {
+        let t = toy();
+        assert_eq!(t.vocab_size(), 1 + 256 + 2);
+        assert_eq!(t.eot_id(), 0);
+        assert_eq!(t.token(0), Some(END_OF_TEXT));
+        // byte tokens follow the specials in byte order: id 1 is byte 0's
+        // remapped symbol, id 1 + b'!' is the literal "!".
+        assert_eq!(t.token(1 + b'!' as u32), Some("!"));
+        assert!(t.token(256).is_some());
+    }
+
+    #[test]
+    fn merges_apply_in_rank_order() {
+        let t = toy();
+        let ids = t.encode("hello");
+        // "hello" -> he+l merged to "hel", then "l", "o" remain as bytes.
+        let toks: Vec<&str> = ids.iter().map(|&i| t.token(i).unwrap()).collect();
+        assert_eq!(toks, vec!["hel", "l", "o"]);
+    }
+
+    #[test]
+    fn roundtrip_ascii_and_unicode() {
+        let t = toy();
+        for s in ["hello world", "café → あ", "a\nb", "", "  x  ", "\t"] {
+            assert_eq!(t.decode(&t.encode(s)), s, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn encode_deterministic_with_cache() {
+        let t = toy();
+        assert_eq!(t.encode("hello hello"), t.encode("hello hello"));
+    }
+
+    #[test]
+    fn from_json_roundtrip() {
+        let j = r#"{"specials": ["<|endoftext|>"], "merges": [["h","e"],["he","l"]]}"#;
+        let t = Tokenizer::from_json(j).unwrap();
+        assert_eq!(t.n_merges(), 2);
+        assert_eq!(t.decode(&t.encode("hello")), "hello");
+    }
+
+    #[test]
+    fn from_json_rejects_bad_layout() {
+        let j = r#"{"specials": ["<|x|>"], "merges": []}"#;
+        assert!(Tokenizer::from_json(j).is_err());
+        assert!(Tokenizer::from_json("{").is_err());
+        assert!(Tokenizer::from_json(r#"{"merges": [["a"]]}"#).is_err());
+    }
+
+    #[test]
+    fn prefix_stability() {
+        // the paper's prefix condition at the tokenizer level
+        let t = toy();
+        let a = t.encode("What is the capital of France?");
+        let b = t.encode("What is the capital of France? Also mention more.");
+        assert_eq!(&b[..a.len()], &a[..]);
+    }
+}

@@ -1,0 +1,66 @@
+//! GPT-2's reversible byte <-> printable-unicode table.
+//!
+//! Every byte value maps to a printable code point so BPE merge symbols are
+//! valid unicode strings. Mirrors `bytes_to_unicode()` in the Python side.
+
+use once_cell::sync::Lazy;
+use std::collections::HashMap;
+
+static TABLES: Lazy<(Vec<char>, HashMap<char, u8>)> = Lazy::new(|| {
+    let mut bs: Vec<u16> = (b'!' as u16..=b'~' as u16)
+        .chain(0xa1..=0xac)
+        .chain(0xae..=0xff)
+        .collect();
+    let mut cs: Vec<u32> = bs.iter().map(|&b| b as u32).collect();
+    let mut n = 0u32;
+    for b in 0u16..256 {
+        if !bs.contains(&b) {
+            bs.push(b);
+            cs.push(256 + n);
+            n += 1;
+        }
+    }
+    let mut fwd = vec!['\0'; 256];
+    let mut rev = HashMap::new();
+    for (&b, &c) in bs.iter().zip(cs.iter()) {
+        let ch = char::from_u32(c).unwrap();
+        fwd[b as usize] = ch;
+        rev.insert(ch, b as u8);
+    }
+    (fwd, rev)
+});
+
+/// Byte -> printable char.
+pub fn byte_to_unicode(b: u8) -> char {
+    TABLES.0[b as usize]
+}
+
+/// Printable char -> byte (None for chars outside the table).
+pub fn unicode_to_byte(c: char) -> Option<u8> {
+    TABLES.1.get(&c).copied()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bijective() {
+        let mut seen = std::collections::HashSet::new();
+        for b in 0..=255u8 {
+            let c = byte_to_unicode(b);
+            assert!(seen.insert(c), "duplicate mapping for byte {b}");
+            assert_eq!(unicode_to_byte(c), Some(b));
+        }
+    }
+
+    #[test]
+    fn matches_python_reference_points() {
+        // Spot values from the Python table: '!' -> '!', space -> 'Ġ' (U+0120),
+        // newline -> 'Ċ' (U+010A).
+        assert_eq!(byte_to_unicode(b'!'), '!');
+        assert_eq!(byte_to_unicode(b' '), '\u{120}');
+        assert_eq!(byte_to_unicode(b'\n'), '\u{10a}');
+        assert_eq!(byte_to_unicode(b'A'), 'A');
+    }
+}

@@ -1,0 +1,123 @@
+//! Byte-level BPE tokenizer — the request-path twin of
+//! `python/compile/tokenizer.py`.
+//!
+//! The two implementations MUST agree token-for-token: Python trains the
+//! merges once at build time and emits `artifacts/tokenizer.json` plus
+//! encode fixtures; `rust/tests/integration_runtime.rs` replays every
+//! fixture through this implementation.
+
+mod bpe;
+mod bytes;
+
+pub use bpe::Tokenizer;
+pub use bytes::{byte_to_unicode, unicode_to_byte};
+
+/// Pre-tokenize text into BPE word pieces.
+///
+/// Scanner rules (identical char-class logic in both languages — see the
+/// Python docstring):
+///  * a run of newlines is one piece;
+///  * a run of (space-class) whitespace followed by a word glues to the
+///    word (`" hello"` is one piece);
+///  * a trailing/isolated whitespace run is its own piece.
+///
+/// The space class is the explicit set `{' ', '\t', '\r', '\x0b', '\x0c'}`,
+/// NOT `char::is_whitespace`, whose semantics differ from Python's
+/// `str.isspace` on exotic code points.
+pub fn pretokenize(text: &str) -> Vec<&str> {
+    let chars: Vec<(usize, char)> = text.char_indices().collect();
+    let n = chars.len();
+    let mut pieces = Vec::new();
+    let mut i = 0;
+
+    let end_of = |idx: usize| -> usize {
+        if idx < n {
+            chars[idx].0
+        } else {
+            text.len()
+        }
+    };
+
+    while i < n {
+        let c = chars[i].1;
+        if c == '\n' {
+            let mut j = i;
+            while j < n && chars[j].1 == '\n' {
+                j += 1;
+            }
+            pieces.push(&text[chars[i].0..end_of(j)]);
+            i = j;
+        } else if is_space(c) {
+            let mut j = i;
+            while j < n && is_space(chars[j].1) {
+                j += 1;
+            }
+            if j < n && chars[j].1 != '\n' {
+                let mut k = j;
+                while k < n && !is_space(chars[k].1) && chars[k].1 != '\n' {
+                    k += 1;
+                }
+                pieces.push(&text[chars[i].0..end_of(k)]);
+                i = k;
+            } else {
+                pieces.push(&text[chars[i].0..end_of(j)]);
+                i = j;
+            }
+        } else {
+            let mut j = i;
+            while j < n && !is_space(chars[j].1) && chars[j].1 != '\n' {
+                j += 1;
+            }
+            pieces.push(&text[chars[i].0..end_of(j)]);
+            i = j;
+        }
+    }
+    pieces
+}
+
+#[inline]
+fn is_space(c: char) -> bool {
+    matches!(c, ' ' | '\t' | '\r' | '\u{b}' | '\u{c}')
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pretokenize_basic() {
+        assert_eq!(pretokenize("User: hi\nBot: yo"),
+                   vec!["User:", " hi", "\n", "Bot:", " yo"]);
+    }
+
+    #[test]
+    fn pretokenize_concat_identity() {
+        let cases = [
+            "hello world",
+            "  double  spaces ",
+            "\n\nnl\n",
+            "tabs\tand spaces",
+            "",
+            " ",
+            "\n",
+            "unicode café → あ",
+            "a \n b",
+            "  \n",
+        ];
+        for c in cases {
+            assert_eq!(pretokenize(c).concat(), c, "{c:?}");
+        }
+    }
+
+    #[test]
+    fn space_glues_to_word() {
+        assert_eq!(pretokenize("a b"), vec!["a", " b"]);
+        assert_eq!(pretokenize("  ab"), vec!["  ab"]);
+    }
+
+    #[test]
+    fn trailing_space_is_own_piece() {
+        assert_eq!(pretokenize("ab  "), vec!["ab", "  "]);
+        assert_eq!(pretokenize("ab \n"), vec!["ab", " ", "\n"]);
+    }
+}

@@ -1,0 +1,147 @@
+//! RFC-4180-style CSV reader/writer (quoted fields, embedded commas,
+//! quotes and newlines) — mirrors the paper's data/ and results/ file
+//! formats (`cache_prompts.csv`, `baseline.csv`, `recycled.csv`).
+
+use std::fs;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// Parse CSV text into rows of fields.
+pub fn parse(text: &str) -> Result<Vec<Vec<String>>> {
+    let mut rows = Vec::new();
+    let mut row: Vec<String> = Vec::new();
+    let mut field = String::new();
+    let mut chars = text.chars().peekable();
+    let mut in_quotes = false;
+    let mut any = false;
+
+    while let Some(c) = chars.next() {
+        any = true;
+        if in_quotes {
+            match c {
+                '"' => {
+                    if chars.peek() == Some(&'"') {
+                        chars.next();
+                        field.push('"');
+                    } else {
+                        in_quotes = false;
+                    }
+                }
+                c => field.push(c),
+            }
+        } else {
+            match c {
+                '"' => {
+                    if !field.is_empty() {
+                        return Err(Error::Csv("quote inside unquoted field".into()));
+                    }
+                    in_quotes = true;
+                }
+                ',' => {
+                    row.push(std::mem::take(&mut field));
+                }
+                '\r' => {} // tolerate CRLF
+                '\n' => {
+                    row.push(std::mem::take(&mut field));
+                    rows.push(std::mem::take(&mut row));
+                }
+                c => field.push(c),
+            }
+        }
+    }
+    if in_quotes {
+        return Err(Error::Csv("unterminated quoted field".into()));
+    }
+    if any && (!field.is_empty() || !row.is_empty()) {
+        row.push(field);
+        rows.push(row);
+    }
+    Ok(rows)
+}
+
+/// Quote a field if needed.
+pub fn quote(field: &str) -> String {
+    if field.contains(',') || field.contains('"') || field.contains('\n') {
+        format!("\"{}\"", field.replace('"', "\"\""))
+    } else {
+        field.to_string()
+    }
+}
+
+/// Serialize rows to CSV text.
+pub fn to_string(rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    for row in rows {
+        let fields: Vec<String> = row.iter().map(|f| quote(f)).collect();
+        out.push_str(&fields.join(","));
+        out.push('\n');
+    }
+    out
+}
+
+/// Read a single-column CSV with a header row (the prompt-file format).
+pub fn read_single_column(path: &Path) -> Result<Vec<String>> {
+    let text = fs::read_to_string(path)?;
+    let rows = parse(&text)?;
+    if rows.is_empty() {
+        return Err(Error::Csv(format!("{}: empty", path.display())));
+    }
+    Ok(rows[1..].iter().map(|r| r.join(",")).collect())
+}
+
+/// Write rows (with header) to a file, creating parent dirs.
+pub fn write_file(path: &Path, header: &[&str], rows: &[Vec<String>]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        fs::create_dir_all(dir)?;
+    }
+    let mut all = vec![header.iter().map(|s| s.to_string()).collect::<Vec<_>>()];
+    all.extend(rows.iter().cloned());
+    fs::write(path, to_string(&all))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simple() {
+        let rows = parse("a,b\n1,2\n").unwrap();
+        assert_eq!(rows, vec![vec!["a", "b"], vec!["1", "2"]]);
+    }
+
+    #[test]
+    fn quoted_fields() {
+        let rows = parse("\"a,b\",\"c\"\"d\",\"e\nf\"\n").unwrap();
+        assert_eq!(rows[0], vec!["a,b", "c\"d", "e\nf"]);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let rows = vec![
+            vec!["text".to_string(), "lat".to_string()],
+            vec!["hello, \"world\"\nx".to_string(), "0.5".to_string()],
+        ];
+        let text = to_string(&rows);
+        assert_eq!(parse(&text).unwrap(), rows);
+    }
+
+    #[test]
+    fn no_trailing_newline() {
+        let rows = parse("a,b\n1,2").unwrap();
+        assert_eq!(rows.len(), 2);
+    }
+
+    #[test]
+    fn crlf_tolerated() {
+        let rows = parse("a,b\r\n1,2\r\n").unwrap();
+        assert_eq!(rows[1], vec!["1", "2"]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse("a\"b").is_err());
+        assert!(parse("\"unterminated").is_err());
+    }
+}

@@ -1,0 +1,186 @@
+//! Wallclock timing + summary statistics (criterion is not vendored).
+//!
+//! `Stopwatch` wraps a monotonic clock; `Samples` accumulates measurements
+//! and reports mean/median/percentiles/stddev. The paper's CUDA-synchronized
+//! timing maps to plain monotonic timing here because PJRT CPU `execute` is
+//! synchronous.
+
+use std::time::{Duration, Instant};
+
+/// Monotonic stopwatch.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_secs() * 1e3
+    }
+}
+
+/// A set of latency/throughput samples with summary statistics.
+#[derive(Debug, Clone, Default)]
+pub struct Samples {
+    values: Vec<f64>,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.values.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        self.values.iter().sum::<f64>() / self.values.len() as f64
+    }
+
+    pub fn stddev(&self) -> f64 {
+        if self.values.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        let var = self.values.iter().map(|v| (v - m) * (v - m)).sum::<f64>()
+            / (self.values.len() - 1) as f64;
+        var.sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.values.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.values.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Nearest-rank percentile, p in [0, 100].
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        let mut sorted = self.values.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
+        sorted[rank.min(sorted.len() - 1)]
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    /// One-line summary used by the bench binaries.
+    pub fn summary(&self, unit: &str) -> String {
+        format!(
+            "n={} mean={:.4}{u} p50={:.4}{u} p95={:.4}{u} min={:.4}{u} max={:.4}{u} sd={:.4}",
+            self.len(),
+            self.mean(),
+            self.median(),
+            self.percentile(95.0),
+            self.min(),
+            self.max(),
+            self.stddev(),
+            u = unit
+        )
+    }
+
+    /// Summary with seconds rendered in microseconds (sub-ms primitives).
+    pub fn summary_us(&self) -> String {
+        format!(
+            "n={} mean={:.1}us p50={:.1}us p95={:.1}us min={:.1}us max={:.1}us",
+            self.len(),
+            self.mean() * 1e6,
+            self.median() * 1e6,
+            self.percentile(95.0) * 1e6,
+            self.min() * 1e6,
+            self.max() * 1e6,
+        )
+    }
+}
+
+/// Measure a closure `warmup + iters` times; returns per-iteration seconds.
+pub fn measure<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Samples {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Samples::new();
+    for _ in 0..iters {
+        let sw = Stopwatch::start();
+        f();
+        s.push(sw.elapsed_secs());
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let mut s = Samples::new();
+        for v in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.push(v);
+        }
+        assert_eq!(s.mean(), 3.0);
+        assert_eq!(s.median(), 3.0);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert!((s.stddev() - 1.5811).abs() < 1e-3);
+    }
+
+    #[test]
+    fn percentile_bounds() {
+        let mut s = Samples::new();
+        for v in 0..100 {
+            s.push(v as f64);
+        }
+        assert_eq!(s.percentile(0.0), 0.0);
+        assert_eq!(s.percentile(100.0), 99.0);
+        assert!((s.percentile(95.0) - 94.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn empty_is_nan() {
+        let s = Samples::new();
+        assert!(s.mean().is_nan());
+    }
+
+    #[test]
+    fn measure_counts() {
+        let mut n = 0;
+        let s = measure(2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(s.len(), 5);
+    }
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(sw.elapsed_ms() >= 1.0);
+    }
+}

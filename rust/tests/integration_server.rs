@@ -1,0 +1,117 @@
+//! Integration: coordinator + TCP server over the line-delimited JSON
+//! protocol (mock model — no artifacts needed).
+
+use std::sync::Arc;
+
+use recycle_serve::config::{ModelConfig, ServerConfig};
+use recycle_serve::coordinator::Coordinator;
+use recycle_serve::engine::Engine;
+use recycle_serve::index::NgramEmbedder;
+use recycle_serve::recycler::{RecyclePolicy, Recycler};
+use recycle_serve::server::{Server, TcpClient};
+use recycle_serve::testutil::MockModel;
+use recycle_serve::tokenizer::Tokenizer;
+
+fn spawn_stack() -> (Arc<Coordinator>, Server) {
+    let coordinator = Arc::new(Coordinator::spawn(
+        || {
+            Recycler::new(
+                Engine::new(MockModel::new(ModelConfig::nano())),
+                Arc::new(Tokenizer::new(vec![])),
+                Box::new(NgramEmbedder::new(64)),
+                Default::default(),
+                RecyclePolicy::Strict,
+            )
+        },
+        ServerConfig::default(),
+    ));
+    // port 0: the OS picks a free port
+    let server = Server::start(Arc::clone(&coordinator), "127.0.0.1:0").unwrap();
+    (coordinator, server)
+}
+
+#[test]
+fn end_to_end_request_over_tcp() {
+    let (_c, server) = spawn_stack();
+    let mut client = TcpClient::connect(server.addr()).unwrap();
+    let resp = client
+        .request("hello from the network client", 4, None)
+        .unwrap();
+    assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
+    assert!(resp.get("output").and_then(|v| v.as_str()).is_some());
+    assert_eq!(resp.get("new_tokens").and_then(|v| v.as_i64()), Some(4));
+    server.stop();
+}
+
+#[test]
+fn recycling_visible_over_the_wire() {
+    let (_c, server) = spawn_stack();
+    let mut client = TcpClient::connect(server.addr()).unwrap();
+    let a = client
+        .request("what is the capital of france?", 3, None)
+        .unwrap();
+    assert_eq!(a.get("cache_hit").and_then(|v| v.as_bool()), Some(false));
+    let b = client
+        .request("what is the capital of france? and italy?", 3, None)
+        .unwrap();
+    assert_eq!(b.get("cache_hit").and_then(|v| v.as_bool()), Some(true));
+    assert!(b.get("reuse_depth").and_then(|v| v.as_i64()).unwrap() > 0);
+    server.stop();
+}
+
+#[test]
+fn malformed_request_gets_error_not_disconnect() {
+    let (_c, server) = spawn_stack();
+    use std::io::{BufRead, BufReader, Write};
+    let stream = std::net::TcpStream::connect(server.addr()).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+    w.write_all(b"this is not json\n").unwrap();
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":false"));
+    // connection still usable
+    w.write_all(br#"{"prompt": "still alive", "max_new_tokens": 2}"#)
+        .unwrap();
+    w.write_all(b"\n").unwrap();
+    line.clear();
+    r.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":true"));
+    server.stop();
+}
+
+#[test]
+fn session_chat_over_tcp() {
+    let (_c, server) = spawn_stack();
+    let mut client = TcpClient::connect(server.addr()).unwrap();
+    let t1 = client.request("hello there", 3, Some("s1")).unwrap();
+    assert_eq!(t1.get("cache_hit").and_then(|v| v.as_bool()), Some(false));
+    let t2 = client.request("tell me more", 3, Some("s1")).unwrap();
+    assert_eq!(
+        t2.get("cache_hit").and_then(|v| v.as_bool()),
+        Some(true),
+        "turn 2 must recycle the session transcript"
+    );
+    server.stop();
+}
+
+#[test]
+fn multiple_clients_share_the_coordinator() {
+    let (c, server) = spawn_stack();
+    let addr = server.addr();
+    let mut handles = Vec::new();
+    for i in 0..3 {
+        handles.push(std::thread::spawn(move || {
+            let mut client = TcpClient::connect(addr).unwrap();
+            let r = client
+                .request(&format!("client {i} asking a question"), 2, None)
+                .unwrap();
+            assert_eq!(r.get("ok").and_then(|v| v.as_bool()), Some(true));
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert!(c.stats().completed >= 3);
+    server.stop();
+}

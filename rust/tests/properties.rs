@@ -1,0 +1,439 @@
+//! Property-based tests over the coordinator-side substrates, using the
+//! in-house `testutil::prop` harness (proptest is not in the offline
+//! vendor set). Each property runs over hundreds of seeded random inputs;
+//! failures report the reproducing seed.
+
+use std::sync::Arc;
+
+use recycle_serve::config::{CacheConfig, EvictionPolicy, ModelConfig};
+use recycle_serve::engine::{plan_chunks, Engine};
+use recycle_serve::index::FlatIndex;
+use recycle_serve::kvcache::{persist, BlockPool, KvRecord, KvStore};
+use recycle_serve::prefix::{common_prefix_len, reuse_depth, RadixTree};
+use recycle_serve::prop_assert;
+use recycle_serve::testutil::prop::{check, text, tokens};
+use recycle_serve::testutil::MockModel;
+use recycle_serve::tokenizer::{pretokenize, Tokenizer};
+use recycle_serve::util::json;
+use recycle_serve::util::rng::Rng;
+
+// ---------- tokenizer ----------
+
+#[test]
+fn prop_pretokenize_concat_identity() {
+    check("pretokenize concat", 400, |rng| {
+        let s = text(rng, 120);
+        prop_assert!(pretokenize(&s).concat() == s, "pieces lost text: {s:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bpe_roundtrip_merge_free() {
+    let tok = Tokenizer::new(vec![]);
+    check("bpe roundtrip (no merges)", 400, |rng| {
+        let s = text(rng, 100);
+        let dec = tok.decode(&tok.encode(&s));
+        prop_assert!(dec == s, "{s:?} -> {dec:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bpe_roundtrip_with_merges() {
+    // synthesize a random-but-valid merge list over common letters
+    let mut rng = Rng::new(99);
+    let letters = ["a", "e", "i", "o", "t", "h", "n", "s"];
+    let mut merges = Vec::new();
+    for _ in 0..20 {
+        let a = rng.choice(&letters).to_string();
+        let b = rng.choice(&letters).to_string();
+        if !merges.contains(&(a.clone(), b.clone())) {
+            merges.push((a, b));
+        }
+    }
+    let tok = Tokenizer::new(merges);
+    check("bpe roundtrip (merges)", 300, |rng| {
+        let s = text(rng, 100);
+        let dec = tok.decode(&tok.encode(&s));
+        prop_assert!(dec == s, "{s:?} -> {dec:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bpe_prefix_stability_at_piece_boundary() {
+    let tok = Tokenizer::new(vec![]);
+    check("prefix stability", 300, |rng| {
+        let a = text(rng, 60);
+        let b = text(rng, 40);
+        // appending a new space-separated word keeps the old ids a prefix
+        let joined = format!("{a} x{b}");
+        let ia = tok.encode(&a);
+        let ij = tok.encode(&joined);
+        if a.ends_with(|c: char| c.is_whitespace()) {
+            return Ok(()); // boundary merges into the trailing space piece
+        }
+        prop_assert!(ij.len() >= ia.len() && ij[..ia.len()] == ia[..],
+                     "prefix broke: {a:?} + x{b:?}");
+        Ok(())
+    });
+}
+
+// ---------- prefix / radix ----------
+
+#[test]
+fn prop_common_prefix_len_spec() {
+    check("common_prefix_len", 500, |rng| {
+        let a = tokens(rng, 0, 30, 64);
+        let b = tokens(rng, 0, 30, 64);
+        let r = common_prefix_len(&a, &b);
+        prop_assert!(r <= a.len() && r <= b.len(), "r out of range");
+        prop_assert!(a[..r] == b[..r], "not a common prefix");
+        if r < a.len() && r < b.len() {
+            prop_assert!(a[r] != b[r], "not maximal");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_reuse_depth_strictness() {
+    check("reuse_depth strict", 500, |rng| {
+        let c = tokens(rng, 0, 20, 32);
+        let t = tokens(rng, 0, 20, 32);
+        let (r, full) = reuse_depth(&c, &t);
+        prop_assert!(full == (!c.is_empty() && r == c.len()),
+                     "strict flag wrong: r={r} |c|={}", c.len());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_radix_matches_linear_scan() {
+    // the radix tree's longest_prefix must agree with a brute-force scan
+    check("radix vs linear scan", 200, |rng| {
+        let mut tree = RadixTree::new();
+        let mut entries: Vec<(Vec<u32>, u64)> = Vec::new();
+        let n = rng.range(1, 12);
+        for key in 0..n as u64 {
+            let seq = tokens(rng, 1, 10, 6); // tiny alphabet -> shared prefixes
+            // replace semantics: keep latest key for duplicate seqs
+            entries.retain(|(s, _)| *s != seq);
+            entries.push((seq.clone(), key));
+            tree.insert(&seq, key);
+        }
+        prop_assert!(tree.len() == entries.len(), "len mismatch");
+        for _ in 0..10 {
+            let q = tokens(rng, 0, 14, 6);
+            let brute = entries
+                .iter()
+                .filter(|(s, _)| q.len() >= s.len() && q[..s.len()] == s[..])
+                .max_by_key(|(s, key)| (s.len(), *key))
+                .map(|(s, key)| (s.len(), *key));
+            let got = tree.longest_prefix(&q);
+            match (brute, got) {
+                (None, None) => {}
+                (Some((bd, _)), Some((gd, gk))) => {
+                    prop_assert!(bd == gd, "depth {gd} != brute {bd} for {q:?}");
+                    // key must be *a* valid entry at that depth
+                    prop_assert!(
+                        entries.iter().any(|(s, k)| s.len() == gd && *k == gk
+                            && q[..gd] == s[..]),
+                        "key {gk} not valid at depth {gd}"
+                    );
+                }
+                other => prop_assert!(false, "mismatch {other:?} for {q:?}"),
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_radix_insert_get_remove() {
+    check("radix insert/get/remove", 200, |rng| {
+        let mut tree = RadixTree::new();
+        let mut reference: Vec<(Vec<u32>, u64)> = Vec::new();
+        for step in 0..30 {
+            let seq = tokens(rng, 0, 8, 4);
+            if rng.chance(0.7) {
+                let old = tree.insert(&seq, step);
+                let ref_old = reference.iter().position(|(s, _)| *s == seq);
+                prop_assert!(
+                    old == ref_old.map(|i| reference[i].1),
+                    "insert returned {old:?}"
+                );
+                if let Some(i) = ref_old {
+                    reference[i].1 = step;
+                } else {
+                    reference.push((seq, step));
+                }
+            } else {
+                let got = tree.remove(&seq);
+                let ref_i = reference.iter().position(|(s, _)| *s == seq);
+                prop_assert!(got == ref_i.map(|i| reference[i].1), "remove {got:?}");
+                if let Some(i) = ref_i {
+                    reference.remove(i);
+                }
+            }
+            prop_assert!(tree.len() == reference.len(), "len diverged");
+        }
+        for (s, k) in &reference {
+            prop_assert!(tree.get(s) == Some(*k), "get {s:?}");
+        }
+        Ok(())
+    });
+}
+
+// ---------- kv store ----------
+
+fn rec_of(cfg: &ModelConfig, len: usize, tag: usize) -> KvRecord {
+    KvRecord {
+        text: format!("p{tag}"),
+        tokens: (0..len as u32).collect(),
+        embedding: vec![1.0],
+        kv: Arc::new(vec![0.5; cfg.n_layer * 2 * cfg.n_head * len * cfg.head_dim]),
+        n_layer: cfg.n_layer,
+        n_head: cfg.n_head,
+        head_dim: cfg.head_dim,
+    }
+}
+
+#[test]
+fn prop_store_capacity_and_accounting_invariants() {
+    let cfg = ModelConfig::nano();
+    check("store invariants", 150, |rng| {
+        let max_entries = rng.range(1, 6);
+        let policy = *rng.choice(&EvictionPolicy::ALL);
+        let mut store = KvStore::new(CacheConfig {
+            max_entries,
+            max_bytes: 0,
+            eviction: policy,
+            ..Default::default()
+        });
+        let mut live: Vec<u64> = Vec::new();
+        for step in 0..40 {
+            match rng.below(3) {
+                0 => {
+                    let (id, evicted) = store.insert(rec_of(&cfg, rng.range(1, 30), step));
+                    for (eid, _) in &evicted {
+                        live.retain(|x| x != eid);
+                    }
+                    live.push(id);
+                }
+                1 => {
+                    if !live.is_empty() {
+                        let id = *rng.choice(&live);
+                        prop_assert!(store.hit(id).is_some(), "live entry must hit");
+                    }
+                }
+                _ => {
+                    if !live.is_empty() && rng.chance(0.5) {
+                        let id = live.remove(rng.below(live.len()));
+                        prop_assert!(store.remove(id), "remove live");
+                    }
+                }
+            }
+            // invariants
+            prop_assert!(store.len() <= max_entries, "capacity exceeded");
+            prop_assert!(store.len() == live.len(), "live set diverged");
+            let expect: usize = store.iter().map(|(_, r)| r.kv_bytes()).sum();
+            prop_assert!(store.live_bytes() == expect, "byte accounting");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_persist_roundtrip_random_records() {
+    let cfg = ModelConfig::nano();
+    check("persist roundtrip", 60, |rng| {
+        let len = rng.range(0, 40);
+        let mut rec = rec_of(&cfg, len, 1);
+        rec.text = text(rng, 50);
+        rec.embedding = (0..rng.range(1, 20)).map(|_| rng.f64() as f32).collect();
+        let compress = rng.chance(0.5);
+        let buf = persist::to_bytes(&rec, compress);
+        let back = persist::from_bytes(&buf).map_err(|e| e.to_string())?;
+        prop_assert!(back.text == rec.text, "text");
+        prop_assert!(back.tokens == rec.tokens, "tokens");
+        prop_assert!(back.embedding == rec.embedding, "embedding");
+        prop_assert!(*back.kv == *rec.kv, "payload");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_persist_rejects_random_corruption() {
+    let cfg = ModelConfig::nano();
+    check("persist corruption", 80, |rng| {
+        let rec = rec_of(&cfg, rng.range(1, 10), 2);
+        let mut buf = persist::to_bytes(&rec, rng.chance(0.5));
+        let i = rng.below(buf.len());
+        let bit = 1u8 << rng.below(8);
+        buf[i] ^= bit;
+        // either detected as corrupt, or (crc collision: impossible for a
+        // single bit flip) — must never return wrong data silently
+        match persist::from_bytes(&buf) {
+            Err(_) => Ok(()),
+            Ok(back) => {
+                prop_assert!(false, "bitflip at {i} accepted; len {}", back.kv.len());
+                Ok(())
+            }
+        }
+    });
+}
+
+// ---------- block pool ----------
+
+#[test]
+fn prop_block_pool_conservation() {
+    check("block pool conservation", 150, |rng| {
+        let cap = rng.range(1, 16);
+        let pool = BlockPool::new(cap, 16);
+        let mut held = Vec::new();
+        for _ in 0..50 {
+            if rng.chance(0.5) {
+                if let Some(b) = pool.alloc() {
+                    if rng.chance(0.3) {
+                        held.push(b.clone()); // shared ref
+                    }
+                    held.push(b);
+                }
+            } else if !held.is_empty() {
+                held.remove(rng.below(held.len()));
+            }
+            // conservation: free + distinct held blocks == capacity
+            let mut ids: Vec<usize> = held.iter().map(|b| b.block_id).collect();
+            ids.sort();
+            ids.dedup();
+            prop_assert!(
+                pool.free_blocks() + ids.len() == cap,
+                "free {} + held {} != cap {cap}",
+                pool.free_blocks(),
+                ids.len()
+            );
+        }
+        Ok(())
+    });
+}
+
+// ---------- flat index ----------
+
+#[test]
+fn prop_flat_index_top1_matches_brute_force() {
+    check("flat index vs brute force", 200, |rng| {
+        let dim = 8;
+        let mut ix = FlatIndex::new(dim);
+        let n = rng.range(1, 30);
+        let mut rows: Vec<(u64, Vec<f32>)> = Vec::new();
+        for key in 0..n as u64 {
+            let v: Vec<f32> = (0..dim).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+            ix.add(key, &v);
+            rows.push((key, v));
+        }
+        // random removals
+        for _ in 0..rng.below(n / 2 + 1) {
+            let i = rng.below(rows.len());
+            let (key, _) = rows.remove(i);
+            prop_assert!(ix.remove(key), "remove");
+        }
+        if rows.is_empty() {
+            prop_assert!(ix.nearest(&vec![0.0; dim]).is_none(), "empty");
+            return Ok(());
+        }
+        let q: Vec<f32> = (0..dim).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+        let brute = rows
+            .iter()
+            .map(|(k, v)| (*k, v.iter().zip(&q).map(|(a, b)| a * b).sum::<f32>()))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(b.0.cmp(&a.0)))
+            .unwrap();
+        let got = ix.nearest(&q).unwrap();
+        prop_assert!(
+            (got.1 - brute.1).abs() < 1e-5,
+            "score {} vs brute {}",
+            got.1,
+            brute.1
+        );
+        Ok(())
+    });
+}
+
+// ---------- json ----------
+
+fn random_json(rng: &mut Rng, depth: usize) -> json::Value {
+    use json::Value;
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Value::Null,
+        1 => Value::Bool(rng.chance(0.5)),
+        2 => Value::Num((rng.f64() * 2000.0 - 1000.0).round()),
+        3 => Value::Str(text(rng, 20)),
+        4 => Value::Arr((0..rng.below(4)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => Value::Obj(
+            (0..rng.below(4))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    check("json roundtrip", 300, |rng| {
+        let v = random_json(rng, 3);
+        let s = v.to_json();
+        let back = json::parse(&s).map_err(|e| format!("{e}: {s}"))?;
+        prop_assert!(back == v, "roundtrip: {s}");
+        Ok(())
+    });
+}
+
+// ---------- engine / chunk planning ----------
+
+#[test]
+fn prop_plan_chunks_covers_with_bounded_waste() {
+    check("plan_chunks", 300, |rng| {
+        let mut buckets: Vec<usize> = vec![1];
+        let mut b = 1;
+        for _ in 0..rng.below(4) {
+            b *= rng.range(2, 5);
+            buckets.push(b);
+        }
+        let n = rng.range(1, 300);
+        let plan = plan_chunks(&buckets, n);
+        let total: usize = plan.iter().sum();
+        prop_assert!(total >= n, "undercovered");
+        prop_assert!(total - n < *buckets.last().unwrap(), "waste too big");
+        prop_assert!(plan.iter().all(|c| buckets.contains(c)), "bad bucket");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_recycled_equals_baseline_any_split() {
+    // the paper's claim over random prompts and random split points,
+    // through the full engine (mock model)
+    check("recycled == baseline", 60, |rng| {
+        let cfg = ModelConfig::nano();
+        let mut engine = Engine::new(MockModel::new(cfg.clone()));
+        let prompt = tokens(rng, 2, 60, cfg.vocab_size as u32);
+        let split = rng.range(1, prompt.len());
+        let base = engine
+            .generate(&prompt, engine.empty_kv(), 0, 6, false)
+            .map_err(|e| e.to_string())?;
+        let mut kv = engine.empty_kv();
+        engine
+            .prefill(&prompt[..split], &mut kv, 0)
+            .map_err(|e| e.to_string())?;
+        let rec = engine
+            .generate(&prompt, kv, split, 6, false)
+            .map_err(|e| e.to_string())?;
+        prop_assert!(
+            rec.ids == base.ids,
+            "diverged at split {split}/{} ",
+            prompt.len()
+        );
+        Ok(())
+    });
+}
