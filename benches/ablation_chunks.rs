@@ -7,6 +7,7 @@ mod common;
 
 use recycle_serve::engine::plan_chunks;
 use recycle_serve::engine::ForwardModel;
+use recycle_serve::kvcache::KvArena;
 use recycle_serve::runtime::Runtime;
 use recycle_serve::util::timing::{Samples, Stopwatch};
 
@@ -19,6 +20,7 @@ fn main() {
     let reps = if common::quick() { 2 } else { 5 };
     let rt = Runtime::load(&artifacts).expect("artifacts");
     let cfg = rt.config().clone();
+    let arena = KvArena::with_defaults(&cfg);
     let v = cfg.vocab_size as u32;
 
     let subsets: Vec<(&str, Vec<usize>)> = vec![
@@ -41,7 +43,7 @@ fn main() {
             let plan = plan_chunks(buckets, m);
             let mut s = Samples::new();
             for _ in 0..reps {
-                let mut kv = vec![0f32; cfg.kv_elems()];
+                let mut kv = arena.new_view();
                 let sw = Stopwatch::start();
                 // drive the chunks manually against the restricted bucket set
                 let mut pos = 0usize;

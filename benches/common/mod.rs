@@ -1,6 +1,9 @@
 //! Shared bench plumbing (criterion is not vendored; these binaries are
 //! `harness = false` drivers over `recycle_serve::bench`).
 
+// each bench binary includes this module and uses a subset of it
+#![allow(dead_code)]
+
 use std::path::{Path, PathBuf};
 
 /// Artifact dir when built (None -> benches degrade to the mock model).

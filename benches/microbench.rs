@@ -1,12 +1,20 @@
 //! A4 — runtime microbenchmarks: the primitive costs every other number
 //! decomposes into. Used by the §Perf iteration log in EXPERIMENTS.md.
+//!
+//! The `KV attach` vs `KV full-copy` pair is the before/after of the paged
+//! arena refactor: the old hit path inflated a trimmed record into a dense
+//! `[L, 2, H, max_seq, D]` buffer (a full-context memcpy per hit); the new
+//! path clones the record's block table — O(prefix blocks) refcount bumps,
+//! no tensor traffic. Both are measured below at several prefix depths so
+//! the scaling (flat-per-block vs linear-in-window) is visible in the
+//! output.
 
 mod common;
 
 use recycle_serve::config::ModelConfig;
 use recycle_serve::engine::ForwardModel;
 use recycle_serve::index::{Embedder, FlatIndex, NgramEmbedder};
-use recycle_serve::kvcache::KvRecord;
+use recycle_serve::kvcache::{KvArena, KvRecord, KvView};
 use recycle_serve::runtime::Runtime;
 use recycle_serve::tokenizer::Tokenizer;
 use recycle_serve::util::timing::measure;
@@ -34,19 +42,48 @@ fn main() {
     });
     println!("flat index top-1 (64 entries) : {}", s.summary_us());
 
-    let full: Vec<f32> = (0..cfg.kv_elems()).map(|i| i as f32 * 0.5).collect();
+    // --- paged-KV hit-path primitives (the A4 before/after) ---
+    let arena = KvArena::with_defaults(&cfg);
+    let g = arena.geometry().clone();
+    println!(
+        "\nhit-path KV injection, {}-token blocks (before = dense full-window copy,",
+        g.block_tokens
+    );
+    println!("after = block-table attach; attach must scale with blocks, not window)\n");
+    for &k in &[32usize, 128, 256] {
+        let data: Vec<f32> = (0..g.elems_per_token() * k).map(|i| i as f32 * 0.5).collect();
+        let view = KvView::from_contiguous(&arena, &data, k).unwrap();
+        let tokens: Vec<u32> = (0..k as u32).collect();
+        let rec = KvRecord::from_view("p", tokens, vec![1.0], &view);
+
+        // BEFORE (pre-refactor hit path): gather the trimmed payload into a
+        // dense [L, 2, H, max_seq, D] request buffer.
+        let full_elems = g.planes() * cfg.max_seq * g.head_dim;
+        let s_copy = measure(3, reps, || {
+            let mut full = vec![0f32; full_elems];
+            rec.kv.gather_into(&mut full, cfg.max_seq, k);
+            std::hint::black_box(full);
+        });
+        // AFTER (paged hit path): attach = clone the block table.
+        let s_attach = measure(3, reps, || {
+            std::hint::black_box(rec.attach());
+        });
+        println!(
+            "k={k:<4} blocks={:<3} full-copy: {}",
+            rec.kv_blocks(),
+            s_copy.summary_us()
+        );
+        println!("                attach   : {}", s_attach.summary_us());
+    }
+
+    // record construction is also O(blocks) now (was: full trim memcpy)
+    let data: Vec<f32> = (0..g.elems_per_token() * 32).map(|i| i as f32).collect();
+    let view = KvView::from_contiguous(&arena, &data, 32).unwrap();
     let tokens: Vec<u32> = (0..32).collect();
     let s = measure(3, reps, || {
-        std::hint::black_box(KvRecord::from_full_buffer(
-            &cfg, "p", tokens.clone(), vec![1.0], &full,
-        ));
+        std::hint::black_box(KvRecord::from_view("p", tokens.clone(), vec![1.0], &view));
     });
-    println!("KV trim (32 tok of 256)       : {}", s.summary_us());
-    let rec = KvRecord::from_full_buffer(&cfg, "p", tokens.clone(), vec![1.0], &full);
-    let s = measure(3, reps, || {
-        std::hint::black_box(rec.to_full_buffer(&cfg));
-    });
-    println!("KV inflate (32 tok -> full)   : {}", s.summary_us());
+    println!("\nKV record admit (32 tok)      : {}", s.summary_us());
 
     // --- artifact-backed primitives ---
     let Some(artifacts) = common::artifacts_dir() else {
@@ -62,10 +99,11 @@ fn main() {
     });
     println!("BPE encode (74 chars)         : {}", s.summary_us());
 
+    let rt_arena = KvArena::with_defaults(&rcfg);
     for &c in &rcfg.chunk_sizes.clone() {
         let toks: Vec<u32> = vec![5; c];
-        let mut kv = vec![0f32; rcfg.kv_elems()];
         let s = measure(2, reps.min(40), || {
+            let mut kv = rt_arena.new_view();
             std::hint::black_box(rt.forward_chunk(&toks, c, &mut kv, 0).expect("fwd"));
         });
         println!("forward_chunk c={c:<3}           : {}", s.summary_us());

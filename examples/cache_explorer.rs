@@ -7,8 +7,6 @@
 
 use std::path::PathBuf;
 
-use anyhow::{Context, Result};
-
 use recycle_serve::bench::{paper_cache_prompts, paper_test_prompts, Table};
 use recycle_serve::config::CacheConfig;
 use recycle_serve::engine::Engine;
@@ -18,9 +16,12 @@ use recycle_serve::prefix::reuse_depth;
 use recycle_serve::recycler::{RecyclePolicy, Recycler};
 use recycle_serve::runtime::Runtime;
 
+type Result<T> = std::result::Result<T, Box<dyn std::error::Error>>;
+
 fn main() -> Result<()> {
     let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
-    let rt = Runtime::load(&artifacts).context("run `make artifacts` first")?;
+    let rt = Runtime::load(&artifacts)
+        .map_err(|e| format!("run `make artifacts` first: {e}"))?;
     let tokenizer = rt.tokenizer();
     let cfg = rt.config().clone();
     let data = PathBuf::from("data");
@@ -100,10 +101,11 @@ fn main() -> Result<()> {
     );
     let path = dir.join("entry.kv");
     persist::save(&rec, &path, true)?;
-    let loaded = persist::load(&path)?;
+    let loaded = persist::load(&path, recycler.arena())?;
     println!(
-        "roundtrip          : ok ({} tokens, crc verified)\n",
-        loaded.token_len()
+        "roundtrip          : ok ({} tokens, {} arena blocks, crc verified)\n",
+        loaded.token_len(),
+        loaded.kv_blocks()
     );
     std::fs::remove_dir_all(&dir).ok();
 

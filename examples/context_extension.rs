@@ -13,8 +13,6 @@
 
 use std::path::PathBuf;
 
-use anyhow::Result;
-
 use recycle_serve::bench::{session_workload, Table};
 use recycle_serve::config::{CacheConfig, ServerConfig};
 use recycle_serve::coordinator::Coordinator;
@@ -22,6 +20,8 @@ use recycle_serve::engine::Engine;
 use recycle_serve::index::NgramEmbedder;
 use recycle_serve::recycler::{RecyclePolicy, Recycler};
 use recycle_serve::runtime::Runtime;
+
+type Result<T> = std::result::Result<T, Box<dyn std::error::Error>>;
 
 fn run_conversation(
     artifacts: PathBuf,
@@ -65,10 +65,9 @@ fn main() -> Result<()> {
     let artifacts = PathBuf::from(
         std::env::args().nth(1).unwrap_or_else(|| "artifacts".into()),
     );
-    anyhow::ensure!(
-        artifacts.join("manifest.json").exists(),
-        "run `make artifacts` first"
-    );
+    if !artifacts.join("manifest.json").exists() {
+        return Err("run `make artifacts` first".into());
+    }
     let turns = session_workload(5, 7);
     let max_new = 12;
 

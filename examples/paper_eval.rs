@@ -9,11 +9,11 @@
 
 use std::path::PathBuf;
 
-use anyhow::{Context, Result};
-
 use recycle_serve::bench::{format_row_series, format_table, paper_cache_prompts,
                            paper_test_prompts, run_comparison, EvalOptions, Workload};
 use recycle_serve::runtime::Runtime;
+
+type Result<T> = std::result::Result<T, Box<dyn std::error::Error>>;
 
 fn main() -> Result<()> {
     let artifacts = PathBuf::from(
@@ -23,7 +23,8 @@ fn main() -> Result<()> {
     let results = PathBuf::from("results");
     std::fs::create_dir_all(&results)?;
 
-    let rt0 = Runtime::load(&artifacts).context("run `make artifacts` first")?;
+    let rt0 = Runtime::load(&artifacts)
+        .map_err(|e| format!("run `make artifacts` first: {e}"))?;
     let tokenizer = rt0.tokenizer();
     drop(rt0);
 

@@ -7,18 +7,18 @@
 
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
-
 use recycle_serve::config::CacheConfig;
 use recycle_serve::engine::Engine;
 use recycle_serve::index::NgramEmbedder;
 use recycle_serve::recycler::{RecyclePolicy, Recycler};
 use recycle_serve::runtime::Runtime;
 
+type Result<T> = std::result::Result<T, Box<dyn std::error::Error>>;
+
 fn main() -> Result<()> {
     let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
     let rt = Runtime::load(&artifacts)
-        .with_context(|| format!("run `make artifacts` first (looked in {artifacts})"))?;
+        .map_err(|e| format!("run `make artifacts` first (looked in {artifacts}): {e}"))?;
     let tokenizer = rt.tokenizer();
     println!(
         "loaded model '{}' ({} layers, context {})",

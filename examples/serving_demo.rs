@@ -12,8 +12,6 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use anyhow::Result;
-
 use recycle_serve::bench::{paper_cache_prompts, paper_test_prompts};
 use recycle_serve::config::{CacheConfig, ServerConfig};
 use recycle_serve::coordinator::Coordinator;
@@ -23,6 +21,8 @@ use recycle_serve::recycler::{RecyclePolicy, Recycler};
 use recycle_serve::runtime::Runtime;
 use recycle_serve::server::{Server, TcpClient};
 use recycle_serve::util::timing::{Samples, Stopwatch};
+
+type Result<T> = std::result::Result<T, Box<dyn std::error::Error>>;
 
 fn spawn_stack(artifacts: PathBuf, policy: RecyclePolicy) -> Result<(Arc<Coordinator>, Server)> {
     let coordinator = Arc::new(Coordinator::spawn(
@@ -59,11 +59,9 @@ fn drive(
     let mut reused = 0;
     for p in prompts {
         let resp = client.request(p, max_new, None)?;
-        anyhow::ensure!(
-            resp.get("ok").and_then(|v| v.as_bool()) == Some(true),
-            "request failed: {}",
-            resp.to_json()
-        );
+        if resp.get("ok").and_then(|v| v.as_bool()) != Some(true) {
+            return Err(format!("request failed: {}", resp.to_json()).into());
+        }
         lat.push(resp.get("latency_s").and_then(|v| v.as_f64()).unwrap_or(0.0));
         if resp.get("cache_hit").and_then(|v| v.as_bool()) == Some(true) {
             hits += 1;
@@ -80,10 +78,9 @@ fn main() -> Result<()> {
     let artifacts = PathBuf::from(
         std::env::args().nth(1).unwrap_or_else(|| "artifacts".into()),
     );
-    anyhow::ensure!(
-        artifacts.join("manifest.json").exists(),
-        "run `make artifacts` first"
-    );
+    if !artifacts.join("manifest.json").exists() {
+        return Err("run `make artifacts` first".into());
+    }
     let data = PathBuf::from("data");
     let max_new = 24;
 

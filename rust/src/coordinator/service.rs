@@ -28,6 +28,9 @@ pub struct CoordinatorStats {
     pub engine: Counters,
     pub cache_entries: usize,
     pub cache_bytes: usize,
+    /// Paged-KV arena occupancy (cache records + in-flight requests).
+    pub arena_used_blocks: usize,
+    pub arena_capacity_blocks: usize,
 }
 
 struct Shared {
@@ -217,6 +220,8 @@ fn worker_loop<M: ForwardModel>(
         stats.engine = recycler.engine().counters();
         stats.cache_entries = recycler.store().len();
         stats.cache_bytes = recycler.store().live_bytes();
+        stats.arena_used_blocks = recycler.arena().used_blocks();
+        stats.arena_capacity_blocks = recycler.arena().capacity_blocks();
     }
 }
 
@@ -329,6 +334,10 @@ mod tests {
         let t2 = c.chat("sess", "tell me more", 3).unwrap();
         assert!(t2.cache_hit, "turn 2 must reuse turn 1's transcript KV");
         assert!(t2.reuse_depth > 0);
+        // the paged arena is live and bounded
+        let stats = c.stats();
+        assert!(stats.arena_used_blocks > 0, "session KV must hold blocks");
+        assert!(stats.arena_used_blocks <= stats.arena_capacity_blocks);
         c.shutdown();
     }
 

@@ -9,6 +9,16 @@
 //! silently break the prefix condition. The recycler caches the full
 //! prompt+response KV per turn (`admit_full`), so turn N+1 reuses all of
 //! turn N's computation; the `context_extension` example measures this.
+//!
+//! With the paged arena, continuation is also *allocation*-incremental:
+//! turn N+1 attaches turn N's record by cloning its block table and only
+//! the boundary block copies on write, so a T-turn conversation holds one
+//! physical copy of the transcript KV plus O(turns) boundary blocks —
+//! not T copies of an ever-growing dense buffer.
+//! [`SessionManager::kv_blocks`] gives the logical per-session estimate
+//! (token count / block size; COW-duplicated boundary blocks not
+//! included — the arena's own accounting in `CoordinatorStats` is the
+//! physical ground truth).
 
 use std::collections::HashMap;
 
@@ -97,6 +107,15 @@ impl SessionManager {
         self.sessions.get(session_id).map_or(0, |s| s.ids.len())
     }
 
+    /// Logical estimate of the KV blocks the transcript occupies in a
+    /// paged arena with `block_tokens` positions per block (the footprint
+    /// the latest cached turn pins; earlier turns share its prefix blocks;
+    /// COW-duplicated boundary blocks are not counted — see the arena
+    /// occupancy in `CoordinatorStats` for physical truth).
+    pub fn kv_blocks(&self, session_id: &str, block_tokens: usize) -> usize {
+        self.context_tokens(session_id).div_ceil(block_tokens)
+    }
+
     pub fn drop_session(&mut self, session_id: &str) -> bool {
         self.sessions.remove(session_id).is_some()
     }
@@ -130,6 +149,8 @@ mod tests {
         assert!(text2.ends_with(" yo!"));
         assert_eq!(m.turns("s"), 1);
         assert_eq!(m.context_tokens("s"), 5);
+        assert_eq!(m.kv_blocks("s", 4), 2, "5 tokens -> 2 four-token blocks");
+        assert_eq!(m.kv_blocks("missing", 4), 0);
         drop(prompt1_ids);
     }
 

@@ -1,8 +1,14 @@
 //! The greedy generation loop (the paper's `model.generate(...,
 //! do_sample=False)` equivalent, with explicit KV injection).
+//!
+//! KV lives in a paged [`KvView`] over the engine's [`KvArena`]: a
+//! recycled prefix arrives as a shared block table (zero-copy), the prefill
+//! appends rows copy-on-write, and `capture_prompt_kv` snapshots are
+//! O(blocks) clones instead of full-buffer copies.
 
 use crate::config::ModelConfig;
 use crate::error::{Error, Result};
+use crate::kvcache::{KvArena, KvView};
 use crate::metrics::Counters;
 use crate::util::timing::Stopwatch;
 
@@ -23,25 +29,36 @@ pub struct Generated {
     pub latency_s: f64,
     /// Final sequence position (prompt + generated).
     pub final_len: usize,
-    /// The full KV buffer after the prompt prefill (trimmed by the caller
-    /// if it wants to cache it): present only when `capture_prompt_kv`.
-    pub prompt_kv: Option<Vec<f32>>,
-    /// The full KV buffer after generation finished — valid for
-    /// `final_len` positions. Always returned (it's a move, not a copy);
-    /// used by session continuation to cache prompt+response.
-    pub final_kv: Vec<f32>,
+    /// Shared snapshot of the KV right after prompt prefill (for building
+    /// a cache record): present only when `capture_prompt_kv`. A block-
+    /// table clone — decode writes after the snapshot COW away from it.
+    pub prompt_kv: Option<KvView>,
+    /// The KV view after generation finished — valid for `final_len`
+    /// positions; used by session continuation to cache prompt+response.
+    pub final_kv: KvView,
 }
 
-/// Generation engine over any [`ForwardModel`].
+/// Generation engine over any [`ForwardModel`], owning the paged KV arena
+/// every request (and the recycler's cache records) allocates from.
 pub struct Engine<M: ForwardModel> {
     model: M,
+    arena: KvArena,
     counters: Counters,
 }
 
 impl<M: ForwardModel> Engine<M> {
+    /// Engine with a default-sized arena for the model's geometry.
     pub fn new(model: M) -> Self {
+        let arena = KvArena::with_defaults(model.config());
+        Self::with_arena(model, arena)
+    }
+
+    /// Engine over a caller-sized arena (benches, capacity tests).
+    pub fn with_arena(model: M, arena: KvArena) -> Self {
+        debug_assert!(arena.geometry().matches(model.config()));
         Engine {
             model,
+            arena,
             counters: Counters::default(),
         }
     }
@@ -54,21 +71,27 @@ impl<M: ForwardModel> Engine<M> {
         &self.model
     }
 
+    /// The shared paged-KV arena (the recycler's cache lives here too).
+    pub fn arena(&self) -> &KvArena {
+        &self.arena
+    }
+
     pub fn counters(&self) -> Counters {
         self.counters
     }
 
-    /// Allocate an empty full KV buffer.
-    pub fn empty_kv(&self) -> Vec<f32> {
-        vec![0f32; self.config().kv_elems()]
+    /// A fresh empty KV view (no blocks held until prefill writes).
+    pub fn empty_kv(&self) -> KvView {
+        self.arena.new_view()
     }
 
     /// Prefill `ids[start..]` into `kv` (positions start..ids.len()).
-    /// Returns (last_logits_row, prefill_calls).
+    /// `kv` must already be valid for `start` positions (the injected
+    /// prefix). Returns (last_logits_row, prefill_calls).
     pub fn prefill(
         &mut self,
         ids: &[u32],
-        kv: &mut [f32],
+        kv: &mut KvView,
         start: usize,
     ) -> Result<(Vec<f32>, usize)> {
         let cfg = self.model.config().clone();
@@ -82,6 +105,12 @@ impl<M: ForwardModel> Engine<M> {
             return Err(Error::Rejected(
                 "prefill needs at least one new token (start >= len)".into(),
             ));
+        }
+        if start > kv.len() {
+            return Err(Error::ShapeMismatch(format!(
+                "prefill start {start} beyond injected KV length {}",
+                kv.len()
+            )));
         }
         let mut pos = start;
         let mut calls = 0usize;
@@ -118,13 +147,15 @@ impl<M: ForwardModel> Engine<M> {
     /// * `prompt_ids` — full prompt token ids.
     /// * `kv` / `cur_len` — injected cache state: `kv` must hold valid KV
     ///   for the first `cur_len` tokens of `prompt_ids` (the recycled
-    ///   prefix). Pass an empty buffer and 0 for a baseline run.
-    /// * `capture_prompt_kv` — snapshot the KV buffer right after prompt
-    ///   prefill so the caller can build a cache record.
+    ///   prefix, typically an attached cache record). Pass
+    ///   [`Engine::empty_kv`] and 0 for a baseline run.
+    /// * `capture_prompt_kv` — snapshot the KV view right after prompt
+    ///   prefill (an O(blocks) clone) so the caller can build a cache
+    ///   record.
     pub fn generate(
         &mut self,
         prompt_ids: &[u32],
-        mut kv: Vec<f32>,
+        mut kv: KvView,
         cur_len: usize,
         max_new_tokens: usize,
         capture_prompt_kv: bool,
@@ -133,6 +164,12 @@ impl<M: ForwardModel> Engine<M> {
         let cfg = self.model.config().clone();
         if prompt_ids.is_empty() {
             return Err(Error::Rejected("empty prompt".into()));
+        }
+        if cur_len > kv.len() {
+            return Err(Error::ShapeMismatch(format!(
+                "cur_len {cur_len} beyond injected KV length {}",
+                kv.len()
+            )));
         }
         if cur_len >= prompt_ids.len() && cur_len > 0 {
             // Cached prompt covers the whole input: re-run the last token so
@@ -144,6 +181,7 @@ impl<M: ForwardModel> Engine<M> {
         self.counters.tokens_reused += cur_len as u64;
 
         let (mut logits, prefill_calls) = self.prefill(prompt_ids, &mut kv, cur_len)?;
+        // O(blocks) snapshot: decode writes below COW away from it.
         let prompt_kv = capture_prompt_kv.then(|| kv.clone());
 
         let mut pos = prompt_ids.len();
@@ -229,6 +267,29 @@ mod tests {
     }
 
     #[test]
+    fn recycled_from_shared_view_leaves_donor_intact() {
+        // inject a *clone* of a cached view (the recycler's attach path):
+        // generation must neither corrupt the donor nor copy it eagerly.
+        let mut e = engine();
+        let prompt: Vec<u32> = (1..33).collect();
+        let base = e.generate(&prompt, e.empty_kv(), 0, 8, false).unwrap();
+
+        let mut cached = e.empty_kv();
+        e.prefill(&prompt[..16], &mut cached, 0).unwrap();
+        let donor_before = cached.to_contiguous();
+        let donor_blocks = cached.block_ids();
+
+        let used = e.arena().used_blocks();
+        let attached = cached.clone(); // zero-copy injection
+        assert_eq!(e.arena().used_blocks(), used);
+
+        let rec = e.generate(&prompt, attached, 16, 8, false).unwrap();
+        assert_eq!(rec.ids, base.ids);
+        assert_eq!(cached.to_contiguous(), donor_before, "donor KV intact");
+        assert_eq!(cached.block_ids(), donor_blocks);
+    }
+
+    #[test]
     fn full_coverage_cache_reruns_last_token() {
         let mut e = engine();
         let prompt: Vec<u32> = (1..10).collect();
@@ -258,6 +319,17 @@ mod tests {
     }
 
     #[test]
+    fn rejects_cur_len_beyond_injected_view() {
+        let mut e = engine();
+        let prompt: Vec<u32> = (1..20).collect();
+        // empty view but cur_len 5: the "cached prefix" doesn't exist
+        match e.generate(&prompt, e.empty_kv(), 5, 4, false) {
+            Err(Error::ShapeMismatch(_)) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
     fn stops_at_context_window() {
         let mut e = engine();
         let max = e.config().max_seq;
@@ -272,15 +344,14 @@ mod tests {
         let prompt: Vec<u32> = (1..9).collect();
         let g = e.generate(&prompt, e.empty_kv(), 0, 2, true).unwrap();
         let kv = g.prompt_kv.unwrap();
-        assert_eq!(kv.len(), e.config().kv_elems());
-        // mock writes token markers into kv plane 0; prompt rows populated
-        let cfg = e.config();
-        let s = cfg.max_seq;
-        let d = cfg.head_dim;
+        assert_eq!(kv.len(), prompt.len());
+        // mock writes token markers into kv plane 0; prompt rows populated,
+        // and the decode steps after the snapshot must NOT appear in it
         for (i, &t) in prompt.iter().enumerate() {
-            assert_eq!(kv[i * d], (t + 1) as f32, "row {i}");
+            assert_eq!(kv.row(0, 0, 0, i)[0], (t + 1) as f32, "row {i}");
         }
-        let _ = s;
+        assert_eq!(g.final_kv.len(), g.final_len);
+        assert!(g.final_kv.len() > kv.len(), "decode extended the final view");
     }
 
     #[test]

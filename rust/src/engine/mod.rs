@@ -16,10 +16,14 @@ pub use generate::{Engine, Generated};
 
 use crate::config::ModelConfig;
 use crate::error::Result;
+use crate::kvcache::KvView;
 
-/// A model that can process one chunk of new tokens against a host-side KV
-/// buffer. Implementations must guarantee the paper's exactness property:
-/// encoding a sequence in any chunk split yields the same logits and KV.
+/// A model that can process one chunk of new tokens against a host-side
+/// paged KV view. Implementations must guarantee the paper's exactness
+/// property: encoding a sequence in any chunk split yields the same logits
+/// and KV. Backends that need dense tensors (the PJRT executor) gather the
+/// view at the chunk boundary and scatter the new rows back — the paged
+/// representation never changes model semantics.
 ///
 /// Deliberately NOT `Send`: the PJRT handles wrap `Rc` internally, so the
 /// production model lives on exactly one thread — the coordinator builds it
@@ -28,13 +32,14 @@ pub trait ForwardModel {
     fn config(&self) -> &ModelConfig;
 
     /// Process `tokens` (padded to a bucket size; `valid_len` real) at
-    /// position `cur_len`, writing new KV rows into `kv` (full buffer,
-    /// `[L, 2, H, S, D]` row-major) and returning logits `[C, V]` flat.
+    /// position `cur_len`, writing new KV rows into `kv` (a paged
+    /// `[L, 2, H, len, D]` view, valid for at least `cur_len` positions)
+    /// and returning logits `[C, V]` flat.
     fn forward_chunk(
         &self,
         tokens: &[u32],
         valid_len: usize,
-        kv: &mut [f32],
+        kv: &mut KvView,
         cur_len: usize,
     ) -> Result<Vec<f32>>;
 }

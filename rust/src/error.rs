@@ -1,52 +1,86 @@
 //! Crate-wide error type.
 //!
-//! Substrates return `Result<T, Error>`; the binary/examples use `anyhow`
-//! at the top level. Variants are grouped by subsystem so integration tests
+//! Substrates return `Result<T, Error>`; the binary/examples surface it at
+//! the top level. Variants are grouped by subsystem so integration tests
 //! can assert on failure classes (e.g. corruption injection must yield
-//! `Error::Corrupt`, never a silent wrong answer).
+//! `Error::Corrupt`, never a silent wrong answer). Hand-rolled `Display`
+//! because thiserror is not in the offline vendor set.
 
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     // --- artifacts / runtime ------------------------------------------------
-    #[error("artifact missing: {0}")]
     ArtifactMissing(String),
-    #[error("manifest invalid: {0}")]
     ManifestInvalid(String),
-    #[error("xla error: {0}")]
     Xla(String),
-    #[error("shape mismatch: {0}")]
     ShapeMismatch(String),
 
     // --- serving ------------------------------------------------------------
-    #[error("prompt too long: {got} tokens > context window {max}")]
     PromptTooLong { got: usize, max: usize },
-    #[error("context window exhausted at position {0}")]
     ContextExhausted(usize),
-    #[error("request rejected: {0}")]
+    /// The paged KV arena ran out of blocks (admission/in-flight pressure).
+    ArenaExhausted { needed: usize, free: usize },
     Rejected(String),
-    #[error("coordinator shut down")]
     ShutDown,
 
     // --- persistence ---------------------------------------------------------
-    #[error("corrupt cache file: {0}")]
     Corrupt(String),
-    #[error("unsupported cache file version {0}")]
     Version(u32),
 
     // --- parsing -------------------------------------------------------------
-    #[error("json error: {0}")]
     Json(String),
-    #[error("csv error: {0}")]
     Csv(String),
-    #[error("config error: {0}")]
     Config(String),
 
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::ArtifactMissing(s) => write!(f, "artifact missing: {s}"),
+            Error::ManifestInvalid(s) => write!(f, "manifest invalid: {s}"),
+            Error::Xla(s) => write!(f, "xla error: {s}"),
+            Error::ShapeMismatch(s) => write!(f, "shape mismatch: {s}"),
+            Error::PromptTooLong { got, max } => {
+                write!(f, "prompt too long: {got} tokens > context window {max}")
+            }
+            Error::ContextExhausted(pos) => {
+                write!(f, "context window exhausted at position {pos}")
+            }
+            Error::ArenaExhausted { needed, free } => write!(
+                f,
+                "kv arena exhausted: need {needed} blocks, {free} free"
+            ),
+            Error::Rejected(s) => write!(f, "request rejected: {s}"),
+            Error::ShutDown => write!(f, "coordinator shut down"),
+            Error::Corrupt(s) => write!(f, "corrupt cache file: {s}"),
+            Error::Version(v) => write!(f, "unsupported cache file version {v}"),
+            Error::Json(s) => write!(f, "json error: {s}"),
+            Error::Csv(s) => write!(f, "csv error: {s}"),
+            Error::Config(s) => write!(f, "config error: {s}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())

@@ -61,13 +61,24 @@ impl FlatIndex {
     }
 
     /// Dot-product scores against all entries (the hot loop; L1 twin:
-    /// kernels/sim_topk.py).
+    /// kernels/sim_topk.py). Four independent accumulators break the
+    /// serial FP dependency chain so the loop vectorizes/pipelines; the
+    /// summation order is fixed (pairwise) and identical across calls.
     pub fn scores(&self, query: &[f32]) -> Vec<f32> {
         assert_eq!(query.len(), self.dim, "query dim mismatch");
         let mut out = Vec::with_capacity(self.keys.len());
-        for row in self.vectors.chunks_exact(self.dim) {
-            let mut dot = 0f32;
-            for (&a, &b) in row.iter().zip(query) {
+        for row in self.vectors.chunks_exact(self.dim.max(1)) {
+            let mut acc = [0f32; 4];
+            let mut r4 = row.chunks_exact(4);
+            let mut q4 = query.chunks_exact(4);
+            for (r, q) in (&mut r4).zip(&mut q4) {
+                acc[0] += r[0] * q[0];
+                acc[1] += r[1] * q[1];
+                acc[2] += r[2] * q[2];
+                acc[3] += r[3] * q[3];
+            }
+            let mut dot = (acc[0] + acc[2]) + (acc[1] + acc[3]);
+            for (&a, &b) in r4.remainder().iter().zip(q4.remainder()) {
                 dot += a * b;
             }
             out.push(dot);
@@ -75,12 +86,27 @@ impl FlatIndex {
         out
     }
 
-    /// Top-k (key, score) pairs, best first. k=1 is the paper's retrieval.
+    /// Top-k (key, score) pairs, best first — higher score wins, ties
+    /// break toward the lower key. k=1 is the paper's retrieval.
+    ///
+    /// Uses `select_nth_unstable_by` partial selection (O(n) expected)
+    /// to isolate the k best before sorting only those k — the full
+    /// O(n log n) sort of every entry is gone from the request path.
     pub fn top_k(&self, query: &[f32], k: usize) -> Vec<(u64, f32)> {
+        if k == 0 || self.keys.is_empty() {
+            return Vec::new();
+        }
         let scores = self.scores(query);
         let mut pairs: Vec<(u64, f32)> = self.keys.iter().copied().zip(scores).collect();
-        pairs.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
-        pairs.truncate(k);
+        let better = |a: &(u64, f32), b: &(u64, f32)| {
+            b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0))
+        };
+        if k < pairs.len() {
+            // partition: everything before index k "beats" everything after
+            let _ = pairs.select_nth_unstable_by(k - 1, better);
+            pairs.truncate(k);
+        }
+        pairs.sort_by(better);
         pairs
     }
 
@@ -158,5 +184,62 @@ mod tests {
         ix.add(7, &[1.0]);
         ix.add(3, &[1.0]);
         assert_eq!(ix.nearest(&[1.0]).unwrap().0, 3);
+    }
+
+    #[test]
+    fn ties_break_by_key_across_the_selection_boundary() {
+        // five entries with identical scores: the k cut must keep the
+        // lowest keys, in key order — the partial selection cannot be
+        // allowed to keep an arbitrary tied subset.
+        let mut ix = FlatIndex::new(1);
+        for key in [9u64, 2, 7, 4, 11] {
+            ix.add(key, &[1.0]);
+        }
+        let top = ix.top_k(&[1.0], 3);
+        assert_eq!(top.iter().map(|(k, _)| *k).collect::<Vec<_>>(), vec![2, 4, 7]);
+    }
+
+    #[test]
+    fn top_k_matches_full_sort_reference() {
+        // partial selection vs the old full-sort implementation, over a
+        // deterministic spread of scores, every k
+        let dim = 7; // odd dim exercises the unrolled-loop remainder
+        let mut ix = FlatIndex::new(dim);
+        let n = 23u64;
+        let mut rows = Vec::new();
+        for key in 0..n {
+            let v: Vec<f32> = (0..dim)
+                .map(|j| ((key as usize * 31 + j * 17) % 13) as f32 - 6.0)
+                .collect();
+            ix.add(key, &v);
+            rows.push((key, v));
+        }
+        // dyadic-rational query over small-integer rows: every product and
+        // partial sum is exact in f32, so the unrolled accumulation and the
+        // reference's serial sum agree bit-for-bit (keys 0 and 13 share a
+        // row, so exact ties exercise the key tie-break in both paths)
+        let q: Vec<f32> = (0..dim).map(|j| (j as f32 - 3.0) * 0.5).collect();
+        let mut reference: Vec<(u64, f32)> = rows
+            .iter()
+            .map(|(k, v)| (*k, v.iter().zip(&q).map(|(a, b)| a * b).sum::<f32>()))
+            .collect();
+        reference.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        for k in [0usize, 1, 2, 5, 22, 23, 50] {
+            let got = ix.top_k(&q, k);
+            let want = &reference[..k.min(reference.len())];
+            assert_eq!(got.len(), want.len(), "k={k}");
+            for (g, w) in got.iter().zip(want) {
+                assert_eq!(g.0, w.0, "k={k}");
+                assert!((g.1 - w.1).abs() < 1e-4, "k={k}: {} vs {}", g.1, w.1);
+            }
+        }
+    }
+
+    #[test]
+    fn top_k_zero_and_oversized() {
+        let mut ix = FlatIndex::new(2);
+        ix.add(1, &[1.0, 0.0]);
+        assert!(ix.top_k(&[1.0, 0.0], 0).is_empty());
+        assert_eq!(ix.top_k(&[1.0, 0.0], 10).len(), 1);
     }
 }

@@ -1,0 +1,652 @@
+//! Arena-backed paged KV storage — the zero-copy injection substrate.
+//!
+//! One [`KvArena`] owns a single large f32 slab carved into fixed-size
+//! *token blocks* whose lifetimes are managed by the refcounted
+//! [`BlockPool`]. A [`KvView`] presents a logical `[L, 2, H, len, D]`
+//! sequence over a table of [`BlockRef`]s, so that:
+//!
+//! * **injection is zero-copy** — attaching a cached prefix clones its
+//!   block table (one refcount bump per block, O(prefix blocks)), instead
+//!   of memcpying megabytes into a dense per-request buffer;
+//! * **prefixes are shared copy-on-write** — a view appends past a shared
+//!   boundary block by copying *only that block* before writing, so a
+//!   served prompt, its cache record, and a later session continuation all
+//!   share the common blocks (PagedAttention's memory model);
+//! * **capacity is a first-class resource** — free/held block accounting is
+//!   conserved (property-tested in `rust/tests/properties.rs`): free +
+//!   referenced == capacity and no block is ever both free and referenced.
+//!
+//! Block layout: block `b` occupies slab elements
+//! `[b * block_elems, (b + 1) * block_elems)`, internally `[L, 2, H,
+//! block_tokens, D]` row-major — so one (layer, k/v, head) *plane* of a
+//! token run is contiguous, and gather/scatter at the model-call boundary
+//! degenerates to per-plane `memcpy` runs.
+//!
+//! # Safety model
+//!
+//! The slab is a boxed slice of element-wise `UnsafeCell`s so disjoint
+//! views can write their own blocks concurrently without a slab-wide lock,
+//! and block slices are derived from raw pointers (never a whole-slab
+//! reference, which would alias against other blocks' live slices). All
+//! unsafe access is private to this module and follows one discipline:
+//!
+//! * a **shared** block (refcount > 1, or reachable from a `&KvView`) is
+//!   only ever *read*;
+//! * a block is only written through `&mut KvView` **after**
+//!   [`BlockRef::is_unique`] confirms the view holds the sole handle (or
+//!   the block was just allocated) — uniqueness cannot be invalidated
+//!   concurrently because refcounts grow only by cloning an existing
+//!   handle, which the writer holds exclusively.
+//!
+//! This is the same argument `Arc::get_mut` makes, applied per block.
+
+use std::cell::UnsafeCell;
+use std::sync::Arc;
+
+use crate::config::ModelConfig;
+use crate::error::{Error, Result};
+
+use super::blocks::{BlockPool, BlockRef};
+
+/// Default positions per block (PagedAttention's canonical 16).
+pub const DEFAULT_BLOCK_TOKENS: usize = 16;
+
+/// Default arena sizing: enough blocks for this many full-context
+/// sequences (cache entries + in-flight requests). The slab is allocated
+/// zeroed, so untouched pages stay virtual.
+const DEFAULT_SEQS: usize = 96;
+
+/// Per-token KV geometry shared by every block in an arena.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KvGeometry {
+    pub n_layer: usize,
+    pub n_head: usize,
+    pub head_dim: usize,
+    pub block_tokens: usize,
+}
+
+impl KvGeometry {
+    pub fn from_config(cfg: &ModelConfig, block_tokens: usize) -> Self {
+        KvGeometry {
+            n_layer: cfg.n_layer,
+            n_head: cfg.n_head,
+            head_dim: cfg.head_dim,
+            block_tokens,
+        }
+    }
+
+    /// Number of (layer, k/v, head) planes.
+    pub fn planes(&self) -> usize {
+        self.n_layer * 2 * self.n_head
+    }
+
+    /// f32 elements per token position across all planes.
+    pub fn elems_per_token(&self) -> usize {
+        self.planes() * self.head_dim
+    }
+
+    /// f32 elements in one block.
+    pub fn block_elems(&self) -> usize {
+        self.elems_per_token() * self.block_tokens
+    }
+
+    /// Bytes of KV per token position.
+    pub fn bytes_per_token(&self) -> usize {
+        4 * self.elems_per_token()
+    }
+
+    /// Does this arena geometry serve a model config?
+    pub fn matches(&self, cfg: &ModelConfig) -> bool {
+        self.n_layer == cfg.n_layer
+            && self.n_head == cfg.n_head
+            && self.head_dim == cfg.head_dim
+    }
+
+    /// Blocks needed to hold `tokens` positions.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+}
+
+struct ArenaInner {
+    geom: KvGeometry,
+    pool: BlockPool,
+    /// Element-wise `UnsafeCell` so per-block slices are derived through
+    /// interior mutability without ever materializing a whole-slab `&mut`
+    /// (which would alias — and under `Sync`, race — against concurrent
+    /// reads of other blocks).
+    slab: Box<[UnsafeCell<f32>]>,
+}
+
+// SAFETY: the slab cells are only accessed through the block discipline
+// documented in the module header — shared blocks are read-only, written
+// blocks are uniquely held — so cross-thread use cannot race.
+unsafe impl Send for ArenaInner {}
+unsafe impl Sync for ArenaInner {}
+
+impl ArenaInner {
+    /// Raw base pointer of one block. The derivation never creates a
+    /// reference to the cells (`UnsafeCell::raw_get` on a pointer with
+    /// whole-slab provenance), so it cannot invalidate live block slices.
+    fn block_ptr(&self, block_id: usize) -> *mut f32 {
+        let n = self.geom.block_elems();
+        debug_assert!((block_id + 1) * n <= self.slab.len());
+        // SAFETY: in-bounds offset within the slab allocation.
+        unsafe { UnsafeCell::raw_get(self.slab.as_ptr().add(block_id * n)) }
+    }
+
+    /// SAFETY: caller must hold a live `BlockRef` for `block_id` and ensure
+    /// no `&mut` to this block exists for the returned lifetime.
+    unsafe fn block(&self, block_id: usize) -> &[f32] {
+        std::slice::from_raw_parts(self.block_ptr(block_id), self.geom.block_elems())
+    }
+
+    /// SAFETY: caller must hold the *unique* live `BlockRef` for `block_id`
+    /// (just allocated, or `is_unique()`), and no other slice into this
+    /// block may exist for the returned lifetime.
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn block_mut(&self, block_id: usize) -> &mut [f32] {
+        std::slice::from_raw_parts_mut(self.block_ptr(block_id), self.geom.block_elems())
+    }
+}
+
+/// The paged KV arena: one slab + one block pool. Cheap to clone (handle).
+#[derive(Clone)]
+pub struct KvArena {
+    inner: Arc<ArenaInner>,
+}
+
+impl std::fmt::Debug for KvArena {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "KvArena(blocks {}/{} free, {} tok/block)",
+            self.free_blocks(),
+            self.capacity_blocks(),
+            self.block_tokens()
+        )
+    }
+}
+
+impl KvArena {
+    /// An arena of `capacity_blocks` blocks of `block_tokens` positions
+    /// each, for the given model geometry.
+    pub fn new(cfg: &ModelConfig, block_tokens: usize, capacity_blocks: usize) -> Self {
+        let geom = KvGeometry::from_config(cfg, block_tokens);
+        // Allocate zeroed (lazily paged by the OS), then reinterpret as
+        // cells. SAFETY: UnsafeCell<f32> is repr(transparent) over f32, so
+        // the slice layouts are identical.
+        let zeroed = vec![0f32; capacity_blocks * geom.block_elems()].into_boxed_slice();
+        let slab = unsafe {
+            Box::from_raw(Box::into_raw(zeroed) as *mut [UnsafeCell<f32>])
+        };
+        KvArena {
+            inner: Arc::new(ArenaInner {
+                pool: BlockPool::new(capacity_blocks, block_tokens),
+                geom,
+                slab,
+            }),
+        }
+    }
+
+    /// Default sizing: [`DEFAULT_BLOCK_TOKENS`]-token blocks, capacity for
+    /// 96 full-context sequences.
+    pub fn with_defaults(cfg: &ModelConfig) -> Self {
+        let per_seq = cfg.max_seq.div_ceil(DEFAULT_BLOCK_TOKENS);
+        Self::new(cfg, DEFAULT_BLOCK_TOKENS, per_seq * DEFAULT_SEQS)
+    }
+
+    pub fn geometry(&self) -> &KvGeometry {
+        &self.inner.geom
+    }
+
+    pub fn block_tokens(&self) -> usize {
+        self.inner.geom.block_tokens
+    }
+
+    pub fn capacity_blocks(&self) -> usize {
+        self.inner.pool.capacity()
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.inner.pool.free_blocks()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.capacity_blocks() - self.free_blocks()
+    }
+
+    /// Total slab bytes (allocated once, zeroed, lazily paged in).
+    pub fn slab_bytes(&self) -> usize {
+        4 * self.capacity_blocks() * self.inner.geom.block_elems()
+    }
+
+    /// Blocks needed for `tokens` positions.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        self.inner.geom.blocks_for(tokens)
+    }
+
+    /// Diagnostic `(free list, refcounts)` snapshot (property tests).
+    pub fn snapshot(&self) -> (Vec<usize>, Vec<u32>) {
+        self.inner.pool.snapshot()
+    }
+
+    /// A new empty view over this arena (no blocks held yet).
+    pub fn new_view(&self) -> KvView {
+        KvView {
+            arena: self.clone(),
+            blocks: Vec::new(),
+            len: 0,
+        }
+    }
+
+    /// Allocate one zeroed block.
+    fn alloc_zeroed(&self) -> Result<BlockRef> {
+        let b = self.inner.pool.alloc().ok_or(Error::ArenaExhausted {
+            needed: 1,
+            free: 0,
+        })?;
+        // SAFETY: freshly allocated -> uniquely held by `b`.
+        unsafe { self.inner.block_mut(b.block_id).fill(0.0) };
+        Ok(b)
+    }
+
+    fn same_arena(&self, other: &KvArena) -> bool {
+        Arc::ptr_eq(&self.inner, &other.inner)
+    }
+}
+
+/// A logical `[L, 2, H, len, D]` KV sequence over arena blocks.
+///
+/// Cloning shares every block (refcount bump, O(blocks)) — this *is* the
+/// zero-copy cache injection. Writes go through `&mut self` and
+/// copy-on-write any block that is still shared.
+pub struct KvView {
+    arena: KvArena,
+    blocks: Vec<BlockRef>,
+    /// Valid (written) token positions.
+    len: usize,
+}
+
+impl Clone for KvView {
+    fn clone(&self) -> Self {
+        KvView {
+            arena: self.arena.clone(),
+            blocks: self.blocks.clone(),
+            len: self.len,
+        }
+    }
+}
+
+impl std::fmt::Debug for KvView {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "KvView(len={}, blocks={})", self.len, self.blocks.len())
+    }
+}
+
+impl KvView {
+    /// Valid token positions.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Positions currently backed by blocks.
+    pub fn capacity_tokens(&self) -> usize {
+        self.blocks.len() * self.arena.block_tokens()
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn geometry(&self) -> &KvGeometry {
+        self.arena.geometry()
+    }
+
+    pub fn arena(&self) -> &KvArena {
+        &self.arena
+    }
+
+    /// Physical block ids in table order (tests/diagnostics).
+    pub fn block_ids(&self) -> Vec<usize> {
+        self.blocks.iter().map(|b| b.block_id).collect()
+    }
+
+    /// Extend the valid length (after out-of-band `row_mut` writes).
+    pub fn commit(&mut self, len: usize) {
+        debug_assert!(len <= self.capacity_tokens());
+        self.len = self.len.max(len);
+    }
+
+    /// Shrink the valid length to `len`, releasing whole blocks past the
+    /// boundary (their refcounts drop; last holders free them).
+    pub fn truncate(&mut self, len: usize) {
+        if len >= self.len {
+            return;
+        }
+        self.len = len;
+        self.blocks.truncate(self.arena.blocks_for(len));
+    }
+
+    /// Ensure blocks exist for `tokens` positions; new blocks are zeroed.
+    /// All-or-nothing is not required: already-acquired blocks stay with
+    /// the view and are freed when it drops.
+    pub fn reserve(&mut self, tokens: usize) -> Result<()> {
+        let need = self.arena.blocks_for(tokens);
+        while self.blocks.len() < need {
+            match self.arena.alloc_zeroed() {
+                Ok(b) => self.blocks.push(b),
+                Err(_) => {
+                    return Err(Error::ArenaExhausted {
+                        needed: need - self.blocks.len(),
+                        free: self.arena.free_blocks(),
+                    })
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Copy-on-write: make block `bi` of the table uniquely ours.
+    fn ensure_unique(&mut self, bi: usize) -> Result<()> {
+        if self.blocks[bi].is_unique() {
+            return Ok(());
+        }
+        let fresh = self.arena.inner.pool.alloc().ok_or(Error::ArenaExhausted {
+            needed: 1,
+            free: 0,
+        })?;
+        // SAFETY: `fresh` is uniquely held (just allocated); the source
+        // block is shared and therefore read-only; the two are distinct.
+        unsafe {
+            let src = self.arena.inner.block(self.blocks[bi].block_id);
+            self.arena.inner.block_mut(fresh.block_id).copy_from_slice(src);
+        }
+        self.blocks[bi] = fresh;
+        Ok(())
+    }
+
+    fn plane_of(&self, layer: usize, kv: usize, head: usize) -> usize {
+        let g = self.geometry();
+        debug_assert!(layer < g.n_layer && kv < 2 && head < g.n_head);
+        (layer * 2 + kv) * g.n_head + head
+    }
+
+    /// Read one `[D]` row. `pos` must be backed (`< capacity_tokens`).
+    /// Rows in `[0, len)` hold written data (or zeros, for reserved-but-
+    /// unwritten positions); rows in `[len, capacity)` may hold *stale*
+    /// data — a truncated view keeps its boundary block whole, including
+    /// the donor's rows past the cut — so callers must bound context reads
+    /// by [`len`](Self::len), as every gather in the serving path does.
+    pub fn row(&self, layer: usize, kv: usize, head: usize, pos: usize) -> &[f32] {
+        let g = self.geometry();
+        let (bt, d) = (g.block_tokens, g.head_dim);
+        assert!(pos < self.capacity_tokens(), "row {pos} beyond view capacity");
+        let plane = self.plane_of(layer, kv, head);
+        let off = (plane * bt + pos % bt) * d;
+        // SAFETY: we hold a BlockRef; shared blocks are read-only and
+        // unique blocks can only be written through `&mut self`, which the
+        // borrow checker excludes while this `&self` borrow lives.
+        unsafe { &self.arena.inner.block(self.blocks[pos / bt].block_id)[off..off + d] }
+    }
+
+    /// Writable `[D]` row at `pos`, allocating/COW-ing as needed. Does not
+    /// advance [`len`](Self::len) — call [`commit`](Self::commit) after.
+    pub fn row_mut(&mut self, layer: usize, kv: usize, head: usize, pos: usize) -> Result<&mut [f32]> {
+        self.reserve(pos + 1)?;
+        let bi = pos / self.geometry().block_tokens;
+        self.ensure_unique(bi)?;
+        let g = self.geometry();
+        let (bt, d) = (g.block_tokens, g.head_dim);
+        let off = (self.plane_of(layer, kv, head) * bt + pos % bt) * d;
+        // SAFETY: block `bi` is uniquely held by this view (ensure_unique)
+        // and `&mut self` excludes any other slice into it.
+        let block = unsafe { self.arena.inner.block_mut(self.blocks[bi].block_id) };
+        Ok(&mut block[off..off + d])
+    }
+
+    /// Scatter a model chunk into the view: `rows` is `[L, 2, H, chunk, D]`
+    /// row-major, of which the first `count` token rows per plane are real;
+    /// they land at positions `[cur_len, cur_len + count)`. Shared boundary
+    /// blocks are COW-ed, new blocks allocated zeroed. Advances `len`.
+    pub fn scatter_chunk(
+        &mut self,
+        rows: &[f32],
+        chunk: usize,
+        count: usize,
+        cur_len: usize,
+    ) -> Result<()> {
+        let g = self.geometry().clone();
+        let (bt, d) = (g.block_tokens, g.head_dim);
+        if rows.len() != g.planes() * chunk * d {
+            return Err(Error::ShapeMismatch(format!(
+                "scatter rows has {} elems, expected {}",
+                rows.len(),
+                g.planes() * chunk * d
+            )));
+        }
+        if count > chunk {
+            return Err(Error::ShapeMismatch(format!(
+                "scatter count {count} > chunk {chunk}"
+            )));
+        }
+        if count == 0 {
+            return Ok(());
+        }
+        self.reserve(cur_len + count)?;
+        let first_b = cur_len / bt;
+        let last_b = (cur_len + count - 1) / bt;
+        for bi in first_b..=last_b {
+            self.ensure_unique(bi)?;
+        }
+        // Copy per (block, plane) runs: token positions within one block
+        // are contiguous in both the chunk buffer and the block plane.
+        let mut pos = cur_len;
+        while pos < cur_len + count {
+            let bi = pos / bt;
+            let slot = pos % bt;
+            let run = (bt - slot).min(cur_len + count - pos);
+            let i = pos - cur_len; // token index within the chunk
+            // SAFETY: ensure_unique above made every touched block unique to
+            // this view; `&mut self` excludes other slices.
+            let block = unsafe { self.arena.inner.block_mut(self.blocks[bi].block_id) };
+            for plane in 0..g.planes() {
+                let src = (plane * chunk + i) * d;
+                let dst = (plane * bt + slot) * d;
+                block[dst..dst + run * d].copy_from_slice(&rows[src..src + run * d]);
+            }
+            pos += run;
+        }
+        self.len = self.len.max(cur_len + count);
+        Ok(())
+    }
+
+    /// Gather the first `n` positions (`n <= len`) into `dst`, laid out
+    /// `[L, 2, H, seq_cap, D]` row-major with `seq_cap >= n`. Rows past `n`
+    /// are left untouched (callers zero-fill `dst` for padded semantics).
+    pub fn gather_into(&self, dst: &mut [f32], seq_cap: usize, n: usize) {
+        let g = self.geometry();
+        let (bt, d) = (g.block_tokens, g.head_dim);
+        assert!(n <= self.len, "gather {n} > valid len {}", self.len);
+        assert!(n <= seq_cap, "gather {n} > seq capacity {seq_cap}");
+        assert_eq!(dst.len(), g.planes() * seq_cap * d, "gather dst size");
+        let mut pos = 0usize;
+        while pos < n {
+            let bi = pos / bt;
+            let slot = pos % bt;
+            let run = (bt - slot).min(n - pos);
+            // SAFETY: read-only access under a live BlockRef (see `row`).
+            let block = unsafe { self.arena.inner.block(self.blocks[bi].block_id) };
+            for plane in 0..g.planes() {
+                let src = (plane * bt + slot) * d;
+                let dst_off = (plane * seq_cap + pos) * d;
+                dst[dst_off..dst_off + run * d].copy_from_slice(&block[src..src + run * d]);
+            }
+            pos += run;
+        }
+    }
+
+    /// Contiguous trimmed copy `[L, 2, H, len, D]` (persistence, tests).
+    pub fn to_contiguous(&self) -> Vec<f32> {
+        let g = self.geometry();
+        let mut out = vec![0f32; g.planes() * self.len * g.head_dim];
+        self.gather_into(&mut out, self.len, self.len);
+        out
+    }
+
+    /// Materialize a view from a contiguous trimmed `[L, 2, H, len, D]`
+    /// buffer (inverse of [`to_contiguous`](Self::to_contiguous)).
+    pub fn from_contiguous(arena: &KvArena, data: &[f32], len: usize) -> Result<KvView> {
+        let g = arena.geometry();
+        if data.len() != g.planes() * len * g.head_dim {
+            return Err(Error::ShapeMismatch(format!(
+                "contiguous kv has {} elems, expected {} for {len} tokens",
+                data.len(),
+                g.planes() * len * g.head_dim
+            )));
+        }
+        let mut view = arena.new_view();
+        view.scatter_chunk(data, len, len, 0)?;
+        Ok(view)
+    }
+
+    /// Do two views share the same arena (and can therefore share blocks)?
+    pub fn same_arena(&self, other: &KvView) -> bool {
+        self.arena.same_arena(&other.arena)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arena() -> KvArena {
+        // nano geometry, 8-token blocks, 32 blocks = 256 positions total
+        KvArena::new(&ModelConfig::nano(), 8, 32)
+    }
+
+    fn fill(view: &mut KvView, from: usize, count: usize, tag: f32) {
+        let g = view.geometry().clone();
+        let rows: Vec<f32> = (0..g.planes() * count * g.head_dim)
+            .map(|i| tag + i as f32)
+            .collect();
+        view.scatter_chunk(&rows, count, count, from).unwrap();
+    }
+
+    #[test]
+    fn scatter_gather_roundtrip() {
+        let a = arena();
+        let mut v = a.new_view();
+        fill(&mut v, 0, 13, 100.0);
+        assert_eq!(v.len(), 13);
+        assert_eq!(v.num_blocks(), 2);
+        let g = a.geometry();
+        let flat = v.to_contiguous();
+        assert_eq!(flat.len(), g.planes() * 13 * g.head_dim);
+        let v2 = KvView::from_contiguous(&a, &flat, 13).unwrap();
+        assert_eq!(v2.to_contiguous(), flat);
+    }
+
+    #[test]
+    fn clone_shares_blocks_and_arena_accounting_holds() {
+        let a = arena();
+        let mut v = a.new_view();
+        fill(&mut v, 0, 20, 0.0);
+        let used = a.used_blocks();
+        let shared = v.clone();
+        assert_eq!(a.used_blocks(), used, "attach must not allocate");
+        assert_eq!(shared.block_ids(), v.block_ids());
+        drop(shared);
+        drop(v);
+        assert_eq!(a.used_blocks(), 0);
+    }
+
+    #[test]
+    fn cow_write_leaves_original_intact() {
+        let a = arena();
+        let mut v = a.new_view();
+        fill(&mut v, 0, 10, 1.0);
+        let original = v.to_contiguous();
+        let mut copy = v.clone();
+        // append into the shared boundary block -> COW of exactly one block
+        let used = a.used_blocks();
+        fill(&mut copy, 10, 3, 999.0);
+        assert_eq!(a.used_blocks(), used + 1, "only the boundary block copies");
+        assert_eq!(v.to_contiguous(), original, "donor view unchanged");
+        assert_eq!(copy.len(), 13);
+        // the shared (non-boundary) block is still physically shared
+        assert_eq!(copy.block_ids()[0], v.block_ids()[0]);
+        assert_ne!(copy.block_ids()[1], v.block_ids()[1]);
+    }
+
+    #[test]
+    fn row_accessors_cow_too() {
+        let a = arena();
+        let mut v = a.new_view();
+        fill(&mut v, 0, 4, 5.0);
+        let shared = v.clone();
+        v.row_mut(0, 0, 0, 2).unwrap()[0] = -7.0;
+        v.commit(4);
+        assert_eq!(v.row(0, 0, 0, 2)[0], -7.0);
+        assert_ne!(shared.row(0, 0, 0, 2)[0], -7.0, "COW isolated the write");
+    }
+
+    #[test]
+    fn truncate_releases_blocks() {
+        let a = arena();
+        let mut v = a.new_view();
+        fill(&mut v, 0, 24, 0.0); // 3 blocks
+        assert_eq!(a.used_blocks(), 3);
+        v.truncate(8);
+        assert_eq!(v.len(), 8);
+        assert_eq!(v.num_blocks(), 1);
+        assert_eq!(a.used_blocks(), 1);
+        v.truncate(0);
+        assert_eq!(a.used_blocks(), 0);
+    }
+
+    #[test]
+    fn fresh_blocks_are_zeroed_even_after_reuse() {
+        let a = arena();
+        let mut v = a.new_view();
+        fill(&mut v, 0, 8, 42.0);
+        drop(v); // block goes back dirty
+        let mut v2 = a.new_view();
+        v2.reserve(8).unwrap();
+        v2.commit(8);
+        assert!(v2.to_contiguous().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn exhaustion_is_an_error_not_a_panic() {
+        let small = KvArena::new(&ModelConfig::nano(), 8, 2); // 16 positions
+        let mut v = small.new_view();
+        assert!(v.reserve(16).is_ok());
+        match v.reserve(17) {
+            Err(Error::ArenaExhausted { .. }) => {}
+            other => panic!("expected exhaustion, got {other:?}"),
+        }
+        // the view keeps what it already holds
+        assert_eq!(v.capacity_tokens(), 16);
+    }
+
+    #[test]
+    fn geometry_matches_config() {
+        let a = arena();
+        assert!(a.geometry().matches(&ModelConfig::nano()));
+        let mut other = ModelConfig::nano();
+        other.n_layer += 1;
+        assert!(!a.geometry().matches(&other));
+    }
+
+    #[test]
+    fn default_sizing_covers_many_sequences() {
+        let cfg = ModelConfig::nano();
+        let a = KvArena::with_defaults(&cfg);
+        assert!(a.capacity_blocks() * a.block_tokens() >= cfg.max_seq * 64);
+    }
+}

@@ -43,6 +43,16 @@ impl Drop for BlockRef {
     }
 }
 
+impl BlockRef {
+    /// True when this is the only live handle to the block — the in-place
+    /// write test (the paged-KV analogue of `Arc::get_mut`). Sound against
+    /// races: refcounts only grow by cloning an existing handle, so if the
+    /// caller holds the single handle nobody else can bump it concurrently.
+    pub fn is_unique(&self) -> bool {
+        self.pool.lock().unwrap().refcounts[self.block_id] == 1
+    }
+}
+
 impl std::fmt::Debug for BlockRef {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "BlockRef({})", self.block_id)
@@ -115,6 +125,14 @@ impl BlockPool {
             }
         }
         Some(out)
+    }
+
+    /// Diagnostic snapshot of `(free list, refcounts)` — used by the
+    /// property tests to assert conservation (free + held == capacity, no
+    /// block simultaneously free and referenced) and by arena metrics.
+    pub fn snapshot(&self) -> (Vec<usize>, Vec<u32>) {
+        let inner = self.inner.lock().unwrap();
+        (inner.free.clone(), inner.refcounts.clone())
     }
 
     /// Bytes of KV that `n_seqs` sequences of `tokens` positions would
@@ -190,6 +208,31 @@ mod tests {
         assert_eq!(p.blocks_for(1), 1);
         assert_eq!(p.blocks_for(16), 1);
         assert_eq!(p.blocks_for(17), 2);
+    }
+
+    #[test]
+    fn uniqueness_tracks_sharing() {
+        let p = BlockPool::new(2, 16);
+        let a = p.alloc().unwrap();
+        assert!(a.is_unique());
+        let a2 = a.clone();
+        assert!(!a.is_unique());
+        drop(a2);
+        assert!(a.is_unique());
+    }
+
+    #[test]
+    fn snapshot_is_consistent() {
+        let p = BlockPool::new(3, 16);
+        let a = p.alloc().unwrap();
+        let _a2 = a.clone();
+        let _b = p.alloc().unwrap();
+        let (free, refs) = p.snapshot();
+        assert_eq!(free.len() + refs.iter().filter(|&&c| c > 0).count(), 3);
+        for &id in &free {
+            assert_eq!(refs[id], 0, "free block {id} still referenced");
+        }
+        assert_eq!(refs[a.block_id], 2);
     }
 
     #[test]

@@ -1,24 +1,28 @@
 //! The cross-prompt KV cache — the paper's central data structure.
 //!
+//! * [`arena`] — the paged substrate: one [`KvArena`] slab carved into
+//!   refcounted token blocks, with [`KvView`] presenting a logical
+//!   `[L, 2, H, len, D]` sequence over a block table. Cache injection is a
+//!   block-table clone (refcount bumps), not a tensor copy.
 //! * [`KvRecord`] — one cached prompt: token ids, embedding, and the
-//!   *trimmed* per-layer K/V tensors for exactly `token_len` positions
-//!   (`[L, 2, H, len, D]`), i.e. the paper's
-//!   `C[i] = (c_i, input_ids(c_i), {K_l, V_l})`.
+//!   *paged* per-layer K/V for exactly `token_len` positions, i.e. the
+//!   paper's `C[i] = (c_i, input_ids(c_i), {K_l, V_l})`.
 //! * [`KvStore`] — capacity-bounded store with pluggable eviction
 //!   (LRU / LFU / FIFO / cost-aware) and hit/miss accounting.
 //! * [`persist`] — torch.save's stand-in: a checksummed binary file format
 //!   with optional DEFLATE compression, so caches survive restarts and can
 //!   overflow to disk.
-//! * [`blocks`] — a PagedAttention-inspired block pool: fixed-size token
-//!   blocks with reference counting, enabling prefix *sharing* between
-//!   entries (the paper's future-work direction; exercised by the radix
-//!   policy and the ablation benches).
+//! * [`blocks`] — the PagedAttention-inspired refcounted block pool the
+//!   arena allocates from; prefix *sharing* between entries falls out of
+//!   block refcounts (the paper's future-work direction, now the hot path).
 
+pub mod arena;
 pub mod blocks;
 pub mod persist;
 mod record;
 mod store;
 
+pub use arena::{KvArena, KvGeometry, KvView, DEFAULT_BLOCK_TOKENS};
 pub use blocks::{BlockPool, BlockRef};
 pub use record::KvRecord;
 pub use store::{KvStore, StoreStats};

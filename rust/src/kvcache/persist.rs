@@ -1,6 +1,8 @@
 //! Disk persistence for KV records — the `torch.save` stand-in.
 //!
-//! File layout (little-endian):
+//! File layout (little-endian, unchanged since version 1 — the paged-arena
+//! refactor serializes the *gathered* payload, so files are byte-identical
+//! to the dense-buffer encoder and old caches stay loadable):
 //!
 //! ```text
 //! magic   u32  = 0x4B56_5243  ("KVRC")
@@ -14,20 +16,24 @@
 //! crc32 u32 over everything above
 //! ```
 //!
-//! Corruption (bit flips, truncation) must surface as `Error::Corrupt` —
-//! never as a silently wrong KV tensor; the integration tests inject both.
+//! Encoding uses bulk little-endian byte-slice writes (one `memcpy` per
+//! array on LE targets, not one `put_u32` per element) into an
+//! exact-capacity buffer. Corruption (bit flips, truncation) must surface
+//! as `Error::Corrupt` — never as a silently wrong KV tensor; the
+//! integration tests inject both. Loading materializes the payload into a
+//! caller-provided [`KvArena`].
 
 use std::io::{Read, Write};
 use std::path::Path;
-use std::sync::Arc;
 
 use flate2::read::DeflateDecoder;
 use flate2::write::DeflateEncoder;
 use flate2::Compression;
 
 use crate::error::{Error, Result};
+use crate::util::crc32;
 
-use super::KvRecord;
+use super::{KvArena, KvRecord, KvView};
 
 const MAGIC: u32 = 0x4B56_5243;
 const VERSION: u32 = 1;
@@ -37,9 +43,44 @@ fn put_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_bytes(buf: &mut Vec<u8>, b: &[u8]) {
-    put_u32(buf, b.len() as u32);
-    buf.extend_from_slice(b);
+/// Bulk little-endian write of a u32 slice: a single byte-slice append on
+/// LE targets, per-element fallback elsewhere.
+fn put_u32_slice(buf: &mut Vec<u8>, vals: &[u32]) {
+    if cfg!(target_endian = "little") {
+        // SAFETY: u32 is plain-old-data; reinterpreting the slice as bytes
+        // of length 4 * len is valid for reads.
+        let bytes = unsafe {
+            std::slice::from_raw_parts(vals.as_ptr() as *const u8, vals.len() * 4)
+        };
+        buf.extend_from_slice(bytes);
+    } else {
+        for &v in vals {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+/// Bulk little-endian write of an f32 slice (see [`put_u32_slice`]).
+fn put_f32_slice(buf: &mut Vec<u8>, vals: &[f32]) {
+    if cfg!(target_endian = "little") {
+        // SAFETY: f32 is plain-old-data; see put_u32_slice.
+        let bytes = unsafe {
+            std::slice::from_raw_parts(vals.as_ptr() as *const u8, vals.len() * 4)
+        };
+        buf.extend_from_slice(bytes);
+    } else {
+        for &v in vals {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+}
+
+/// Bulk little-endian read of an f32 array.
+fn get_f32s(bytes: &[u8]) -> Vec<f32> {
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
 }
 
 struct Reader<'a> {
@@ -64,46 +105,65 @@ impl<'a> Reader<'a> {
 
 /// Serialize a record to bytes.
 pub fn to_bytes(rec: &KvRecord, compress: bool) -> Vec<u8> {
-    let mut out = Vec::with_capacity(64 + rec.kv.len() * 4);
+    let payload = rec.kv.to_contiguous();
+    let g = rec.kv.geometry();
+    let packed = compress.then(|| {
+        let mut enc = DeflateEncoder::new(Vec::new(), Compression::fast());
+        // SAFETY-free bulk path: reuse the LE writer into a temp buffer.
+        let mut raw = Vec::with_capacity(payload.len() * 4);
+        put_f32_slice(&mut raw, &payload);
+        enc.write_all(&raw).expect("in-memory deflate cannot fail");
+        enc.finish().expect("in-memory deflate cannot fail")
+    });
+    let stored_len = packed.as_ref().map_or(payload.len() * 4, |p| p.len());
+    // Exact capacity: 6 header words, 3 length-prefixed arrays, the
+    // payload's two length words + bytes, and the trailing crc.
+    let total = 6 * 4
+        + 4 + rec.text.len()
+        + 4 + rec.tokens.len() * 4
+        + 4 + rec.embedding.len() * 4
+        + 4 + 4 + stored_len
+        + 4;
+    let mut out = Vec::with_capacity(total);
     put_u32(&mut out, MAGIC);
     put_u32(&mut out, VERSION);
     put_u32(&mut out, if compress { FLAG_COMPRESSED } else { 0 });
-    put_u32(&mut out, rec.n_layer as u32);
-    put_u32(&mut out, rec.n_head as u32);
-    put_u32(&mut out, rec.head_dim as u32);
-    put_bytes(&mut out, rec.text.as_bytes());
+    put_u32(&mut out, g.n_layer as u32);
+    put_u32(&mut out, g.n_head as u32);
+    put_u32(&mut out, g.head_dim as u32);
+    put_u32(&mut out, rec.text.len() as u32);
+    out.extend_from_slice(rec.text.as_bytes());
     put_u32(&mut out, rec.tokens.len() as u32);
-    for &t in &rec.tokens {
-        put_u32(&mut out, t);
-    }
+    put_u32_slice(&mut out, &rec.tokens);
     put_u32(&mut out, rec.embedding.len() as u32);
-    for &e in &rec.embedding {
-        out.extend_from_slice(&e.to_le_bytes());
+    put_f32_slice(&mut out, &rec.embedding);
+    put_u32(&mut out, payload.len() as u32);
+    match packed {
+        Some(p) => {
+            put_u32(&mut out, p.len() as u32);
+            out.extend_from_slice(&p);
+        }
+        None => {
+            put_u32(&mut out, (payload.len() * 4) as u32);
+            put_f32_slice(&mut out, &payload);
+        }
     }
-    // payload
-    let raw: Vec<u8> = rec.kv.iter().flat_map(|f| f.to_le_bytes()).collect();
-    put_u32(&mut out, rec.kv.len() as u32);
-    if compress {
-        let mut enc = DeflateEncoder::new(Vec::new(), Compression::fast());
-        enc.write_all(&raw).expect("in-memory deflate cannot fail");
-        let packed = enc.finish().expect("in-memory deflate cannot fail");
-        put_bytes(&mut out, &packed);
-    } else {
-        put_bytes(&mut out, &raw);
-    }
-    let crc = crc32fast::hash(&out);
+    let crc = crc32::hash(&out);
     put_u32(&mut out, crc);
+    debug_assert_eq!(out.len(), total, "capacity estimate drifted");
     out
 }
 
-/// Deserialize a record from bytes, verifying the checksum.
-pub fn from_bytes(buf: &[u8]) -> Result<KvRecord> {
+/// Deserialize a record from bytes, verifying the checksum and
+/// materializing the payload into `arena` (which must match the record's
+/// geometry).
+pub fn from_bytes(buf: &[u8], arena: &KvArena) -> Result<KvRecord> {
     if buf.len() < 8 {
         return Err(Error::Corrupt("file too small".into()));
     }
     let (body, crc_bytes) = buf.split_at(buf.len() - 4);
     let want = u32::from_le_bytes(crc_bytes.try_into().unwrap());
-    if crc32fast::hash(body) != want {
+    if crc32::hash(body) != want {
         return Err(Error::Corrupt("crc mismatch".into()));
     }
     let mut r = Reader { buf: body, pos: 0 };
@@ -118,20 +178,25 @@ pub fn from_bytes(buf: &[u8]) -> Result<KvRecord> {
     let n_layer = r.u32()? as usize;
     let n_head = r.u32()? as usize;
     let head_dim = r.u32()? as usize;
+    let g = arena.geometry();
+    if n_layer != g.n_layer || n_head != g.n_head || head_dim != g.head_dim {
+        return Err(Error::ShapeMismatch(format!(
+            "cache file geometry [{n_layer}, {n_head}, {head_dim}] does not \
+             match arena [{}, {}, {}]",
+            g.n_layer, g.n_head, g.head_dim
+        )));
+    }
     let text_len = r.u32()? as usize;
     let text = String::from_utf8(r.take(text_len)?.to_vec())
         .map_err(|_| Error::Corrupt("bad utf8 in text".into()))?;
     let n_tokens = r.u32()? as usize;
-    let mut tokens = Vec::with_capacity(n_tokens);
-    for _ in 0..n_tokens {
-        tokens.push(r.u32()?);
-    }
+    let tokens: Vec<u32> = r
+        .take(n_tokens * 4)?
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
     let n_emb = r.u32()? as usize;
-    let mut embedding = Vec::with_capacity(n_emb);
-    for _ in 0..n_emb {
-        let b = r.take(4)?;
-        embedding.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
-    }
+    let embedding = get_f32s(r.take(n_emb * 4)?);
     let raw_len = r.u32()? as usize;
     let stored_len = r.u32()? as usize;
     let stored = r.take(stored_len)?;
@@ -151,21 +216,22 @@ pub fn from_bytes(buf: &[u8]) -> Result<KvRecord> {
             raw_len * 4
         )));
     }
-    let kv: Vec<f32> = raw
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-        .collect();
+    if raw_len != g.elems_per_token() * n_tokens {
+        return Err(Error::Corrupt(format!(
+            "payload has {raw_len} elems, geometry implies {} for {n_tokens} tokens",
+            g.elems_per_token() * n_tokens
+        )));
+    }
+    let kv_f32 = get_f32s(&raw);
     if r.pos != body.len() {
         return Err(Error::Corrupt("trailing bytes".into()));
     }
+    let kv = KvView::from_contiguous(arena, &kv_f32, n_tokens)?;
     Ok(KvRecord {
         text,
         tokens,
         embedding,
-        kv: Arc::new(kv),
-        n_layer,
-        n_head,
-        head_dim,
+        kv,
     })
 }
 
@@ -180,10 +246,10 @@ pub fn save(rec: &KvRecord, path: &Path, compress: bool) -> Result<()> {
     Ok(())
 }
 
-/// Load from a file.
-pub fn load(path: &Path) -> Result<KvRecord> {
+/// Load from a file, materializing into `arena`.
+pub fn load(path: &Path, arena: &KvArena) -> Result<KvRecord> {
     let buf = std::fs::read(path)?;
-    from_bytes(&buf)
+    from_bytes(&buf, arena)
 }
 
 #[cfg(test)]
@@ -191,40 +257,127 @@ mod tests {
     use super::*;
     use crate::config::ModelConfig;
 
-    fn rec() -> KvRecord {
-        let cfg = ModelConfig::nano();
-        let full: Vec<f32> = (0..cfg.kv_elems()).map(|i| (i % 97) as f32 * 0.5).collect();
-        KvRecord::from_full_buffer(&cfg, "the prompt", vec![4, 7, 9], vec![0.1, -0.2], &full)
+    fn arena() -> KvArena {
+        KvArena::new(&ModelConfig::nano(), 16, 256)
+    }
+
+    fn rec_in(a: &KvArena) -> KvRecord {
+        let g = a.geometry();
+        let tokens: Vec<u32> = vec![4, 7, 9];
+        let data: Vec<f32> = (0..g.elems_per_token() * tokens.len())
+            .map(|i| (i % 97) as f32 * 0.5)
+            .collect();
+        let kv = KvView::from_contiguous(a, &data, tokens.len()).unwrap();
+        KvRecord {
+            text: "the prompt".into(),
+            tokens,
+            embedding: vec![0.1, -0.2],
+            kv,
+        }
+    }
+
+    /// The pre-refactor element-at-a-time encoder, kept verbatim as a
+    /// reference so the bulk writer is provably byte-identical.
+    fn to_bytes_reference(rec: &KvRecord, compress: bool) -> Vec<u8> {
+        fn put_bytes(buf: &mut Vec<u8>, b: &[u8]) {
+            put_u32(buf, b.len() as u32);
+            buf.extend_from_slice(b);
+        }
+        let g = rec.kv.geometry();
+        let payload = rec.kv.to_contiguous();
+        let mut out = Vec::with_capacity(64 + payload.len() * 4);
+        put_u32(&mut out, MAGIC);
+        put_u32(&mut out, VERSION);
+        put_u32(&mut out, if compress { FLAG_COMPRESSED } else { 0 });
+        put_u32(&mut out, g.n_layer as u32);
+        put_u32(&mut out, g.n_head as u32);
+        put_u32(&mut out, g.head_dim as u32);
+        put_bytes(&mut out, rec.text.as_bytes());
+        put_u32(&mut out, rec.tokens.len() as u32);
+        for &t in &rec.tokens {
+            put_u32(&mut out, t);
+        }
+        put_u32(&mut out, rec.embedding.len() as u32);
+        for &e in &rec.embedding {
+            out.extend_from_slice(&e.to_le_bytes());
+        }
+        let raw: Vec<u8> = payload.iter().flat_map(|f| f.to_le_bytes()).collect();
+        put_u32(&mut out, payload.len() as u32);
+        if compress {
+            let mut enc = DeflateEncoder::new(Vec::new(), Compression::fast());
+            enc.write_all(&raw).expect("in-memory deflate cannot fail");
+            let packed = enc.finish().expect("in-memory deflate cannot fail");
+            put_bytes(&mut out, &packed);
+        } else {
+            put_bytes(&mut out, &raw);
+        }
+        let crc = crc32::hash(&out);
+        put_u32(&mut out, crc);
+        out
+    }
+
+    #[test]
+    fn bulk_encoder_byte_identical_to_reference() {
+        let a = arena();
+        let r = rec_in(&a);
+        for compress in [false, true] {
+            assert_eq!(
+                to_bytes(&r, compress),
+                to_bytes_reference(&r, compress),
+                "compress={compress}"
+            );
+        }
+    }
+
+    #[test]
+    fn size_estimate_is_exact() {
+        // The encoder preallocates `total` and the debug_assert in
+        // to_bytes pins len == total; verify the estimate independently
+        // here (capacity() == len() is not asserted — Vec::with_capacity
+        // may legally over-allocate).
+        let a = arena();
+        let r = rec_in(&a);
+        let out = to_bytes(&r, false);
+        let expected = 6 * 4
+            + 4 + r.text.len()
+            + 4 + r.tokens.len() * 4
+            + 4 + r.embedding.len() * 4
+            + 4 + 4 + r.kv.to_contiguous().len() * 4
+            + 4;
+        assert_eq!(out.len(), expected, "exact-capacity estimate drifted");
     }
 
     #[test]
     fn roundtrip_uncompressed() {
-        let r = rec();
-        let r2 = from_bytes(&to_bytes(&r, false)).unwrap();
+        let a = arena();
+        let r = rec_in(&a);
+        let r2 = from_bytes(&to_bytes(&r, false), &a).unwrap();
         assert_eq!(r2.text, r.text);
         assert_eq!(r2.tokens, r.tokens);
         assert_eq!(r2.embedding, r.embedding);
-        assert_eq!(*r2.kv, *r.kv);
+        assert_eq!(r2.kv.to_contiguous(), r.kv.to_contiguous());
     }
 
     #[test]
     fn roundtrip_compressed_and_smaller() {
-        let r = rec();
+        let a = arena();
+        let r = rec_in(&a);
         let plain = to_bytes(&r, false);
         let packed = to_bytes(&r, true);
         assert!(packed.len() < plain.len(), "{} !< {}", packed.len(), plain.len());
-        let r2 = from_bytes(&packed).unwrap();
-        assert_eq!(*r2.kv, *r.kv);
+        let r2 = from_bytes(&packed, &a).unwrap();
+        assert_eq!(r2.kv.to_contiguous(), r.kv.to_contiguous());
     }
 
     #[test]
     fn bitflip_detected() {
-        let r = rec();
+        let a = arena();
+        let r = rec_in(&a);
         for compress in [false, true] {
             let mut buf = to_bytes(&r, compress);
             let mid = buf.len() / 2;
             buf[mid] ^= 0x40;
-            match from_bytes(&buf) {
+            match from_bytes(&buf, &a) {
                 Err(Error::Corrupt(_)) => {}
                 other => panic!("bitflip not detected: {other:?}"),
             }
@@ -233,25 +386,41 @@ mod tests {
 
     #[test]
     fn truncation_detected() {
-        let r = rec();
+        let a = arena();
+        let r = rec_in(&a);
         let buf = to_bytes(&r, false);
         for cut in [1, buf.len() / 3, buf.len() - 1] {
-            assert!(from_bytes(&buf[..cut]).is_err(), "cut={cut}");
+            assert!(from_bytes(&buf[..cut], &a).is_err(), "cut={cut}");
         }
     }
 
     #[test]
     fn wrong_version_reported() {
-        let r = rec();
+        let a = arena();
+        let r = rec_in(&a);
         let mut buf = to_bytes(&r, false);
         buf[4] = 99; // version field
         // fix crc so we reach the version check
         let n = buf.len();
-        let crc = crc32fast::hash(&buf[..n - 4]);
+        let crc = crc32::hash(&buf[..n - 4]);
         buf[n - 4..].copy_from_slice(&crc.to_le_bytes());
-        match from_bytes(&buf) {
+        match from_bytes(&buf, &a) {
             Err(Error::Version(99)) => {}
             other => panic!("expected Version error: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn wrong_arena_geometry_rejected() {
+        let a = arena();
+        let r = rec_in(&a);
+        let buf = to_bytes(&r, false);
+        let mut other_cfg = ModelConfig::nano();
+        other_cfg.n_layer = 2;
+        let other = KvArena::new(&other_cfg, 16, 8);
+        match from_bytes(&buf, &other) {
+            Err(Error::ShapeMismatch(_)) => {}
+            other => panic!("expected geometry mismatch: {other:?}"),
         }
     }
 
@@ -259,10 +428,11 @@ mod tests {
     fn file_roundtrip() {
         let dir = std::env::temp_dir().join("recycle_serve_persist_test");
         let path = dir.join("a.kv");
-        let r = rec();
+        let a = arena();
+        let r = rec_in(&a);
         save(&r, &path, true).unwrap();
-        let r2 = load(&path).unwrap();
-        assert_eq!(*r2.kv, *r.kv);
+        let r2 = load(&path, &a).unwrap();
+        assert_eq!(r2.kv.to_contiguous(), r.kv.to_contiguous());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

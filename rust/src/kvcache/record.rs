@@ -1,16 +1,17 @@
 //! One cached prompt's activations.
 
-use std::sync::Arc;
-
 use crate::config::ModelConfig;
+
+use super::arena::KvView;
 
 /// A cached KV entry: the paper's `C[i] = (c_i, input_ids(c_i), {K_l, V_l})`.
 ///
-/// The KV payload is stored *trimmed*: only `token_len` positions per layer
-/// (`[L, 2, H, token_len, D]`, row-major), not the full context window —
-/// this is what makes the cache footprint proportional to what was actually
-/// computed. The engine re-inflates into the runtime's `[L, 2, H, S, D]`
-/// buffer on injection.
+/// The KV payload is a *paged view*: exactly `token_len` positions over
+/// shared arena blocks (`[L, 2, H, token_len, D]` logically). A cache hit
+/// attaches the entry by cloning the block table — one refcount bump per
+/// block — instead of inflating a dense context-window buffer; the serving
+/// path then extends the view copy-on-write. Cloning the record itself is
+/// likewise O(blocks).
 #[derive(Debug, Clone)]
 pub struct KvRecord {
     /// The cached prompt text (`c_i`).
@@ -19,14 +20,8 @@ pub struct KvRecord {
     pub tokens: Vec<u32>,
     /// L2-normalized sentence embedding (`e_i`).
     pub embedding: Vec<f32>,
-    /// Trimmed KV payload, `[L, 2, H, token_len, D]` row-major f32.
-    /// Arc so cache hits hand out views without copying the tensor.
-    pub kv: Arc<Vec<f32>>,
-    /// Geometry the payload was produced under (guards against serving a
-    /// cache built for a different model).
-    pub n_layer: usize,
-    pub n_head: usize,
-    pub head_dim: usize,
+    /// Paged KV payload; `kv.len() == tokens.len()`.
+    pub kv: KvView,
 }
 
 impl KvRecord {
@@ -36,140 +31,128 @@ impl KvRecord {
         self.tokens.len()
     }
 
-    /// Bytes of the trimmed payload.
+    /// Logical bytes of the trimmed payload (what the store accounts; the
+    /// *physical* footprint can be smaller when blocks are shared).
     pub fn kv_bytes(&self) -> usize {
-        self.kv.len() * 4
+        self.kv.geometry().bytes_per_token() * self.token_len()
     }
 
-    /// Expected payload element count for the geometry.
-    pub fn expected_elems(&self) -> usize {
-        self.n_layer * 2 * self.n_head * self.token_len() * self.head_dim
+    /// Blocks in the payload's table (the attach cost is O(this)).
+    pub fn kv_blocks(&self) -> usize {
+        self.kv.num_blocks()
     }
 
     /// Check payload/geometry consistency and compatibility with `cfg`.
     pub fn validate(&self, cfg: &ModelConfig) -> bool {
-        self.kv.len() == self.expected_elems()
-            && self.n_layer == cfg.n_layer
-            && self.n_head == cfg.n_head
-            && self.head_dim == cfg.head_dim
+        self.kv.len() == self.token_len()
+            && self.kv.geometry().matches(cfg)
             && self.token_len() <= cfg.max_seq
-            && self.embedding.len() > 0
+            && !self.embedding.is_empty()
     }
 
-    /// Build a record from a *full* `[L, 2, H, S, D]` runtime buffer by
-    /// trimming to the first `len` positions.
-    pub fn from_full_buffer(
-        cfg: &ModelConfig,
-        text: &str,
-        tokens: Vec<u32>,
-        embedding: Vec<f32>,
-        full: &[f32],
-    ) -> Self {
-        let len = tokens.len();
-        let [l, two, h, s, d] = cfg.kv_shape();
-        debug_assert_eq!(full.len(), l * two * h * s * d);
-        let mut kv = Vec::with_capacity(l * two * h * len * d);
-        for li in 0..l {
-            for kvi in 0..two {
-                for hi in 0..h {
-                    let base = ((li * two + kvi) * h + hi) * s * d;
-                    kv.extend_from_slice(&full[base..base + len * d]);
-                }
-            }
-        }
+    /// Build a record by *sharing* a served request's view: clones the
+    /// block table and trims to `tokens.len()` positions (dropping whole
+    /// blocks past the boundary). No tensor copy — this is how online
+    /// population shares prefix blocks with the request that produced them.
+    pub fn from_view(text: &str, tokens: Vec<u32>, embedding: Vec<f32>, view: &KvView) -> Self {
+        debug_assert!(view.len() >= tokens.len(), "view shorter than tokens");
+        let mut kv = view.clone();
+        kv.truncate(tokens.len());
         KvRecord {
             text: text.to_string(),
             tokens,
             embedding,
-            kv: Arc::new(kv),
-            n_layer: l,
-            n_head: h,
-            head_dim: d,
+            kv,
         }
     }
 
-    /// Inflate the trimmed payload back into a full `[L, 2, H, S, D]`
-    /// buffer (zero beyond `token_len`). Inverse of [`from_full_buffer`].
-    pub fn to_full_buffer(&self, cfg: &ModelConfig) -> Vec<f32> {
-        let [l, two, h, s, d] = cfg.kv_shape();
-        let len = self.token_len();
-        let mut full = vec![0f32; l * two * h * s * d];
-        for li in 0..l {
-            for kvi in 0..two {
-                for hi in 0..h {
-                    let src = ((li * two + kvi) * h + hi) * len * d;
-                    let dst = ((li * two + kvi) * h + hi) * s * d;
-                    full[dst..dst + len * d]
-                        .copy_from_slice(&self.kv[src..src + len * d]);
-                }
-            }
-        }
-        full
+    /// Zero-copy injection: a shared view over this record's blocks, ready
+    /// to be extended copy-on-write by the engine.
+    pub fn attach(&self) -> KvView {
+        self.kv.clone()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kvcache::KvArena;
 
     fn cfg() -> ModelConfig {
         ModelConfig::nano()
     }
 
-    fn fake_full(cfg: &ModelConfig) -> Vec<f32> {
-        (0..cfg.kv_elems()).map(|i| i as f32).collect()
+    fn arena() -> KvArena {
+        KvArena::new(&cfg(), 8, 64)
+    }
+
+    fn view_of(a: &KvArena, len: usize) -> KvView {
+        let g = a.geometry();
+        let data: Vec<f32> = (0..g.elems_per_token() * len).map(|i| i as f32).collect();
+        KvView::from_contiguous(a, &data, len).unwrap()
     }
 
     #[test]
-    fn trim_inflate_roundtrip() {
-        let cfg = cfg();
-        let full = fake_full(&cfg);
+    fn from_view_shares_and_trims() {
+        let a = arena();
+        let v = view_of(&a, 20); // 3 blocks of 8
+        let used = a.used_blocks();
         let tokens: Vec<u32> = (0..10).collect();
-        let rec = KvRecord::from_full_buffer(&cfg, "p", tokens, vec![1.0], &full);
-        assert!(rec.validate(&cfg));
-        assert_eq!(rec.kv_bytes(), cfg.kv_bytes_for_len(10));
-        let inflated = rec.to_full_buffer(&cfg);
-        // live rows match the original
-        let [l, two, h, s, d] = cfg.kv_shape();
-        for li in 0..l {
-            for kvi in 0..two {
-                for hi in 0..h {
-                    let base = ((li * two + kvi) * h + hi) * s * d;
-                    assert_eq!(&inflated[base..base + 10 * d], &full[base..base + 10 * d]);
-                    // dead rows are zero
-                    assert!(inflated[base + 10 * d..base + s * d].iter().all(|&x| x == 0.0));
-                }
-            }
-        }
+        let rec = KvRecord::from_view("p", tokens, vec![1.0], &v);
+        assert!(rec.validate(&cfg()));
+        assert_eq!(rec.kv.len(), 10);
+        assert_eq!(rec.kv_blocks(), 2, "trimmed to ceil(10/8) blocks");
+        // sharing, not copying: no new blocks were allocated
+        assert_eq!(a.used_blocks(), used);
+        assert_eq!(rec.kv.block_ids(), v.block_ids()[..2].to_vec());
+        // logical bytes track token_len
+        assert_eq!(rec.kv_bytes(), cfg().kv_bytes_for_len(10));
+    }
+
+    #[test]
+    fn attach_is_zero_copy_and_cow_isolated() {
+        let a = arena();
+        let v = view_of(&a, 10);
+        let rec = KvRecord::from_view("p", (0..10).collect(), vec![1.0], &v);
+        drop(v);
+        let before = rec.kv.to_contiguous();
+        let used = a.used_blocks();
+        let mut attached = rec.attach();
+        assert_eq!(a.used_blocks(), used, "attach allocates nothing");
+        // extending the attached view COWs; the record is untouched
+        attached.row_mut(0, 0, 0, 10).unwrap()[0] = 7.0;
+        attached.commit(11);
+        assert_eq!(rec.kv.to_contiguous(), before);
     }
 
     #[test]
     fn validate_rejects_wrong_geometry() {
-        let cfg = cfg();
-        let full = fake_full(&cfg);
-        let mut rec =
-            KvRecord::from_full_buffer(&cfg, "p", vec![1, 2, 3], vec![1.0], &full);
-        assert!(rec.validate(&cfg));
-        rec.n_head = 2;
-        assert!(!rec.validate(&cfg));
+        let a = arena();
+        let v = view_of(&a, 3);
+        let rec = KvRecord::from_view("p", vec![1, 2, 3], vec![1.0], &v);
+        assert!(rec.validate(&cfg()));
+        let mut other = cfg();
+        other.n_head = 2;
+        other.head_dim = 64;
+        assert!(!rec.validate(&other));
     }
 
     #[test]
     fn validate_rejects_truncated_payload() {
-        let cfg = cfg();
-        let full = fake_full(&cfg);
-        let mut rec =
-            KvRecord::from_full_buffer(&cfg, "p", vec![1, 2, 3], vec![1.0], &full);
-        rec.kv = Arc::new(vec![0.0; 5]);
-        assert!(!rec.validate(&cfg));
+        let a = arena();
+        let v = view_of(&a, 3);
+        let mut rec = KvRecord::from_view("p", vec![1, 2, 3], vec![1.0], &v);
+        rec.kv.truncate(1); // payload now shorter than the token list
+        assert!(!rec.validate(&cfg()));
     }
 
     #[test]
     fn zero_len_record() {
-        let cfg = cfg();
-        let full = fake_full(&cfg);
-        let rec = KvRecord::from_full_buffer(&cfg, "", vec![], vec![1.0], &full);
+        let a = arena();
+        let v = a.new_view();
+        let rec = KvRecord::from_view("", vec![], vec![1.0], &v);
         assert_eq!(rec.kv_bytes(), 0);
-        assert!(rec.validate(&cfg));
+        assert_eq!(rec.kv_blocks(), 0);
+        assert!(rec.validate(&cfg()));
     }
 }

@@ -95,13 +95,9 @@ impl KvStore {
         // store entirely and still be admitted — by design: one giant entry
         // is better than none).
         while !self.entries.is_empty() && self.would_overflow(bytes) {
-            if let Some(victim) = self.pick_victim() {
-                let rec = self.peek(victim).expect("victim exists");
-                self.remove(victim);
-                self.stats.evictions += 1;
-                evicted.push((victim, rec));
-            } else {
-                break;
+            match self.evict_one() {
+                Some(pair) => evicted.push(pair),
+                None => break,
             }
         }
         let id = self.next_id;
@@ -146,6 +142,17 @@ impl KvStore {
             .iter()
             .min_by_key(|(id, e)| (score(e), **id))
             .map(|(id, _)| *id)
+    }
+
+    /// Evict one entry by the configured policy (external pressure, e.g.
+    /// the KV arena running low on blocks). Returns the victim so the
+    /// caller can drop it from its index/radix structures.
+    pub fn evict_one(&mut self) -> Option<(u64, Arc<KvRecord>)> {
+        let victim = self.pick_victim()?;
+        let rec = self.peek(victim)?;
+        self.remove(victim);
+        self.stats.evictions += 1;
+        Some((victim, rec))
     }
 
     /// Remove an entry explicitly. Returns whether it existed.
@@ -203,18 +210,24 @@ impl KvStore {
 mod tests {
     use super::*;
     use crate::config::ModelConfig;
+    use crate::kvcache::{KvArena, KvView};
+
+    thread_local! {
+        // one generously-sized arena per test thread; records are tiny
+        static ARENA: KvArena = KvArena::new(&ModelConfig::nano(), 16, 2048);
+    }
 
     fn rec(len: usize) -> KvRecord {
-        let cfg = ModelConfig::nano();
-        KvRecord {
-            text: format!("prompt-{len}"),
-            tokens: (0..len as u32).collect(),
-            embedding: vec![1.0],
-            kv: Arc::new(vec![0.0; cfg.n_layer * 2 * cfg.n_head * len * cfg.head_dim]),
-            n_layer: cfg.n_layer,
-            n_head: cfg.n_head,
-            head_dim: cfg.head_dim,
-        }
+        ARENA.with(|a| {
+            let g = a.geometry();
+            let data = vec![0.0f32; g.elems_per_token() * len];
+            KvRecord {
+                text: format!("prompt-{len}"),
+                tokens: (0..len as u32).collect(),
+                embedding: vec![1.0],
+                kv: KvView::from_contiguous(a, &data, len).unwrap(),
+            }
+        })
     }
 
     fn store(policy: EvictionPolicy, max_entries: usize) -> KvStore {

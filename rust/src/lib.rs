@@ -5,10 +5,11 @@
 //! three-layer Rust + JAX + Pallas system:
 //!
 //! * **L3 (this crate)** — the coordinator: request routing, the
-//!   cross-prompt KV cache ([`kvcache`]), embedding retrieval ([`index`]),
-//!   exact-prefix matching ([`prefix`]), the recycling decision
-//!   ([`recycler`]), scheduling/batching ([`coordinator`]) and a TCP server
-//!   ([`server`]).
+//!   cross-prompt KV cache ([`kvcache`]) over a paged block arena
+//!   ([`kvcache::arena`]) so cache hits attach by refcount instead of
+//!   memcpy, embedding retrieval ([`index`]), exact-prefix matching
+//!   ([`prefix`]), the recycling decision ([`recycler`]),
+//!   scheduling/batching ([`coordinator`]) and a TCP server ([`server`]).
 //! * **L2 (python/compile/model.py)** — a GPT-2-family decoder with the KV
 //!   cache as an explicit `[L, 2, H, S, D]` argument, AOT-lowered to HLO
 //!   text once at build time.
@@ -42,7 +43,7 @@ pub mod prelude {
     pub use crate::config::ModelConfig;
     pub use crate::engine::{Engine, ForwardModel, Generated};
     pub use crate::error::Error;
-    pub use crate::kvcache::{KvRecord, KvStore};
+    pub use crate::kvcache::{KvArena, KvRecord, KvStore, KvView};
     pub use crate::recycler::{RecyclePolicy, Recycler};
     pub use crate::runtime::Runtime;
     pub use crate::tokenizer::Tokenizer;

@@ -12,10 +12,9 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
-
 use recycle_serve::bench::{format_table, paper_cache_prompts, paper_test_prompts,
                            run_comparison, EvalOptions, Workload};
+use recycle_serve::error::{Error, Result};
 use recycle_serve::config::{CacheConfig, ServerConfig};
 use recycle_serve::coordinator::Coordinator;
 use recycle_serve::engine::Engine;
@@ -61,7 +60,9 @@ impl Args {
     fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
         match self.flags.get(key) {
             None => Ok(default),
-            Some(v) => v.parse().with_context(|| format!("--{key} must be a number")),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key} must be a number"))),
         }
     }
 
@@ -74,8 +75,9 @@ impl Args {
 /// PJRT handles (the coordinator worker).
 fn build_recycler(artifacts: &PathBuf, policy: RecyclePolicy, cache: CacheConfig)
                   -> Result<Recycler<Runtime>> {
-    let rt = Runtime::load(artifacts)
-        .with_context(|| format!("loading artifacts from {}", artifacts.display()))?;
+    let rt = Runtime::load(artifacts).map_err(|e| {
+        Error::Config(format!("loading artifacts from {}: {e}", artifacts.display()))
+    })?;
     let tokenizer = rt.tokenizer();
     Ok(Recycler::new(
         Engine::new(rt),
@@ -89,7 +91,7 @@ fn build_recycler(artifacts: &PathBuf, policy: RecyclePolicy, cache: CacheConfig
 fn cmd_serve(args: &Args) -> Result<()> {
     let artifacts = PathBuf::from(args.get("artifacts", "artifacts"));
     let policy = RecyclePolicy::parse(&args.get("policy", "strict"))
-        .context("--policy must be strict|radix|off")?;
+        .ok_or_else(|| Error::Config("--policy must be strict|radix|off".into()))?;
     let cache = CacheConfig {
         max_entries: args.get_usize("max-entries", 64)?,
         compress: args.has("compress"),
@@ -128,7 +130,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let results = PathBuf::from(args.get("results", "results"));
     std::fs::create_dir_all(&results)?;
     let policy = RecyclePolicy::parse(&args.get("policy", "strict"))
-        .context("--policy must be strict|radix|off")?;
+        .ok_or_else(|| Error::Config("--policy must be strict|radix|off".into()))?;
 
     let rt0 = Runtime::load(&artifacts)?;
     let tokenizer = rt0.tokenizer();
@@ -191,7 +193,7 @@ fn main() -> Result<()> {
             eprintln!("  serve --listen 127.0.0.1:7077 --policy strict|radix|off");
             eprintln!("  eval  --data data --results results --max-new 32");
             eprintln!("  info");
-            bail!("no command given");
+            Err(Error::Config("no command given".into()))
         }
     }
 }

@@ -4,8 +4,9 @@
 //!  1. embed the prompt,
 //!  2. retrieve the most similar cached prompt (`i* = argmax <e_i, e_t>`),
 //!  3. exact-prefix token test (`r == k`, strict),
-//!  4. on success inject the cached `past_key_values` and feed only the
-//!     suffix; otherwise run the baseline path,
+//!  4. on success *attach* the cached `past_key_values` — a block-table
+//!     clone over the shared [`KvArena`], O(prefix blocks), no tensor
+//!     copy — and feed only the suffix; otherwise run the baseline path,
 //!  5. optionally insert the new prompt's KV into the cache (the paper
 //!     builds the cache in a separate offline pass — [`Recycler::warm`] —
 //!     but online population is the serving-system generalization).
@@ -25,7 +26,7 @@ use crate::config::{CacheConfig, ModelConfig};
 use crate::engine::{Engine, ForwardModel};
 use crate::error::Result;
 use crate::index::{cosine, Embedder, FlatIndex, NgramEmbedder};
-use crate::kvcache::{KvRecord, KvStore};
+use crate::kvcache::{KvArena, KvRecord, KvStore, KvView};
 use crate::metrics::RequestRow;
 use crate::prefix::{reuse_depth, RadixTree};
 use crate::tokenizer::Tokenizer;
@@ -144,6 +145,11 @@ impl<M: ForwardModel> Recycler<M> {
         &self.engine
     }
 
+    /// The paged KV arena shared by the engine and every cache record.
+    pub fn arena(&self) -> &KvArena {
+        self.engine.arena()
+    }
+
     pub fn store(&self) -> &KvStore {
         &self.store
     }
@@ -178,24 +184,44 @@ impl<M: ForwardModel> Recycler<M> {
         Ok(n)
     }
 
+    /// Evict cache entries until the arena has headroom for one worst-case
+    /// request (a full-context sequence). Cached records pin blocks; under
+    /// sustained population pressure the cache must shrink rather than
+    /// starve live requests into `ArenaExhausted` failures. Blocks shared
+    /// with other records are only truly freed when the last holder goes,
+    /// so this loops (bounded by the store size).
+    fn ensure_arena_headroom(&mut self) {
+        // Cap the target at half the arena: a deliberately tiny arena
+        // (capacity below one full-context sequence) must not drain the
+        // cache to empty on every request chasing unreachable headroom.
+        let arena = self.engine.arena();
+        let need = arena
+            .blocks_for(self.engine.config().max_seq)
+            .min(arena.capacity_blocks() / 2);
+        while self.engine.arena().free_blocks() < need && !self.store.is_empty() {
+            let Some((id, rec)) = self.store.evict_one() else { break };
+            self.index.remove(id);
+            self.radix.remove(&rec.tokens);
+            self.tokens_of.remove(&id);
+        }
+    }
+
     /// Prefill a prompt and insert its KV record into the cache.
     pub fn insert_prompt(&mut self, text: &str) -> Result<u64> {
+        self.ensure_arena_headroom();
         let ids = self.tokenizer.encode(text);
         let mut kv = self.engine.empty_kv();
         self.engine.prefill(&ids, &mut kv, 0)?;
-        Ok(self.admit(text, ids, kv))
+        Ok(self.admit(text, ids, &kv))
     }
 
-    /// Admit a prefilled (text, ids, full-kv) into store + index + radix.
-    fn admit(&mut self, text: &str, ids: Vec<u32>, full_kv: Vec<f32>) -> u64 {
+    /// Admit a prefilled (text, ids, kv-view) into store + index + radix.
+    /// The record *shares* the view's blocks (trimmed to the prompt) — no
+    /// tensor copy; a served request and its cache entry hold the same
+    /// physical prefix, copy-on-write.
+    fn admit(&mut self, text: &str, ids: Vec<u32>, kv: &KvView) -> u64 {
         let emb = self.embedder.embed(text);
-        let rec = KvRecord::from_full_buffer(
-            self.engine.config(),
-            text,
-            ids.clone(),
-            emb.clone(),
-            &full_kv,
-        );
+        let rec = KvRecord::from_view(text, ids.clone(), emb.clone(), kv);
         let (id, evicted) = self.store.insert(rec);
         for (eid, erec) in evicted {
             self.index.remove(eid);
@@ -270,13 +296,17 @@ impl<M: ForwardModel> Recycler<M> {
         admit_full: bool,
     ) -> Result<Outcome> {
         let sw = Stopwatch::start();
+        // Shed cache entries first if the arena is running low — a live
+        // request must never starve on blocks pinned by cold cache state.
+        self.ensure_arena_headroom();
         let emb = self.embedder.embed(prompt);
         let (hit, similarity) = self.lookup(&ids, &emb);
 
         let (kv, cur_len, cache_hit, depth) = match hit {
             Some((rec, depth)) => {
-                let kv = rec.to_full_buffer(self.engine.config());
-                (kv, depth, true, depth)
+                // Zero-copy injection: attach the record's block table
+                // (refcount bumps, O(prefix blocks) — no tensor memcpy).
+                (rec.attach(), depth, true, depth)
             }
             None => (self.engine.empty_kv(), 0, false, 0),
         };
@@ -287,14 +317,16 @@ impl<M: ForwardModel> Recycler<M> {
             .generate(&ids, kv, cur_len, max_new_tokens, want_capture)?;
 
         if let Some(prompt_kv) = g.prompt_kv {
-            self.admit(prompt, ids.clone(), prompt_kv);
+            self.admit(prompt, ids.clone(), &prompt_kv);
         }
         if admit_full && self.populate_cache {
             // Cache prompt + response (token-exact), the session fast path.
+            // The record shares the request's final view — turn N+1's
+            // attach reuses turn N's blocks outright.
             let mut full_ids = ids.clone();
             full_ids.extend_from_slice(&g.ids);
             let full_text = format!("{prompt}{}", self.tokenizer.decode(&g.ids));
-            self.admit(&full_text, full_ids, g.final_kv.clone());
+            self.admit(&full_text, full_ids, &g.final_kv);
         }
 
         Ok(Outcome {
@@ -427,6 +459,71 @@ mod tests {
         assert_eq!(r.cache_len(), 1);
         let out = r.generate(TEST, 2).unwrap(); // now hits
         assert!(out.cache_hit);
+    }
+
+    #[test]
+    fn arena_pressure_sheds_cache_instead_of_failing_requests() {
+        // A deliberately tiny arena: room for ~3 full-context sequences.
+        // Sustained online population must evict cache entries to keep
+        // serving, never surface ArenaExhausted to a request.
+        let cfg = ModelConfig::nano();
+        let arena = crate::kvcache::KvArena::new(&cfg, 16, 3 * cfg.max_seq / 16);
+        let engine = Engine::with_arena(MockModel::new(cfg), arena);
+        let mut r = Recycler::new(
+            engine,
+            toy_tokenizer(),
+            Box::new(NgramEmbedder::new(64)),
+            CacheConfig {
+                max_entries: 0, // unbounded by count: only arena pressure evicts
+                ..Default::default()
+            },
+            RecyclePolicy::Strict,
+        );
+        for i in 0..24 {
+            let prompt = format!("distinct prompt number {i} padded with several words");
+            let out = r.generate(&prompt, 3);
+            assert!(out.is_ok(), "request {i} failed under arena pressure: {out:?}");
+        }
+        assert!(r.store().stats().evictions > 0, "pressure must have evicted");
+        assert!(r.cache_len() >= 1, "cache still serves after shedding");
+        // structures stayed in lockstep through pressure evictions
+        assert_eq!(r.index.len(), r.store.len());
+        assert_eq!(r.radix.len(), r.store.len());
+        assert_eq!(r.tokens_of.len(), r.store.len());
+    }
+
+    #[test]
+    fn session_turns_share_prefix_blocks() {
+        // turn N+1's cached record must physically share turn N's blocks
+        // (the arena's raison d'être) rather than duplicate them.
+        let mut r = recycler(RecyclePolicy::Strict);
+        let ids1 = r.tokenizer().encode(CACHE);
+        let out1 = r.generate_ids(CACHE, ids1.clone(), 4, true).unwrap();
+        assert_eq!(r.cache_len(), 1);
+
+        let full_text1 = format!("{CACHE}{}", out1.text);
+        let mut ids2 = ids1.clone();
+        ids2.extend_from_slice(&out1.ids);
+        let seg = " tell me more";
+        let prompt2 = format!("{full_text1}{seg}");
+        ids2.extend(r.tokenizer().encode(seg));
+        let out2 = r.generate_ids(&prompt2, ids2, 4, true).unwrap();
+        assert!(out2.cache_hit, "turn 2 must reuse turn 1's KV");
+        assert_eq!(r.cache_len(), 2);
+
+        let entry_ids = r.store().ids();
+        let rec1 = r.store().peek(entry_ids[0]).unwrap();
+        let rec2 = r.store().peek(entry_ids[1]).unwrap();
+        // every fully-covered block of turn 1 is the SAME physical block in
+        // turn 2's record (the boundary block may have copied on write)
+        let bt = r.arena().block_tokens();
+        let shared_blocks = rec1.token_len() / bt;
+        assert!(shared_blocks >= 1, "workload too small to share blocks");
+        assert_eq!(
+            rec2.kv.block_ids()[..shared_blocks],
+            rec1.kv.block_ids()[..shared_blocks],
+            "prefix blocks must be shared, not copied"
+        );
     }
 
     #[test]

@@ -10,6 +10,7 @@ use std::path::Path;
 use crate::config::ModelConfig;
 use crate::error::{Error, Result};
 use crate::index::Embedder;
+use crate::kvcache::KvView;
 
 use super::artifacts::{load_weights, Manifest};
 use super::client::Client;
@@ -85,24 +86,25 @@ impl ForwardExec {
     /// Run one forward chunk.
     ///
     /// `tokens.len()` must equal a bucket size (right-pad before calling);
-    /// `valid_len` of them are real. `kv` is the full host KV buffer
-    /// `[L, 2, H, S, D]`; the returned rows are spliced into it at
-    /// `cur_len`. Returns the logits `[C, V]` (flat, row-major).
+    /// `valid_len` of them are real. `kv` is the paged host KV view; the
+    /// gather/scatter shim at this boundary keeps backend semantics
+    /// identical to the old dense buffer: the live prefix is gathered into
+    /// a seq-bucketed dense scratch (zero-padded past `cur_len`), and the
+    /// returned rows are scattered back into the view at `cur_len`.
+    /// Returns the logits `[C, V]` (flat, row-major).
     pub fn forward_chunk(
         &self,
         tokens: &[u32],
         valid_len: usize,
-        kv: &mut [f32],
+        kv: &mut KvView,
         cur_len: usize,
     ) -> Result<Vec<f32>> {
         let c = tokens.len();
         let [l, two, h, s, d] = self.cfg.kv_shape();
-        if kv.len() != self.cfg.kv_elems() {
-            return Err(Error::ShapeMismatch(format!(
-                "kv buffer has {} elems, expected {}",
-                kv.len(),
-                self.cfg.kv_elems()
-            )));
+        if !kv.geometry().matches(&self.cfg) {
+            return Err(Error::ShapeMismatch(
+                "kv view geometry does not match the model".into(),
+            ));
         }
         if valid_len == 0 || valid_len > c {
             return Err(Error::ShapeMismatch(format!(
@@ -113,6 +115,12 @@ impl ForwardExec {
             // dynamic_update_slice would clamp and silently corrupt: refuse.
             return Err(Error::ContextExhausted(cur_len + c));
         }
+        if cur_len > kv.len() {
+            return Err(Error::ShapeMismatch(format!(
+                "kv view valid for {} positions, cur_len {cur_len}",
+                kv.len()
+            )));
+        }
         // Seq-bucket selection: the smallest exported KV capacity covering
         // the live span. Short contexts upload (and the attention kernel
         // scans) a fraction of the full window — the §Perf optimization.
@@ -122,18 +130,14 @@ impl ForwardExec {
         let tokens_i32: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
         let tok_buf = self.client.upload_i32(&tokens_i32, &[c])?;
         let valid_buf = self.client.upload_i32_scalar(valid_len as i32)?;
-        let kv_buf = if sq == s {
-            self.client.upload_f32(kv, &[l, two, h, s, d])?
-        } else {
-            // Strided copy of the first sq rows of every (layer, k/v, head)
-            // plane into the reusable scratch, then upload the small buffer.
+        let kv_buf = {
+            // Gather the live prefix from the paged view into the reusable
+            // dense scratch (rows past cur_len stay zero — the attention
+            // mask never reads them as real context).
             let mut scratch = self.scratch.borrow_mut();
             scratch.clear();
-            scratch.reserve(l * two * h * sq * d);
-            for plane in 0..l * two * h {
-                let src = plane * s * d;
-                scratch.extend_from_slice(&kv[src..src + sq * d]);
-            }
+            scratch.resize(l * two * h * sq * d, 0.0);
+            kv.gather_into(&mut scratch[..], sq, cur_len);
             self.client.upload_f32(&scratch, &[l, two, h, sq, d])?
         };
         let cur_buf = self.client.upload_i32_scalar(cur_len as i32)?;
@@ -161,19 +165,10 @@ impl ForwardExec {
         if rows.len() != l * two * h * c * d {
             return Err(Error::ShapeMismatch("bad kv rows size".into()));
         }
-        // Splice rows [L,2,H,C,D] into kv [L,2,H,S,D] at position cur_len.
-        // Only the valid_len real rows are written (the padded tail is
-        // garbage by contract).
-        for li in 0..l {
-            for kvi in 0..two {
-                for hi in 0..h {
-                    let src = ((li * two + kvi) * h + hi) * c * d;
-                    let dst = ((li * two + kvi) * h + hi) * s * d + cur_len * d;
-                    kv[dst..dst + valid_len * d]
-                        .copy_from_slice(&rows[src..src + valid_len * d]);
-                }
-            }
-        }
+        // Scatter rows [L,2,H,C,D] into the paged view at cur_len. Only the
+        // valid_len real rows are written (the padded tail is garbage by
+        // contract); shared boundary blocks COW inside the view.
+        kv.scatter_chunk(&rows, c, valid_len, cur_len)?;
         Ok(logits)
     }
 }

@@ -10,23 +10,47 @@
 //! outputs: (logits f32[C,V], new_kv_rows f32[L,2,H,C,D])
 //! ```
 //!
-//! The engine owns the authoritative *host* KV buffer; the runtime uploads
-//! it per call and splices the returned rows back in — returning only the
-//! chunk's rows (not the whole buffer) halves device<->host traffic.
+//! The engine owns the authoritative *host* KV as a paged
+//! [`KvView`](crate::kvcache::KvView); the runtime gathers the live prefix
+//! into a seq-bucketed dense scratch per call and scatters the returned
+//! rows back into the view — returning only the chunk's rows (not the
+//! whole buffer) halves device<->host traffic, and the gather uploads only
+//! the smallest exported KV capacity covering the live span.
+//!
+//! # Feature gating
+//!
+//! The PJRT backend needs the `xla` crate plus the native xla_extension
+//! library, neither of which is in the offline vendor set. The code sits
+//! behind the off-by-default `pjrt` cargo feature and the `xla` dependency
+//! is deliberately undeclared so default builds resolve offline — enabling
+//! the feature requires also adding an `xla` line to `[dependencies]` in
+//! Cargo.toml. Without it this module compiles an API-identical stub whose
+//! [`Runtime::load`] reports the missing backend, so every caller (CLI,
+//! examples, benches, integration tests) builds and degrades gracefully to
+//! the mock-model path.
 
 mod artifacts;
+#[cfg(feature = "pjrt")]
 mod client;
+#[cfg(feature = "pjrt")]
 mod executor;
+#[cfg(not(feature = "pjrt"))]
+mod stub;
 
 pub use artifacts::{Manifest, TensorMeta};
+#[cfg(feature = "pjrt")]
 pub use client::Client;
+#[cfg(feature = "pjrt")]
 pub use executor::{EmbedExec, ForwardExec, HloEmbedder};
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{EmbedExec, ForwardExec, HloEmbedder};
 
 use std::path::Path;
 
 use crate::config::ModelConfig;
 use crate::engine::ForwardModel;
 use crate::error::Result;
+use crate::kvcache::KvView;
 use crate::tokenizer::Tokenizer;
 
 /// The fully-loaded serving runtime: tokenizer + forward executables +
@@ -40,6 +64,7 @@ pub struct Runtime {
 
 impl Runtime {
     /// Load everything from an artifact directory (built by `make artifacts`).
+    #[cfg(feature = "pjrt")]
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref();
         let manifest = Manifest::load(dir)?;
@@ -54,6 +79,20 @@ impl Runtime {
             forward,
             embed,
         })
+    }
+
+    /// Built without the `pjrt` feature: still validates the artifact
+    /// directory (so "artifacts missing" stays the clearest error), then
+    /// reports the absent backend.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let _ = Manifest::load(dir.as_ref())?;
+        Err(crate::error::Error::Xla(
+            "recycle-serve was built without the `pjrt` feature; add the `xla` \
+             dependency to Cargo.toml and rebuild with --features pjrt \
+             (requires the native xla_extension library)"
+                .into(),
+        ))
     }
 
     pub fn config(&self) -> &ModelConfig {
@@ -86,7 +125,7 @@ impl ForwardModel for Runtime {
         &self,
         tokens: &[u32],
         valid_len: usize,
-        kv: &mut [f32],
+        kv: &mut KvView,
         cur_len: usize,
     ) -> Result<Vec<f32>> {
         self.forward.forward_chunk(tokens, valid_len, kv, cur_len)

@@ -1,0 +1,78 @@
+//! API-identical stand-ins for the PJRT executors, compiled when the
+//! `pjrt` feature is off (the `xla` crate and its native xla_extension are
+//! not in the offline vendor set). Nothing here is constructible through
+//! public paths — [`super::Runtime::load`] refuses first — but the types
+//! keep every downstream caller (CLI, examples, benches, integration
+//! tests) compiling unchanged, per the "stub or gate missing deps" rule.
+
+use crate::config::ModelConfig;
+use crate::error::{Error, Result};
+use crate::index::Embedder;
+use crate::kvcache::KvView;
+
+fn disabled() -> Error {
+    Error::Xla("PJRT backend disabled (built without the `pjrt` feature)".into())
+}
+
+/// Stub of the per-bucket forward executor.
+pub struct ForwardExec {
+    cfg: ModelConfig,
+}
+
+impl ForwardExec {
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    /// Available chunk bucket sizes (ascending, deduped).
+    pub fn bucket_sizes(&self) -> Vec<usize> {
+        self.cfg.chunk_sizes.clone()
+    }
+
+    pub fn forward_chunk(
+        &self,
+        _tokens: &[u32],
+        _valid_len: usize,
+        _kv: &mut KvView,
+        _cur_len: usize,
+    ) -> Result<Vec<f32>> {
+        Err(disabled())
+    }
+}
+
+/// Stub of the sentence-embedding executable.
+pub struct EmbedExec {
+    cfg: ModelConfig,
+}
+
+impl EmbedExec {
+    pub fn embed_tokens(&self, _tokens: &[u32]) -> Result<Vec<f32>> {
+        Err(disabled())
+    }
+}
+
+/// Stub of the HLO-backed embedder.
+pub struct HloEmbedder {
+    dim: usize,
+}
+
+impl HloEmbedder {
+    pub fn new(
+        exec: std::sync::Arc<EmbedExec>,
+        _tokenizer: std::sync::Arc<crate::tokenizer::Tokenizer>,
+    ) -> Self {
+        HloEmbedder {
+            dim: exec.cfg.embed_dim,
+        }
+    }
+}
+
+impl Embedder for HloEmbedder {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn embed(&self, _text: &str) -> Vec<f32> {
+        vec![0.0; self.dim]
+    }
+}

@@ -1,11 +1,13 @@
 //! Deterministic fake model.
 //!
 //! The mock satisfies the ForwardModel contract *including the paper's
-//! exactness property*: it stores a marker for each token into the KV
-//! buffer (plane `[layer 0, K, head 0, pos, 0]`) and derives logits purely
+//! exactness property*: it stores a marker for each token into the paged KV
+//! view (plane `[layer 0, K, head 0, pos, 0]`) and derives logits purely
 //! from the markers of the visible prefix — so KV injection behaves exactly
 //! like the real model (recycled == baseline), and corrupted/shifted KV
-//! shows up as divergent outputs.
+//! shows up as divergent outputs. Its reads and writes go through the
+//! [`KvView`] row accessors, exercising the same COW/sharing machinery the
+//! production gather/scatter path uses.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Duration;
@@ -13,6 +15,7 @@ use std::time::Duration;
 use crate::config::ModelConfig;
 use crate::engine::ForwardModel;
 use crate::error::{Error, Result};
+use crate::kvcache::KvView;
 
 pub struct MockModel {
     cfg: ModelConfig,
@@ -49,11 +52,6 @@ impl MockModel {
     pub fn calls(&self) -> usize {
         self.calls.load(Ordering::Relaxed)
     }
-
-    fn marker_index(&self, pos: usize) -> usize {
-        // [L, 2, H, S, D] -> plane (0, 0, 0, pos, 0)
-        pos * self.cfg.head_dim
-    }
 }
 
 impl ForwardModel for MockModel {
@@ -65,7 +63,7 @@ impl ForwardModel for MockModel {
         &self,
         tokens: &[u32],
         valid_len: usize,
-        kv: &mut [f32],
+        kv: &mut KvView,
         cur_len: usize,
     ) -> Result<Vec<f32>> {
         let n = self.calls.fetch_add(1, Ordering::Relaxed) + 1;
@@ -77,8 +75,8 @@ impl ForwardModel for MockModel {
         if !self.cfg.chunk_sizes.contains(&c) {
             return Err(Error::ShapeMismatch(format!("chunk {c} not a bucket")));
         }
-        if kv.len() != self.cfg.kv_elems() {
-            return Err(Error::ShapeMismatch("kv size".into()));
+        if !kv.geometry().matches(&self.cfg) {
+            return Err(Error::ShapeMismatch("kv geometry".into()));
         }
         if cur_len + c > self.cfg.max_seq {
             return Err(Error::ContextExhausted(cur_len + c));
@@ -86,20 +84,24 @@ impl ForwardModel for MockModel {
         if valid_len == 0 || valid_len > c {
             return Err(Error::ShapeMismatch("valid_len".into()));
         }
+        if cur_len > kv.len() {
+            return Err(Error::ShapeMismatch("kv view shorter than cur_len".into()));
+        }
         if !self.delay_per_token.is_zero() {
             std::thread::sleep(self.delay_per_token * valid_len as u32);
         }
-        // Write markers for the new valid tokens.
+        // Write markers for the new valid tokens (COW-aware row writes).
         for (i, &t) in tokens[..valid_len].iter().enumerate() {
-            kv[self.marker_index(cur_len + i)] = (t + 1) as f32;
+            kv.row_mut(0, 0, 0, cur_len + i)?[0] = (t + 1) as f32;
         }
+        kv.commit(cur_len + valid_len);
         // Logits for every chunk row from the visible marker prefix.
         let mut logits = vec![0f32; c * v];
         for i in 0..valid_len {
             let pos = cur_len + i;
             let mut h: u64 = 0xcbf29ce484222325;
             for p in 0..=pos {
-                let m = kv[self.marker_index(p)] as u64;
+                let m = kv.row(0, 0, 0, p)[0] as u64;
                 h = h.wrapping_mul(1000003).wrapping_add(m);
             }
             // Avoid the EOT id so greedy runs don't stop early; ids stay
@@ -114,32 +116,40 @@ impl ForwardModel for MockModel {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kvcache::KvArena;
+
+    fn arena(m: &MockModel) -> KvArena {
+        KvArena::with_defaults(m.config())
+    }
 
     #[test]
     fn chunk_split_invariance() {
-        // one 8-chunk == two calls (8 then 1) for the logits at row 8
+        // one 32-chunk == two calls (8 then 1) for the logits at row 8
         let m = MockModel::new(ModelConfig::nano());
+        let a = arena(&m);
         let ids: Vec<u32> = (10..19).collect();
 
-        let mut kv1 = vec![0f32; m.config().kv_elems()];
+        let mut kv1 = a.new_view();
         let mut padded = ids.clone();
         padded.resize(32, 0);
         let l1 = m.forward_chunk(&padded, 9, &mut kv1, 0).unwrap();
         let v = m.config().vocab_size;
         let row8: Vec<f32> = l1[8 * v..9 * v].to_vec();
 
-        let mut kv2 = vec![0f32; m.config().kv_elems()];
+        let mut kv2 = a.new_view();
         let l2a = m.forward_chunk(&ids[..8], 8, &mut kv2, 0).unwrap();
         let l2b = m.forward_chunk(&ids[8..9], 1, &mut kv2, 8).unwrap();
         assert_eq!(row8, l2b[..v].to_vec());
         drop(l2a);
-        assert_eq!(kv1[..9 * m.config().head_dim], kv2[..9 * m.config().head_dim]);
+        for p in 0..9 {
+            assert_eq!(kv1.row(0, 0, 0, p), kv2.row(0, 0, 0, p), "pos {p}");
+        }
     }
 
     #[test]
     fn injected_failure_fires_once() {
         let m = MockModel::new(ModelConfig::nano()).fail_on_call(2);
-        let mut kv = vec![0f32; m.config().kv_elems()];
+        let mut kv = arena(&m).new_view();
         assert!(m.forward_chunk(&[1], 1, &mut kv, 0).is_ok());
         assert!(m.forward_chunk(&[2], 1, &mut kv, 1).is_err());
         assert!(m.forward_chunk(&[2], 1, &mut kv, 1).is_ok());
@@ -148,11 +158,18 @@ mod tests {
     #[test]
     fn guards_fire() {
         let m = MockModel::new(ModelConfig::nano());
-        let mut kv = vec![0f32; m.config().kv_elems()];
+        let a = arena(&m);
+        let mut kv = a.new_view();
         assert!(m.forward_chunk(&[1, 2], 2, &mut kv, 0).is_err()); // 2 not a bucket
         assert!(m.forward_chunk(&[1], 0, &mut kv, 0).is_err());
-        let mut short = vec![0f32; 3];
-        assert!(m.forward_chunk(&[1], 1, &mut short, 0).is_err());
+        // wrong arena geometry
+        let mut other_cfg = ModelConfig::nano();
+        other_cfg.n_layer = 2;
+        let mut wrong = KvArena::new(&other_cfg, 16, 8).new_view();
+        assert!(m.forward_chunk(&[1], 1, &mut wrong, 0).is_err());
+        // context exhaustion
         assert!(m.forward_chunk(&[1], 1, &mut kv, 256).is_err());
+        // cur_len beyond the view's valid prefix
+        assert!(m.forward_chunk(&[1], 1, &mut kv, 5).is_err());
     }
 }

@@ -1,0 +1,54 @@
+//! CRC-32 (IEEE 802.3, the zlib/`crc32fast` polynomial) — a dependency-free
+//! stand-in so persistence checksums don't pull an external crate. The
+//! reflected table is built at compile time; `hash` matches
+//! `crc32fast::hash` bit-for-bit (verified against the standard test
+//! vectors below).
+
+const fn make_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static TABLE: [u32; 256] = make_table();
+
+/// CRC-32 of `bytes` (init 0xFFFFFFFF, reflected, final XOR).
+pub fn hash(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn standard_vectors() {
+        // The canonical CRC-32/ISO-HDLC check values.
+        assert_eq!(hash(b""), 0x0000_0000);
+        assert_eq!(hash(b"123456789"), 0xCBF4_3926);
+        assert_eq!(hash(b"a"), 0xE8B7_BE43);
+        assert_eq!(hash(b"abc"), 0x3524_41C2);
+    }
+
+    #[test]
+    fn sensitive_to_single_bit() {
+        let a = hash(&[0u8; 64]);
+        let mut flipped = [0u8; 64];
+        flipped[31] = 1;
+        assert_ne!(a, hash(&flipped));
+    }
+}

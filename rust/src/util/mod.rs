@@ -1,8 +1,9 @@
 //! Small self-contained substrates the framework depends on.
 //!
-//! These exist because the offline vendor set has no serde/csv/rand crates:
-//! each submodule is a deliberately minimal, fully-tested stand-in.
+//! These exist because the offline vendor set has no serde/csv/rand/crc
+//! crates: each submodule is a deliberately minimal, fully-tested stand-in.
 
+pub mod crc32;
 pub mod csv;
 pub mod json;
 pub mod rng;

@@ -40,18 +40,20 @@ fn kv_record_survives_disk_roundtrip_and_still_recycles() {
     let path = dir.join("entry.kv");
     for compress in [false, true] {
         persist::save(&rec, &path, compress).unwrap();
-        let loaded = persist::load(&path).unwrap();
-        assert_eq!(loaded.tokens, rec.tokens);
-        assert_eq!(*loaded.kv, *rec.kv);
 
-        // Recycle from the *loaded* record through the engine directly.
+        // Recycle from the *loaded* record through a fresh engine (and a
+        // fresh arena — the record materializes into it on load).
         let mut engine = Engine::new(MockModel::new(ModelConfig::nano()));
+        let loaded = persist::load(&path, engine.arena()).unwrap();
+        assert_eq!(loaded.tokens, rec.tokens);
+        assert_eq!(loaded.kv.to_contiguous(), rec.kv.to_contiguous());
+
         let tok = Tokenizer::new(vec![]);
         let test_ids = tok.encode(test_text);
         let base = engine
             .generate(&test_ids, engine.empty_kv(), 0, 6, false)
             .unwrap();
-        let kv = loaded.to_full_buffer(engine.config());
+        let kv = loaded.attach(); // zero-copy injection of the loaded entry
         let rec_out = engine
             .generate(&test_ids, kv, loaded.token_len(), 6, false)
             .unwrap();
@@ -73,7 +75,7 @@ fn corrupted_cache_file_fails_loudly() {
     let n = bytes.len();
     bytes[n / 2] ^= 0x10;
     std::fs::write(&path, &bytes).unwrap();
-    assert!(persist::load(&path).is_err());
+    assert!(persist::load(&path, r.arena()).is_err());
     std::fs::remove_dir_all(&dir).ok();
 }
 

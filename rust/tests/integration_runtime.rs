@@ -11,6 +11,7 @@ use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use recycle_serve::engine::Engine;
+use recycle_serve::kvcache::KvArena;
 use recycle_serve::runtime::Runtime;
 use recycle_serve::tokenizer::Tokenizer;
 use recycle_serve::util::json::{self, Value};
@@ -83,7 +84,8 @@ fn forward_logits_match_python_golden() {
     let chunk = g.req_usize("chunk").unwrap();
     let cfg = rt.config().clone();
 
-    let mut kv = vec![0f32; cfg.kv_elems()];
+    let arena = KvArena::with_defaults(&cfg);
+    let mut kv = arena.new_view();
     let mut padded = prompt_ids.clone();
     padded.resize(chunk, 0);
     use recycle_serve::engine::ForwardModel;
@@ -191,16 +193,17 @@ fn chunk_split_invariance_on_real_model() {
     use recycle_serve::engine::ForwardModel;
     let v = cfg.vocab_size;
     let ids: Vec<u32> = (0..40u32).map(|i| 1 + (i * 7 + 3) % (v as u32 - 1)).collect();
+    let arena = KvArena::with_defaults(&cfg);
 
     // one 64-chunk
-    let mut kv1 = vec![0f32; cfg.kv_elems()];
+    let mut kv1 = arena.new_view();
     let mut padded = ids.clone();
     padded.resize(64, 0);
     let l1 = rt.forward_chunk(&padded, ids.len(), &mut kv1, 0).unwrap();
     let row1 = &l1[(ids.len() - 1) * v..ids.len() * v];
 
     // 32 + 8 real rows of an 8-bucket
-    let mut kv2 = vec![0f32; cfg.kv_elems()];
+    let mut kv2 = arena.new_view();
     rt.forward_chunk(&ids[..32], 32, &mut kv2, 0).unwrap();
     let l2 = rt.forward_chunk(&ids[32..40], 8, &mut kv2, 32).unwrap();
     let row2 = &l2[7 * v..8 * v];
@@ -213,16 +216,20 @@ fn chunk_split_invariance_on_real_model() {
             row2[i]
         );
     }
-    // KV buffers agree on the live region
-    let [l, two, h, s, d] = cfg.kv_shape();
+    // KV views agree on the live region
+    let [l, two, h, _s, d] = cfg.kv_shape();
     for li in 0..l {
         for t in 0..two {
             for hi in 0..h {
-                let base = ((li * two + t) * h + hi) * s * d;
-                for x in 0..40 * d {
-                    let a = kv1[base + x];
-                    let b = kv2[base + x];
-                    assert!((a - b).abs() < 1e-4, "kv[{li},{t},{hi},{x}]");
+                for pos in 0..40 {
+                    let a = kv1.row(li, t, hi, pos);
+                    let b = kv2.row(li, t, hi, pos);
+                    for x in 0..d {
+                        assert!(
+                            (a[x] - b[x]).abs() < 1e-4,
+                            "kv[{li},{t},{hi},{pos},{x}]"
+                        );
+                    }
                 }
             }
         }
@@ -235,7 +242,7 @@ fn context_exhaustion_is_an_error_not_corruption() {
     let rt = Runtime::load(&dir).unwrap();
     let cfg = rt.config().clone();
     use recycle_serve::engine::ForwardModel;
-    let mut kv = vec![0f32; cfg.kv_elems()];
+    let mut kv = KvArena::with_defaults(&cfg).new_view();
     let toks = vec![1u32; 64];
     let err = rt
         .forward_chunk(&toks, 64, &mut kv, cfg.max_seq - 10)

@@ -3,12 +3,10 @@
 //! vendor set). Each property runs over hundreds of seeded random inputs;
 //! failures report the reproducing seed.
 
-use std::sync::Arc;
-
 use recycle_serve::config::{CacheConfig, EvictionPolicy, ModelConfig};
 use recycle_serve::engine::{plan_chunks, Engine};
 use recycle_serve::index::FlatIndex;
-use recycle_serve::kvcache::{persist, BlockPool, KvRecord, KvStore};
+use recycle_serve::kvcache::{persist, BlockPool, KvArena, KvRecord, KvStore, KvView};
 use recycle_serve::prefix::{common_prefix_len, reuse_depth, RadixTree};
 use recycle_serve::prop_assert;
 use recycle_serve::testutil::prop::{check, text, tokens};
@@ -188,15 +186,15 @@ fn prop_radix_insert_get_remove() {
 
 // ---------- kv store ----------
 
-fn rec_of(cfg: &ModelConfig, len: usize, tag: usize) -> KvRecord {
+/// A record whose paged payload lives in `arena` (0.5-filled, `len` tokens).
+fn rec_of(arena: &KvArena, len: usize, tag: usize) -> KvRecord {
+    let g = arena.geometry();
+    let data = vec![0.5f32; g.elems_per_token() * len];
     KvRecord {
         text: format!("p{tag}"),
         tokens: (0..len as u32).collect(),
         embedding: vec![1.0],
-        kv: Arc::new(vec![0.5; cfg.n_layer * 2 * cfg.n_head * len * cfg.head_dim]),
-        n_layer: cfg.n_layer,
-        n_head: cfg.n_head,
-        head_dim: cfg.head_dim,
+        kv: KvView::from_contiguous(arena, &data, len).unwrap(),
     }
 }
 
@@ -204,6 +202,7 @@ fn rec_of(cfg: &ModelConfig, len: usize, tag: usize) -> KvRecord {
 fn prop_store_capacity_and_accounting_invariants() {
     let cfg = ModelConfig::nano();
     check("store invariants", 150, |rng| {
+        let arena = KvArena::new(&cfg, 16, 512);
         let max_entries = rng.range(1, 6);
         let policy = *rng.choice(&EvictionPolicy::ALL);
         let mut store = KvStore::new(CacheConfig {
@@ -216,7 +215,7 @@ fn prop_store_capacity_and_accounting_invariants() {
         for step in 0..40 {
             match rng.below(3) {
                 0 => {
-                    let (id, evicted) = store.insert(rec_of(&cfg, rng.range(1, 30), step));
+                    let (id, evicted) = store.insert(rec_of(&arena, rng.range(1, 30), step));
                     for (eid, _) in &evicted {
                         live.retain(|x| x != eid);
                     }
@@ -249,17 +248,21 @@ fn prop_store_capacity_and_accounting_invariants() {
 fn prop_persist_roundtrip_random_records() {
     let cfg = ModelConfig::nano();
     check("persist roundtrip", 60, |rng| {
+        let arena = KvArena::new(&cfg, 16, 64);
         let len = rng.range(0, 40);
-        let mut rec = rec_of(&cfg, len, 1);
+        let mut rec = rec_of(&arena, len, 1);
         rec.text = text(rng, 50);
         rec.embedding = (0..rng.range(1, 20)).map(|_| rng.f64() as f32).collect();
         let compress = rng.chance(0.5);
         let buf = persist::to_bytes(&rec, compress);
-        let back = persist::from_bytes(&buf).map_err(|e| e.to_string())?;
+        let back = persist::from_bytes(&buf, &arena).map_err(|e| e.to_string())?;
         prop_assert!(back.text == rec.text, "text");
         prop_assert!(back.tokens == rec.tokens, "tokens");
         prop_assert!(back.embedding == rec.embedding, "embedding");
-        prop_assert!(*back.kv == *rec.kv, "payload");
+        prop_assert!(
+            back.kv.to_contiguous() == rec.kv.to_contiguous(),
+            "payload"
+        );
         Ok(())
     });
 }
@@ -268,14 +271,15 @@ fn prop_persist_roundtrip_random_records() {
 fn prop_persist_rejects_random_corruption() {
     let cfg = ModelConfig::nano();
     check("persist corruption", 80, |rng| {
-        let rec = rec_of(&cfg, rng.range(1, 10), 2);
+        let arena = KvArena::new(&cfg, 16, 64);
+        let rec = rec_of(&arena, rng.range(1, 10), 2);
         let mut buf = persist::to_bytes(&rec, rng.chance(0.5));
         let i = rng.below(buf.len());
         let bit = 1u8 << rng.below(8);
         buf[i] ^= bit;
         // either detected as corrupt, or (crc collision: impossible for a
         // single bit flip) — must never return wrong data silently
-        match persist::from_bytes(&buf) {
+        match persist::from_bytes(&buf, &arena) {
             Err(_) => Ok(()),
             Ok(back) => {
                 prop_assert!(false, "bitflip at {i} accepted; len {}", back.kv.len());
@@ -315,6 +319,200 @@ fn prop_block_pool_conservation() {
                 ids.len()
             );
         }
+        Ok(())
+    });
+}
+
+// ---------- kv arena ----------
+
+/// Assert the arena's conservation invariants from a snapshot:
+/// free + referenced == capacity; no block both free and referenced;
+/// no block on the free list twice.
+fn assert_arena_conserved(arena: &KvArena, ctx: &str) -> std::result::Result<(), String> {
+    let (free, refs) = arena.snapshot();
+    let held = refs.iter().filter(|&&c| c > 0).count();
+    prop_assert!(
+        free.len() + held == arena.capacity_blocks(),
+        "{ctx}: free {} + held {held} != capacity {}",
+        free.len(),
+        arena.capacity_blocks()
+    );
+    let mut seen = vec![false; arena.capacity_blocks()];
+    for &id in &free {
+        prop_assert!(refs[id] == 0, "{ctx}: block {id} free with refcount {}", refs[id]);
+        prop_assert!(!seen[id], "{ctx}: block {id} on the free list twice");
+        seen[id] = true;
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_arena_accounting_under_hit_miss_evict_continue() {
+    // Drive a KvStore + arena through random interleavings of the four
+    // serving events — miss (admit a fresh view), hit (attach a record and
+    // extend it COW, as generation does), evict (store removal / capacity
+    // eviction), session-continue (attach, extend, admit the extension) —
+    // with in-flight views outliving records and vice versa. The block
+    // accounting must stay conserved at every step.
+    let cfg = ModelConfig::nano();
+    check("arena hit/miss/evict/continue", 80, |rng| {
+        let arena = KvArena::new(&cfg, 8, 512);
+        let mut store = KvStore::new(CacheConfig {
+            max_entries: rng.range(1, 5),
+            max_bytes: 0,
+            eviction: *rng.choice(&EvictionPolicy::ALL),
+            ..Default::default()
+        });
+        let mut inflight: Vec<KvView> = Vec::new();
+        for step in 0..60 {
+            match rng.below(5) {
+                // miss: prefill-like fresh view, admitted to the cache
+                // (skipped under arena pressure, like a real admit would be)
+                0 => {
+                    let len = rng.range(1, 30);
+                    let g = arena.geometry();
+                    let data = vec![0.5f32; g.elems_per_token() * len];
+                    if let Ok(view) = KvView::from_contiguous(&arena, &data, len) {
+                        let tokens: Vec<u32> = (0..len as u32).collect();
+                        let rec = KvRecord::from_view(
+                            &format!("p{step}"), tokens, vec![1.0], &view,
+                        );
+                        let (_, _evicted) = store.insert(rec);
+                    }
+                }
+                // hit: attach a cached record, extend it like decode does
+                1 => {
+                    let ids = store.ids();
+                    if !ids.is_empty() {
+                        let id = *rng.choice(&ids);
+                        let rec = store.hit(id).expect("live entry");
+                        let mut v = rec.attach();
+                        let extra = rng.range(1, 10);
+                        for pos in v.len()..v.len() + extra {
+                            if v.row_mut(0, 0, 0, pos).is_err() {
+                                break; // arena pressure: stop extending
+                            }
+                            v.commit(pos + 1);
+                        }
+                        if rng.chance(0.6) {
+                            inflight.push(v);
+                        }
+                    }
+                }
+                // session-continue: attach + extend + admit the extension
+                2 => {
+                    let ids = store.ids();
+                    if !ids.is_empty() {
+                        let id = *rng.choice(&ids);
+                        let rec = store.hit(id).expect("live entry");
+                        let mut v = rec.attach();
+                        let extra = rng.range(1, 8);
+                        let target = v.len() + extra;
+                        let mut ok = true;
+                        for pos in v.len()..target {
+                            if v.row_mut(0, 0, 0, pos).is_err() {
+                                ok = false;
+                                break;
+                            }
+                            v.commit(pos + 1);
+                        }
+                        if ok {
+                            let tokens: Vec<u32> = (0..target as u32).collect();
+                            store.insert(KvRecord::from_view(
+                                "cont", tokens, vec![1.0], &v,
+                            ));
+                        }
+                    }
+                }
+                // explicit evict
+                3 => {
+                    let ids = store.ids();
+                    if !ids.is_empty() {
+                        store.remove(*rng.choice(&ids));
+                    }
+                }
+                // request completion: drop an in-flight view
+                _ => {
+                    if !inflight.is_empty() {
+                        let i = rng.below(inflight.len());
+                        inflight.remove(i);
+                    }
+                }
+            }
+            assert_arena_conserved(&arena, &format!("step {step}"))?;
+        }
+        // drain everything: all blocks must return to the pool
+        drop(store);
+        inflight.clear();
+        prop_assert!(
+            arena.free_blocks() == arena.capacity_blocks(),
+            "leak: {} of {} blocks free after drain",
+            arena.free_blocks(),
+            arena.capacity_blocks()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_view_cow_isolation() {
+    // Random writes through a cloned view never alter the donor, and the
+    // arena stays conserved through every COW block copy.
+    let cfg = ModelConfig::nano();
+    check("view COW isolation", 100, |rng| {
+        let arena = KvArena::new(&cfg, 8, 64);
+        let len = rng.range(1, 40);
+        let donor = {
+            let g = arena.geometry();
+            let data: Vec<f32> =
+                (0..g.elems_per_token() * len).map(|i| i as f32 * 0.25).collect();
+            KvView::from_contiguous(&arena, &data, len).unwrap()
+        };
+        let before = donor.to_contiguous();
+        let mut copy = donor.clone();
+        for _ in 0..rng.range(1, 12) {
+            let pos = rng.below(len);
+            let layer = rng.below(cfg.n_layer);
+            let head = rng.below(cfg.n_head);
+            let kv = rng.below(2);
+            copy.row_mut(layer, kv, head, pos)
+                .map_err(|e| e.to_string())?[0] = -1.0;
+        }
+        prop_assert!(donor.to_contiguous() == before, "donor mutated through clone");
+        assert_arena_conserved(&arena, "after COW writes")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_view_truncate_preserves_prefix_and_frees_blocks() {
+    let cfg = ModelConfig::nano();
+    check("view truncate", 100, |rng| {
+        let arena = KvArena::new(&cfg, 8, 64);
+        let len = rng.range(1, 40);
+        let g = arena.geometry().clone();
+        let data: Vec<f32> =
+            (0..g.elems_per_token() * len).map(|i| (i % 53) as f32).collect();
+        let mut v = KvView::from_contiguous(&arena, &data, len).unwrap();
+        let cut = rng.below(len + 1);
+        v.truncate(cut);
+        prop_assert!(v.len() == cut, "len after truncate");
+        prop_assert!(
+            v.num_blocks() == cut.div_ceil(g.block_tokens),
+            "blocks after truncate"
+        );
+        // the surviving prefix reads back unchanged
+        let kept = v.to_contiguous();
+        for plane in 0..g.planes() {
+            for pos in 0..cut {
+                for x in 0..g.head_dim {
+                    let got = kept[(plane * cut + pos) * g.head_dim + x];
+                    let want = data[(plane * len + pos) * g.head_dim + x];
+                    prop_assert!(got == want, "plane {plane} pos {pos} elem {x}");
+                }
+            }
+        }
+        assert_arena_conserved(&arena, "after truncate")?;
         Ok(())
     });
 }
