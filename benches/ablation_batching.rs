@@ -1,0 +1,118 @@
+//! A6 — continuous-batching throughput ablation: decode tokens/s for the
+//! same request stream at batch sizes {1, 4, 8}.
+//!
+//! Runs on the mock backend (no artifacts needed) with a simulated
+//! per-token device cost, so the numbers isolate the *scheduling* effect:
+//! `forward_batch` models one device dispatch per step (cost = slowest
+//! lane), exactly like a batched decode executable — a batch of B near-
+//! identical decode lanes costs ~1 lane, so tokens/s should scale with
+//! occupancy. Batch size 1 reproduces the paper's request-at-a-time
+//! serving and is the baseline every other row must beat.
+//!
+//! ```bash
+//! cargo bench --bench ablation_batching            # full
+//! cargo bench --bench ablation_batching -- --quick # smoke
+//! ```
+
+mod common;
+
+use std::time::Duration;
+
+use recycle_serve::config::ModelConfig;
+use recycle_serve::engine::{DecodeStream, Engine};
+use recycle_serve::testutil::MockModel;
+use recycle_serve::util::timing::Stopwatch;
+
+/// Serve `n_req` prompts through the stream API at a fixed max occupancy,
+/// returning (decoded tokens, wallclock seconds).
+fn run(batch: usize, n_req: usize, prompt_len: usize, max_new: usize) -> (usize, f64) {
+    let cfg = ModelConfig::nano();
+    // 200us/token simulated device cost: decode-dominated workload
+    let model = MockModel::with_delay(cfg.clone(), Duration::from_micros(200));
+    let mut engine = Engine::new(model);
+    let prompts: Vec<Vec<u32>> = (0..n_req)
+        .map(|r| {
+            (0..prompt_len)
+                .map(|t| 1 + ((r * 31 + t * 7) % (cfg.vocab_size - 1)) as u32)
+                .collect()
+        })
+        .collect();
+
+    let sw = Stopwatch::start();
+    let mut decoded = 0usize;
+    let mut next = 0usize;
+    let mut running: Vec<DecodeStream> = Vec::new();
+    loop {
+        // continuous admission: refill free slots between decode steps
+        while running.len() < batch && next < n_req {
+            let kv = engine.empty_kv();
+            running.push(
+                engine
+                    .start_stream(&prompts[next], kv, 0, max_new, false)
+                    .expect("start"),
+            );
+            next += 1;
+        }
+        if running.is_empty() {
+            break;
+        }
+        let mut refs: Vec<&mut DecodeStream> = running.iter_mut().collect();
+        engine.step_streams(&mut refs).expect("step");
+        drop(refs);
+        running.retain(|s| {
+            if s.is_finished() {
+                decoded += s.generated().len();
+                false
+            } else {
+                true
+            }
+        });
+    }
+    (decoded, sw.elapsed_secs())
+}
+
+fn main() {
+    common::banner("ablation_batching", "A6 continuous-batching throughput");
+    let (n_req, max_new) = if common::quick() { (8, 16) } else { (16, 32) };
+    let prompt_len = 8;
+
+    println!(
+        "{:<8} {:>10} {:>10} {:>12} {:>10}",
+        "batch", "requests", "tokens", "elapsed_s", "tok/s"
+    );
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut tps_at = Vec::new();
+    for &batch in &[1usize, 4, 8] {
+        let (tokens, secs) = run(batch, n_req, prompt_len, max_new);
+        let tps = tokens as f64 / secs;
+        println!(
+            "{batch:<8} {n_req:>10} {tokens:>10} {secs:>12.3} {tps:>10.1}"
+        );
+        rows.push(vec![
+            batch.to_string(),
+            n_req.to_string(),
+            tokens.to_string(),
+            format!("{secs:.4}"),
+            format!("{tps:.1}"),
+        ]);
+        tps_at.push((batch, tps));
+    }
+
+    let out = common::results_dir().join("ablation_batching.csv");
+    recycle_serve::util::csv::write_file(
+        &out,
+        &["batch", "requests", "tokens", "elapsed_s", "tokens_per_s"],
+        &rows,
+    )
+    .expect("write csv");
+    println!("\nwrote {}", out.display());
+
+    let base = tps_at[0].1;
+    for &(b, tps) in &tps_at[1..] {
+        println!("batch {b} speedup over batch 1: {:.2}x", tps / base);
+    }
+    assert!(
+        tps_at[1..].iter().all(|&(_, tps)| tps > base),
+        "continuous batching must beat request-at-a-time on the mock backend"
+    );
+}

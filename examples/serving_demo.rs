@@ -151,6 +151,20 @@ fn main() -> Result<()> {
         "engine tokens prefilled: {:>9}       {:>9}",
         stats_off.engine.tokens_prefilled, stats_on.engine.tokens_prefilled
     );
+    // continuous-batching scheduler health: occupancy > 1 means decode
+    // steps were genuinely shared across concurrent requests
+    println!(
+        "decode batch occupancy : {:>9.2}       {:>9.2}  (peak {} / {})",
+        stats_off.scheduler.avg_occupancy(),
+        stats_on.scheduler.avg_occupancy(),
+        stats_off.scheduler.peak_occupancy,
+        stats_on.scheduler.peak_occupancy
+    );
+    println!(
+        "mean queue wait        : {:>7.1}ms       {:>7.1}ms",
+        stats_off.scheduler.avg_queue_wait_ms(),
+        stats_on.scheduler.avg_queue_wait_ms()
+    );
     let speedup = (lat_off.mean() - lat_on.mean()) / lat_off.mean() * 100.0;
     println!("\nmean-latency speedup   : {speedup:.1}%");
     println!(

@@ -99,6 +99,25 @@ impl ModelConfig {
         Ok(())
     }
 
+    /// Is an *unpadded* chunk of `c` tokens (`valid_len == c`, not a
+    /// compiled bucket) legal at position `cur_len`? Exactly when padding
+    /// to the smallest covering bucket would spill past the context
+    /// window — the shape `Engine::prefill` emits for the final chunk of
+    /// a near-window prompt (the `ForwardModel` contract). Both backends
+    /// (MockModel and the PJRT executor) validate against THIS predicate
+    /// so their accept/reject behavior cannot diverge. Relies on
+    /// `chunk_sizes` being ascending, which `validate` enforces.
+    pub fn unpadded_chunk_legal(&self, c: usize, valid_len: usize, cur_len: usize) -> bool {
+        c == valid_len
+            && cur_len + c <= self.max_seq
+            && !self.chunk_sizes.contains(&c)
+            && self
+                .chunk_sizes
+                .iter()
+                .find(|&&b| b >= c)
+                .is_some_and(|&b| cur_len + b > self.max_seq)
+    }
+
     /// Smallest seq bucket that covers `live` positions (falls back to
     /// max_seq, which validation guarantees is the last bucket).
     pub fn seq_bucket_for(&self, live: usize) -> usize {
@@ -199,6 +218,24 @@ mod tests {
                     "seq_buckets":[64,128,256],"eot_id":0}"#;
         let cfg = ModelConfig::from_json(&json::parse(j).unwrap()).unwrap();
         assert_eq!(cfg, ModelConfig::nano());
+    }
+
+    #[test]
+    fn unpadded_chunk_legality() {
+        let mut c = ModelConfig::nano();
+        c.chunk_sizes = vec![8, 32, 64]; // min bucket 8
+        // near the window (251 + 8 > 256): unpadded 5-chunk legal
+        assert!(c.unpadded_chunk_legal(5, 5, 251));
+        // mid-window: padding to 8 fits, so the unpadded shape is illegal
+        assert!(!c.unpadded_chunk_legal(5, 5, 0));
+        // padded (valid_len < c) never qualifies
+        assert!(!c.unpadded_chunk_legal(5, 4, 251));
+        // a chunk that itself spills past the window is never legal
+        assert!(!c.unpadded_chunk_legal(5, 5, 254));
+        // an exact bucket is not "unpadded-special"
+        assert!(!c.unpadded_chunk_legal(8, 8, 250));
+        // larger than every bucket: no covering bucket, not legal
+        assert!(!c.unpadded_chunk_legal(100, 100, 200));
     }
 
     #[test]

@@ -17,6 +17,11 @@ pub struct ServerConfig {
     pub max_batch: usize,
     /// How long the batcher waits to fill a batch before dispatching.
     pub batch_window_ms: u64,
+    /// How long an *idle* scheduler blocks waiting for the first request of
+    /// a batch before re-checking shutdown (was hardcoded to 50 ms). Only
+    /// affects idle-loop wakeup latency — while streams are decoding,
+    /// admission is non-blocking.
+    pub batch_first_wait_ms: u64,
     /// Default max_new_tokens when a request does not specify one.
     pub default_max_new_tokens: usize,
     /// Whether new prompts are inserted into the KV cache after prefill
@@ -31,6 +36,7 @@ impl Default for ServerConfig {
             queue_capacity: 256,
             max_batch: 8,
             batch_window_ms: 2,
+            batch_first_wait_ms: 50,
             default_max_new_tokens: 32,
             populate_cache: true,
         }
@@ -70,6 +76,12 @@ impl ServerConfig {
                 .ok_or_else(|| Error::Config("batch_window_ms must be a number".into()))?
                 as u64;
         }
+        if let Some(x) = v.get("batch_first_wait_ms") {
+            c.batch_first_wait_ms = x
+                .as_usize()
+                .ok_or_else(|| Error::Config("batch_first_wait_ms must be a number".into()))?
+                as u64;
+        }
         if let Some(x) = v.get("populate_cache") {
             c.populate_cache = x
                 .as_bool()
@@ -82,6 +94,11 @@ impl ServerConfig {
     pub fn validate(&self) -> Result<()> {
         if self.max_batch == 0 || self.queue_capacity == 0 {
             return Err(Error::Config("max_batch/queue_capacity must be > 0".into()));
+        }
+        if self.batch_first_wait_ms == 0 {
+            // the idle scheduler blocks for this long between queue polls;
+            // zero would busy-spin a core whenever the server is idle
+            return Err(Error::Config("batch_first_wait_ms must be > 0".into()));
         }
         Ok(())
     }
@@ -100,7 +117,8 @@ mod tests {
     #[test]
     fn parse_overrides() {
         let v = json::parse(
-            r#"{"listen": "0.0.0.0:9", "max_batch": 4, "populate_cache": false}"#,
+            r#"{"listen": "0.0.0.0:9", "max_batch": 4, "populate_cache": false,
+                "batch_first_wait_ms": 7}"#,
         )
         .unwrap();
         let c = ServerConfig::from_json(&v).unwrap();
@@ -108,6 +126,21 @@ mod tests {
         assert_eq!(c.max_batch, 4);
         assert!(!c.populate_cache);
         assert_eq!(c.queue_capacity, 256);
+        assert_eq!(c.batch_first_wait_ms, 7);
+    }
+
+    #[test]
+    fn first_wait_defaults_to_legacy_50ms() {
+        assert_eq!(ServerConfig::default().batch_first_wait_ms, 50);
+        let v = json::parse(r#"{"batch_first_wait_ms": "no"}"#).unwrap();
+        assert!(ServerConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn rejects_zero_first_wait() {
+        // zero would busy-spin the idle worker loop
+        let v = json::parse(r#"{"batch_first_wait_ms": 0}"#).unwrap();
+        assert!(ServerConfig::from_json(&v).is_err());
     }
 
     #[test]

@@ -1,10 +1,12 @@
 //! Batch formation: drain up to `max_batch` requests, waiting at most
-//! `window` for the first and a short follow-up window for stragglers.
+//! `first_wait` for the first and a short follow-up window for stragglers.
 //!
-//! The paper serves batch size 1; the batcher generalizes that (max_batch=1
-//! reproduces the paper exactly). On the single-stream CPU runtime a batch
-//! is still *executed* sequentially — batching here amortizes queue/lock
-//! overhead and groups cache lookups, which is what the ablation measures.
+//! Two entry points serve the continuous-batching scheduler:
+//! [`drain_batch`] blocks (used only while the scheduler is *idle* — the
+//! first wait is `ServerConfig::batch_first_wait_ms`), and [`drain_ready`]
+//! is strictly non-blocking (used while decode streams are in flight, so
+//! admission never stalls running requests). `max_batch = 1` reproduces
+//! the paper's request-at-a-time setting exactly.
 
 use std::time::Duration;
 
@@ -25,6 +27,20 @@ pub fn drain_batch<T>(
     batch.push(first);
     while batch.len() < max_batch {
         match queue.pop_timeout(follow_wait) {
+            Some(item) => batch.push(item),
+            None => break,
+        }
+    }
+    batch
+}
+
+/// Non-blocking drain of up to `max` already-queued items. The scheduler
+/// calls this between decode steps: arrivals join the running set
+/// immediately, requests never wait for the whole batch to finish.
+pub fn drain_ready<T>(queue: &RequestQueue<T>, max: usize) -> Vec<T> {
+    let mut batch = Vec::new();
+    while batch.len() < max {
+        match queue.try_pop() {
             Some(item) => batch.push(item),
             None => break,
         }
@@ -61,5 +77,35 @@ mod tests {
         q.push(8).unwrap();
         let b = drain_batch(&q, 1, Duration::from_millis(5), Duration::from_millis(1));
         assert_eq!(b, vec![7]);
+    }
+
+    #[test]
+    fn first_wait_is_honored_not_hardcoded() {
+        // The idle wait is the caller's first_wait (the coordinator passes
+        // ServerConfig::batch_first_wait_ms), not a baked-in 50 ms. Only a
+        // LOWER bound is asserted — a wait of >= 110 ms is impossible if
+        // the old hardcoded 50 ms were still in effect, and lower bounds
+        // are immune to CI scheduler jitter (which only inflates elapsed).
+        let q: RequestQueue<i32> = RequestQueue::new(8);
+        let t = std::time::Instant::now();
+        let b = drain_batch(&q, 4, Duration::from_millis(120), Duration::from_millis(1));
+        let waited = t.elapsed();
+        assert!(b.is_empty());
+        assert!(waited >= Duration::from_millis(110), "waited {waited:?}");
+    }
+
+    #[test]
+    fn drain_ready_never_blocks() {
+        let q = RequestQueue::new(8);
+        // generous bound: catches an accidental blocking wait without being
+        // sensitive to scheduler jitter
+        let t = std::time::Instant::now();
+        assert!(drain_ready(&q, 4).is_empty());
+        assert!(t.elapsed() < Duration::from_secs(5));
+        for i in 0..3 {
+            q.push(i).unwrap();
+        }
+        assert_eq!(drain_ready(&q, 2), vec![0, 1]);
+        assert_eq!(drain_ready(&q, 2), vec![2]);
     }
 }

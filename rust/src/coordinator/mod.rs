@@ -1,11 +1,21 @@
-//! The serving coordinator: bounded request queue, batching scheduler,
-//! session manager, and the worker loop that drives the recycler.
+//! The serving coordinator: bounded request queue, continuous-batching
+//! scheduler, session manager, and the worker loop that drives the
+//! recycler.
 //!
-//! Threading model (tokio is not in the offline vendor set — and the PJRT
-//! CPU runtime is single-stream anyway): submitters enqueue into a bounded
-//! [`queue::RequestQueue`]; one worker thread drains batches
-//! ([`batcher::drain_batch`]) and executes them sequentially through the
-//! recycler; responses travel back over per-request channels.
+//! Threading model (tokio is not in the offline vendor set): submitters
+//! enqueue into a bounded [`queue::RequestQueue`]; one worker thread runs
+//! the scheduler in [`service`]. Each request is a per-request state
+//! machine — lookup → prefill → decode → finish — held in a running set of
+//! decode streams. Every scheduler tick advances *all* active streams one
+//! token through a single `forward_batch` call ([`crate::engine`]'s
+//! stream API), finished requests reply immediately on their per-request
+//! channel, and new arrivals are admitted between ticks
+//! ([`batcher::drain_ready`], non-blocking) instead of waiting for the
+//! whole batch to drain. Admission is arena-aware
+//! ([`crate::recycler::Recycler::admission_headroom`]) and two turns of
+//! one session never decode concurrently. Batched decode is
+//! token-identical to sequential serving (`max_batch = 1`, the paper's
+//! setting) — property-tested in `rust/tests/properties.rs`.
 
 mod batcher;
 mod queue;
@@ -13,8 +23,8 @@ mod request;
 mod service;
 mod session;
 
-pub use batcher::drain_batch;
+pub use batcher::{drain_batch, drain_ready};
 pub use queue::{QueueError, RequestQueue};
 pub use request::{Request, Response};
 pub use service::{Coordinator, CoordinatorStats};
-pub use session::{SessionManager, Turn};
+pub use session::{truncate_to_window, SessionManager, Turn};

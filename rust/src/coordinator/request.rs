@@ -1,6 +1,7 @@
 //! Request/response types crossing the queue boundary.
 
 use std::sync::mpsc;
+use std::time::Instant;
 
 use crate::recycler::Outcome;
 
@@ -13,6 +14,8 @@ pub struct Request {
     pub session: Option<String>,
     /// Response channel (one-shot).
     pub reply: mpsc::Sender<Response>,
+    /// When the request entered the queue (queue-wait metrics).
+    pub queued_at: Instant,
 }
 
 /// What the worker sends back.

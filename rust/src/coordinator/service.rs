@@ -1,20 +1,38 @@
 //! The coordinator service: worker thread + submission handle.
+//!
+//! The worker runs a **continuous-batching scheduler**: each queued
+//! request becomes a per-request state machine (lookup → prefill → decode
+//! → finish) held in a running set of [`DecodeStream`]s. Every scheduler
+//! tick advances *all* active streams one token through a single
+//! `forward_batch` call, and new arrivals are admitted between ticks —
+//! a short request never waits for a long one to drain, and a
+//! batching-capable backend amortizes per-dispatch overhead across the
+//! whole running set. `max_batch = 1` degenerates to the paper's
+//! request-at-a-time serving; batched decode is token-identical to it
+//! (property-tested in `rust/tests/properties.rs`).
+//!
+//! Admission is arena-aware: while streams are in flight, new requests are
+//! only admitted when [`Recycler::admission_headroom`] holds (cold cache
+//! entries are shed first), so a newcomer cannot starve running decodes of
+//! KV blocks. Two turns of the same session are never decoded
+//! concurrently — the later one is deferred until the earlier commits.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::config::ServerConfig;
-use crate::engine::ForwardModel;
+use crate::engine::{DecodeStream, ForwardModel};
 use crate::error::{Error, Result};
-use crate::metrics::Counters;
-use crate::recycler::{Outcome, Recycler};
+use crate::metrics::{Counters, SchedulerStats};
+use crate::recycler::{Outcome, Recycler, ServeMeta};
 
-use super::batcher::drain_batch;
+use super::batcher::{drain_batch, drain_ready};
 use super::queue::{QueueError, RequestQueue};
 use super::request::{Request, Response};
-use super::session::SessionManager;
+use super::session::{truncate_to_window, SessionManager};
 
 /// Aggregate coordinator statistics.
 #[derive(Debug, Clone, Copy, Default)]
@@ -23,9 +41,12 @@ pub struct CoordinatorStats {
     pub completed: u64,
     pub failed: u64,
     pub rejected: u64,
+    /// Admission waves (scheduler ticks that admitted >= 1 request).
     pub batches: u64,
     /// Engine-level counters snapshot.
     pub engine: Counters,
+    /// Continuous-batching occupancy + queue-wait counters.
+    pub scheduler: SchedulerStats,
     pub cache_entries: usize,
     pub cache_bytes: usize,
     /// Paged-KV arena occupancy (cache records + in-flight requests).
@@ -95,6 +116,7 @@ impl Coordinator {
             max_new_tokens,
             session,
             reply: tx,
+            queued_at: Instant::now(),
         };
         match self.shared.queue.push(req) {
             Ok(()) => {
@@ -152,69 +174,441 @@ impl Drop for Coordinator {
     }
 }
 
+/// One request in flight through the scheduler: its stream plus everything
+/// needed to finish it (session commit, cache admission, reply channel).
+/// Failures are replied-to and dropped where they occur (admission or the
+/// step-retry path), so a slot in `running` is always healthy.
+struct Running {
+    req: Request,
+    prompt_text: String,
+    prompt_ids: Vec<u32>,
+    meta: ServeMeta,
+    stream: DecodeStream,
+}
+
+/// What became of one admission attempt.
+enum Admit {
+    /// Prefilled and decoding — a new running slot.
+    Ready(Box<Running>),
+    /// The arena lacks headroom for this request right now; hold it back
+    /// until running streams free blocks.
+    Defer(Request),
+    /// Tokenization/prefill failed; reply with the message.
+    Fail(Request, String),
+}
+
+/// Gate + tokenize + session-extend + lookup + prefill one request into a
+/// running slot. `headroom_reserved` is `Some(blocks)` while other streams
+/// are decoding (their unconsumed growth): admission then requires arena
+/// headroom for THIS request's estimated prompt + budget on top of that
+/// reserve, so a wave of near-window prompts cannot exhaust the arena
+/// mid-wave and hard-fail requests the sequential loop would have served.
+/// With `None` (idle scheduler) admission always proceeds — `prepare`
+/// sheds cache internally, so serial serving is always possible.
+fn admit_one<M: ForwardModel>(
+    req: Request,
+    recycler: &mut Recycler<M>,
+    sessions: &SessionManager,
+    cfg: &ServerConfig,
+    headroom_reserved: Option<usize>,
+) -> Admit {
+    let max_new = if req.max_new_tokens == 0 {
+        cfg.default_max_new_tokens
+    } else {
+        req.max_new_tokens
+    };
+    let max_seq = recycler.config().max_seq;
+    // Session prompts are cut to this budget before serving (sliding
+    // window below), so both the admission estimate and the truncation
+    // must use the same number.
+    let session_budget = max_seq.saturating_sub(max_new.min(max_seq / 2)).max(1);
+    if let Some(reserved) = headroom_reserved {
+        // Cheap size upper bound BEFORE any transcript cloning or
+        // tokenization: byte length bounds the BPE token count from above
+        // (merges only shrink) and session transcripts report their token
+        // count in O(1). A headroom-deferred request is re-tried every
+        // scheduler tick, so this path must stay O(1); the bound is
+        // conservative, so a request it passes cannot out-size the gate.
+        let est_prompt = match &req.session {
+            // + segment markers ("\nUser: ...\nBot:"); clamped by the
+            // sliding-window budget — gating on the pre-truncation
+            // transcript would permanently defer long-lived sessions and
+            // stall the whole scheduler behind them (Hold::Headroom FIFO)
+            Some(sid) => {
+                (sessions.context_tokens(sid) + req.prompt.len() + 16).min(session_budget)
+            }
+            None => req.prompt.len(),
+        };
+        if !recycler.admission_headroom(est_prompt + max_new, reserved) {
+            return Admit::Defer(req);
+        }
+    }
+    // Session requests continue the transcript at the *token* level; the
+    // previous turn's cached prompt+response KV makes the prefill
+    // incremental (see coordinator::session).
+    let tokenizer = recycler.tokenizer();
+    let (mut prompt_text, mut prompt_ids) = match &req.session {
+        Some(sid) => {
+            let seg = sessions.segment_for(sid, &req.prompt);
+            let (mut text, mut ids) = sessions.state_of(sid);
+            text.push_str(&seg);
+            ids.extend(tokenizer.encode(&seg));
+            (text, ids)
+        }
+        None => (req.prompt.clone(), tokenizer.encode(&req.prompt)),
+    };
+    let is_session = req.session.is_some();
+    if is_session {
+        // Sliding window: keep the transcript suffix when the prompt plus
+        // the generation budget would overflow the context window, so a
+        // long-lived session keeps serving instead of wedging on
+        // PromptTooLong forever. The reserve is capped at half the window
+        // so a huge max_new cannot gut the whole transcript.
+        let budget = session_budget;
+        if prompt_ids.len() > budget {
+            // Hysteresis: cut to HALF the budget, not to its edge —
+            // trimming to the edge would re-truncate every following turn,
+            // and the ever-moving head would never prefix-match a cached
+            // record again (zero KV reuse past the window). A deep cut
+            // lets the next several turns fit untruncated, so turn N+1
+            // admits a post-cut record and turn N+2 onward recycles it
+            // (the re-anchor the session docs promise).
+            let keep = (budget / 2).max(1);
+            truncate_to_window(&mut prompt_ids, keep);
+            // the truncated ids are authoritative; re-derive display text
+            prompt_text = tokenizer.decode(&prompt_ids);
+        }
+    }
+    let started = try_start(recycler, &prompt_text, &prompt_ids, max_new, is_session)
+        .or_else(|e| match e {
+            Error::ArenaExhausted { .. } => {
+                // The cheap headroom pass stops shedding when evictions
+                // stop yielding blocks; an actual allocation failure is
+                // the backstop — drain the cache as far as needed and
+                // retry once (the failed attempt's partial blocks were
+                // released with its stream).
+                recycler.shed_for_tokens(prompt_ids.len() + max_new);
+                try_start(recycler, &prompt_text, &prompt_ids, max_new, is_session)
+            }
+            e => Err(e),
+        });
+    match started {
+        Ok((stream, meta)) => Admit::Ready(Box::new(Running {
+            req,
+            prompt_text,
+            prompt_ids,
+            meta,
+            stream,
+        })),
+        Err(e) => Admit::Fail(req, e.to_string()),
+    }
+}
+
+/// Lookup + prefill: one admission attempt (shared by the primary path and
+/// the shed-and-retry backstop in [`admit_one`]).
+fn try_start<M: ForwardModel>(
+    recycler: &mut Recycler<M>,
+    prompt_text: &str,
+    prompt_ids: &[u32],
+    max_new: usize,
+    admit_full: bool,
+) -> Result<(DecodeStream, ServeMeta)> {
+    let adm = recycler.prepare(prompt_text, prompt_ids, admit_full);
+    let stream = recycler.engine_mut().start_stream(
+        prompt_ids,
+        adm.kv,
+        adm.cur_len,
+        max_new,
+        adm.meta.want_capture,
+    )?;
+    Ok((stream, adm.meta))
+}
+
+/// Why a request sits in the holdback queue.
+#[derive(Clone, Copy)]
+enum Hold {
+    /// An earlier turn of its session is still in flight (or an arena-held
+    /// request is ahead of it); other traffic may pass.
+    Session,
+    /// The arena lacks headroom for it. FIFO applies: no fresh request is
+    /// drained past it, otherwise a stream of small admissible arrivals
+    /// could keep the arena full and starve it forever.
+    Headroom,
+}
+
+/// Is an earlier request of session `sid` still ahead of a candidate?
+/// "Ahead" means: decoding (`running`), already picked this wave
+/// (`arrivals`), waiting in the holdback queue before the candidate
+/// (`deferred[..deferred_limit]`), or re-queued this wave
+/// (`requeue_front`). Turn order within a session is a correctness
+/// invariant — turn N+1's prompt extends turn N's committed ids — so a
+/// candidate must wait behind ALL of these, not just the running set.
+fn session_blocked(
+    sid: &str,
+    running: &[Running],
+    arrivals: &[Request],
+    deferred: &VecDeque<(Request, Hold)>,
+    deferred_limit: usize,
+    requeue_front: &[(Request, Hold)],
+) -> bool {
+    running.iter().any(|r| r.req.session.as_deref() == Some(sid))
+        || arrivals.iter().any(|a| a.session.as_deref() == Some(sid))
+        || deferred
+            .iter()
+            .take(deferred_limit)
+            .any(|(d, _)| d.session.as_deref() == Some(sid))
+        || requeue_front.iter().any(|(d, _)| d.session.as_deref() == Some(sid))
+}
+
+/// Arena blocks the running streams may still consume: each stream's
+/// unwritten decode growth (budget clamped to the window) plus one block
+/// of COW slack for its shared boundary block. Admission reserves this so
+/// a newcomer's prefill cannot eat the blocks in-flight decodes will need.
+fn reserved_growth_blocks<M: ForwardModel>(
+    running: &[Running],
+    recycler: &Recycler<M>,
+) -> usize {
+    let max_seq = recycler.config().max_seq;
+    let arena = recycler.arena();
+    running
+        .iter()
+        .map(|r| {
+            let s = &r.stream;
+            let target = (s.pos() + s.remaining_budget()).min(max_seq);
+            arena
+                .blocks_for(target)
+                .saturating_sub(s.kv().num_blocks())
+                + 1
+        })
+        .sum()
+}
+
 fn worker_loop<M: ForwardModel>(
     shared: Arc<Shared>,
     mut recycler: Recycler<M>,
     cfg: ServerConfig,
 ) {
     let mut sessions = SessionManager::new();
+    let mut running: Vec<Running> = Vec::new();
+    // Requests held back: an earlier turn of their session is still
+    // decoding (turn N+1's prompt extends turn N's committed ids, so the
+    // two must not run concurrently), or the arena lacks headroom.
+    let mut deferred: VecDeque<(Request, Hold)> = VecDeque::new();
     loop {
-        let batch = drain_batch(
-            &shared.queue,
-            cfg.max_batch,
-            Duration::from_millis(50),
-            Duration::from_millis(cfg.batch_window_ms),
-        );
-        if batch.is_empty() {
-            if shared.queue.is_closed() && shared.queue.is_empty() {
+        // --- admission: fill free slots without stalling active streams ---
+        let free = cfg.max_batch.saturating_sub(running.len());
+        let mut arrivals: Vec<Request> = Vec::new();
+        let mut from_deferred = 0usize;
+        // FIFO over the arena gate: while any request is held back for
+        // headroom, no fresh request is drained past it (a stream of small
+        // admissible arrivals could otherwise keep the arena full forever).
+        let headroom_waiting = deferred.iter().any(|(_, h)| matches!(h, Hold::Headroom));
+        if free > 0 {
+            // deferred requests first (their blocking turn may have
+            // finished last tick); a deferred entry also waits behind any
+            // EARLIER deferred entry of its session, so per-session FIFO
+            // holds across the holdback queue too
+            let mut i = 0;
+            while i < deferred.len() && arrivals.len() < free {
+                let blocked = deferred[i].0.session.as_deref().is_some_and(|sid| {
+                    session_blocked(sid, &running, &arrivals, &deferred, i, &[])
+                });
+                if blocked {
+                    i += 1;
+                } else {
+                    arrivals.push(deferred.remove(i).expect("index in bounds").0);
+                }
+            }
+            from_deferred = arrivals.len();
+            // Only pull fresh requests off the bounded queue while the
+            // holdback set is small: `deferred` sits outside the queue's
+            // capacity accounting, so draining into it without bound would
+            // quietly disable the submit-side backpressure
+            // (QueueError::Full) the sequential loop provided.
+            let want = if headroom_waiting || deferred.len() >= cfg.max_batch {
+                0
+            } else {
+                free - arrivals.len()
+            };
+            if want > 0 {
+                let fresh = if running.is_empty() && arrivals.is_empty() {
+                    // idle: block briefly for the first request, then a
+                    // short follow-up window for stragglers
+                    drain_batch(
+                        &shared.queue,
+                        want,
+                        Duration::from_millis(cfg.batch_first_wait_ms),
+                        Duration::from_millis(cfg.batch_window_ms),
+                    )
+                } else {
+                    // streams in flight: never block, take what's ready
+                    drain_ready(&shared.queue, want)
+                };
+                arrivals.extend(fresh);
+            }
+        }
+        // Requests held back this wave. Ones that came OUT of `deferred`
+        // (index < from_deferred) must return to its FRONT so they stay
+        // ahead of later arrivals of their session — per-session order is
+        // a correctness invariant; fresh arrivals go to the back.
+        let mut requeue_front: Vec<(Request, Hold)> = Vec::new();
+        let mut admitted_this_wave = false;
+        // Set when a candidate is held for arena headroom this wave:
+        // everything behind it is then held too (FIFO over the gate).
+        let mut headroom_hold = false;
+        for (ai, req) in arrivals.into_iter().enumerate() {
+            let hold_back = |req: Request, hold: Hold,
+                             requeue_front: &mut Vec<(Request, Hold)>,
+                             deferred: &mut VecDeque<(Request, Hold)>| {
+                if ai < from_deferred {
+                    requeue_front.push((req, hold));
+                } else {
+                    deferred.push_back((req, hold));
+                }
+            };
+            if headroom_hold {
+                hold_back(req, Hold::Session, &mut requeue_front, &mut deferred);
+                continue;
+            }
+            let blocked = req.session.as_deref().is_some_and(|sid| {
+                // A candidate pulled from the holdback queue must NOT be
+                // blocked by `deferred`'s remaining same-session entries:
+                // the pull loop took the EARLIEST, so whatever is left of
+                // its session is a strictly later turn (scanning them
+                // would re-block it forever — livelock). Fresh arrivals
+                // wait behind the whole holdback queue.
+                let deferred_ahead = if ai < from_deferred { 0 } else { deferred.len() };
+                session_blocked(sid, &running, &[], &deferred, deferred_ahead,
+                                &requeue_front)
+            });
+            if blocked {
+                hold_back(req, Hold::Session, &mut requeue_front, &mut deferred);
+                continue;
+            }
+            // Arena headroom is re-derived per admission (each inline
+            // prefill pins blocks): the gate inside admit_one compares the
+            // request's estimated prompt + budget against the free blocks
+            // left after reserving the running streams' unconsumed growth.
+            let headroom_reserved = if running.is_empty() {
+                None
+            } else {
+                Some(reserved_growth_blocks(&running, &recycler))
+            };
+            let waited_ms = req.queued_at.elapsed().as_millis() as u64;
+            match admit_one(req, &mut recycler, &sessions, &cfg, headroom_reserved) {
+                Admit::Ready(slot) => {
+                    shared.stats.lock().unwrap().scheduler.note_admission(waited_ms);
+                    running.push(*slot);
+                    admitted_this_wave = true;
+                }
+                Admit::Defer(req) => {
+                    headroom_hold = true;
+                    hold_back(req, Hold::Headroom, &mut requeue_front, &mut deferred);
+                }
+                Admit::Fail(req, msg) => {
+                    shared.stats.lock().unwrap().failed += 1;
+                    let _ = req.reply.send(Response::Err(msg));
+                }
+            }
+        }
+        for held in requeue_front.into_iter().rev() {
+            deferred.push_front(held);
+        }
+        if admitted_this_wave {
+            shared.stats.lock().unwrap().batches += 1;
+        }
+
+        if running.is_empty() {
+            if shared.queue.is_closed() && shared.queue.is_empty() && deferred.is_empty() {
                 break;
             }
             continue;
         }
-        shared.stats.lock().unwrap().batches += 1;
-        for req in batch {
-            let max_new = if req.max_new_tokens == 0 {
-                cfg.default_max_new_tokens
-            } else {
-                req.max_new_tokens
-            };
-            // Session requests continue the transcript at the *token*
-            // level; the previous turn's cached prompt+response KV makes
-            // the prefill incremental (see coordinator::session).
-            let tokenizer = recycler.tokenizer();
-            let (prompt_text, prompt_ids, is_session) = match &req.session {
-                Some(sid) => {
-                    let seg = sessions.segment_for(sid, &req.prompt);
-                    let (mut text, mut ids) = sessions.state_of(sid);
-                    text.push_str(&seg);
-                    ids.extend(tokenizer.encode(&seg));
-                    (text, ids, true)
+
+        // --- one batched decode step over every active stream ---
+        let mut refs: Vec<&mut DecodeStream> = running
+            .iter_mut()
+            .filter(|r| !r.stream.is_finished())
+            .map(|r| &mut r.stream)
+            .collect();
+        if !refs.is_empty() {
+            let step = recycler.engine_mut().step_streams(&mut refs);
+            drop(refs);
+            match step {
+                Ok(report) if report.scheduled > 0 => {
+                    // record the true dispatch occupancy (streams that fed
+                    // the forward), not the pre-drain running-set size
+                    shared.stats.lock().unwrap().scheduler.note_step(report.scheduled);
                 }
-                None => (req.prompt.clone(), tokenizer.encode(&req.prompt), false),
-            };
-            let result =
-                recycler.generate_ids(&prompt_text, prompt_ids.clone(), max_new, is_session);
-            let mut stats = shared.stats.lock().unwrap();
-            match result {
-                Ok(outcome) => {
-                    stats.completed += 1;
-                    drop(stats);
-                    if let Some(sid) = &req.session {
-                        let mut full_ids = prompt_ids;
-                        full_ids.extend_from_slice(&outcome.ids);
-                        let full_text = format!("{prompt_text}{}", outcome.text);
-                        sessions.commit(sid, &req.prompt, full_text, full_ids,
-                                        &outcome.text);
+                Ok(_) => {}
+                Err(_) => {
+                    // Isolate the faulty stream(s): a failed step leaves
+                    // every stream's logical state untouched and KV writes
+                    // at a fixed (token, position) are idempotent, so
+                    // per-stream retries are token-exact. Every stream —
+                    // including a lone one, so the failure policy does not
+                    // depend on unrelated traffic — gets exactly one
+                    // retry; a stream that fails it is replied to and
+                    // dropped ON THE SPOT, freeing its KV blocks so a
+                    // resource error (ArenaExhausted) fails one stream,
+                    // not the batch.
+                    let mut i = 0;
+                    while i < running.len() {
+                        if running[i].stream.is_finished() {
+                            i += 1;
+                            continue;
+                        }
+                        match recycler
+                            .engine_mut()
+                            .step_streams(&mut [&mut running[i].stream])
+                        {
+                            Ok(report) => {
+                                // retries are dispatches too: keep the
+                                // occupancy counters covering every step
+                                if report.scheduled > 0 {
+                                    shared
+                                        .stats
+                                        .lock()
+                                        .unwrap()
+                                        .scheduler
+                                        .note_step(report.scheduled);
+                                }
+                                i += 1;
+                            }
+                            Err(e) => {
+                                let r = running.swap_remove(i);
+                                shared.stats.lock().unwrap().failed += 1;
+                                let _ = r.req.reply.send(Response::Err(e.to_string()));
+                                // i not advanced: swap_remove moved a new
+                                // slot here; dropping `r` released blocks
+                            }
+                        }
                     }
-                    let _ = req.reply.send(Response::Ok(Box::new(outcome)));
-                }
-                Err(e) => {
-                    stats.failed += 1;
-                    drop(stats);
-                    let _ = req.reply.send(Response::Err(e.to_string()));
                 }
             }
         }
+
+        // --- finish: reply per request the moment its stream completes ---
+        let mut i = 0;
+        while i < running.len() {
+            if !running[i].stream.is_finished() {
+                i += 1;
+                continue;
+            }
+            let r = running.swap_remove(i);
+            let g = r.stream.into_generated();
+            let outcome = recycler.complete(&r.prompt_text, &r.prompt_ids, r.meta, g);
+            shared.stats.lock().unwrap().completed += 1;
+            if let Some(sid) = &r.req.session {
+                let mut full_ids = r.prompt_ids;
+                full_ids.extend_from_slice(&outcome.ids);
+                let full_text = format!("{}{}", r.prompt_text, outcome.text);
+                sessions.commit(sid, &r.req.prompt, full_text, full_ids,
+                                &outcome.text);
+            }
+            let _ = r.req.reply.send(Response::Ok(Box::new(outcome)));
+        }
+
         // refresh derived stats
         let mut stats = shared.stats.lock().unwrap();
         stats.engine = recycler.engine().counters();
@@ -342,6 +736,114 @@ mod tests {
     }
 
     #[test]
+    fn concurrent_batch_matches_sequential_outputs() {
+        // the same request set served at max_batch 4 and max_batch 1 must
+        // be token-identical (the paper's exactness property, batched)
+        let prompts: Vec<String> = (0..8)
+            .map(|i| format!("unrelated prompt number {i} about topic {}", i * 7))
+            .collect();
+        let seq = coordinator(ServerConfig {
+            max_batch: 1,
+            ..Default::default()
+        });
+        let expected: Vec<Vec<u32>> = prompts
+            .iter()
+            .map(|p| seq.generate(p, 5).unwrap().ids)
+            .collect();
+        seq.shutdown();
+
+        let bat = std::sync::Arc::new(coordinator(ServerConfig {
+            max_batch: 4,
+            ..Default::default()
+        }));
+        let mut handles = Vec::new();
+        for (i, p) in prompts.iter().enumerate() {
+            let c = std::sync::Arc::clone(&bat);
+            let p = p.clone();
+            handles.push(std::thread::spawn(move || {
+                (i, c.generate(&p, 5).unwrap().ids)
+            }));
+        }
+        for h in handles {
+            let (i, ids) = h.join().unwrap();
+            assert_eq!(ids, expected[i], "request {i} diverged under batching");
+        }
+        let stats = bat.stats();
+        assert_eq!(stats.completed, 8);
+        assert!(stats.scheduler.decode_steps > 0);
+        assert!(stats.scheduler.admitted == 8);
+        assert!(stats.scheduler.avg_occupancy() >= 1.0);
+    }
+
+    #[test]
+    fn session_survives_past_context_window() {
+        // Acceptance: a session must keep serving for >= 3x max_seq
+        // cumulative tokens — the old path wedged on PromptTooLong forever
+        // once the transcript neared the window.
+        let c = coordinator(ServerConfig::default());
+        let max_seq = ModelConfig::nano().max_seq; // 256
+        let mut cumulative = 0usize;
+        let mut turns = 0usize;
+        while cumulative < 3 * max_seq + max_seq / 2 {
+            let out = c
+                .chat("marathon", "tell me something new about the weather", 8)
+                .unwrap_or_else(|e| panic!("turn {turns} wedged: {e}"));
+            cumulative += out.prompt_tokens + out.ids.len();
+            turns += 1;
+            assert!(turns < 500, "not making progress");
+        }
+        assert!(turns > 3, "window-sized turns should take several rounds");
+        // the session is still healthy after crossing the window repeatedly
+        let out = c.chat("marathon", "one more for the road", 4).unwrap();
+        assert!(out.prompt_tokens <= max_seq);
+        assert_eq!(c.stats().failed, 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn same_session_turns_never_run_concurrently() {
+        // fire two turns of one session back-to-back without waiting; the
+        // scheduler must defer turn 2 until turn 1 commits, and both succeed
+        let c = coordinator(ServerConfig {
+            max_batch: 4,
+            ..Default::default()
+        });
+        let rx1 = c.submit("first turn", 4, Some("s".into())).unwrap();
+        let rx2 = c.submit("second turn", 4, Some("s".into())).unwrap();
+        let o1 = rx1.recv().unwrap().ok().unwrap();
+        let o2 = rx2.recv().unwrap().ok().unwrap();
+        assert_eq!(o1.ids.len(), 4);
+        assert_eq!(o2.ids.len(), 4);
+        assert!(
+            o2.prompt_tokens > o1.prompt_tokens,
+            "turn 2 must see turn 1's committed transcript"
+        );
+        assert!(o2.cache_hit, "turn 2 recycles turn 1's KV");
+        c.shutdown();
+    }
+
+    #[test]
+    fn three_queued_session_turns_all_complete_in_order() {
+        // regression: with >= 2 turns of one session parked in the
+        // holdback queue, the first pulled turn must not be re-blocked by
+        // its own LATER turns still sitting there (that was a livelock)
+        let c = coordinator(ServerConfig {
+            max_batch: 4,
+            ..Default::default()
+        });
+        let rx1 = c.submit("turn one", 3, Some("s".into())).unwrap();
+        let rx2 = c.submit("turn two", 3, Some("s".into())).unwrap();
+        let rx3 = c.submit("turn three", 3, Some("s".into())).unwrap();
+        let o1 = rx1.recv().unwrap().ok().unwrap();
+        let o2 = rx2.recv().unwrap().ok().unwrap();
+        let o3 = rx3.recv().unwrap().ok().unwrap();
+        assert!(o2.prompt_tokens > o1.prompt_tokens, "turn 2 after turn 1");
+        assert!(o3.prompt_tokens > o2.prompt_tokens, "turn 3 after turn 2");
+        assert_eq!(c.stats().completed, 3);
+        c.shutdown();
+    }
+
+    #[test]
     fn failure_surfaces_as_error_response() {
         let c = Coordinator::spawn(
             || {
@@ -377,6 +879,7 @@ mod tests {
             max_new_tokens: 1,
             session: None,
             reply: tx,
+            queued_at: Instant::now(),
         };
         assert_eq!(shared.queue.push(req).err(), Some(QueueError::Closed));
     }

@@ -19,6 +19,11 @@
 //! (token count / block size; COW-duplicated boundary blocks not
 //! included — the arena's own accounting in `CoordinatorStats` is the
 //! physical ground truth).
+//!
+//! Transcripts do not grow without bound: near the context window the
+//! scheduler applies [`truncate_to_window`] (keep the token suffix) before
+//! serving, so a session keeps answering indefinitely instead of failing
+//! `PromptTooLong` forever once `context_tokens` reaches `max_seq`.
 
 use std::collections::HashMap;
 
@@ -31,12 +36,21 @@ pub struct Turn {
 
 /// Accumulated session state: the exact text AND token ids of the
 /// transcript so far (including the last bot response).
+///
+/// `turns` keeps only the most recent [`MAX_TURN_HISTORY`] entries — the
+/// sliding-window truncation lets sessions live indefinitely, so an
+/// unbounded per-turn text log would grow linearly forever. `total_turns`
+/// counts every committed turn regardless.
 #[derive(Debug, Clone, Default)]
 pub struct SessionState {
     pub text: String,
     pub ids: Vec<u32>,
     pub turns: Vec<Turn>,
+    pub total_turns: usize,
 }
+
+/// Most recent turns retained per session for display/debugging.
+pub const MAX_TURN_HISTORY: usize = 64;
 
 /// In-memory session registry.
 #[derive(Debug, Default)]
@@ -96,9 +110,20 @@ impl SessionManager {
             user: user_msg.to_string(),
             bot: bot_text.to_string(),
         });
+        if s.turns.len() > MAX_TURN_HISTORY {
+            s.turns.remove(0);
+        }
+        s.total_turns += 1;
     }
 
+    /// Total committed turns (the retained [`Turn`] history is capped at
+    /// [`MAX_TURN_HISTORY`] — see [`SessionManager::history_len`]).
     pub fn turns(&self, session_id: &str) -> usize {
+        self.sessions.get(session_id).map_or(0, |s| s.total_turns)
+    }
+
+    /// Turns actually retained in the display/debug history.
+    pub fn history_len(&self, session_id: &str) -> usize {
         self.sessions.get(session_id).map_or(0, |s| s.turns.len())
     }
 
@@ -119,6 +144,30 @@ impl SessionManager {
     pub fn drop_session(&mut self, session_id: &str) -> bool {
         self.sessions.remove(session_id).is_some()
     }
+}
+
+/// Token-level sliding window: truncate `ids` to its last `budget` tokens,
+/// returning how many were dropped from the head.
+///
+/// This is what keeps a long-lived session serving past the context
+/// window instead of wedging on `PromptTooLong` forever: once the
+/// transcript plus the new segment exceeds `max_seq - max_new`, the
+/// scheduler cuts the transcript down to HALF that budget (hysteresis: a
+/// cut to the edge would re-truncate every subsequent turn, and the
+/// ever-moving head would never prefix-match a cached record again) and
+/// re-derives the display text. The truncated prompt no longer
+/// token-matches the pre-cut cache record, but it is *re-anchored* on the
+/// very next turn — the session path admits the full truncated prompt +
+/// response (`admit_full`), and the following turns fit untruncated, so
+/// turn N+2 onward recycles turn N+1's post-cut KV through the normal
+/// lookup (radix or strict; regression-tested in `recycler`).
+pub fn truncate_to_window(ids: &mut Vec<u32>, budget: usize) -> usize {
+    if ids.len() <= budget {
+        return 0;
+    }
+    let cut = ids.len() - budget;
+    ids.drain(..cut);
+    cut
 }
 
 #[cfg(test)]
@@ -160,6 +209,28 @@ mod tests {
         m.commit("a", "x", "t".into(), vec![1], "y");
         assert_eq!(m.state_of("b"), (String::new(), vec![]));
         assert_eq!(m.segment_for("b", "hi"), "User: hi\nBot:");
+    }
+
+    #[test]
+    fn turn_history_is_capped_but_count_is_not() {
+        let mut m = SessionManager::new();
+        for i in 0..(MAX_TURN_HISTORY + 10) {
+            m.commit("s", &format!("u{i}"), format!("t{i}"), vec![i as u32], "b");
+        }
+        assert_eq!(m.turns("s"), MAX_TURN_HISTORY + 10, "count keeps going");
+        assert_eq!(m.history_len("s"), MAX_TURN_HISTORY, "history bounded");
+    }
+
+    #[test]
+    fn truncate_to_window_keeps_suffix() {
+        let mut ids: Vec<u32> = (0..10).collect();
+        assert_eq!(truncate_to_window(&mut ids, 12), 0);
+        assert_eq!(ids.len(), 10);
+        assert_eq!(truncate_to_window(&mut ids, 10), 0, "exact fit keeps all");
+        assert_eq!(truncate_to_window(&mut ids, 4), 6);
+        assert_eq!(ids, vec![6, 7, 8, 9], "the newest tokens survive");
+        assert_eq!(truncate_to_window(&mut ids, 0), 4);
+        assert!(ids.is_empty());
     }
 
     #[test]

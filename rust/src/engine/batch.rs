@@ -1,0 +1,353 @@
+//! Step-wise batched decode — the continuous-batching substrate.
+//!
+//! A [`DecodeStream`] is one in-flight sequence: its paged KV view, the
+//! logits of the last processed row, and the greedy-decode bookkeeping.
+//! [`Engine::start_stream`] runs the (chunked) prefill and returns a
+//! stream positioned at the first decode step; [`Engine::step_streams`]
+//! advances *many* streams one token in a single
+//! [`ForwardModel::forward_batch`] call, which is where a batching-capable
+//! backend amortizes per-dispatch overhead across lanes.
+//!
+//! # Exactness
+//!
+//! The step loop is the same greedy loop [`Engine::generate`] runs — in
+//! fact `generate` is implemented as a one-stream `step_streams` loop — so
+//! a request decoded in a batch of any occupancy emits exactly the tokens
+//! it would emit alone (the paper's token-exactness property, extended to
+//! concurrent serving; property-tested in `rust/tests/properties.rs`).
+//!
+//! # Failure atomicity
+//!
+//! A failed step leaves every stream's *logical* state (emitted tokens,
+//! position, held logits) untouched: next-token choices are computed
+//! before the forward but only committed after it succeeds. KV rows a
+//! partially-executed batch may have written are rewritten identically on
+//! retry (the forward at a fixed `(token, position)` is deterministic), so
+//! a scheduler can re-step streams individually to isolate a faulty one.
+
+use crate::error::{Error, Result};
+use crate::kvcache::KvView;
+use crate::util::timing::Stopwatch;
+
+use super::generate::{argmax, Engine, Generated};
+use super::{BatchItem, ForwardModel};
+
+/// One in-flight sequence in a continuous decode batch.
+pub struct DecodeStream {
+    kv: KvView,
+    /// Logits of the last processed row (the next-token distribution).
+    logits: Vec<f32>,
+    /// Current sequence position (prompt + generated so far).
+    pos: usize,
+    /// Token picked in the current step's phase 1, fed in phase 2.
+    fed: u32,
+    /// Scheduled for this step's batched forward.
+    armed: bool,
+    out: Vec<u32>,
+    max_new: usize,
+    prompt_tokens: usize,
+    reused_tokens: usize,
+    prefill_calls: usize,
+    prompt_kv: Option<KvView>,
+    finished: bool,
+    sw: Stopwatch,
+}
+
+impl DecodeStream {
+    /// Has the stream hit a stop condition (EOT, window, or budget)?
+    pub fn is_finished(&self) -> bool {
+        self.finished
+    }
+
+    /// Tokens generated so far (prompt not included).
+    pub fn generated(&self) -> &[u32] {
+        &self.out
+    }
+
+    /// Current sequence position (prompt + generated).
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Tokens this stream may still emit (its budget; the context window
+    /// can clamp it further — callers compare against `max_seq`).
+    pub fn remaining_budget(&self) -> usize {
+        if self.finished {
+            0
+        } else {
+            self.max_new.saturating_sub(self.out.len())
+        }
+    }
+
+    /// The stream's KV view (diagnostics: block sharing, conservation).
+    pub fn kv(&self) -> &KvView {
+        &self.kv
+    }
+
+    /// Finalize into the same [`Generated`] a `generate` call returns.
+    pub fn into_generated(self) -> Generated {
+        Generated {
+            ids: self.out,
+            prompt_tokens: self.prompt_tokens,
+            reused_tokens: self.reused_tokens,
+            prefill_calls: self.prefill_calls,
+            latency_s: self.sw.elapsed_secs(),
+            final_len: self.pos,
+            prompt_kv: self.prompt_kv,
+            final_kv: self.kv,
+        }
+    }
+}
+
+impl<M: ForwardModel> Engine<M> {
+    /// Prefill a prompt and open a decode stream at its first step.
+    ///
+    /// Arguments mirror [`Engine::generate`]: `kv`/`cur_len` is the
+    /// injected recycled prefix (or [`Engine::empty_kv`] and 0), and
+    /// `capture_prompt_kv` snapshots the post-prefill view for cache
+    /// admission. The stream holds the last prefill row's logits, so the
+    /// first `step_streams` call emits the first new token.
+    pub fn start_stream(
+        &mut self,
+        prompt_ids: &[u32],
+        mut kv: KvView,
+        cur_len: usize,
+        max_new_tokens: usize,
+        capture_prompt_kv: bool,
+    ) -> Result<DecodeStream> {
+        let sw = Stopwatch::start();
+        if prompt_ids.is_empty() {
+            return Err(Error::Rejected("empty prompt".into()));
+        }
+        if cur_len > kv.len() {
+            return Err(Error::ShapeMismatch(format!(
+                "cur_len {cur_len} beyond injected KV length {}",
+                kv.len()
+            )));
+        }
+        // Cached prompt covers the whole input: re-run the last token so we
+        // have logits to continue from (paper feeds >= 1 new token).
+        let cur_len = cur_len.min(prompt_ids.len() - 1);
+        let (logits, prefill_calls) = self.prefill(prompt_ids, &mut kv, cur_len)?;
+        // Counted only after a successful prefill: a failed attempt that
+        // the caller retries (the ArenaExhausted backstop) must not count
+        // the same request twice.
+        self.counters_mut().requests += 1;
+        self.counters_mut().tokens_reused += cur_len as u64;
+        // O(blocks) snapshot: decode writes COW away from it.
+        let prompt_kv = capture_prompt_kv.then(|| kv.clone());
+        Ok(DecodeStream {
+            kv,
+            logits,
+            pos: prompt_ids.len(),
+            fed: 0,
+            armed: false,
+            out: Vec::with_capacity(max_new_tokens),
+            max_new: max_new_tokens,
+            prompt_tokens: prompt_ids.len(),
+            reused_tokens: cur_len,
+            prefill_calls,
+            prompt_kv,
+            finished: max_new_tokens == 0,
+            sw,
+        })
+    }
+
+    /// Advance every active stream one greedy token via a single batched
+    /// forward. Streams that hit a stop condition (token budget, EOT,
+    /// context window) are marked finished and skipped. The report says
+    /// how many streams actually fed the forward (`scheduled` — the true
+    /// dispatch occupancy) and how many remain active.
+    pub fn step_streams(&mut self, streams: &mut [&mut DecodeStream]) -> Result<StepReport> {
+        let eot = self.config().eot_id;
+        let max_seq = self.config().max_seq;
+        // Phase 1: pick each stream's next token; commit nothing yet.
+        let mut scheduled = 0usize;
+        for s in streams.iter_mut() {
+            s.armed = false;
+            if s.finished {
+                continue;
+            }
+            if s.out.len() >= s.max_new {
+                s.finished = true;
+                continue;
+            }
+            let next = argmax(&s.logits) as u32;
+            if next == eot || s.pos >= max_seq {
+                s.finished = true;
+                continue;
+            }
+            s.fed = next;
+            s.armed = true;
+            scheduled += 1;
+        }
+        if scheduled == 0 {
+            // every non-finished stream was marked finished above
+            return Ok(StepReport { scheduled: 0, active: 0 });
+        }
+        // Phase 2: one batched forward over every emitting stream.
+        let mut items: Vec<BatchItem<'_>> = streams
+            .iter_mut()
+            .filter(|s| s.armed)
+            .map(|s| {
+                let DecodeStream { kv, fed, pos, .. } = &mut **s;
+                BatchItem {
+                    tokens: std::slice::from_ref(&*fed),
+                    valid_len: 1,
+                    kv,
+                    cur_len: *pos,
+                }
+            })
+            .collect();
+        let logits = self.model().forward_batch(&mut items)?;
+        drop(items);
+        // Commit: the forward succeeded for the whole batch.
+        let mut rows = logits.into_iter();
+        let mut active = 0usize;
+        for s in streams.iter_mut() {
+            if s.armed {
+                s.armed = false;
+                s.out.push(s.fed);
+                s.logits = rows.next().expect("one logits row per scheduled stream");
+                s.pos += 1;
+                // Apply the cheap stop conditions eagerly so a drained
+                // stream doesn't cost an extra zero-forward tick (EOT
+                // needs the next argmax, so it is still detected in the
+                // following step's phase 1). Token-exact either way.
+                if s.out.len() >= s.max_new || s.pos >= max_seq {
+                    s.finished = true;
+                }
+            }
+            if !s.finished {
+                active += 1;
+            }
+        }
+        self.counters_mut().tokens_generated += scheduled as u64;
+        Ok(StepReport { scheduled, active })
+    }
+}
+
+/// What one [`Engine::step_streams`] tick did.
+#[derive(Debug, Clone, Copy)]
+pub struct StepReport {
+    /// Streams that fed the batched forward (the real dispatch occupancy;
+    /// 0 means the tick only drained stop conditions, no forward ran).
+    pub scheduled: usize,
+    /// Streams still active after the step.
+    pub active: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::testutil::MockModel;
+
+    fn engine() -> Engine<MockModel> {
+        Engine::new(MockModel::new(ModelConfig::nano()))
+    }
+
+    #[test]
+    fn batched_streams_match_sequential_generate() {
+        // Three prompts decoded concurrently must emit exactly what three
+        // lone generate calls emit.
+        let prompts: Vec<Vec<u32>> = vec![
+            (1..20).collect(),
+            (40..45).collect(),
+            (7..40).rev().collect(),
+        ];
+        let mut seq = engine();
+        let expected: Vec<Vec<u32>> = prompts
+            .iter()
+            .map(|p| seq.generate(p, seq.empty_kv(), 0, 6, false).unwrap().ids)
+            .collect();
+
+        let mut e = engine();
+        let mut streams: Vec<DecodeStream> = prompts
+            .iter()
+            .map(|p| e.start_stream(p, e.empty_kv(), 0, 6, false).unwrap())
+            .collect();
+        loop {
+            let mut refs: Vec<&mut DecodeStream> = streams.iter_mut().collect();
+            let report = e.step_streams(&mut refs).unwrap();
+            assert!(report.scheduled >= report.active, "every active fed");
+            if report.active == 0 {
+                break;
+            }
+        }
+        for (s, want) in streams.into_iter().zip(&expected) {
+            assert_eq!(s.generated(), &want[..]);
+            assert_eq!(s.into_generated().ids, *want);
+        }
+    }
+
+    #[test]
+    fn uneven_lengths_finish_independently() {
+        let mut e = engine();
+        let mut a = e.start_stream(&[1, 2, 3], e.empty_kv(), 0, 2, false).unwrap();
+        let mut b = e.start_stream(&[9, 8, 7], e.empty_kv(), 0, 7, false).unwrap();
+        let mut steps = 0;
+        loop {
+            let report = e.step_streams(&mut [&mut a, &mut b]).unwrap();
+            steps += 1;
+            if report.active == 0 {
+                break;
+            }
+        }
+        assert!(a.is_finished() && b.is_finished());
+        assert_eq!(a.generated().len(), 2);
+        assert_eq!(b.generated().len(), 7);
+        // the joint loop runs exactly as long as the longest stream
+        assert_eq!(steps, 7);
+    }
+
+    #[test]
+    fn zero_budget_stream_is_born_finished() {
+        let mut e = engine();
+        let s = e.start_stream(&[1, 2], e.empty_kv(), 0, 0, false).unwrap();
+        assert!(s.is_finished());
+        let g = s.into_generated();
+        assert!(g.ids.is_empty());
+        assert_eq!(g.final_len, 2);
+    }
+
+    #[test]
+    fn failed_step_leaves_streams_consistent_for_retry() {
+        // Inject a failure into the batched forward; the step errors, but a
+        // retry must emit exactly the baseline tokens (no duplicated or
+        // dropped positions).
+        let prompt: Vec<u32> = (1..12).collect();
+        let mut base = engine();
+        let want = base.generate(&prompt, base.empty_kv(), 0, 4, false).unwrap().ids;
+
+        // prefill = 1 call; fail the 3rd call = the 2nd decode step
+        let mut e = Engine::new(MockModel::new(ModelConfig::nano()).fail_on_call(3));
+        let mut s = e.start_stream(&prompt, e.empty_kv(), 0, 4, false).unwrap();
+        let mut failures = 0;
+        while !s.is_finished() {
+            if e.step_streams(&mut [&mut s]).is_err() {
+                failures += 1;
+                assert!(failures < 10, "retry never converged");
+            }
+        }
+        assert_eq!(s.generated(), &want[..]);
+    }
+
+    #[test]
+    fn stream_with_recycled_prefix_matches_baseline() {
+        let prompt: Vec<u32> = (1..33).collect();
+        let mut base = engine();
+        let want = base.generate(&prompt, base.empty_kv(), 0, 6, false).unwrap().ids;
+
+        let mut e = engine();
+        let mut kv = e.empty_kv();
+        e.prefill(&prompt[..17], &mut kv, 0).unwrap();
+        let mut s = e.start_stream(&prompt, kv, 17, 6, false).unwrap();
+        while !s.is_finished() {
+            e.step_streams(&mut [&mut s]).unwrap();
+        }
+        let g = s.into_generated();
+        assert_eq!(g.ids, want);
+        assert_eq!(g.reused_tokens, 17);
+    }
+}

@@ -10,7 +10,6 @@ use crate::config::ModelConfig;
 use crate::error::{Error, Result};
 use crate::kvcache::{KvArena, KvView};
 use crate::metrics::Counters;
-use crate::util::timing::Stopwatch;
 
 use super::{pick_chunk, ForwardModel};
 
@@ -80,6 +79,10 @@ impl<M: ForwardModel> Engine<M> {
         self.counters
     }
 
+    pub(super) fn counters_mut(&mut self) -> &mut Counters {
+        &mut self.counters
+    }
+
     /// A fresh empty KV view (no blocks held until prefill writes).
     pub fn empty_kv(&self) -> KvView {
         self.arena.new_view()
@@ -120,14 +123,18 @@ impl<M: ForwardModel> Engine<M> {
             let room = cfg.max_seq - pos;
             let mut c = pick_chunk(&cfg.chunk_sizes, pending);
             if c > room {
-                // padded bucket would spill past the context window; fall
-                // back to the largest bucket that still fits.
-                c = *cfg
-                    .chunk_sizes
-                    .iter()
-                    .filter(|&&b| b <= room)
-                    .next_back()
-                    .ok_or(Error::ContextExhausted(pos))?;
+                // A padded bucket would spill past the context window:
+                // prefer the largest bucket that still fits. When even the
+                // smallest bucket overflows (`pending <= room < min
+                // bucket` — a deep recycled prefix plus a prompt near
+                // max_seq), fall back to an *unpadded* final chunk: the
+                // pending tokens themselves always fit (`ids.len() <=
+                // max_seq` implies `pending <= room`), so a legal prompt
+                // must never fail here.
+                c = match cfg.chunk_sizes.iter().filter(|&&b| b <= room).next_back() {
+                    Some(&b) => b,
+                    None => pending,
+                };
             }
             let take = pending.min(c);
             let mut chunk: Vec<u32> = ids[pos..pos + take].to_vec();
@@ -155,57 +162,20 @@ impl<M: ForwardModel> Engine<M> {
     pub fn generate(
         &mut self,
         prompt_ids: &[u32],
-        mut kv: KvView,
+        kv: KvView,
         cur_len: usize,
         max_new_tokens: usize,
         capture_prompt_kv: bool,
     ) -> Result<Generated> {
-        let sw = Stopwatch::start();
-        let cfg = self.model.config().clone();
-        if prompt_ids.is_empty() {
-            return Err(Error::Rejected("empty prompt".into()));
+        // One-stream continuous decode: `generate` IS the batch API at
+        // occupancy 1, so batched serving is token-identical by
+        // construction (see engine::batch).
+        let mut stream =
+            self.start_stream(prompt_ids, kv, cur_len, max_new_tokens, capture_prompt_kv)?;
+        while !stream.is_finished() {
+            self.step_streams(&mut [&mut stream])?;
         }
-        if cur_len > kv.len() {
-            return Err(Error::ShapeMismatch(format!(
-                "cur_len {cur_len} beyond injected KV length {}",
-                kv.len()
-            )));
-        }
-        if cur_len >= prompt_ids.len() && cur_len > 0 {
-            // Cached prompt covers the whole input: re-run the last token so
-            // we have logits to continue from (paper feeds >= 1 new token).
-            return self.generate(prompt_ids, kv, prompt_ids.len() - 1,
-                                 max_new_tokens, capture_prompt_kv);
-        }
-        self.counters.requests += 1;
-        self.counters.tokens_reused += cur_len as u64;
-
-        let (mut logits, prefill_calls) = self.prefill(prompt_ids, &mut kv, cur_len)?;
-        // O(blocks) snapshot: decode writes below COW away from it.
-        let prompt_kv = capture_prompt_kv.then(|| kv.clone());
-
-        let mut pos = prompt_ids.len();
-        let mut out = Vec::with_capacity(max_new_tokens);
-        for _ in 0..max_new_tokens {
-            let next = argmax(&logits) as u32;
-            if next == cfg.eot_id || pos >= cfg.max_seq {
-                break;
-            }
-            out.push(next);
-            logits = self.model.forward_chunk(&[next], 1, &mut kv, pos)?;
-            pos += 1;
-            self.counters.tokens_generated += 1;
-        }
-        Ok(Generated {
-            ids: out,
-            prompt_tokens: prompt_ids.len(),
-            reused_tokens: cur_len,
-            prefill_calls,
-            latency_s: sw.elapsed_secs(),
-            final_len: pos,
-            prompt_kv,
-            final_kv: kv,
-        })
+        Ok(stream.into_generated())
     }
 }
 
@@ -326,6 +296,50 @@ mod tests {
         match e.generate(&prompt, e.empty_kv(), 5, 4, false) {
             Err(Error::ShapeMismatch(_)) => {}
             other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn near_window_prefill_falls_back_to_unpadded_chunk() {
+        // Regression: with `pending <= room < smallest bucket` (deep
+        // recycled prefix + prompt near max_seq) the padded-chunk fallback
+        // used to error with ContextExhausted on a *legal* prompt.
+        let mut cfg = crate::config::ModelConfig::nano();
+        cfg.chunk_sizes = vec![8, 32, 64]; // no 1-bucket: min bucket is 8
+        let prompt: Vec<u32> =
+            (0..cfg.max_seq as u32).map(|i| 1 + i % 400).collect();
+
+        let mut base = Engine::new(MockModel::new(cfg.clone()));
+        let mut base_kv = base.empty_kv();
+        let (want, _) = base.prefill(&prompt, &mut base_kv, 0).unwrap();
+
+        let mut e = Engine::new(MockModel::new(cfg.clone()));
+        let mut kv = e.empty_kv();
+        // odd recycled depth: 5 pending tokens, room 5 < bucket 8
+        e.prefill(&prompt[..251], &mut kv, 0).unwrap();
+        let (got, calls) = e.prefill(&prompt, &mut kv, 251).unwrap();
+        assert_eq!(got, want, "unpadded final chunk must be token-exact");
+        assert_eq!(calls, 1, "one unpadded chunk, not a failure");
+        assert_eq!(kv.len(), cfg.max_seq);
+    }
+
+    #[test]
+    fn max_seq_prompt_with_odd_recycled_prefix_generates() {
+        // Acceptance: a prompt of exactly max_seq tokens with a recycled
+        // prefix of arbitrary (odd) depth generates successfully.
+        let mut cfg = crate::config::ModelConfig::nano();
+        cfg.chunk_sizes = vec![8, 32, 64];
+        let prompt: Vec<u32> =
+            (0..cfg.max_seq as u32).map(|i| 1 + i % 400).collect();
+        for &depth in &[199usize, 251, 255] {
+            let mut e = Engine::new(MockModel::new(cfg.clone()));
+            let mut kv = e.empty_kv();
+            e.prefill(&prompt[..depth], &mut kv, 0).unwrap();
+            let g = e.generate(&prompt, kv, depth, 4, false)
+                .unwrap_or_else(|err| panic!("depth {depth}: {err}"));
+            assert_eq!(g.reused_tokens, depth);
+            assert_eq!(g.final_len, cfg.max_seq, "window already full");
+            assert!(g.ids.is_empty(), "no room left to generate");
         }
     }
 

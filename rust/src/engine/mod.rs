@@ -9,9 +9,20 @@
 //! Chunk scheduling mirrors `python/compile/model.py::greedy_generate`
 //! exactly (largest bucket that fits, else the smallest bucket padded), so
 //! the Rust engine reproduces the Python golden fixtures token-for-token.
+//!
+//! Two decode surfaces share one implementation:
+//! * [`Engine::generate`] — run one request to completion (the paper's
+//!   `model.generate(..., do_sample=False)`);
+//! * the step-wise [`DecodeStream`] API ([`Engine::start_stream`] /
+//!   [`Engine::step_streams`]) — the continuous-batching substrate: many
+//!   in-flight sequences advance one token per [`ForwardModel::forward_batch`]
+//!   call. `generate` is literally a one-stream loop over the same steps,
+//!   so batched decode is token-identical to sequential by construction.
 
+mod batch;
 mod generate;
 
+pub use batch::{DecodeStream, StepReport};
 pub use generate::{Engine, Generated};
 
 use crate::config::ModelConfig;
@@ -35,6 +46,14 @@ pub trait ForwardModel {
     /// position `cur_len`, writing new KV rows into `kv` (a paged
     /// `[L, 2, H, len, D]` view, valid for at least `cur_len` positions)
     /// and returning logits `[C, V]` flat.
+    ///
+    /// Contract: the final chunk of a near-window prompt may be *unpadded*
+    /// (`tokens.len() == valid_len`, not a bucket size) when padding to
+    /// the smallest covering bucket would spill past `max_seq` — the
+    /// engine's prefill emits exactly that shape so legal prompts of up to
+    /// `max_seq` tokens never fail. Backends without a matching compiled
+    /// shape execute it token-by-token through the 1-bucket (see the PJRT
+    /// executor), which the chunk-split-invariance property makes exact.
     fn forward_chunk(
         &self,
         tokens: &[u32],
@@ -42,6 +61,36 @@ pub trait ForwardModel {
         kv: &mut KvView,
         cur_len: usize,
     ) -> Result<Vec<f32>>;
+
+    /// Process a batch of *independent* sequences' chunks in one call,
+    /// returning each item's logits in order.
+    ///
+    /// The default implementation loops [`forward_chunk`] item by item —
+    /// correct for every backend — so a backend only overrides this when
+    /// the device can genuinely run lanes concurrently (one dispatch for
+    /// the whole batch, e.g. a batched decode executable). Overrides must
+    /// preserve the exactness contract: each item's logits and KV rows are
+    /// identical to what a lone `forward_chunk` call would produce.
+    ///
+    /// [`forward_chunk`]: ForwardModel::forward_chunk
+    fn forward_batch(&self, items: &mut [BatchItem<'_>]) -> Result<Vec<Vec<f32>>> {
+        items
+            .iter_mut()
+            .map(|it| self.forward_chunk(it.tokens, it.valid_len, it.kv, it.cur_len))
+            .collect()
+    }
+}
+
+/// One sequence's slice of a [`ForwardModel::forward_batch`] call: `tokens`
+/// (padded to a bucket, or the unpadded final near-window chunk) land at
+/// position `cur_len` of that sequence's paged `kv` view. Items are
+/// independent sequences — their views may share arena blocks (a recycled
+/// common prefix), which COW isolates on write.
+pub struct BatchItem<'a> {
+    pub tokens: &'a [u32],
+    pub valid_len: usize,
+    pub kv: &'a mut KvView,
+    pub cur_len: usize,
 }
 
 /// Pick the chunk bucket for `n` pending tokens: the smallest bucket that

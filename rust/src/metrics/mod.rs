@@ -172,6 +172,61 @@ impl Counters {
     }
 }
 
+/// Continuous-batching scheduler counters, surfaced through
+/// `CoordinatorStats`. Occupancy is tracked as (steps, slot-steps) so the
+/// average falls out without per-step history.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SchedulerStats {
+    /// Batched decode steps executed (each is one `forward_batch` round).
+    pub decode_steps: u64,
+    /// Sum over steps of the number of streams stepped together — the
+    /// occupancy numerator.
+    pub decode_slot_steps: u64,
+    /// Highest concurrent stream count observed in one step.
+    pub peak_occupancy: u64,
+    /// Requests admitted into the running set.
+    pub admitted: u64,
+    /// Total milliseconds requests spent queued before admission.
+    pub queue_wait_ms_total: u64,
+    /// Worst single queue wait, milliseconds.
+    pub queue_wait_ms_max: u64,
+}
+
+impl SchedulerStats {
+    /// Mean streams per decode step (1.0 == request-at-a-time; higher
+    /// means the batcher is actually sharing forward dispatches).
+    pub fn avg_occupancy(&self) -> f64 {
+        if self.decode_steps == 0 {
+            0.0
+        } else {
+            self.decode_slot_steps as f64 / self.decode_steps as f64
+        }
+    }
+
+    /// Mean queue wait per admitted request, milliseconds.
+    pub fn avg_queue_wait_ms(&self) -> f64 {
+        if self.admitted == 0 {
+            0.0
+        } else {
+            self.queue_wait_ms_total as f64 / self.admitted as f64
+        }
+    }
+
+    /// Record one decode step over `occupancy` concurrent streams.
+    pub fn note_step(&mut self, occupancy: usize) {
+        self.decode_steps += 1;
+        self.decode_slot_steps += occupancy as u64;
+        self.peak_occupancy = self.peak_occupancy.max(occupancy as u64);
+    }
+
+    /// Record one admission that waited `wait_ms` in the queue.
+    pub fn note_admission(&mut self, wait_ms: u64) {
+        self.admitted += 1;
+        self.queue_wait_ms_total += wait_ms;
+        self.queue_wait_ms_max = self.queue_wait_ms_max.max(wait_ms);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -225,6 +280,22 @@ mod tests {
         assert!((c.hit_rate() - 0.75).abs() < 1e-9);
         assert!((c.reuse_fraction() - 0.4).abs() < 1e-9);
         assert_eq!(Counters::default().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn scheduler_stats_averages() {
+        let mut s = SchedulerStats::default();
+        assert_eq!(s.avg_occupancy(), 0.0);
+        assert_eq!(s.avg_queue_wait_ms(), 0.0);
+        s.note_step(4);
+        s.note_step(2);
+        assert_eq!(s.decode_steps, 2);
+        assert_eq!(s.peak_occupancy, 4);
+        assert!((s.avg_occupancy() - 3.0).abs() < 1e-9);
+        s.note_admission(10);
+        s.note_admission(30);
+        assert_eq!(s.queue_wait_ms_max, 30);
+        assert!((s.avg_queue_wait_ms() - 20.0).abs() < 1e-9);
     }
 
     #[test]

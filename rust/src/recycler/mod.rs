@@ -23,7 +23,7 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::config::{CacheConfig, ModelConfig};
-use crate::engine::{Engine, ForwardModel};
+use crate::engine::{Engine, ForwardModel, Generated};
 use crate::error::Result;
 use crate::index::{cosine, Embedder, FlatIndex, NgramEmbedder};
 use crate::kvcache::{KvArena, KvRecord, KvStore, KvView};
@@ -99,6 +99,13 @@ pub struct Recycler<M: ForwardModel> {
     radix: RadixTree,
     /// id -> tokens side table for radix eviction.
     tokens_of: HashMap<u64, Vec<u32>>,
+    /// Memo of the last shed attempt that stalled on a zero-yield eviction:
+    /// `(free_blocks, store_len)` at stall time. While that state is
+    /// unchanged, further shedding is futile (the remaining records'
+    /// blocks are pinned elsewhere) and skipped — without the latch, the
+    /// scheduler's per-tick headroom checks would destroy one pinned-share
+    /// record per tick for zero gained headroom.
+    shed_stall: Option<(usize, usize)>,
     pub policy: RecyclePolicy,
     /// Insert served prompts into the cache (online population).
     pub populate_cache: bool,
@@ -121,6 +128,7 @@ impl<M: ForwardModel> Recycler<M> {
             index: FlatIndex::new(dim),
             radix: RadixTree::new(),
             tokens_of: HashMap::new(),
+            shed_stall: None,
             policy,
             populate_cache: true,
         }
@@ -143,6 +151,13 @@ impl<M: ForwardModel> Recycler<M> {
 
     pub fn engine(&self) -> &Engine<M> {
         &self.engine
+    }
+
+    /// Mutable engine access for the continuous-batching scheduler, which
+    /// drives prefill/decode itself via the stream API between
+    /// [`Recycler::prepare`] and [`Recycler::complete`].
+    pub fn engine_mut(&mut self) -> &mut Engine<M> {
+        &mut self.engine
     }
 
     /// The paged KV arena shared by the engine and every cache record.
@@ -190,6 +205,19 @@ impl<M: ForwardModel> Recycler<M> {
     /// starve live requests into `ArenaExhausted` failures. Blocks shared
     /// with other records are only truly freed when the last holder goes,
     /// so this loops (bounded by the store size).
+    /// Evict one record by policy and drop it from index/radix/side
+    /// tables; its blocks return to the pool before this returns (unless
+    /// pinned by other holders). False when the store is empty.
+    fn evict_and_unindex(&mut self) -> bool {
+        let Some((id, rec)) = self.store.evict_one() else {
+            return false;
+        };
+        self.index.remove(id);
+        self.radix.remove(&rec.tokens);
+        self.tokens_of.remove(&id);
+        true
+    }
+
     fn ensure_arena_headroom(&mut self) {
         // Cap the target at half the arena: a deliberately tiny arena
         // (capacity below one full-context sequence) must not drain the
@@ -198,12 +226,43 @@ impl<M: ForwardModel> Recycler<M> {
         let need = arena
             .blocks_for(self.engine.config().max_seq)
             .min(arena.capacity_blocks() / 2);
-        while self.engine.arena().free_blocks() < need && !self.store.is_empty() {
-            let Some((id, rec)) = self.store.evict_one() else { break };
-            self.index.remove(id);
-            self.radix.remove(&rec.tokens);
-            self.tokens_of.remove(&id);
+        if self.engine.arena().free_blocks() >= need {
+            self.shed_stall = None;
+            return;
         }
+        // Shedding records whose blocks are pinned elsewhere (in-flight
+        // decode streams, records sharing the prefix) frees nothing;
+        // without the stall latch the scheduler's per-tick headroom
+        // retries would destroy one such record per tick until the whole
+        // cache — and its hit rate — was gone.
+        let state = (self.engine.arena().free_blocks(), self.store.len());
+        if self.shed_stall == Some(state) {
+            return; // nothing changed since shedding last proved futile
+        }
+        while self.engine.arena().free_blocks() < need {
+            let before = self.engine.arena().free_blocks();
+            if !self.evict_and_unindex() {
+                break; // store empty
+            }
+            if self.engine.arena().free_blocks() == before {
+                // zero-yield eviction: remember the state so retries skip
+                self.shed_stall =
+                    Some((self.engine.arena().free_blocks(), self.store.len()));
+                return;
+            }
+        }
+        self.shed_stall = None;
+    }
+
+    /// Last-resort shedding when a live request actually failed allocation:
+    /// drain cache entries unconditionally (no zero-yield break — evicting
+    /// a session chain frees nothing until its newest record goes) until
+    /// the arena can hold `tokens` more positions or the store is empty.
+    /// Serving the request outranks cache retention.
+    pub fn shed_for_tokens(&mut self, tokens: usize) {
+        let need = self.engine.arena().blocks_for(tokens);
+        while self.engine.arena().free_blocks() < need && self.evict_and_unindex() {}
+        self.shed_stall = None;
     }
 
     /// Prefill a prompt and insert its KV record into the cache.
@@ -266,10 +325,17 @@ impl<M: ForwardModel> Recycler<M> {
                     self.store.note_miss();
                     return (None, f64::NAN);
                 };
+                // A stale radix entry (key already evicted from the store)
+                // is a miss like any other — `store.hit` on a dead id
+                // records exactly one miss itself, so no extra `note_miss`
+                // here (miss accounting regression-tested below).
                 let Some(rec) = self.store.hit(key) else {
                     return (None, f64::NAN);
                 };
-                debug_assert_eq!(depth, rec.token_len());
+                // No `debug_assert_eq!(depth, rec.token_len())`: it only
+                // holds while radix and store are in perfect lockstep,
+                // which a stale entry violates by definition — asserting
+                // would turn a recoverable miss into a debug-build crash.
                 let sim = cosine(&rec.embedding, emb) as f64;
                 (Some((rec, depth)), sim)
             }
@@ -295,13 +361,45 @@ impl<M: ForwardModel> Recycler<M> {
         max_new_tokens: usize,
         admit_full: bool,
     ) -> Result<Outcome> {
+        match self.serve_once(prompt, &ids, max_new_tokens, admit_full) {
+            Err(crate::error::Error::ArenaExhausted { .. }) => {
+                // The cheap headroom pass deliberately stops shedding when
+                // evictions stop yielding blocks; a real allocation
+                // failure is the backstop — drain the cache as far as
+                // needed and retry once. The aborted attempt's store
+                // hit/miss tick is accepted imprecision on this rare path.
+                self.shed_for_tokens(ids.len() + max_new_tokens);
+                self.serve_once(prompt, &ids, max_new_tokens, admit_full)
+            }
+            r => r,
+        }
+    }
+
+    fn serve_once(
+        &mut self,
+        prompt: &str,
+        ids: &[u32],
+        max_new_tokens: usize,
+        admit_full: bool,
+    ) -> Result<Outcome> {
+        let Admission { kv, cur_len, meta } = self.prepare(prompt, ids, admit_full);
+        let g = self
+            .engine
+            .generate(ids, kv, cur_len, max_new_tokens, meta.want_capture)?;
+        Ok(self.complete(prompt, ids, meta, g))
+    }
+
+    /// Phase 1 of serving (the scheduler's admission step): shed cache
+    /// under arena pressure, embed, retrieve, and attach the recycled
+    /// prefix (or hand back a fresh view). Infallible by design — a miss
+    /// is a valid outcome, not an error.
+    pub fn prepare(&mut self, prompt: &str, ids: &[u32], admit_full: bool) -> Admission {
         let sw = Stopwatch::start();
         // Shed cache entries first if the arena is running low — a live
         // request must never starve on blocks pinned by cold cache state.
         self.ensure_arena_headroom();
         let emb = self.embedder.embed(prompt);
-        let (hit, similarity) = self.lookup(&ids, &emb);
-
+        let (hit, similarity) = self.lookup(ids, &emb);
         let (kv, cur_len, cache_hit, depth) = match hit {
             Some((rec, depth)) => {
                 // Zero-copy injection: attach the record's block table
@@ -310,36 +408,104 @@ impl<M: ForwardModel> Recycler<M> {
             }
             None => (self.engine.empty_kv(), 0, false, 0),
         };
-
         let want_capture = self.populate_cache && !cache_hit && !admit_full;
-        let g = self
-            .engine
-            .generate(&ids, kv, cur_len, max_new_tokens, want_capture)?;
-
-        if let Some(prompt_kv) = g.prompt_kv {
-            self.admit(prompt, ids.clone(), &prompt_kv);
+        Admission {
+            kv,
+            cur_len,
+            meta: ServeMeta {
+                cache_hit,
+                depth,
+                similarity,
+                want_capture,
+                admit_full,
+                sw,
+            },
         }
-        if admit_full && self.populate_cache {
+    }
+
+    /// Phase 3 of serving (the scheduler's finish step): admit the new KV
+    /// into the cache and assemble the request's [`Outcome`]. `ids` must be
+    /// the prompt ids `prepare` saw; `g` the finished generation over them.
+    /// Borrows `ids` and copies only on the branches that admit a record —
+    /// the plain-hit path (most requests) is copy-free.
+    pub fn complete(
+        &mut self,
+        prompt: &str,
+        ids: &[u32],
+        meta: ServeMeta,
+        g: Generated,
+    ) -> Outcome {
+        if let Some(prompt_kv) = &g.prompt_kv {
+            self.admit(prompt, ids.to_vec(), prompt_kv);
+        }
+        if meta.admit_full && self.populate_cache {
             // Cache prompt + response (token-exact), the session fast path.
             // The record shares the request's final view — turn N+1's
             // attach reuses turn N's blocks outright.
-            let mut full_ids = ids.clone();
+            let mut full_ids = ids.to_vec();
             full_ids.extend_from_slice(&g.ids);
             let full_text = format!("{prompt}{}", self.tokenizer.decode(&g.ids));
             self.admit(&full_text, full_ids, &g.final_kv);
         }
-
-        Ok(Outcome {
+        Outcome {
             text: self.tokenizer.decode(&g.ids),
             ids: g.ids,
             prompt_tokens: g.prompt_tokens,
-            reuse_depth: depth,
-            cache_hit,
-            similarity,
-            latency_s: sw.elapsed_secs(),
+            reuse_depth: meta.depth,
+            cache_hit: meta.cache_hit,
+            similarity: meta.similarity,
+            latency_s: meta.sw.elapsed_secs(),
             prefill_calls: g.prefill_calls,
-        })
+        }
     }
+
+    /// Admission gate for the continuous-batching scheduler: shed cold
+    /// cache entries if needed, then report whether the arena can hold an
+    /// incoming request of `incoming_tokens` (prompt + generation budget,
+    /// clamped to the window) *on top of* `reserved_blocks` — the blocks
+    /// already-running streams may still consume as they decode (their
+    /// unwritten growth plus COW slack). Gating on the request's actual
+    /// size (not worst-case max_seq) keeps short prompts batching under
+    /// moderate occupancy. While decode batches are in flight the
+    /// scheduler defers arrivals when this is false, instead of
+    /// over-committing the arena and starving running streams mid-decode;
+    /// when nothing is running the scheduler bypasses the gate entirely
+    /// (serial serving is always possible — `prepare` sheds cache
+    /// internally), so an unattainable `need` degrades to
+    /// request-at-a-time, never deadlock.
+    pub fn admission_headroom(&mut self, incoming_tokens: usize, reserved_blocks: usize) -> bool {
+        self.ensure_arena_headroom();
+        let arena = self.engine.arena();
+        let cap = self.engine.config().max_seq;
+        let need = arena.blocks_for(incoming_tokens.min(cap)) + reserved_blocks;
+        arena.free_blocks() >= need
+    }
+}
+
+/// Retrieval outcome + bookkeeping for one request, produced by
+/// [`Recycler::prepare`]. `kv`/`cur_len` seed the engine
+/// (`start_stream`/`generate`); `meta` travels with the request and is
+/// redeemed by [`Recycler::complete`].
+pub struct Admission {
+    /// KV to start from: an attached cache record (hit) or a fresh view.
+    pub kv: KvView,
+    /// Valid positions in `kv` — the reuse depth on a hit, else 0.
+    pub cur_len: usize,
+    pub meta: ServeMeta,
+}
+
+/// Per-request serving metadata carried from [`Recycler::prepare`] to
+/// [`Recycler::complete`] across the (possibly batched) decode phase.
+pub struct ServeMeta {
+    pub cache_hit: bool,
+    pub depth: usize,
+    pub similarity: f64,
+    /// Snapshot the post-prefill KV for cache admission (miss path).
+    pub want_capture: bool,
+    /// Admit prompt + response on finish (session continuation).
+    pub admit_full: bool,
+    /// Started at `prepare`; `complete` reads the request latency off it.
+    sw: Stopwatch,
 }
 
 #[cfg(test)]
@@ -449,6 +615,84 @@ mod tests {
         let out = r.generate(TEST, 5).unwrap();
         assert!(out.cache_hit);
         assert_eq!(out.ids, baseline.ids);
+    }
+
+    #[test]
+    fn truncated_session_reanchors_after_window_cut() {
+        // After a sliding-window cut the truncated turn is admitted in
+        // full (admit_full), so the NEXT turn recycles it — verified via
+        // the radix policy, whose token-prefix lookup is exact.
+        let mut r = recycler(RecyclePolicy::Radix);
+        let tok = r.tokenizer();
+        let t1 = "the quick brown fox jumps over the lazy dog again and again";
+        let ids1 = tok.encode(t1);
+        let out1 = r.generate_ids(t1, ids1.clone(), 4, true).unwrap();
+
+        // window cut: keep only a transcript suffix (what the scheduler
+        // does near max_seq)
+        let mut cut_ids = ids1.clone();
+        cut_ids.extend_from_slice(&out1.ids);
+        let dropped = crate::coordinator::truncate_to_window(&mut cut_ids, 20);
+        assert!(dropped > 0, "workload too small to cut");
+        let cut_text = tok.decode(&cut_ids);
+
+        // the turn right after the cut misses (its head moved)…
+        let out2 = r.generate_ids(&cut_text, cut_ids.clone(), 4, true).unwrap();
+        assert!(!out2.cache_hit, "a cut head cannot prefix-match");
+
+        // …but re-anchors: the following turn hits its record at full depth
+        let mut ids3 = cut_ids.clone();
+        ids3.extend_from_slice(&out2.ids);
+        ids3.extend(tok.encode(" and then some"));
+        let t3 = format!("{cut_text}{} and then some", tok.decode(&out2.ids));
+        let out3 = r.generate_ids(&t3, ids3, 4, true).unwrap();
+        assert!(out3.cache_hit, "post-cut transcript must re-anchor");
+        assert_eq!(out3.reuse_depth, cut_ids.len() + out2.ids.len());
+    }
+
+    #[test]
+    fn radix_miss_and_hit_accounting_exact() {
+        // regression: the radix arm used to skip miss accounting on some
+        // paths, silently undercounting misses
+        let mut r = recycler(RecyclePolicy::Radix);
+        r.populate_cache = false;
+        r.warm(&[CACHE]).unwrap();
+        let s0 = r.store().stats();
+        r.generate(OTHER, 2).unwrap(); // no cached prefix -> one miss
+        let s1 = r.store().stats();
+        assert_eq!(s1.misses, s0.misses + 1);
+        assert_eq!(s1.hits, s0.hits);
+        r.generate(TEST, 2).unwrap(); // full-prefix hit, no miss
+        let s2 = r.store().stats();
+        assert_eq!(s2.hits, s1.hits + 1);
+        assert_eq!(s2.misses, s1.misses);
+    }
+
+    #[test]
+    fn phase_split_api_equals_one_shot_serving() {
+        // prepare -> stream decode -> complete (the scheduler's path) must
+        // be indistinguishable from generate_ids
+        let mut a = recycler(RecyclePolicy::Strict);
+        a.warm(&[CACHE]).unwrap();
+        let one = a.generate(TEST, 5).unwrap();
+
+        let mut b = recycler(RecyclePolicy::Strict);
+        b.warm(&[CACHE]).unwrap();
+        let ids = b.tokenizer().encode(TEST);
+        let Admission { kv, cur_len, meta } = b.prepare(TEST, &ids, false);
+        let mut stream = b
+            .engine_mut()
+            .start_stream(&ids, kv, cur_len, 5, meta.want_capture)
+            .unwrap();
+        while !stream.is_finished() {
+            b.engine_mut().step_streams(&mut [&mut stream]).unwrap();
+        }
+        let out = b.complete(TEST, &ids, meta, stream.into_generated());
+        assert_eq!(out.ids, one.ids);
+        assert_eq!(out.text, one.text);
+        assert_eq!(out.cache_hit, one.cache_hit);
+        assert_eq!(out.reuse_depth, one.reuse_depth);
+        assert_eq!(a.cache_len(), b.cache_len(), "same admissions");
     }
 
     #[test]

@@ -121,6 +121,30 @@ impl ForwardExec {
                 kv.len()
             )));
         }
+        // Near-window fallback: the engine sends an *unpadded* final chunk
+        // when even the smallest compiled bucket would spill past the
+        // context window (see Engine::prefill). No executable matches that
+        // ad-hoc size, so execute it token-by-token through the 1-bucket —
+        // exact by the chunk-split-invariance contract. Exported manifests
+        // always include bucket 1 (the decode bucket); if one ever does
+        // not, `bucket()` below still yields the clear missing-bucket
+        // error instead of silently corrupting.
+        // The legality predicate is shared with MockModel
+        // (ModelConfig::unpadded_chunk_legal), so a mid-window non-bucket
+        // chunk is a loud error on both backends instead of a silent slow
+        // path here.
+        if self.cfg.unpadded_chunk_legal(c, valid_len, cur_len)
+            && c > 1
+            && self.cfg.chunk_sizes.contains(&1)
+        {
+            let v = self.cfg.vocab_size;
+            let mut logits = vec![0f32; c * v];
+            for (i, &t) in tokens.iter().enumerate() {
+                let row = self.forward_chunk(&[t], 1, kv, cur_len + i)?;
+                logits[i * v..(i + 1) * v].copy_from_slice(&row);
+            }
+            return Ok(logits);
+        }
         // Seq-bucket selection: the smallest exported KV capacity covering
         // the live span. Short contexts upload (and the attention kernel
         // scans) a fraction of the full window — the §Perf optimization.

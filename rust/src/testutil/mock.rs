@@ -13,7 +13,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Duration;
 
 use crate::config::ModelConfig;
-use crate::engine::ForwardModel;
+use crate::engine::{BatchItem, ForwardModel};
 use crate::error::{Error, Result};
 use crate::kvcache::KvView;
 
@@ -52,19 +52,17 @@ impl MockModel {
     pub fn calls(&self) -> usize {
         self.calls.load(Ordering::Relaxed)
     }
-}
 
-impl ForwardModel for MockModel {
-    fn config(&self) -> &ModelConfig {
-        &self.cfg
-    }
-
-    fn forward_chunk(
+    /// The shared forward body; `with_delay` gates the simulated per-token
+    /// cost so the batched entry point can model one device dispatch for
+    /// the whole batch instead of a per-lane sum.
+    fn forward_one(
         &self,
         tokens: &[u32],
         valid_len: usize,
         kv: &mut KvView,
         cur_len: usize,
+        with_delay: bool,
     ) -> Result<Vec<f32>> {
         let n = self.calls.fetch_add(1, Ordering::Relaxed) + 1;
         if self.fail_on_call == Some(n) {
@@ -72,7 +70,13 @@ impl ForwardModel for MockModel {
         }
         let c = tokens.len();
         let v = self.cfg.vocab_size;
-        if !self.cfg.chunk_sizes.contains(&c) {
+        // A chunk must be a compiled bucket — except the engine's unpadded
+        // final chunk near the context window (the shared ForwardModel
+        // contract predicate; the PJRT executor runs that shape
+        // token-by-token through its 1-bucket).
+        let bucket_ok = self.cfg.chunk_sizes.contains(&c)
+            || self.cfg.unpadded_chunk_legal(c, valid_len, cur_len);
+        if !bucket_ok {
             return Err(Error::ShapeMismatch(format!("chunk {c} not a bucket")));
         }
         if !kv.geometry().matches(&self.cfg) {
@@ -87,7 +91,7 @@ impl ForwardModel for MockModel {
         if cur_len > kv.len() {
             return Err(Error::ShapeMismatch("kv view shorter than cur_len".into()));
         }
-        if !self.delay_per_token.is_zero() {
+        if with_delay && !self.delay_per_token.is_zero() {
             std::thread::sleep(self.delay_per_token * valid_len as u32);
         }
         // Write markers for the new valid tokens (COW-aware row writes).
@@ -110,6 +114,40 @@ impl ForwardModel for MockModel {
             logits[i * v + id] = 1.0;
         }
         Ok(logits)
+    }
+}
+
+impl ForwardModel for MockModel {
+    fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    fn forward_chunk(
+        &self,
+        tokens: &[u32],
+        valid_len: usize,
+        kv: &mut KvView,
+        cur_len: usize,
+    ) -> Result<Vec<f32>> {
+        self.forward_one(tokens, valid_len, kv, cur_len, true)
+    }
+
+    /// Batched specialization: one simulated device dispatch for the whole
+    /// batch — lanes run concurrently, so the modeled cost is the *slowest
+    /// lane*, not the per-lane sum. This is what makes continuous batching
+    /// show real throughput wins on the mock backend
+    /// (`benches/ablation_batching.rs`); the token/KV semantics are
+    /// identical to looping `forward_chunk`.
+    fn forward_batch(&self, items: &mut [BatchItem<'_>]) -> Result<Vec<Vec<f32>>> {
+        if !self.delay_per_token.is_zero() {
+            if let Some(mx) = items.iter().map(|it| it.valid_len).max() {
+                std::thread::sleep(self.delay_per_token * mx as u32);
+            }
+        }
+        items
+            .iter_mut()
+            .map(|it| self.forward_one(it.tokens, it.valid_len, it.kv, it.cur_len, false))
+            .collect()
     }
 }
 
@@ -153,6 +191,66 @@ mod tests {
         assert!(m.forward_chunk(&[1], 1, &mut kv, 0).is_ok());
         assert!(m.forward_chunk(&[2], 1, &mut kv, 1).is_err());
         assert!(m.forward_chunk(&[2], 1, &mut kv, 1).is_ok());
+    }
+
+    #[test]
+    fn unpadded_final_chunk_legal_only_near_window() {
+        // buckets without 1: the engine's near-window fallback sends an
+        // unpadded chunk when even the smallest bucket would spill.
+        let mut cfg = ModelConfig::nano();
+        cfg.chunk_sizes = vec![8, 32, 64];
+        let m = MockModel::new(cfg.clone());
+        let a = KvArena::with_defaults(m.config());
+
+        // mid-window: 5 is not a bucket and padding to 8 fits -> rejected
+        let mut kv = a.new_view();
+        assert!(m.forward_chunk(&[1, 2, 3, 4, 5], 5, &mut kv, 0).is_err());
+
+        // near the window (251 + 8 > 256): the unpadded 5-chunk is legal
+        let mut kv = a.new_view();
+        for pos in 0..251 {
+            kv.row_mut(0, 0, 0, pos).unwrap()[0] = 1.0;
+        }
+        kv.commit(251);
+        let logits = m.forward_chunk(&[1, 2, 3, 4, 5], 5, &mut kv, 251).unwrap();
+        assert_eq!(logits.len(), 5 * cfg.vocab_size);
+        assert_eq!(kv.len(), 256);
+        // but a *padded* non-bucket chunk is still rejected there
+        let mut kv2 = a.new_view();
+        for pos in 0..251 {
+            kv2.row_mut(0, 0, 0, pos).unwrap()[0] = 1.0;
+        }
+        kv2.commit(251);
+        assert!(m.forward_chunk(&[1, 2, 3, 4, 0], 4, &mut kv2, 251).is_err());
+    }
+
+    #[test]
+    fn forward_batch_matches_sequential_chunks() {
+        let m = MockModel::new(ModelConfig::nano());
+        let a = arena(&m);
+        // two independent sequences, stepped one token each
+        let mut kv_a = a.new_view();
+        let mut kv_b = a.new_view();
+        let la = m.forward_chunk(&[3], 1, &mut kv_a, 0).unwrap();
+        let lb = m.forward_chunk(&[9], 1, &mut kv_b, 0).unwrap();
+        // sequential reference for the second step
+        let mut kv_a_ref = kv_a.clone();
+        let mut kv_b_ref = kv_b.clone();
+        let ra = m.forward_chunk(&[4], 1, &mut kv_a_ref, 1).unwrap();
+        let rb = m.forward_chunk(&[10], 1, &mut kv_b_ref, 1).unwrap();
+        drop((la, lb));
+        // batched second step
+        let (ta, tb) = ([4u32], [10u32]);
+        let mut items = vec![
+            crate::engine::BatchItem { tokens: &ta, valid_len: 1, kv: &mut kv_a, cur_len: 1 },
+            crate::engine::BatchItem { tokens: &tb, valid_len: 1, kv: &mut kv_b, cur_len: 1 },
+        ];
+        let out = m.forward_batch(&mut items).unwrap();
+        drop(items);
+        assert_eq!(out[0], ra);
+        assert_eq!(out[1], rb);
+        assert_eq!(kv_a.to_contiguous(), kv_a_ref.to_contiguous());
+        assert_eq!(kv_b.to_contiguous(), kv_b_ref.to_contiguous());
     }
 
     #[test]

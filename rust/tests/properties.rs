@@ -3,12 +3,17 @@
 //! vendor set). Each property runs over hundreds of seeded random inputs;
 //! failures report the reproducing seed.
 
+use std::collections::VecDeque;
+use std::sync::Arc;
+
 use recycle_serve::config::{CacheConfig, EvictionPolicy, ModelConfig};
-use recycle_serve::engine::{plan_chunks, Engine};
-use recycle_serve::index::FlatIndex;
+use recycle_serve::coordinator::SessionManager;
+use recycle_serve::engine::{plan_chunks, DecodeStream, Engine};
+use recycle_serve::index::{FlatIndex, NgramEmbedder};
 use recycle_serve::kvcache::{persist, BlockPool, KvArena, KvRecord, KvStore, KvView};
 use recycle_serve::prefix::{common_prefix_len, reuse_depth, RadixTree};
 use recycle_serve::prop_assert;
+use recycle_serve::recycler::{Admission, RecyclePolicy, Recycler};
 use recycle_serve::testutil::prop::{check, text, tokens};
 use recycle_serve::testutil::MockModel;
 use recycle_serve::tokenizer::{pretokenize, Tokenizer};
@@ -513,6 +518,286 @@ fn prop_view_truncate_preserves_prefix_and_frees_blocks() {
             }
         }
         assert_arena_conserved(&arena, "after truncate")?;
+        Ok(())
+    });
+}
+
+// ---------- continuous batching ----------
+
+/// One request in the randomized serving workload: an optional session
+/// (turn prompts extend the committed transcript) and a prompt text.
+struct ReqSpec {
+    session: Option<usize>,
+    msg: String,
+    max_new: usize,
+}
+
+fn mk_recycler(policy: RecyclePolicy) -> Recycler<MockModel> {
+    Recycler::new(
+        Engine::new(MockModel::new(ModelConfig::nano())),
+        Arc::new(Tokenizer::new(vec![])),
+        Box::new(NgramEmbedder::new(64)),
+        CacheConfig {
+            max_entries: 8,
+            ..Default::default()
+        },
+        policy,
+    )
+}
+
+/// Build the prompt (text, ids, admit_full) for a request, mirroring the
+/// coordinator's admission (token-level session continuation).
+fn build_prompt(
+    r: &Recycler<MockModel>,
+    sessions: &SessionManager,
+    q: &ReqSpec,
+) -> (String, Vec<u32>, bool) {
+    match q.session {
+        Some(sid) => {
+            let key = format!("s{sid}");
+            let seg = sessions.segment_for(&key, &q.msg);
+            let (mut text, mut ids) = sessions.state_of(&key);
+            text.push_str(&seg);
+            ids.extend(r.tokenizer().encode(&seg));
+            (text, ids, true)
+        }
+        None => (q.msg.clone(), r.tokenizer().encode(&q.msg), false),
+    }
+}
+
+fn commit_turn(
+    sessions: &mut SessionManager,
+    q: &ReqSpec,
+    text: &str,
+    ids: &[u32],
+    out_ids: &[u32],
+    out_text: &str,
+) {
+    if let Some(sid) = q.session {
+        let mut full_ids = ids.to_vec();
+        full_ids.extend_from_slice(out_ids);
+        sessions.commit(
+            &format!("s{sid}"),
+            &q.msg,
+            format!("{text}{out_text}"),
+            full_ids,
+            out_text,
+        );
+    }
+}
+
+#[test]
+fn prop_continuous_batched_decode_token_identical_to_sequential() {
+    // THE serving-level exactness property: any randomized interleaving of
+    // hit / miss / session requests decoded via the continuous-batching
+    // stream API emits exactly the tokens request-at-a-time serving emits.
+    check("batched == sequential serving", 20, |rng| {
+        let policy = if rng.chance(0.5) {
+            RecyclePolicy::Strict
+        } else {
+            RecyclePolicy::Radix
+        };
+        // workload: fresh prompts (misses), extensions of earlier prompts
+        // (hits), and session turns, in random order ("q"/"base" prefixes
+        // keep every prompt non-empty)
+        let bases: Vec<String> =
+            (0..3).map(|i| format!("base {i} {}", text(rng, 30))).collect();
+        let n_req = rng.range(4, 10);
+        let reqs: Vec<ReqSpec> = (0..n_req)
+            .map(|_| match rng.below(4) {
+                0 => ReqSpec {
+                    session: None,
+                    msg: format!("q {}", text(rng, 40)),
+                    max_new: rng.range(1, 5),
+                },
+                1 => ReqSpec {
+                    session: None,
+                    msg: rng.choice(&bases).clone(),
+                    max_new: rng.range(1, 5),
+                },
+                2 => {
+                    let b = rng.choice(&bases).clone();
+                    let suffix = text(rng, 20);
+                    ReqSpec {
+                        session: None,
+                        msg: format!("{b} {suffix}"),
+                        max_new: rng.range(1, 5),
+                    }
+                }
+                _ => ReqSpec {
+                    session: Some(rng.below(2)),
+                    msg: text(rng, 15),
+                    max_new: rng.range(1, 4),
+                },
+            })
+            .collect();
+
+        // --- arm 1: sequential (the paper's request-at-a-time loop) ---
+        let mut seq = mk_recycler(policy);
+        let mut seq_sessions = SessionManager::new();
+        let mut expected: Vec<Vec<u32>> = Vec::new();
+        for q in &reqs {
+            let (ptext, pids, admit_full) = build_prompt(&seq, &seq_sessions, q);
+            let out = seq
+                .generate_ids(&ptext, pids.clone(), q.max_new, admit_full)
+                .map_err(|e| e.to_string())?;
+            commit_turn(&mut seq_sessions, q, &ptext, &pids, &out.ids, &out.text);
+            expected.push(out.ids);
+        }
+
+        // --- arm 2: continuous batching over the same request stream ---
+        struct Slot {
+            idx: usize,
+            text: String,
+            ids: Vec<u32>,
+            meta: Option<recycle_serve::recycler::ServeMeta>,
+            stream: DecodeStream,
+        }
+        let mut bat = mk_recycler(policy);
+        let mut bat_sessions = SessionManager::new();
+        let max_batch = rng.range(2, 5);
+        let mut pending: VecDeque<usize> = (0..reqs.len()).collect();
+        let mut running: Vec<Slot> = Vec::new();
+        let mut got: Vec<Option<Vec<u32>>> = (0..reqs.len()).map(|_| None).collect();
+        let mut steps = 0usize;
+        while got.iter().any(|g| g.is_none()) {
+            steps += 1;
+            prop_assert!(steps < 10_000, "scheduler did not converge");
+            // admission (occasionally skipped to randomize interleavings);
+            // a session turn defers while an earlier turn is in flight
+            if !rng.chance(0.3) {
+                let mut i = 0;
+                while running.len() < max_batch && i < pending.len() {
+                    let idx = pending[i];
+                    let blocked = reqs[idx].session.is_some_and(|sid| {
+                        running.iter().any(|s| reqs[s.idx].session == Some(sid))
+                    });
+                    if blocked {
+                        i += 1;
+                        continue;
+                    }
+                    let _ = pending.remove(i);
+                    let q = &reqs[idx];
+                    let (ptext, pids, admit_full) = build_prompt(&bat, &bat_sessions, q);
+                    let Admission { kv, cur_len, meta } =
+                        bat.prepare(&ptext, &pids, admit_full);
+                    let stream = bat
+                        .engine_mut()
+                        .start_stream(&pids, kv, cur_len, q.max_new, meta.want_capture)
+                        .map_err(|e| e.to_string())?;
+                    running.push(Slot {
+                        idx,
+                        text: ptext,
+                        ids: pids,
+                        meta: Some(meta),
+                        stream,
+                    });
+                }
+            }
+            // one batched decode step over every active stream
+            if !running.is_empty() {
+                let mut refs: Vec<&mut DecodeStream> =
+                    running.iter_mut().map(|s| &mut s.stream).collect();
+                bat.engine_mut()
+                    .step_streams(&mut refs)
+                    .map_err(|e| e.to_string())?;
+            }
+            assert_arena_conserved(bat.arena(), "mid-decode")?;
+            // finish
+            let mut i = 0;
+            while i < running.len() {
+                if !running[i].stream.is_finished() {
+                    i += 1;
+                    continue;
+                }
+                let mut slot = running.swap_remove(i);
+                let meta = slot.meta.take().expect("meta consumed once");
+                let out = bat.complete(
+                    &slot.text,
+                    &slot.ids,
+                    meta,
+                    slot.stream.into_generated(),
+                );
+                commit_turn(
+                    &mut bat_sessions,
+                    &reqs[slot.idx],
+                    &slot.text,
+                    &slot.ids,
+                    &out.ids,
+                    &out.text,
+                );
+                got[slot.idx] = Some(out.ids);
+            }
+        }
+        for (i, (want, g)) in expected.iter().zip(&got).enumerate() {
+            let g = g.as_ref().expect("all finished");
+            prop_assert!(
+                g == want,
+                "request {i} diverged under batching: {g:?} vs {want:?}"
+            );
+        }
+        // everything drained: only cache records may still hold blocks
+        assert_arena_conserved(bat.arena(), "after drain")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_arena_conserved_while_batch_decodes_over_shared_prefix() {
+    // N concurrent streams all attached to ONE cached prefix record decode
+    // together: block accounting stays conserved at every step, the
+    // fully-covered prefix blocks remain physically shared (COW only
+    // touches boundary/appended blocks), and the donor record is intact.
+    check("shared-prefix batched decode", 30, |rng| {
+        let cfg = ModelConfig::nano();
+        let mut engine = Engine::new(MockModel::new(cfg.clone()));
+        let base = tokens(rng, 9, 60, cfg.vocab_size as u32);
+        let mut kv = engine.empty_kv();
+        engine.prefill(&base, &mut kv, 0).map_err(|e| e.to_string())?;
+        let record = KvRecord::from_view("p", base.clone(), vec![1.0], &kv);
+        drop(kv);
+        let donor_before = record.kv.to_contiguous();
+
+        let bt = engine.arena().block_tokens();
+        let shared_blocks = base.len() / bt; // fully-covered prefix blocks
+        let n = rng.range(2, 6);
+        let mut streams: Vec<DecodeStream> = Vec::new();
+        for _ in 0..n {
+            let mut ids = base.clone();
+            ids.extend(tokens(rng, 1, 6, cfg.vocab_size as u32));
+            let s = engine
+                .start_stream(&ids, record.attach(), base.len(), rng.range(1, 6), false)
+                .map_err(|e| e.to_string())?;
+            streams.push(s);
+        }
+        loop {
+            let mut refs: Vec<&mut DecodeStream> = streams.iter_mut().collect();
+            let report = engine.step_streams(&mut refs).map_err(|e| e.to_string())?;
+            drop(refs);
+            assert_arena_conserved(engine.arena(), "decode step")?;
+            if report.active == 0 {
+                break;
+            }
+        }
+        // the common prefix is ONE physical copy across all streams
+        for s in &streams {
+            prop_assert!(
+                s.kv().block_ids()[..shared_blocks]
+                    == record.kv.block_ids()[..shared_blocks],
+                "prefix blocks were copied instead of shared"
+            );
+        }
+        prop_assert!(
+            record.kv.to_contiguous() == donor_before,
+            "donor record mutated by concurrent decode"
+        );
+        // dropping everything returns every block
+        drop(streams);
+        drop(record);
+        prop_assert!(
+            engine.arena().free_blocks() == engine.arena().capacity_blocks(),
+            "leak after drain"
+        );
         Ok(())
     });
 }
