@@ -1,5 +1,6 @@
-//! A6 — continuous-batching throughput ablation: decode tokens/s for the
-//! same request stream at batch sizes {1, 4, 8}.
+//! A6 — continuous-batching ablations: (1) decode tokens/s for the same
+//! request stream at batch sizes {1, 4, 8}; (2) head-of-line latency under
+//! a long cache-cold arrival, chunked prefill vs inline admission.
 //!
 //! Runs on the mock backend (no artifacts needed) with a simulated
 //! per-token device cost, so the numbers isolate the *scheduling* effect:
@@ -9,6 +10,18 @@
 //! occupancy. Batch size 1 reproduces the paper's request-at-a-time
 //! serving and is the baseline every other row must beat.
 //!
+//! The head-of-line scenario drives the tick-level `Scheduler` directly:
+//! three streams are decoding when a long cache-cold prompt and a short
+//! "victim" request arrive together. Inline admission (chunk budget >=
+//! max_seq — the PR-2 behavior) runs the whole 200-token prefill in one
+//! tick, so the in-flight streams' next token and the victim's first
+//! token both wait for all of it. Chunked admission bounds the per-tick
+//! prefill work, so the reported worst decode stall and the victim's
+//! time-to-first-token must both improve. The long prompt's own TTFT is
+//! reported too: chunking cannot speed up its prefill (same total work,
+//! now sharing ticks with decode), so that column stays roughly flat —
+//! the win is everyone behind it no longer being blocked.
+//!
 //! ```bash
 //! cargo bench --bench ablation_batching            # full
 //! cargo bench --bench ablation_batching -- --quick # smoke
@@ -16,11 +29,16 @@
 
 mod common;
 
-use std::time::Duration;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
 
-use recycle_serve::config::ModelConfig;
+use recycle_serve::config::{ModelConfig, ServerConfig};
+use recycle_serve::coordinator::{Request, Response, SchedEvent, Scheduler};
 use recycle_serve::engine::{DecodeStream, Engine};
+use recycle_serve::index::NgramEmbedder;
+use recycle_serve::recycler::{RecyclePolicy, Recycler};
 use recycle_serve::testutil::MockModel;
+use recycle_serve::tokenizer::Tokenizer;
 use recycle_serve::util::timing::Stopwatch;
 
 /// Serve `n_req` prompts through the stream API at a fixed max occupancy,
@@ -71,6 +89,120 @@ fn run(batch: usize, n_req: usize, prompt_len: usize, max_new: usize) -> (usize,
     (decoded, sw.elapsed_secs())
 }
 
+/// What the head-of-line scenario measured, all in milliseconds.
+struct HolReport {
+    /// Worst gap between consecutive decode dispatches after the long
+    /// prompt arrived (how badly in-flight streams stalled).
+    stall_ms_max: f64,
+    /// Submission -> first token for the short victim arriving right
+    /// behind the long prompt.
+    ttft_victim_ms: f64,
+    /// Submission -> first token for the long cold prompt itself.
+    ttft_long_ms: f64,
+}
+
+/// Three in-flight decode streams; a 200-token cache-cold prompt and an
+/// 8-token victim arrive together. Tick the scheduler to completion of
+/// both arrivals, timing decode-dispatch gaps and first tokens.
+/// `budget >= max_seq` reproduces inline admission (whole prefill in the
+/// admission tick); small budgets are the chunked path.
+fn hol_scenario(budget: usize, delay: Duration) -> HolReport {
+    let cfg = ModelConfig::nano();
+    let recycler = Recycler::new(
+        Engine::new(MockModel::with_delay(cfg.clone(), delay)),
+        Arc::new(Tokenizer::new(vec![])),
+        Box::new(NgramEmbedder::new(64)),
+        Default::default(),
+        RecyclePolicy::Off, // every prompt is cache-cold
+    );
+    let mut sched = Scheduler::new(
+        recycler,
+        ServerConfig {
+            max_batch: 8,
+            prefill_chunk_tokens: budget,
+            max_prefilling_slots: 2,
+            populate_cache: false,
+            ..Default::default()
+        },
+    );
+    let mk_req = |id: u64, prompt: String, max_new: usize| {
+        let (tx, rx) = mpsc::channel::<Response>();
+        (
+            Request {
+                id,
+                prompt,
+                max_new_tokens: max_new,
+                session: None,
+                reply: tx,
+                queued_at: Instant::now(),
+            },
+            rx,
+        )
+    };
+    // phase 1: three streams decoding (keep them busy past the scenario)
+    let mut keep_rx = Vec::new();
+    let mut warm = Vec::new();
+    for i in 0..3u64 {
+        let (r, rx) = mk_req(i + 1, format!("warm prompt {i}"), 200);
+        warm.push(r);
+        keep_rx.push(rx);
+    }
+    sched.tick(warm);
+    let mut guard = 0;
+    while sched.stats().first_tokens < 3 {
+        sched.tick(Vec::new());
+        guard += 1;
+        assert!(guard < 100, "warmup never produced first tokens");
+    }
+
+    // phase 2: the long cold prompt + the victim behind it
+    let (long_req, long_rx) = mk_req(4, "z".repeat(200), 4);
+    let (victim_req, victim_rx) = mk_req(5, "tiny ask".into(), 4);
+    let injected = Instant::now();
+    let mut last_decode = injected;
+    let mut report = HolReport {
+        stall_ms_max: 0.0,
+        ttft_victim_ms: f64::NAN,
+        ttft_long_ms: f64::NAN,
+    };
+    let mut fresh = vec![long_req, victim_req];
+    let mut done = (false, false);
+    let mut ticks = 0;
+    while !(done.0 && done.1) {
+        let out = sched.tick(std::mem::take(&mut fresh));
+        let now = Instant::now();
+        for (tx, resp) in out.replies {
+            let _ = tx.send(resp);
+        }
+        for ev in &out.events {
+            match ev {
+                SchedEvent::DecodeStep { .. } => {
+                    let gap = now.duration_since(last_decode).as_secs_f64() * 1e3;
+                    report.stall_ms_max = report.stall_ms_max.max(gap);
+                    last_decode = now;
+                }
+                SchedEvent::FirstToken { id: 4 } => {
+                    report.ttft_long_ms =
+                        now.duration_since(injected).as_secs_f64() * 1e3;
+                }
+                SchedEvent::FirstToken { id: 5 } => {
+                    report.ttft_victim_ms =
+                        now.duration_since(injected).as_secs_f64() * 1e3;
+                }
+                SchedEvent::Finished { id: 4, .. } => done.0 = true,
+                SchedEvent::Finished { id: 5, .. } => done.1 = true,
+                _ => {}
+            }
+        }
+        ticks += 1;
+        assert!(ticks < 10_000, "HOL scenario never converged");
+    }
+    drop(long_rx);
+    drop(victim_rx);
+    drop(keep_rx);
+    report
+}
+
 fn main() {
     common::banner("ablation_batching", "A6 continuous-batching throughput");
     let (n_req, max_new) = if common::quick() { (8, 16) } else { (16, 32) };
@@ -114,5 +246,59 @@ fn main() {
     assert!(
         tps_at[1..].iter().all(|&(_, tps)| tps > base),
         "continuous batching must beat request-at-a-time on the mock backend"
+    );
+
+    // --- head-of-line: chunked prefill vs inline admission -------------
+    println!("\nhead-of-line under a 200-token cold arrival (3 decoding):");
+    println!(
+        "{:<10} {:>14} {:>16} {:>14}",
+        "mode", "stall_ms_max", "ttft_victim_ms", "ttft_long_ms"
+    );
+    let delay = Duration::from_micros(200);
+    let max_seq = ModelConfig::nano().max_seq;
+    let inline = hol_scenario(max_seq, delay); // whole prefill in one tick
+    let chunked = hol_scenario(32, delay);
+    let mut hol_rows: Vec<Vec<String>> = Vec::new();
+    for (mode, r) in [("inline", &inline), ("chunked", &chunked)] {
+        println!(
+            "{mode:<10} {:>14.2} {:>16.2} {:>14.2}",
+            r.stall_ms_max, r.ttft_victim_ms, r.ttft_long_ms
+        );
+        hol_rows.push(vec![
+            mode.to_string(),
+            format!("{:.3}", r.stall_ms_max),
+            format!("{:.3}", r.ttft_victim_ms),
+            format!("{:.3}", r.ttft_long_ms),
+        ]);
+    }
+    let hol_out = common::results_dir().join("ablation_chunked_prefill.csv");
+    recycle_serve::util::csv::write_file(
+        &hol_out,
+        &["mode", "stall_ms_max", "ttft_victim_ms", "ttft_long_ms"],
+        &hol_rows,
+    )
+    .expect("write csv");
+    println!("wrote {}", hol_out.display());
+    println!(
+        "chunked improves worst decode stall {:.1}x, victim TTFT {:.1}x \
+         (long-prompt TTFT {:.2} -> {:.2} ms: its own prefill work is \
+         unchanged by design)",
+        inline.stall_ms_max / chunked.stall_ms_max,
+        inline.ttft_victim_ms / chunked.ttft_victim_ms,
+        inline.ttft_long_ms, chunked.ttft_long_ms,
+    );
+    assert!(
+        chunked.stall_ms_max < inline.stall_ms_max,
+        "chunked prefill must shrink the worst in-flight decode stall \
+         ({:.2} vs {:.2} ms)",
+        chunked.stall_ms_max,
+        inline.stall_ms_max
+    );
+    assert!(
+        chunked.ttft_victim_ms < inline.ttft_victim_ms,
+        "a request behind the long cold prompt must reach its first token \
+         sooner under chunked prefill ({:.2} vs {:.2} ms)",
+        chunked.ttft_victim_ms,
+        inline.ttft_victim_ms
     );
 }

@@ -27,6 +27,19 @@ pub struct ServerConfig {
     /// Whether new prompts are inserted into the KV cache after prefill
     /// (true = the paper's cache-building pass happens online).
     pub populate_cache: bool,
+    /// Per-tick token budget for chunked prefill: each scheduler tick
+    /// advances an admitting slot's prefill by at most this many prompt
+    /// tokens alongside the batched decode dispatch, so one long
+    /// cache-cold prompt cannot stall in-flight decode streams for more
+    /// than a chunk's worth of work (head-of-line bound). Values at or
+    /// above the context window reproduce the old inline-at-admission
+    /// behavior (the whole prefill runs in the admission tick).
+    pub prefill_chunk_tokens: usize,
+    /// How many slots may be in the chunked-prefill state at once;
+    /// arrivals beyond this are held back until a prefill completes. The
+    /// per-tick prefill work is bounded by
+    /// `prefill_chunk_tokens * max_prefilling_slots`.
+    pub max_prefilling_slots: usize,
 }
 
 impl Default for ServerConfig {
@@ -39,6 +52,8 @@ impl Default for ServerConfig {
             batch_first_wait_ms: 50,
             default_max_new_tokens: 32,
             populate_cache: true,
+            prefill_chunk_tokens: 32,
+            max_prefilling_slots: 1,
         }
     }
 }
@@ -70,6 +85,12 @@ impl ServerConfig {
         if let Some(n) = usize_field("default_max_new_tokens")? {
             c.default_max_new_tokens = n;
         }
+        if let Some(n) = usize_field("prefill_chunk_tokens")? {
+            c.prefill_chunk_tokens = n;
+        }
+        if let Some(n) = usize_field("max_prefilling_slots")? {
+            c.max_prefilling_slots = n;
+        }
         if let Some(x) = v.get("batch_window_ms") {
             c.batch_window_ms = x
                 .as_usize()
@@ -99,6 +120,13 @@ impl ServerConfig {
             // the idle scheduler blocks for this long between queue polls;
             // zero would busy-spin a core whenever the server is idle
             return Err(Error::Config("batch_first_wait_ms must be > 0".into()));
+        }
+        if self.prefill_chunk_tokens == 0 || self.max_prefilling_slots == 0 {
+            // zero budget/slots would wedge admission: prefill could never
+            // advance, so no request would ever reach decode
+            return Err(Error::Config(
+                "prefill_chunk_tokens/max_prefilling_slots must be > 0".into(),
+            ));
         }
         Ok(())
     }
@@ -146,6 +174,30 @@ mod tests {
     #[test]
     fn rejects_zero_batch() {
         let v = json::parse(r#"{"max_batch": 0}"#).unwrap();
+        assert!(ServerConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn parses_chunked_prefill_knobs() {
+        let v = json::parse(
+            r#"{"prefill_chunk_tokens": 16, "max_prefilling_slots": 2}"#,
+        )
+        .unwrap();
+        let c = ServerConfig::from_json(&v).unwrap();
+        assert_eq!(c.prefill_chunk_tokens, 16);
+        assert_eq!(c.max_prefilling_slots, 2);
+        // defaults: one admitting slot, bucket-sized budget
+        let d = ServerConfig::default();
+        assert_eq!(d.prefill_chunk_tokens, 32);
+        assert_eq!(d.max_prefilling_slots, 1);
+    }
+
+    #[test]
+    fn rejects_zero_prefill_knobs() {
+        // zero budget or zero slots would wedge admission forever
+        let v = json::parse(r#"{"prefill_chunk_tokens": 0}"#).unwrap();
+        assert!(ServerConfig::from_json(&v).is_err());
+        let v = json::parse(r#"{"max_prefilling_slots": 0}"#).unwrap();
         assert!(ServerConfig::from_json(&v).is_err());
     }
 }

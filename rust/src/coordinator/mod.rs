@@ -1,21 +1,28 @@
 //! The serving coordinator: bounded request queue, continuous-batching
-//! scheduler, session manager, and the worker loop that drives the
-//! recycler.
+//! scheduler with chunked prefill, session manager, and the worker loop
+//! that drives the recycler.
 //!
 //! Threading model (tokio is not in the offline vendor set): submitters
 //! enqueue into a bounded [`queue::RequestQueue`]; one worker thread runs
-//! the scheduler in [`service`]. Each request is a per-request state
-//! machine — lookup → prefill → decode → finish — held in a running set of
-//! decode streams. Every scheduler tick advances *all* active streams one
-//! token through a single `forward_batch` call ([`crate::engine`]'s
-//! stream API), finished requests reply immediately on their per-request
-//! channel, and new arrivals are admitted between ticks
-//! ([`batcher::drain_ready`], non-blocking) instead of waiting for the
-//! whole batch to drain. Admission is arena-aware
-//! ([`crate::recycler::Recycler::admission_headroom`]) and two turns of
-//! one session never decode concurrently. Batched decode is
-//! token-identical to sequential serving (`max_batch = 1`, the paper's
-//! setting) — property-tested in `rust/tests/properties.rs`.
+//! the tick-driven [`Scheduler`] in [`service`]. Each request is a
+//! per-slot state machine — lookup → **chunked-prefill** → decode →
+//! finish — held in a running set. Admission attaches the recycled
+//! prefix without running any forward; each tick then advances the
+//! admitting slots' prefill by at most
+//! `ServerConfig::prefill_chunk_tokens` prompt tokens alongside the
+//! single `forward_batch` call that advances all decoding streams one
+//! token ([`crate::engine`]'s stream API), so a long cache-cold prompt
+//! cannot head-of-line-block in-flight decodes. Finished requests reply
+//! immediately on their per-request channel, and new arrivals are
+//! admitted between ticks ([`batcher::drain_ready`], non-blocking)
+//! instead of waiting for the whole batch to drain. Admission is
+//! arena-aware ([`crate::recycler::Recycler::admission_headroom`], with
+//! reservations held across chunk boundaries) and two turns of one
+//! session never run concurrently — prefilling counts as running. Both
+//! batched decode and chunked prefill are token-identical to sequential
+//! serving (`max_batch = 1`, the paper's setting) — property-tested in
+//! `rust/tests/properties.rs` through the deterministic scheduler-trace
+//! harness in [`crate::testutil::trace`].
 
 mod batcher;
 mod queue;
@@ -26,5 +33,8 @@ mod session;
 pub use batcher::{drain_batch, drain_ready};
 pub use queue::{QueueError, RequestQueue};
 pub use request::{Request, Response};
-pub use service::{Coordinator, CoordinatorStats};
+pub use service::{
+    admission_prompt, Coordinator, CoordinatorStats, DeferReason, SchedEvent, Scheduler,
+    TickReport,
+};
 pub use session::{truncate_to_window, SessionManager, Turn};

@@ -1,21 +1,53 @@
-//! The coordinator service: worker thread + submission handle.
+//! The coordinator service: a tick-driven scheduler, the worker thread
+//! that drives it, and the submission handle.
 //!
-//! The worker runs a **continuous-batching scheduler**: each queued
-//! request becomes a per-request state machine (lookup → prefill → decode
-//! → finish) held in a running set of [`DecodeStream`]s. Every scheduler
-//! tick advances *all* active streams one token through a single
-//! `forward_batch` call, and new arrivals are admitted between ticks —
-//! a short request never waits for a long one to drain, and a
-//! batching-capable backend amortizes per-dispatch overhead across the
-//! whole running set. `max_batch = 1` degenerates to the paper's
-//! request-at-a-time serving; batched decode is token-identical to it
-//! (property-tested in `rust/tests/properties.rs`).
+//! The worker runs a **continuous-batching scheduler with chunked
+//! prefill**: each queued request becomes a per-slot state machine —
+//! **lookup → chunked-prefill → decode → finish** — held in a running set
+//! of slots. Admission (`lookup`) retrieves the recycled prefix and
+//! opens a suspendable [`PrefillStream`] *without running any forward*;
+//! every scheduler tick then advances at most
+//! `ServerConfig::max_prefilling_slots` admitting slots by at most
+//! `ServerConfig::prefill_chunk_tokens` prompt tokens each
+//! (`chunked-prefill`), alongside the single `forward_batch` dispatch that
+//! advances all decoding streams one token (`decode`). A long cache-cold
+//! prompt therefore never stalls in-flight decodes for more than one
+//! chunk budget of work per tick — the head-of-line bound the
+//! `prefill_stall_tokens_max` counter records — instead of running its
+//! whole prefill inline at admission. Finished streams reply immediately
+//! (`finish`). `max_batch = 1` with a window-sized chunk budget
+//! degenerates to the paper's request-at-a-time serving; both batched
+//! decode and chunked prefill are token-identical to it (property-tested
+//! in `rust/tests/properties.rs` via the deterministic trace harness in
+//! [`crate::testutil::trace`]).
 //!
-//! Admission is arena-aware: while streams are in flight, new requests are
-//! only admitted when [`Recycler::admission_headroom`] holds (cold cache
-//! entries are shed first), so a newcomer cannot starve running decodes of
-//! KV blocks. Two turns of the same session are never decoded
-//! concurrently — the later one is deferred until the earlier commits.
+//! The scheduler core is the [`Scheduler`] struct: one [`Scheduler::tick`]
+//! call runs admission, one prefill step, one decode step, and the finish
+//! sweep, and returns the tick's [`SchedEvent`] trace. The worker thread
+//! is a thin loop around it (drain the queue, tick, publish stats); tests
+//! drive the same `tick` directly with scripted arrivals for
+//! deterministic, replayable interleavings.
+//!
+//! Scheduler invariants, restated for multi-tick admission:
+//!
+//! * **Same-session order** — two turns of one session never run
+//!   concurrently, where "running" includes slots still in the
+//!   chunked-prefill state; a later turn waits behind an earlier one
+//!   whether it is prefilling, decoding, or queued ahead of it in the
+//!   holdback queue.
+//! * **Arena conservation** — a partially-prefilled slot pins exactly the
+//!   blocks its written chunks cover; admission reserves the *remaining*
+//!   growth (rest of the prompt plus the decode budget) for every running
+//!   slot, prefilling or decoding, so a newcomer cannot eat blocks an
+//!   in-flight slot will need across its chunk boundaries. Dropping a
+//!   slot at any chunk boundary releases its blocks (clean shedding).
+//! * **Zero-yield shed latch** — arena-pressure shedding still goes
+//!   through [`Recycler`]'s stall latch; the chunked path adds one
+//!   shed-and-*resume* retry on a mid-prefill `ArenaExhausted`: the
+//!   stream keeps its completed chunks, so the retry re-runs only the
+//!   failed chunk and `prefill_calls` counts each chunk exactly once.
+//! * **Headroom FIFO** — while any request is held back for arena
+//!   headroom, no fresh request is drained past it (unchanged).
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -24,7 +56,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::config::ServerConfig;
-use crate::engine::{DecodeStream, ForwardModel};
+use crate::engine::{DecodeStream, ForwardModel, PrefillStream};
 use crate::error::{Error, Result};
 use crate::metrics::{Counters, SchedulerStats};
 use crate::recycler::{Outcome, Recycler, ServeMeta};
@@ -45,7 +77,8 @@ pub struct CoordinatorStats {
     pub batches: u64,
     /// Engine-level counters snapshot.
     pub engine: Counters,
-    /// Continuous-batching occupancy + queue-wait counters.
+    /// Continuous-batching occupancy + queue-wait + chunked-prefill
+    /// counters (time-to-first-token, prefill stall bound).
     pub scheduler: SchedulerStats,
     pub cache_entries: usize,
     pub cache_bytes: usize,
@@ -86,9 +119,9 @@ impl Coordinator {
         let worker = std::thread::Builder::new()
             .name("recycle-coordinator".into())
             .spawn(move || {
-                let mut recycler = mk_recycler();
-                recycler.populate_cache = wcfg.populate_cache;
-                worker_loop(worker_shared, recycler, wcfg)
+                // populate_cache is applied from the config by
+                // Scheduler::new — the single owner of that flag
+                worker_loop(worker_shared, mk_recycler(), wcfg)
             })
             .expect("spawn coordinator worker");
         Coordinator {
@@ -174,37 +207,115 @@ impl Drop for Coordinator {
     }
 }
 
-/// One request in flight through the scheduler: its stream plus everything
-/// needed to finish it (session commit, cache admission, reply channel).
-/// Failures are replied-to and dropped where they occur (admission or the
-/// step-retry path), so a slot in `running` is always healthy.
-struct Running {
+/// Where one running slot is in the lookup → chunked-prefill → decode →
+/// finish state machine. `Transit` exists only inside a single conversion
+/// statement (moving the prefill stream into `finish_prefill`) and is
+/// never observable across ticks.
+enum SlotState {
+    /// Admission done (lookup + recycled-prefix attach); the prompt is
+    /// being prefilled chunk-by-chunk across ticks.
+    Prefilling(PrefillStream),
+    /// Prefill complete; the stream decodes one token per tick through
+    /// the shared `forward_batch` dispatch.
+    Decoding(DecodeStream),
+    /// Momentary placeholder during the prefill→decode conversion.
+    Transit,
+}
+
+/// One request in flight through the scheduler: its state-machine stage
+/// plus everything needed to finish it (session commit, cache admission,
+/// reply channel). Failures are replied-to and dropped where they occur,
+/// so a slot in `running` is always healthy.
+struct Slot {
     req: Request,
     prompt_text: String,
     prompt_ids: Vec<u32>,
     meta: ServeMeta,
-    stream: DecodeStream,
+    state: SlotState,
+    /// First decode token already recorded for TTFT accounting.
+    ttft_noted: bool,
+}
+
+impl Slot {
+    fn is_prefilling(&self) -> bool {
+        matches!(self.state, SlotState::Prefilling(_))
+    }
 }
 
 /// What became of one admission attempt.
 enum Admit {
-    /// Prefilled and decoding — a new running slot.
-    Ready(Box<Running>),
+    /// Looked-up and ready to prefill — a new running slot in the
+    /// `Prefilling` state (no forward has run yet).
+    Ready(Box<Slot>),
     /// The arena lacks headroom for this request right now; hold it back
     /// until running streams free blocks.
     Defer(Request),
-    /// Tokenization/prefill failed; reply with the message.
+    /// Tokenization/validation failed; reply with the message.
     Fail(Request, String),
 }
 
-/// Gate + tokenize + session-extend + lookup + prefill one request into a
-/// running slot. `headroom_reserved` is `Some(blocks)` while other streams
-/// are decoding (their unconsumed growth): admission then requires arena
-/// headroom for THIS request's estimated prompt + budget on top of that
-/// reserve, so a wave of near-window prompts cannot exhaust the arena
-/// mid-wave and hard-fail requests the sequential loop would have served.
-/// With `None` (idle scheduler) admission always proceeds — `prepare`
-/// sheds cache internally, so serial serving is always possible.
+/// Why a tick held a request back (trace-visible admission outcome).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeferReason {
+    /// An earlier turn of its session is still in flight or queued ahead.
+    Session,
+    /// The arena lacks headroom (FIFO applies behind it).
+    Headroom,
+    /// All `max_prefilling_slots` admitting slots (or all `max_batch`
+    /// running slots) are taken.
+    Slot,
+}
+
+/// One tick's outputs: the event trace plus the replies the tick
+/// produced. The scheduler never sends on the reply channels itself — the
+/// driver must deliver `replies` only AFTER it has published the
+/// scheduler's counters, so a submitter that wakes on its reply and
+/// immediately reads `CoordinatorStats` sees its own completion reflected
+/// there (the ordering the sequential loop provided).
+pub struct TickReport {
+    pub events: Vec<SchedEvent>,
+    pub replies: TickReplies,
+}
+
+/// The replies one tick produced: each response paired with its request's
+/// reply channel, in completion order.
+pub type TickReplies = Vec<(mpsc::Sender<Response>, Response)>;
+
+/// One scheduler-tick event, as recorded by [`Scheduler::tick`]. The
+/// deterministic trace harness ([`crate::testutil::trace`]) collects these
+/// per tick so any interleaving of admissions, prefill chunks, decode
+/// dispatches, and completions can be asserted on and replayed.
+#[derive(Debug, Clone)]
+pub enum SchedEvent {
+    /// Request entered the running set (a prefill slot opened).
+    Admitted { id: u64 },
+    /// Request was held back this wave.
+    Deferred { id: u64, reason: DeferReason },
+    /// One chunked-prefill step advanced a slot by `tokens` prompt tokens;
+    /// `done` means the slot converts to decode this tick.
+    PrefillChunk { id: u64, tokens: usize, done: bool },
+    /// A failed prefill step was retried after shedding (arena pressure).
+    PrefillRetry { id: u64 },
+    /// One batched decode dispatch over `occupancy` streams.
+    DecodeStep { occupancy: usize },
+    /// Request emitted its first decode token.
+    FirstToken { id: u64 },
+    /// Request finished with `tokens` generated tokens and was replied to.
+    Finished { id: u64, tokens: usize },
+    /// Request failed and was replied to with the message.
+    Failed { id: u64, msg: String },
+}
+
+/// Gate + tokenize + session-extend + lookup one request into a running
+/// slot (the `lookup` stage — no prefill forward runs here; the slot is
+/// returned in the `Prefilling` state). `headroom_reserved` is
+/// `Some(blocks)` while other slots are running (their unconsumed
+/// growth): admission then requires arena headroom for THIS request's
+/// estimated prompt + budget on top of that reserve, so a wave of
+/// near-window prompts cannot exhaust the arena mid-wave and hard-fail
+/// requests the sequential loop would have served. With `None` (idle
+/// scheduler) admission always proceeds — `prepare` sheds cache
+/// internally, so serial serving is always possible.
 fn admit_one<M: ForwardModel>(
     req: Request,
     recycler: &mut Recycler<M>,
@@ -218,10 +329,10 @@ fn admit_one<M: ForwardModel>(
         req.max_new_tokens
     };
     let max_seq = recycler.config().max_seq;
-    // Session prompts are cut to this budget before serving (sliding
-    // window below), so both the admission estimate and the truncation
-    // must use the same number.
-    let session_budget = max_seq.saturating_sub(max_new.min(max_seq / 2)).max(1);
+    // Session prompts are cut to this budget before serving (the sliding
+    // window inside `admission_prompt`), so both the admission estimate
+    // and the truncation must use the same number.
+    let session_budget = session_window_budget(max_seq, max_new);
     if let Some(reserved) = headroom_reserved {
         // Cheap size upper bound BEFORE any transcript cloning or
         // tokenization: byte length bounds the BPE token count from above
@@ -243,28 +354,62 @@ fn admit_one<M: ForwardModel>(
             return Admit::Defer(req);
         }
     }
-    // Session requests continue the transcript at the *token* level; the
-    // previous turn's cached prompt+response KV makes the prefill
-    // incremental (see coordinator::session).
+    let (prompt_text, prompt_ids) =
+        admission_prompt(recycler, sessions, req.session.as_deref(), &req.prompt, max_new);
+    let is_session = req.session.is_some();
+    match try_begin(recycler, &prompt_text, &prompt_ids, max_new, is_session) {
+        Ok((stream, meta)) => Admit::Ready(Box::new(Slot {
+            req,
+            prompt_text,
+            prompt_ids,
+            meta,
+            state: SlotState::Prefilling(stream),
+            ttft_noted: false,
+        })),
+        Err(e) => Admit::Fail(req, e.to_string()),
+    }
+}
+
+/// The generation-budget reserve a session prompt must leave free before
+/// the context window: prompts are cut to `max_seq - min(max_new,
+/// max_seq/2)` (the reserve is capped at half the window so a huge
+/// max_new cannot gut the whole transcript).
+fn session_window_budget(max_seq: usize, max_new: usize) -> usize {
+    max_seq.saturating_sub(max_new.min(max_seq / 2)).max(1)
+}
+
+/// Build the exact prompt admission serves for a request: plain requests
+/// pass through; session requests continue the transcript at the *token*
+/// level (the previous turn's cached prompt+response KV makes the prefill
+/// incremental — see coordinator::session) and apply the sliding-window
+/// cut near the context window. Exposed so the sequential reference arm
+/// of the chunked-prefill property tests serves byte-identical prompts
+/// through `Recycler::generate_ids` — the two arms then differ only in
+/// scheduling, which is exactly what the property quantifies.
+pub fn admission_prompt<M: ForwardModel>(
+    recycler: &Recycler<M>,
+    sessions: &SessionManager,
+    session: Option<&str>,
+    user_msg: &str,
+    max_new: usize,
+) -> (String, Vec<u32>) {
     let tokenizer = recycler.tokenizer();
-    let (mut prompt_text, mut prompt_ids) = match &req.session {
+    let (mut prompt_text, mut prompt_ids) = match session {
         Some(sid) => {
-            let seg = sessions.segment_for(sid, &req.prompt);
+            let seg = sessions.segment_for(sid, user_msg);
             let (mut text, mut ids) = sessions.state_of(sid);
             text.push_str(&seg);
             ids.extend(tokenizer.encode(&seg));
             (text, ids)
         }
-        None => (req.prompt.clone(), tokenizer.encode(&req.prompt)),
+        None => (user_msg.to_string(), tokenizer.encode(user_msg)),
     };
-    let is_session = req.session.is_some();
-    if is_session {
+    if session.is_some() {
         // Sliding window: keep the transcript suffix when the prompt plus
         // the generation budget would overflow the context window, so a
         // long-lived session keeps serving instead of wedging on
-        // PromptTooLong forever. The reserve is capped at half the window
-        // so a huge max_new cannot gut the whole transcript.
-        let budget = session_budget;
+        // PromptTooLong forever.
+        let budget = session_window_budget(recycler.config().max_seq, max_new);
         if prompt_ids.len() > budget {
             // Hysteresis: cut to HALF the budget, not to its edge —
             // trimming to the edge would re-truncate every following turn,
@@ -279,42 +424,23 @@ fn admit_one<M: ForwardModel>(
             prompt_text = tokenizer.decode(&prompt_ids);
         }
     }
-    let started = try_start(recycler, &prompt_text, &prompt_ids, max_new, is_session)
-        .or_else(|e| match e {
-            Error::ArenaExhausted { .. } => {
-                // The cheap headroom pass stops shedding when evictions
-                // stop yielding blocks; an actual allocation failure is
-                // the backstop — drain the cache as far as needed and
-                // retry once (the failed attempt's partial blocks were
-                // released with its stream).
-                recycler.shed_for_tokens(prompt_ids.len() + max_new);
-                try_start(recycler, &prompt_text, &prompt_ids, max_new, is_session)
-            }
-            e => Err(e),
-        });
-    match started {
-        Ok((stream, meta)) => Admit::Ready(Box::new(Running {
-            req,
-            prompt_text,
-            prompt_ids,
-            meta,
-            stream,
-        })),
-        Err(e) => Admit::Fail(req, e.to_string()),
-    }
+    (prompt_text, prompt_ids)
 }
 
-/// Lookup + prefill: one admission attempt (shared by the primary path and
-/// the shed-and-retry backstop in [`admit_one`]).
-fn try_start<M: ForwardModel>(
+/// Lookup + open the prefill stream: the recycled prefix is attached and
+/// the prompt validated, but no forward runs and no new blocks are
+/// written — chunked prefill happens tick-by-tick in the scheduler.
+/// (`ArenaExhausted` therefore cannot fire here; mid-prefill pressure is
+/// handled by the scheduler's shed-and-resume retry.)
+fn try_begin<M: ForwardModel>(
     recycler: &mut Recycler<M>,
     prompt_text: &str,
     prompt_ids: &[u32],
     max_new: usize,
     admit_full: bool,
-) -> Result<(DecodeStream, ServeMeta)> {
+) -> Result<(PrefillStream, ServeMeta)> {
     let adm = recycler.prepare(prompt_text, prompt_ids, admit_full);
-    let stream = recycler.engine_mut().start_stream(
+    let stream = recycler.engine_mut().start_prefill(
         prompt_ids,
         adm.kv,
         adm.cur_len,
@@ -327,8 +453,9 @@ fn try_start<M: ForwardModel>(
 /// Why a request sits in the holdback queue.
 #[derive(Clone, Copy)]
 enum Hold {
-    /// An earlier turn of its session is still in flight (or an arena-held
-    /// request is ahead of it); other traffic may pass.
+    /// An earlier turn of its session is still in flight, an arena-held
+    /// request is ahead of it, or no running/prefilling slot was free;
+    /// other traffic may pass.
     Session,
     /// The arena lacks headroom for it. FIFO applies: no fresh request is
     /// drained past it, otherwise a stream of small admissible arrivals
@@ -337,15 +464,16 @@ enum Hold {
 }
 
 /// Is an earlier request of session `sid` still ahead of a candidate?
-/// "Ahead" means: decoding (`running`), already picked this wave
-/// (`arrivals`), waiting in the holdback queue before the candidate
-/// (`deferred[..deferred_limit]`), or re-queued this wave
-/// (`requeue_front`). Turn order within a session is a correctness
+/// "Ahead" means: in the running set (`running` — prefilling OR decoding;
+/// a slot mid-prefill is as committed to turn order as a decoding one),
+/// already picked this wave (`arrivals`), waiting in the holdback queue
+/// before the candidate (`deferred[..deferred_limit]`), or re-queued this
+/// wave (`requeue_front`). Turn order within a session is a correctness
 /// invariant — turn N+1's prompt extends turn N's committed ids — so a
 /// candidate must wait behind ALL of these, not just the running set.
 fn session_blocked(
     sid: &str,
-    running: &[Running],
+    running: &[Slot],
     arrivals: &[Request],
     deferred: &VecDeque<(Request, Hold)>,
     deferred_limit: usize,
@@ -360,93 +488,176 @@ fn session_blocked(
         || requeue_front.iter().any(|(d, _)| d.session.as_deref() == Some(sid))
 }
 
-/// Arena blocks the running streams may still consume: each stream's
-/// unwritten decode growth (budget clamped to the window) plus one block
-/// of COW slack for its shared boundary block. Admission reserves this so
-/// a newcomer's prefill cannot eat the blocks in-flight decodes will need.
+/// Arena blocks the running slots may still consume. For a decoding slot:
+/// its unwritten decode growth (budget clamped to the window). For a
+/// prefilling slot: the rest of its prompt plus its whole decode budget —
+/// the reservation is held across chunk boundaries so a slot admitted at
+/// tick T cannot be starved of blocks at tick T+k by later admissions.
+/// Each slot also reserves one block of COW slack for its shared boundary
+/// block. Admission reserves this so a newcomer's prefill cannot eat the
+/// blocks in-flight slots will need.
 fn reserved_growth_blocks<M: ForwardModel>(
-    running: &[Running],
+    running: &[Slot],
     recycler: &Recycler<M>,
 ) -> usize {
     let max_seq = recycler.config().max_seq;
     let arena = recycler.arena();
     running
         .iter()
-        .map(|r| {
-            let s = &r.stream;
-            let target = (s.pos() + s.remaining_budget()).min(max_seq);
-            arena
-                .blocks_for(target)
-                .saturating_sub(s.kv().num_blocks())
-                + 1
+        .map(|slot| {
+            let (held, target) = match &slot.state {
+                SlotState::Decoding(s) => (
+                    s.kv().num_blocks(),
+                    (s.pos() + s.remaining_budget()).min(max_seq),
+                ),
+                SlotState::Prefilling(p) => (
+                    p.kv().num_blocks(),
+                    (p.prompt_len() + p.max_new()).min(max_seq),
+                ),
+                SlotState::Transit => (0, 0),
+            };
+            arena.blocks_for(target).saturating_sub(held) + 1
         })
         .sum()
 }
 
-fn worker_loop<M: ForwardModel>(
-    shared: Arc<Shared>,
-    mut recycler: Recycler<M>,
+/// The continuous-batching scheduler core, separated from the worker
+/// thread so it can be driven tick-by-tick — by the worker loop in
+/// production, and by the deterministic trace harness
+/// ([`crate::testutil::trace`]) with scripted arrivals in tests.
+pub struct Scheduler<M: ForwardModel> {
+    recycler: Recycler<M>,
     cfg: ServerConfig,
-) {
-    let mut sessions = SessionManager::new();
-    let mut running: Vec<Running> = Vec::new();
-    // Requests held back: an earlier turn of their session is still
-    // decoding (turn N+1's prompt extends turn N's committed ids, so the
-    // two must not run concurrently), or the arena lacks headroom.
-    let mut deferred: VecDeque<(Request, Hold)> = VecDeque::new();
-    loop {
-        // --- admission: fill free slots without stalling active streams ---
-        let free = cfg.max_batch.saturating_sub(running.len());
+    sessions: SessionManager,
+    running: Vec<Slot>,
+    /// Requests held back: an earlier turn of their session is still in
+    /// flight (turn N+1's prompt extends turn N's committed ids, so the
+    /// two must not run concurrently), the arena lacks headroom, or no
+    /// prefill slot was free.
+    deferred: VecDeque<(Request, Hold)>,
+    /// Replies produced by the current tick, handed back in
+    /// [`TickReport::replies`] for the driver to deliver after it has
+    /// published stats.
+    outbox: TickReplies,
+    stats: SchedulerStats,
+    completed: u64,
+    failed: u64,
+    admission_waves: u64,
+}
+
+impl<M: ForwardModel> Scheduler<M> {
+    pub fn new(mut recycler: Recycler<M>, cfg: ServerConfig) -> Self {
+        // the config is authoritative however the scheduler is driven
+        // (worker thread or the tick-level trace harness)
+        recycler.populate_cache = cfg.populate_cache;
+        Scheduler {
+            recycler,
+            cfg,
+            sessions: SessionManager::new(),
+            running: Vec::new(),
+            deferred: VecDeque::new(),
+            outbox: Vec::new(),
+            stats: SchedulerStats::default(),
+            completed: 0,
+            failed: 0,
+            admission_waves: 0,
+        }
+    }
+
+    /// Nothing in flight and nothing held back.
+    pub fn is_idle(&self) -> bool {
+        self.running.is_empty() && self.deferred.is_empty()
+    }
+
+    /// Slots currently in the running set (prefilling + decoding).
+    pub fn running_len(&self) -> usize {
+        self.running.len()
+    }
+
+    /// Requests in the holdback queue.
+    pub fn deferred_len(&self) -> usize {
+        self.deferred.len()
+    }
+
+    pub fn stats(&self) -> SchedulerStats {
+        self.stats
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed
+    }
+
+    pub fn failed(&self) -> u64 {
+        self.failed
+    }
+
+    /// Ticks that admitted at least one request.
+    pub fn admission_waves(&self) -> u64 {
+        self.admission_waves
+    }
+
+    pub fn recycler(&self) -> &Recycler<M> {
+        &self.recycler
+    }
+
+    /// How many fresh requests the driver should drain for the next tick.
+    /// Zero while a headroom-held request waits (FIFO over the arena
+    /// gate) or while the holdback queue is large — `deferred` sits
+    /// outside the queue's capacity accounting, so draining into it
+    /// without bound would quietly disable the submit-side backpressure
+    /// (QueueError::Full) the sequential loop provided.
+    pub fn fresh_quota(&self) -> usize {
+        let free = self.cfg.max_batch.saturating_sub(self.running.len());
+        let headroom_waiting = self.deferred.iter().any(|(_, h)| matches!(h, Hold::Headroom));
+        if free == 0 || headroom_waiting || self.deferred.len() >= self.cfg.max_batch {
+            0
+        } else {
+            free.saturating_sub(self.deferred.len())
+        }
+    }
+
+    /// One scheduler tick: admission (holdback queue first, then `fresh`),
+    /// one chunked-prefill step for the admitting slots, one batched
+    /// decode dispatch, and the finish sweep. Returns the tick's event
+    /// trace (admissions, deferrals, chunks, dispatches, completions)
+    /// plus the replies to deliver — see [`TickReport`] for the required
+    /// publish-then-reply ordering.
+    pub fn tick(&mut self, fresh: Vec<Request>) -> TickReport {
+        let mut events = Vec::new();
+        self.admit_wave(fresh, &mut events);
+        self.prefill_phase(&mut events);
+        self.decode_phase(&mut events);
+        self.finish_phase(&mut events);
+        TickReport {
+            events,
+            replies: std::mem::take(&mut self.outbox),
+        }
+    }
+
+    /// Fill free slots without stalling active streams: holdback queue
+    /// first (their blocking turn may have finished last tick), then the
+    /// fresh arrivals the driver drained.
+    fn admit_wave(&mut self, fresh: Vec<Request>, events: &mut Vec<SchedEvent>) {
+        let free = self.cfg.max_batch.saturating_sub(self.running.len());
         let mut arrivals: Vec<Request> = Vec::new();
-        let mut from_deferred = 0usize;
-        // FIFO over the arena gate: while any request is held back for
-        // headroom, no fresh request is drained past it (a stream of small
-        // admissible arrivals could otherwise keep the arena full forever).
-        let headroom_waiting = deferred.iter().any(|(_, h)| matches!(h, Hold::Headroom));
         if free > 0 {
-            // deferred requests first (their blocking turn may have
-            // finished last tick); a deferred entry also waits behind any
-            // EARLIER deferred entry of its session, so per-session FIFO
-            // holds across the holdback queue too
+            // a deferred entry also waits behind any EARLIER deferred
+            // entry of its session, so per-session FIFO holds across the
+            // holdback queue too
             let mut i = 0;
-            while i < deferred.len() && arrivals.len() < free {
-                let blocked = deferred[i].0.session.as_deref().is_some_and(|sid| {
-                    session_blocked(sid, &running, &arrivals, &deferred, i, &[])
+            while i < self.deferred.len() && arrivals.len() < free {
+                let blocked = self.deferred[i].0.session.as_deref().is_some_and(|sid| {
+                    session_blocked(sid, &self.running, &arrivals, &self.deferred, i, &[])
                 });
                 if blocked {
                     i += 1;
                 } else {
-                    arrivals.push(deferred.remove(i).expect("index in bounds").0);
+                    arrivals.push(self.deferred.remove(i).expect("index in bounds").0);
                 }
             }
-            from_deferred = arrivals.len();
-            // Only pull fresh requests off the bounded queue while the
-            // holdback set is small: `deferred` sits outside the queue's
-            // capacity accounting, so draining into it without bound would
-            // quietly disable the submit-side backpressure
-            // (QueueError::Full) the sequential loop provided.
-            let want = if headroom_waiting || deferred.len() >= cfg.max_batch {
-                0
-            } else {
-                free - arrivals.len()
-            };
-            if want > 0 {
-                let fresh = if running.is_empty() && arrivals.is_empty() {
-                    // idle: block briefly for the first request, then a
-                    // short follow-up window for stragglers
-                    drain_batch(
-                        &shared.queue,
-                        want,
-                        Duration::from_millis(cfg.batch_first_wait_ms),
-                        Duration::from_millis(cfg.batch_window_ms),
-                    )
-                } else {
-                    // streams in flight: never block, take what's ready
-                    drain_ready(&shared.queue, want)
-                };
-                arrivals.extend(fresh);
-            }
         }
+        let from_deferred = arrivals.len();
+        arrivals.extend(fresh);
         // Requests held back this wave. Ones that came OUT of `deferred`
         // (index < from_deferred) must return to its FRONT so they stay
         // ahead of later arrivals of their session — per-session order is
@@ -456,8 +667,10 @@ fn worker_loop<M: ForwardModel>(
         // Set when a candidate is held for arena headroom this wave:
         // everything behind it is then held too (FIFO over the gate).
         let mut headroom_hold = false;
+        let mut prefilling = self.running.iter().filter(|s| s.is_prefilling()).count();
         for (ai, req) in arrivals.into_iter().enumerate() {
-            let hold_back = |req: Request, hold: Hold,
+            let hold_back = |req: Request,
+                             hold: Hold,
                              requeue_front: &mut Vec<(Request, Hold)>,
                              deferred: &mut VecDeque<(Request, Hold)>| {
                 if ai < from_deferred {
@@ -467,7 +680,11 @@ fn worker_loop<M: ForwardModel>(
                 }
             };
             if headroom_hold {
-                hold_back(req, Hold::Session, &mut requeue_front, &mut deferred);
+                events.push(SchedEvent::Deferred {
+                    id: req.id,
+                    reason: DeferReason::Headroom,
+                });
+                hold_back(req, Hold::Session, &mut requeue_front, &mut self.deferred);
                 continue;
             }
             let blocked = req.session.as_deref().is_some_and(|sid| {
@@ -477,68 +694,205 @@ fn worker_loop<M: ForwardModel>(
                 // its session is a strictly later turn (scanning them
                 // would re-block it forever — livelock). Fresh arrivals
                 // wait behind the whole holdback queue.
-                let deferred_ahead = if ai < from_deferred { 0 } else { deferred.len() };
-                session_blocked(sid, &running, &[], &deferred, deferred_ahead,
+                let deferred_ahead = if ai < from_deferred { 0 } else { self.deferred.len() };
+                session_blocked(sid, &self.running, &[], &self.deferred, deferred_ahead,
                                 &requeue_front)
             });
             if blocked {
-                hold_back(req, Hold::Session, &mut requeue_front, &mut deferred);
+                events.push(SchedEvent::Deferred {
+                    id: req.id,
+                    reason: DeferReason::Session,
+                });
+                hold_back(req, Hold::Session, &mut requeue_front, &mut self.deferred);
                 continue;
             }
-            // Arena headroom is re-derived per admission (each inline
-            // prefill pins blocks): the gate inside admit_one compares the
-            // request's estimated prompt + budget against the free blocks
-            // left after reserving the running streams' unconsumed growth.
-            let headroom_reserved = if running.is_empty() {
+            // Admission opens a prefill slot, so both capacity gates apply:
+            // the running set (`max_batch`) and the admitting subset
+            // (`max_prefilling_slots` — bounding how many multi-tick
+            // prefills interleave with decode at once).
+            if self.running.len() >= self.cfg.max_batch
+                || prefilling >= self.cfg.max_prefilling_slots
+            {
+                events.push(SchedEvent::Deferred {
+                    id: req.id,
+                    reason: DeferReason::Slot,
+                });
+                hold_back(req, Hold::Session, &mut requeue_front, &mut self.deferred);
+                continue;
+            }
+            // Arena headroom is re-derived per admission: the gate inside
+            // admit_one compares the request's estimated prompt + budget
+            // against the free blocks left after reserving every running
+            // slot's unconsumed growth — including the remaining prompt of
+            // slots still mid-prefill (reservations span chunk boundaries).
+            let headroom_reserved = if self.running.is_empty() {
                 None
             } else {
-                Some(reserved_growth_blocks(&running, &recycler))
+                Some(reserved_growth_blocks(&self.running, &self.recycler))
             };
             let waited_ms = req.queued_at.elapsed().as_millis() as u64;
-            match admit_one(req, &mut recycler, &sessions, &cfg, headroom_reserved) {
+            match admit_one(req, &mut self.recycler, &self.sessions, &self.cfg,
+                            headroom_reserved) {
                 Admit::Ready(slot) => {
-                    shared.stats.lock().unwrap().scheduler.note_admission(waited_ms);
-                    running.push(*slot);
+                    self.stats.note_admission(waited_ms);
+                    events.push(SchedEvent::Admitted { id: slot.req.id });
+                    self.running.push(*slot);
+                    prefilling += 1;
                     admitted_this_wave = true;
                 }
                 Admit::Defer(req) => {
                     headroom_hold = true;
-                    hold_back(req, Hold::Headroom, &mut requeue_front, &mut deferred);
+                    events.push(SchedEvent::Deferred {
+                        id: req.id,
+                        reason: DeferReason::Headroom,
+                    });
+                    hold_back(req, Hold::Headroom, &mut requeue_front, &mut self.deferred);
                 }
                 Admit::Fail(req, msg) => {
-                    shared.stats.lock().unwrap().failed += 1;
-                    let _ = req.reply.send(Response::Err(msg));
+                    self.failed += 1;
+                    events.push(SchedEvent::Failed {
+                        id: req.id,
+                        msg: msg.clone(),
+                    });
+                    self.outbox.push((req.reply, Response::Err(msg)));
                 }
             }
         }
         for held in requeue_front.into_iter().rev() {
-            deferred.push_front(held);
+            self.deferred.push_front(held);
         }
         if admitted_this_wave {
-            shared.stats.lock().unwrap().batches += 1;
+            self.admission_waves += 1;
         }
+    }
 
-        if running.is_empty() {
-            if shared.queue.is_closed() && shared.queue.is_empty() && deferred.is_empty() {
-                break;
+    /// Advance every admitting slot's prefill by at most the per-tick
+    /// chunk budget. A mid-prefill `ArenaExhausted` gets one
+    /// shed-and-*resume* retry (the stream keeps its completed chunks, so
+    /// no chunk is re-run or double-counted); any other failure — or a
+    /// failed retry — is replied-to and the slot dropped, releasing its
+    /// blocks at the chunk boundary.
+    fn prefill_phase(&mut self, events: &mut Vec<SchedEvent>) {
+        let budget = self.cfg.prefill_chunk_tokens;
+        let decode_active = self
+            .running
+            .iter()
+            .any(|s| matches!(&s.state, SlotState::Decoding(d) if !d.is_finished()));
+        let mut tick_tokens = 0usize;
+        let mut tick_chunks = 0usize;
+        let mut i = 0;
+        while i < self.running.len() {
+            if !self.running[i].is_prefilling() {
+                i += 1;
+                continue;
             }
-            continue;
+            let id = self.running[i].req.id;
+            let (step, slot_tokens, slot_chunks, done_now) = {
+                let SlotState::Prefilling(ps) = &mut self.running[i].state else {
+                    unreachable!("checked is_prefilling above")
+                };
+                let pos0 = ps.pos();
+                let calls0 = ps.prefill_calls();
+                let mut res = self.recycler.engine_mut().step_prefill(ps, budget);
+                if matches!(res, Err(Error::ArenaExhausted { .. })) {
+                    // Shed-and-RESUME: the cheap headroom pass stops
+                    // shedding when evictions stop yielding blocks; an
+                    // actual allocation failure is the backstop — drain
+                    // the cache as far as needed and retry once. The
+                    // stream stays at its last committed chunk boundary,
+                    // so only the failed chunk re-runs (prefill_calls
+                    // stays exact) and the remaining per-tick budget
+                    // still bounds this tick's stall.
+                    self.recycler.shed_for_tokens(ps.remaining() + ps.max_new());
+                    self.stats.prefill_retries += 1;
+                    events.push(SchedEvent::PrefillRetry { id });
+                    let left = budget.saturating_sub(ps.pos() - pos0).max(1);
+                    res = self.recycler.engine_mut().step_prefill(ps, left);
+                }
+                (
+                    res.map(|_| ()),
+                    ps.pos() - pos0,
+                    ps.prefill_calls() - calls0,
+                    ps.is_done(),
+                )
+            };
+            tick_tokens += slot_tokens;
+            tick_chunks += slot_chunks;
+            match step {
+                Ok(()) => {
+                    events.push(SchedEvent::PrefillChunk {
+                        id,
+                        tokens: slot_tokens,
+                        done: done_now,
+                    });
+                    if done_now {
+                        let state =
+                            std::mem::replace(&mut self.running[i].state, SlotState::Transit);
+                        let SlotState::Prefilling(ps) = state else {
+                            unreachable!("slot was prefilling")
+                        };
+                        match self.recycler.engine_mut().finish_prefill(ps) {
+                            Ok(ds) => self.running[i].state = SlotState::Decoding(ds),
+                            Err(e) => {
+                                // defensive: finish_prefill only errors on
+                                // an incomplete stream, which done_now rules
+                                // out
+                                let slot = self.running.swap_remove(i);
+                                self.failed += 1;
+                                events.push(SchedEvent::Failed {
+                                    id,
+                                    msg: e.to_string(),
+                                });
+                                self.outbox
+                                    .push((slot.req.reply, Response::Err(e.to_string())));
+                                continue; // i not advanced: swap_remove
+                            }
+                        }
+                    }
+                    i += 1;
+                }
+                Err(e) => {
+                    // Failed twice (or a non-recoverable error): reply and
+                    // drop ON THE SPOT — the slot's partial blocks are
+                    // released with its stream, so a resource error fails
+                    // one request, not the scheduler.
+                    let slot = self.running.swap_remove(i);
+                    self.failed += 1;
+                    events.push(SchedEvent::Failed {
+                        id,
+                        msg: e.to_string(),
+                    });
+                    self.outbox
+                        .push((slot.req.reply, Response::Err(e.to_string())));
+                    // i not advanced: swap_remove moved a new slot here
+                }
+            }
         }
+        self.stats.note_prefill_tick(tick_tokens, tick_chunks, decode_active);
+    }
 
-        // --- one batched decode step over every active stream ---
-        let mut refs: Vec<&mut DecodeStream> = running
+    /// One batched decode step over every active stream, then first-token
+    /// latency accounting.
+    fn decode_phase(&mut self, events: &mut Vec<SchedEvent>) {
+        let mut refs: Vec<&mut DecodeStream> = self
+            .running
             .iter_mut()
-            .filter(|r| !r.stream.is_finished())
-            .map(|r| &mut r.stream)
+            .filter_map(|s| match &mut s.state {
+                SlotState::Decoding(d) if !d.is_finished() => Some(d),
+                _ => None,
+            })
             .collect();
         if !refs.is_empty() {
-            let step = recycler.engine_mut().step_streams(&mut refs);
+            let step = self.recycler.engine_mut().step_streams(&mut refs);
             drop(refs);
             match step {
                 Ok(report) if report.scheduled > 0 => {
                     // record the true dispatch occupancy (streams that fed
                     // the forward), not the pre-drain running-set size
-                    shared.stats.lock().unwrap().scheduler.note_step(report.scheduled);
+                    self.stats.note_step(report.scheduled);
+                    events.push(SchedEvent::DecodeStep {
+                        occupancy: report.scheduled,
+                    });
                 }
                 Ok(_) => {}
                 Err(_) => {
@@ -553,32 +907,43 @@ fn worker_loop<M: ForwardModel>(
                     // resource error (ArenaExhausted) fails one stream,
                     // not the batch.
                     let mut i = 0;
-                    while i < running.len() {
-                        if running[i].stream.is_finished() {
+                    while i < self.running.len() {
+                        let active = matches!(
+                            &self.running[i].state,
+                            SlotState::Decoding(d) if !d.is_finished()
+                        );
+                        if !active {
                             i += 1;
                             continue;
                         }
-                        match recycler
-                            .engine_mut()
-                            .step_streams(&mut [&mut running[i].stream])
-                        {
+                        let id = self.running[i].req.id;
+                        let res = {
+                            let SlotState::Decoding(d) = &mut self.running[i].state else {
+                                unreachable!("checked active above")
+                            };
+                            self.recycler.engine_mut().step_streams(&mut [d])
+                        };
+                        match res {
                             Ok(report) => {
                                 // retries are dispatches too: keep the
                                 // occupancy counters covering every step
                                 if report.scheduled > 0 {
-                                    shared
-                                        .stats
-                                        .lock()
-                                        .unwrap()
-                                        .scheduler
-                                        .note_step(report.scheduled);
+                                    self.stats.note_step(report.scheduled);
+                                    events.push(SchedEvent::DecodeStep {
+                                        occupancy: report.scheduled,
+                                    });
                                 }
                                 i += 1;
                             }
                             Err(e) => {
-                                let r = running.swap_remove(i);
-                                shared.stats.lock().unwrap().failed += 1;
-                                let _ = r.req.reply.send(Response::Err(e.to_string()));
+                                let r = self.running.swap_remove(i);
+                                self.failed += 1;
+                                events.push(SchedEvent::Failed {
+                                    id,
+                                    msg: e.to_string(),
+                                });
+                                self.outbox
+                                    .push((r.req.reply, Response::Err(e.to_string())));
                                 // i not advanced: swap_remove moved a new
                                 // slot here; dropping `r` released blocks
                             }
@@ -587,35 +952,110 @@ fn worker_loop<M: ForwardModel>(
                 }
             }
         }
+        // Time-to-first-token: note streams that just emitted token #1
+        // (measured from submission — queue wait plus however many prefill
+        // ticks admission took).
+        for slot in &mut self.running {
+            if slot.ttft_noted {
+                continue;
+            }
+            if let SlotState::Decoding(d) = &slot.state {
+                if !d.generated().is_empty() {
+                    slot.ttft_noted = true;
+                    self.stats
+                        .note_first_token(slot.req.queued_at.elapsed().as_millis() as u64);
+                    events.push(SchedEvent::FirstToken { id: slot.req.id });
+                }
+            }
+        }
+    }
 
-        // --- finish: reply per request the moment its stream completes ---
+    /// Reply per request the moment its stream completes.
+    fn finish_phase(&mut self, events: &mut Vec<SchedEvent>) {
         let mut i = 0;
-        while i < running.len() {
-            if !running[i].stream.is_finished() {
+        while i < self.running.len() {
+            let done = matches!(
+                &self.running[i].state,
+                SlotState::Decoding(d) if d.is_finished()
+            );
+            if !done {
                 i += 1;
                 continue;
             }
-            let r = running.swap_remove(i);
-            let g = r.stream.into_generated();
-            let outcome = recycler.complete(&r.prompt_text, &r.prompt_ids, r.meta, g);
-            shared.stats.lock().unwrap().completed += 1;
-            if let Some(sid) = &r.req.session {
-                let mut full_ids = r.prompt_ids;
+            let slot = self.running.swap_remove(i);
+            let SlotState::Decoding(stream) = slot.state else {
+                unreachable!("checked done above")
+            };
+            let g = stream.into_generated();
+            let n_out = g.ids.len();
+            let outcome =
+                self.recycler
+                    .complete(&slot.prompt_text, &slot.prompt_ids, slot.meta, g);
+            self.completed += 1;
+            events.push(SchedEvent::Finished {
+                id: slot.req.id,
+                tokens: n_out,
+            });
+            if let Some(sid) = &slot.req.session {
+                let mut full_ids = slot.prompt_ids;
                 full_ids.extend_from_slice(&outcome.ids);
-                let full_text = format!("{}{}", r.prompt_text, outcome.text);
-                sessions.commit(sid, &r.req.prompt, full_text, full_ids,
-                                &outcome.text);
+                let full_text = format!("{}{}", slot.prompt_text, outcome.text);
+                self.sessions
+                    .commit(sid, &slot.req.prompt, full_text, full_ids, &outcome.text);
             }
-            let _ = r.req.reply.send(Response::Ok(Box::new(outcome)));
+            self.outbox
+                .push((slot.req.reply, Response::Ok(Box::new(outcome))));
         }
+    }
+}
 
-        // refresh derived stats
-        let mut stats = shared.stats.lock().unwrap();
-        stats.engine = recycler.engine().counters();
-        stats.cache_entries = recycler.store().len();
-        stats.cache_bytes = recycler.store().live_bytes();
-        stats.arena_used_blocks = recycler.arena().used_blocks();
-        stats.arena_capacity_blocks = recycler.arena().capacity_blocks();
+fn worker_loop<M: ForwardModel>(
+    shared: Arc<Shared>,
+    recycler: Recycler<M>,
+    cfg: ServerConfig,
+) {
+    let mut sched = Scheduler::new(recycler, cfg.clone());
+    loop {
+        let quota = sched.fresh_quota();
+        let fresh = if sched.is_idle() {
+            if shared.queue.is_closed() && shared.queue.is_empty() {
+                break;
+            }
+            // idle: block briefly for the first request, then a short
+            // follow-up window for stragglers
+            drain_batch(
+                &shared.queue,
+                quota.max(1),
+                Duration::from_millis(cfg.batch_first_wait_ms),
+                Duration::from_millis(cfg.batch_window_ms),
+            )
+        } else if quota > 0 {
+            // slots in flight: never block, take what's ready
+            drain_ready(&shared.queue, quota)
+        } else {
+            Vec::new()
+        };
+        let tick = sched.tick(fresh);
+        // publish scheduler + engine + cache state (submitted/rejected are
+        // owned by the submit side) BEFORE delivering replies, so a
+        // submitter that wakes on its reply reads counters that already
+        // include its own completion
+        {
+            let mut stats = shared.stats.lock().unwrap();
+            stats.scheduler = sched.stats();
+            stats.completed = sched.completed();
+            stats.failed = sched.failed();
+            stats.batches = sched.admission_waves();
+            let recycler = sched.recycler();
+            stats.engine = recycler.engine().counters();
+            stats.cache_entries = recycler.store().len();
+            stats.cache_bytes = recycler.store().live_bytes();
+            stats.arena_used_blocks = recycler.arena().used_blocks();
+            stats.arena_capacity_blocks = recycler.arena().capacity_blocks();
+        }
+        for (tx, resp) in tick.replies {
+            let _ = tx.send(resp);
+        }
     }
 }
 
@@ -864,6 +1304,49 @@ mod tests {
         assert_eq!(c.stats().failed, 1);
         // next request works (failure was transient)
         assert!(c.generate("fine now", 2).is_ok());
+        c.shutdown();
+    }
+
+    #[test]
+    fn long_cold_prompt_prefills_across_multiple_ticks() {
+        // A cache-cold prompt longer than the chunk budget must take
+        // several prefill ticks (visible in the counters) and still serve
+        // exactly; TTFT accounting fires for it.
+        let c = coordinator(ServerConfig {
+            prefill_chunk_tokens: 16,
+            populate_cache: false,
+            ..Default::default()
+        });
+        let prompt = "abcdefgh".repeat(20); // 160 byte-tokens
+        let out = c.generate(&prompt, 3).unwrap();
+        assert_eq!(out.ids.len(), 3);
+        let s = c.stats().scheduler;
+        assert!(
+            s.prefill_ticks >= 160 / 16,
+            "160-token prompt at 16/tick: got {} prefill ticks",
+            s.prefill_ticks
+        );
+        assert_eq!(s.prefill_tokens, 160);
+        assert!(s.prefill_chunks >= s.prefill_ticks);
+        assert_eq!(s.first_tokens, 1, "TTFT recorded once");
+        c.shutdown();
+    }
+
+    #[test]
+    fn inline_budget_reproduces_single_tick_prefill() {
+        // prefill_chunk_tokens >= max_seq: the whole prompt prefills in
+        // its admission tick (the PR2 inline behavior, now a config point)
+        let c = coordinator(ServerConfig {
+            prefill_chunk_tokens: ModelConfig::nano().max_seq,
+            populate_cache: false,
+            ..Default::default()
+        });
+        let prompt = "xy".repeat(60);
+        let out = c.generate(&prompt, 2).unwrap();
+        assert_eq!(out.ids.len(), 2);
+        let s = c.stats().scheduler;
+        assert_eq!(s.prefill_ticks, 1, "one tick covered the whole prompt");
+        assert_eq!(s.prefill_tokens, 120);
         c.shutdown();
     }
 

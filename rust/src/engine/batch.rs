@@ -1,10 +1,22 @@
-//! Step-wise batched decode — the continuous-batching substrate.
+//! Step-wise prefill and batched decode — the continuous-batching
+//! substrate.
+//!
+//! A [`PrefillStream`] is one *admitting* sequence: its prompt ids, its
+//! paged KV view (possibly seeded with a recycled prefix), and how far
+//! prefill has progressed. [`Engine::start_prefill`] opens the stream
+//! without running any forward; [`Engine::step_prefill`] advances it by at
+//! most a caller-supplied token budget (one or more bucket-sized chunks),
+//! so a scheduler can interleave a long cache-cold prefill with decode
+//! ticks instead of stalling every in-flight stream behind it;
+//! [`Engine::finish_prefill`] converts a completed prefill into a
+//! [`DecodeStream`].
 //!
 //! A [`DecodeStream`] is one in-flight sequence: its paged KV view, the
 //! logits of the last processed row, and the greedy-decode bookkeeping.
-//! [`Engine::start_stream`] runs the (chunked) prefill and returns a
-//! stream positioned at the first decode step; [`Engine::step_streams`]
-//! advances *many* streams one token in a single
+//! [`Engine::start_stream`] runs the whole prefill to completion (a
+//! one-call `start_prefill` → `step_prefill` → `finish_prefill` loop) and
+//! returns a stream positioned at the first decode step;
+//! [`Engine::step_streams`] advances *many* streams one token in a single
 //! [`ForwardModel::forward_batch`] call, which is where a batching-capable
 //! backend amortizes per-dispatch overhead across lanes.
 //!
@@ -15,6 +27,11 @@
 //! a request decoded in a batch of any occupancy emits exactly the tokens
 //! it would emit alone (the paper's token-exactness property, extended to
 //! concurrent serving; property-tested in `rust/tests/properties.rs`).
+//! Budget-limited prefill picks buckets through the same
+//! [`chunk_step`](super::chunk_step) rule as the inline path, and every
+//! [`ForwardModel`] guarantees chunk-split invariance, so a prompt
+//! prefilled across any number of ticks yields the same KV and logits as
+//! one inline pass (also property-tested).
 //!
 //! # Failure atomicity
 //!
@@ -24,6 +41,11 @@
 //! partially-executed batch may have written are rewritten identically on
 //! retry (the forward at a fixed `(token, position)` is deterministic), so
 //! a scheduler can re-step streams individually to isolate a faulty one.
+//! The same holds chunk-wise for prefill: a failed `step_prefill` keeps
+//! the stream at its last committed chunk boundary — resuming re-runs only
+//! the failed chunk, and [`PrefillStream::prefill_calls`] counts each
+//! chunk exactly once across suspend/resume/retry (no double count after
+//! a shed-and-retry).
 
 use crate::error::{Error, Result};
 use crate::kvcache::KvView;
@@ -31,6 +53,80 @@ use crate::util::timing::Stopwatch;
 
 use super::generate::{argmax, Engine, Generated};
 use super::{BatchItem, ForwardModel};
+
+/// One admitting sequence whose prompt prefill is in progress — the
+/// suspendable half of the lookup → chunked-prefill → decode → finish
+/// state machine. Holds its KV blocks (recycled prefix + chunks written so
+/// far) across ticks; dropping the stream releases them.
+pub struct PrefillStream {
+    ids: Vec<u32>,
+    kv: KvView,
+    /// Next prompt position to prefill (starts at the clamped reuse depth).
+    pos: usize,
+    /// Injected recycled depth (clamped to `len - 1`), for reporting.
+    reused: usize,
+    max_new: usize,
+    capture: bool,
+    /// Successful forward chunks so far. Monotone across suspend/resume;
+    /// a failed chunk adds nothing, so retries never double-count.
+    calls: usize,
+    /// Logits of the last processed row (the decode seed once done).
+    last: Vec<f32>,
+    sw: Stopwatch,
+}
+
+impl PrefillStream {
+    /// Has the whole prompt been prefilled?
+    pub fn is_done(&self) -> bool {
+        self.pos == self.ids.len()
+    }
+
+    /// Prompt positions already valid in the KV view.
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Full prompt length in tokens.
+    pub fn prompt_len(&self) -> usize {
+        self.ids.len()
+    }
+
+    /// Prompt tokens still to prefill.
+    pub fn remaining(&self) -> usize {
+        self.ids.len() - self.pos
+    }
+
+    /// The stream's decode budget (for arena growth reservations).
+    pub fn max_new(&self) -> usize {
+        self.max_new
+    }
+
+    /// Successful forward chunks so far.
+    pub fn prefill_calls(&self) -> usize {
+        self.calls
+    }
+
+    /// Recycled prefix depth this stream was seeded with.
+    pub fn reused_tokens(&self) -> usize {
+        self.reused
+    }
+
+    /// The stream's KV view (diagnostics: reservation accounting).
+    pub fn kv(&self) -> &KvView {
+        &self.kv
+    }
+}
+
+/// What one [`Engine::step_prefill`] call did.
+#[derive(Debug, Clone, Copy)]
+pub struct PrefillProgress {
+    /// Prompt tokens prefilled by this call (real tokens, padding not
+    /// counted). At most the call's budget.
+    pub tokens: usize,
+    /// Whether the whole prompt is now prefilled (convert via
+    /// [`Engine::finish_prefill`]).
+    pub done: bool,
+}
 
 /// One in-flight sequence in a continuous decode batch.
 pub struct DecodeStream {
@@ -100,24 +196,32 @@ impl DecodeStream {
 }
 
 impl<M: ForwardModel> Engine<M> {
-    /// Prefill a prompt and open a decode stream at its first step.
+    /// Open a suspendable prefill stream — no forward runs yet.
     ///
     /// Arguments mirror [`Engine::generate`]: `kv`/`cur_len` is the
     /// injected recycled prefix (or [`Engine::empty_kv`] and 0), and
     /// `capture_prompt_kv` snapshots the post-prefill view for cache
-    /// admission. The stream holds the last prefill row's logits, so the
-    /// first `step_streams` call emits the first new token.
-    pub fn start_stream(
+    /// admission when the stream later converts to decode. Validation
+    /// (empty prompt, window overflow, reuse depth beyond the view)
+    /// happens here so a scheduler can fail a request at admission
+    /// instead of mid-prefill.
+    pub fn start_prefill(
         &mut self,
         prompt_ids: &[u32],
-        mut kv: KvView,
+        kv: KvView,
         cur_len: usize,
         max_new_tokens: usize,
         capture_prompt_kv: bool,
-    ) -> Result<DecodeStream> {
+    ) -> Result<PrefillStream> {
         let sw = Stopwatch::start();
         if prompt_ids.is_empty() {
             return Err(Error::Rejected("empty prompt".into()));
+        }
+        if prompt_ids.len() > self.config().max_seq {
+            return Err(Error::PromptTooLong {
+                got: prompt_ids.len(),
+                max: self.config().max_seq,
+            });
         }
         if cur_len > kv.len() {
             return Err(Error::ShapeMismatch(format!(
@@ -128,29 +232,108 @@ impl<M: ForwardModel> Engine<M> {
         // Cached prompt covers the whole input: re-run the last token so we
         // have logits to continue from (paper feeds >= 1 new token).
         let cur_len = cur_len.min(prompt_ids.len() - 1);
-        let (logits, prefill_calls) = self.prefill(prompt_ids, &mut kv, cur_len)?;
-        // Counted only after a successful prefill: a failed attempt that
-        // the caller retries (the ArenaExhausted backstop) must not count
-        // the same request twice.
-        self.counters_mut().requests += 1;
-        self.counters_mut().tokens_reused += cur_len as u64;
-        // O(blocks) snapshot: decode writes COW away from it.
-        let prompt_kv = capture_prompt_kv.then(|| kv.clone());
-        Ok(DecodeStream {
+        Ok(PrefillStream {
+            ids: prompt_ids.to_vec(),
             kv,
-            logits,
-            pos: prompt_ids.len(),
-            fed: 0,
-            armed: false,
-            out: Vec::with_capacity(max_new_tokens),
+            pos: cur_len,
+            reused: cur_len,
             max_new: max_new_tokens,
-            prompt_tokens: prompt_ids.len(),
-            reused_tokens: cur_len,
-            prefill_calls,
-            prompt_kv,
-            finished: max_new_tokens == 0,
+            capture: capture_prompt_kv,
+            calls: 0,
+            last: Vec::new(),
             sw,
         })
+    }
+
+    /// Advance a prefill stream by at most `budget` prompt tokens (one or
+    /// more bucket-sized chunks via the same [`chunk_step`](super::chunk_step)
+    /// rule as the inline path; at least one chunk always runs, so
+    /// `budget < smallest bucket` still makes progress). A failed chunk
+    /// leaves the stream at its last committed boundary — calling again
+    /// re-runs exactly the failed chunk (KV writes at fixed positions are
+    /// idempotent), so the caller may shed arena pressure and resume.
+    pub fn step_prefill(
+        &mut self,
+        p: &mut PrefillStream,
+        budget: usize,
+    ) -> Result<PrefillProgress> {
+        let cfg = self.config().clone();
+        let budget = budget.max(1);
+        let mut processed = 0usize;
+        while p.pos < p.ids.len() && processed < budget {
+            let pending = (p.ids.len() - p.pos).min(budget - processed);
+            let room = cfg.max_seq - p.pos;
+            let (c, take) = super::chunk_step(&cfg, pending, room);
+            let mut chunk: Vec<u32> = p.ids[p.pos..p.pos + take].to_vec();
+            chunk.resize(c, 0);
+            let logits = self.model().forward_chunk(&chunk, take, &mut p.kv, p.pos)?;
+            p.calls += 1;
+            let v = cfg.vocab_size;
+            p.last = logits[(take - 1) * v..take * v].to_vec();
+            p.pos += take;
+            processed += take;
+            self.counters_mut().tokens_prefilled += take as u64;
+        }
+        Ok(PrefillProgress {
+            tokens: processed,
+            done: p.pos == p.ids.len(),
+        })
+    }
+
+    /// Convert a completed prefill into a decode stream positioned at its
+    /// first step (the stream holds the last prefill row's logits, so the
+    /// first `step_streams` call emits the first new token). Errors if the
+    /// prefill is not done. Engine counters (requests, reused tokens) are
+    /// bumped here — only once per request, however many ticks and retries
+    /// the prefill spanned.
+    pub fn finish_prefill(&mut self, p: PrefillStream) -> Result<DecodeStream> {
+        if p.pos < p.ids.len() {
+            return Err(Error::Rejected(format!(
+                "prefill incomplete: {} of {} prompt tokens",
+                p.pos,
+                p.ids.len()
+            )));
+        }
+        self.counters_mut().requests += 1;
+        self.counters_mut().tokens_reused += p.reused as u64;
+        // O(blocks) snapshot: decode writes COW away from it.
+        let prompt_kv = p.capture.then(|| p.kv.clone());
+        Ok(DecodeStream {
+            pos: p.ids.len(),
+            prompt_tokens: p.ids.len(),
+            kv: p.kv,
+            logits: p.last,
+            fed: 0,
+            armed: false,
+            out: Vec::with_capacity(p.max_new),
+            max_new: p.max_new,
+            reused_tokens: p.reused,
+            prefill_calls: p.calls,
+            prompt_kv,
+            finished: p.max_new == 0,
+            sw: p.sw,
+        })
+    }
+
+    /// Prefill a prompt to completion and open a decode stream at its
+    /// first step — the one-shot composition of [`Engine::start_prefill`],
+    /// [`Engine::step_prefill`] (unbounded budget), and
+    /// [`Engine::finish_prefill`]; the chunked path is token-identical to
+    /// this by the chunk-split-invariance contract.
+    pub fn start_stream(
+        &mut self,
+        prompt_ids: &[u32],
+        kv: KvView,
+        cur_len: usize,
+        max_new_tokens: usize,
+        capture_prompt_kv: bool,
+    ) -> Result<DecodeStream> {
+        let mut p =
+            self.start_prefill(prompt_ids, kv, cur_len, max_new_tokens, capture_prompt_kv)?;
+        while !p.is_done() {
+            self.step_prefill(&mut p, usize::MAX)?;
+        }
+        self.finish_prefill(p)
     }
 
     /// Advance every active stream one greedy token via a single batched
@@ -349,5 +532,159 @@ mod tests {
         let g = s.into_generated();
         assert_eq!(g.ids, want);
         assert_eq!(g.reused_tokens, 17);
+    }
+
+    #[test]
+    fn chunked_prefill_matches_inline_for_every_budget() {
+        // A prompt prefilled under any per-step token budget must yield
+        // exactly the tokens the inline (one-shot) path yields — the
+        // chunk-split-invariance contract, exercised through the
+        // suspendable API.
+        let prompt: Vec<u32> = (1..97).collect();
+        let mut base = engine();
+        let want = base.generate(&prompt, base.empty_kv(), 0, 5, false).unwrap();
+
+        for budget in [1usize, 3, 8, 13, 32, 200] {
+            let mut e = engine();
+            let mut p = e.start_prefill(&prompt, e.empty_kv(), 0, 5, false).unwrap();
+            let mut ticks = 0usize;
+            while !p.is_done() {
+                let prog = e.step_prefill(&mut p, budget).unwrap();
+                assert!(prog.tokens >= 1, "each step makes progress");
+                assert!(
+                    prog.tokens <= budget.max(*e.config().chunk_sizes.first().unwrap()),
+                    "budget {budget}: step took {} tokens",
+                    prog.tokens
+                );
+                ticks += 1;
+                assert!(ticks < 1000, "prefill never converged");
+            }
+            let mut s = e.finish_prefill(p).unwrap();
+            while !s.is_finished() {
+                e.step_streams(&mut [&mut s]).unwrap();
+            }
+            let g = s.into_generated();
+            assert_eq!(g.ids, want.ids, "budget {budget} diverged");
+            assert_eq!(g.prompt_tokens, prompt.len());
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_with_recycled_prefix_matches_baseline() {
+        let prompt: Vec<u32> = (1..65).collect();
+        let mut base = engine();
+        let want = base.generate(&prompt, base.empty_kv(), 0, 4, false).unwrap().ids;
+
+        let mut e = engine();
+        let mut kv = e.empty_kv();
+        e.prefill(&prompt[..21], &mut kv, 0).unwrap();
+        let mut p = e.start_prefill(&prompt, kv, 21, 4, false).unwrap();
+        assert_eq!(p.remaining(), prompt.len() - 21);
+        while !p.is_done() {
+            e.step_prefill(&mut p, 7).unwrap();
+        }
+        let mut s = e.finish_prefill(p).unwrap();
+        while !s.is_finished() {
+            e.step_streams(&mut [&mut s]).unwrap();
+        }
+        let g = s.into_generated();
+        assert_eq!(g.ids, want);
+        assert_eq!(g.reused_tokens, 21);
+    }
+
+    #[test]
+    fn failed_prefill_chunk_resumes_without_double_counting_calls() {
+        // Inject a failure into one mid-prefill chunk: resuming the SAME
+        // stream must re-run only that chunk, and the final prefill_calls
+        // must equal the inline path's count — a shed-and-retry that
+        // resumes never double-counts chunks.
+        let prompt: Vec<u32> = (1..80).collect();
+        let mut base = engine();
+        let inline = base.generate(&prompt, base.empty_kv(), 0, 3, false).unwrap();
+
+        // Clean chunked reference at the same budget: its call count is
+        // what a failure-free run costs (the chunk plan differs from the
+        // inline path's, so inline's prefill_calls is NOT the reference).
+        let mut clean = engine();
+        let mut cp = clean.start_prefill(&prompt, clean.empty_kv(), 0, 3, false).unwrap();
+        while !cp.is_done() {
+            clean.step_prefill(&mut cp, 32).unwrap();
+        }
+        let ref_calls = cp.prefill_calls();
+
+        // budget 32 over 79 tokens: chunks of 32, 32, 15(pad 32) -> fail
+        // the 2nd forward call (the 2nd chunk)
+        let mut e = Engine::new(MockModel::new(ModelConfig::nano()).fail_on_call(2));
+        let mut p = e.start_prefill(&prompt, e.empty_kv(), 0, 3, false).unwrap();
+        let mut failures = 0usize;
+        while !p.is_done() {
+            if e.step_prefill(&mut p, 32).is_err() {
+                failures += 1;
+                assert!(failures < 5, "retry never converged");
+            }
+        }
+        assert_eq!(failures, 1, "exactly the injected chunk failed");
+        assert_eq!(
+            p.prefill_calls(),
+            ref_calls,
+            "resumed chunks must not be double-counted"
+        );
+        let mut s = e.finish_prefill(p).unwrap();
+        while !s.is_finished() {
+            e.step_streams(&mut [&mut s]).unwrap();
+        }
+        let g = s.into_generated();
+        assert_eq!(g.ids, inline.ids);
+        assert_eq!(g.prefill_calls, ref_calls);
+    }
+
+    #[test]
+    fn finish_prefill_rejects_incomplete_stream() {
+        let mut e = engine();
+        let prompt: Vec<u32> = (1..50).collect();
+        let mut p = e.start_prefill(&prompt, e.empty_kv(), 0, 2, false).unwrap();
+        let prog = e.step_prefill(&mut p, 8).unwrap();
+        assert!(!prog.done);
+        assert!(e.finish_prefill(p).is_err());
+    }
+
+    #[test]
+    fn chunked_prefill_near_window_uses_unpadded_fallback() {
+        // Budget-limited stepping must hit the same near-window unpadded
+        // final chunk as the inline path (regression for the chunk_step
+        // refactor).
+        let mut cfg = ModelConfig::nano();
+        cfg.chunk_sizes = vec![8, 32, 64]; // no 1-bucket
+        let prompt: Vec<u32> =
+            (0..cfg.max_seq as u32).map(|i| 1 + i % 400).collect();
+
+        let mut base = Engine::new(MockModel::new(cfg.clone()));
+        let base_g = base.generate(&prompt, base.empty_kv(), 0, 0, false).unwrap();
+
+        let mut e = Engine::new(MockModel::new(cfg.clone()));
+        let mut p = e.start_prefill(&prompt, e.empty_kv(), 0, 0, false).unwrap();
+        while !p.is_done() {
+            e.step_prefill(&mut p, 23).unwrap();
+        }
+        let s = e.finish_prefill(p).unwrap();
+        assert!(s.is_finished(), "zero budget: born finished at max_seq");
+        let g = s.into_generated();
+        assert_eq!(g.final_len, cfg.max_seq);
+        assert_eq!(g.final_len, base_g.final_len);
+    }
+
+    #[test]
+    fn start_prefill_validates_like_start_stream() {
+        let mut e = engine();
+        assert!(e.start_prefill(&[], e.empty_kv(), 0, 2, false).is_err());
+        let long: Vec<u32> = vec![1; e.config().max_seq + 1];
+        match e.start_prefill(&long, e.empty_kv(), 0, 2, false) {
+            Err(Error::PromptTooLong { .. }) => {}
+            other => panic!("{:?}", other.map(|_| ())),
+        }
+        match e.start_prefill(&[1, 2, 3], e.empty_kv(), 2, 2, false) {
+            Err(Error::ShapeMismatch(_)) => {}
+            other => panic!("{:?}", other.map(|_| ())),
+        }
     }
 }

@@ -11,7 +11,7 @@ use crate::error::{Error, Result};
 use crate::kvcache::{KvArena, KvView};
 use crate::metrics::Counters;
 
-use super::{pick_chunk, ForwardModel};
+use super::ForwardModel;
 
 /// Result of one generation call.
 #[derive(Debug, Clone)]
@@ -121,22 +121,10 @@ impl<M: ForwardModel> Engine<M> {
         while pos < ids.len() {
             let pending = ids.len() - pos;
             let room = cfg.max_seq - pos;
-            let mut c = pick_chunk(&cfg.chunk_sizes, pending);
-            if c > room {
-                // A padded bucket would spill past the context window:
-                // prefer the largest bucket that still fits. When even the
-                // smallest bucket overflows (`pending <= room < min
-                // bucket` — a deep recycled prefix plus a prompt near
-                // max_seq), fall back to an *unpadded* final chunk: the
-                // pending tokens themselves always fit (`ids.len() <=
-                // max_seq` implies `pending <= room`), so a legal prompt
-                // must never fail here.
-                c = match cfg.chunk_sizes.iter().filter(|&&b| b <= room).next_back() {
-                    Some(&b) => b,
-                    None => pending,
-                };
-            }
-            let take = pending.min(c);
+            // Bucket selection (incl. the near-window unpadded fallback)
+            // lives in `engine::chunk_step`, shared with the suspendable
+            // `step_prefill` path so the two pick chunks identically.
+            let (c, take) = super::chunk_step(&cfg, pending, room);
             let mut chunk: Vec<u32> = ids[pos..pos + take].to_vec();
             chunk.resize(c, 0);
             let logits = self.model.forward_chunk(&chunk, take, kv, pos)?;

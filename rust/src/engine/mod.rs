@@ -22,7 +22,7 @@
 mod batch;
 mod generate;
 
-pub use batch::{DecodeStream, StepReport};
+pub use batch::{DecodeStream, PrefillProgress, PrefillStream, StepReport};
 pub use generate::{Engine, Generated};
 
 use crate::config::ModelConfig;
@@ -104,6 +104,34 @@ pub fn pick_chunk(buckets: &[usize], n: usize) -> usize {
         .find(|&&b| b >= n)
         .copied()
         .unwrap_or_else(|| *buckets.last().unwrap())
+}
+
+/// One prefill scheduling step: `(padded_chunk, take)` for `pending` new
+/// tokens with `room` positions left before the context window. `take`
+/// real tokens go out in a chunk of `padded_chunk` slots; when even the
+/// smallest bucket would spill past the window the chunk is *unpadded*
+/// (`padded_chunk == take`, the [`ForwardModel`] near-window contract —
+/// see [`crate::config::ModelConfig::unpadded_chunk_legal`]). Shared by
+/// the one-shot [`Engine::prefill`] and the suspendable
+/// [`Engine::step_prefill`], so a budget-limited chunk sequence picks
+/// buckets exactly the way the inline path does (chunk-split-invariance
+/// then makes the two token-identical).
+pub(crate) fn chunk_step(cfg: &ModelConfig, pending: usize, room: usize) -> (usize, usize) {
+    let mut c = pick_chunk(&cfg.chunk_sizes, pending);
+    if c > room {
+        // A padded bucket would spill past the context window: prefer the
+        // largest bucket that still fits. When even the smallest bucket
+        // overflows (`pending <= room < min bucket` — a deep recycled
+        // prefix plus a prompt near max_seq), fall back to an *unpadded*
+        // final chunk: the pending tokens themselves always fit
+        // (`ids.len() <= max_seq` implies `pending <= room`), so a legal
+        // prompt must never fail here.
+        c = match cfg.chunk_sizes.iter().filter(|&&b| b <= room).next_back() {
+            Some(&b) => b,
+            None => pending,
+        };
+    }
+    (c, pending.min(c))
 }
 
 /// Full chunk plan for `n` pending tokens.

@@ -190,6 +190,26 @@ pub struct SchedulerStats {
     pub queue_wait_ms_total: u64,
     /// Worst single queue wait, milliseconds.
     pub queue_wait_ms_max: u64,
+    /// Forward chunks run by the scheduler's chunked prefill.
+    pub prefill_chunks: u64,
+    /// Prompt tokens prefilled by the scheduler (real tokens, not padding).
+    pub prefill_tokens: u64,
+    /// Scheduler ticks that ran at least one prefill chunk.
+    pub prefill_ticks: u64,
+    /// Most prompt tokens prefilled in a single tick while >= 1 decode
+    /// stream was in flight — the head-of-line stall bound. Inline
+    /// admission would push this to the whole prompt length; chunked
+    /// prefill caps it at `prefill_chunk_tokens * max_prefilling_slots`.
+    pub prefill_stall_tokens_max: u64,
+    /// Prefill chunk retries (shed-and-resume after a failed step).
+    pub prefill_retries: u64,
+    /// Requests that have emitted their first decode token.
+    pub first_tokens: u64,
+    /// Total time-to-first-token (queue wait + prefill ticks) over those
+    /// requests, milliseconds.
+    pub ttft_ms_total: u64,
+    /// Worst single time-to-first-token, milliseconds.
+    pub ttft_ms_max: u64,
 }
 
 impl SchedulerStats {
@@ -224,6 +244,39 @@ impl SchedulerStats {
         self.admitted += 1;
         self.queue_wait_ms_total += wait_ms;
         self.queue_wait_ms_max = self.queue_wait_ms_max.max(wait_ms);
+    }
+
+    /// Record one tick's chunked-prefill work: `tokens` prompt tokens over
+    /// `chunks` forward chunks; `decode_active` says whether any decode
+    /// stream was in flight (only then does the work count toward the
+    /// head-of-line stall bound).
+    pub fn note_prefill_tick(&mut self, tokens: usize, chunks: usize, decode_active: bool) {
+        if chunks == 0 {
+            return;
+        }
+        self.prefill_ticks += 1;
+        self.prefill_chunks += chunks as u64;
+        self.prefill_tokens += tokens as u64;
+        if decode_active {
+            self.prefill_stall_tokens_max =
+                self.prefill_stall_tokens_max.max(tokens as u64);
+        }
+    }
+
+    /// Record a request's first decoded token, `ttft_ms` after submission.
+    pub fn note_first_token(&mut self, ttft_ms: u64) {
+        self.first_tokens += 1;
+        self.ttft_ms_total += ttft_ms;
+        self.ttft_ms_max = self.ttft_ms_max.max(ttft_ms);
+    }
+
+    /// Mean time-to-first-token over requests that emitted one, ms.
+    pub fn avg_ttft_ms(&self) -> f64 {
+        if self.first_tokens == 0 {
+            0.0
+        } else {
+            self.ttft_ms_total as f64 / self.first_tokens as f64
+        }
     }
 }
 
@@ -296,6 +349,26 @@ mod tests {
         s.note_admission(30);
         assert_eq!(s.queue_wait_ms_max, 30);
         assert!((s.avg_queue_wait_ms() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prefill_and_ttft_counters() {
+        let mut s = SchedulerStats::default();
+        assert_eq!(s.avg_ttft_ms(), 0.0);
+        s.note_prefill_tick(0, 0, true); // no chunk ran: not a prefill tick
+        assert_eq!(s.prefill_ticks, 0);
+        s.note_prefill_tick(32, 1, false); // idle scheduler: no stall
+        s.note_prefill_tick(16, 2, true); // decodes in flight: stall bound
+        s.note_prefill_tick(8, 1, true);
+        assert_eq!(s.prefill_ticks, 3);
+        assert_eq!(s.prefill_chunks, 4);
+        assert_eq!(s.prefill_tokens, 56);
+        assert_eq!(s.prefill_stall_tokens_max, 16, "idle tick excluded");
+        s.note_first_token(10);
+        s.note_first_token(40);
+        assert_eq!(s.first_tokens, 2);
+        assert_eq!(s.ttft_ms_max, 40);
+        assert!((s.avg_ttft_ms() - 25.0).abs() < 1e-9);
     }
 
     #[test]

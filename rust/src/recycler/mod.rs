@@ -393,6 +393,15 @@ impl<M: ForwardModel> Recycler<M> {
     /// under arena pressure, embed, retrieve, and attach the recycled
     /// prefix (or hand back a fresh view). Infallible by design — a miss
     /// is a valid outcome, not an error.
+    ///
+    /// With chunked prefill the span between `prepare` and
+    /// [`Recycler::complete`] covers MANY scheduler ticks: the attached
+    /// view (and the record blocks it pins) lives across every prefill
+    /// chunk and decode step of the request, and `ServeMeta` travels with
+    /// the slot the whole way. Nothing here may assume the two phases run
+    /// back-to-back; in particular the attach is a refcount bump, so
+    /// eviction of the donor record mid-request only unpins blocks the
+    /// request itself still holds.
     pub fn prepare(&mut self, prompt: &str, ids: &[u32], admit_full: bool) -> Admission {
         let sw = Stopwatch::start();
         // Shed cache entries first if the arena is running low — a live
@@ -423,11 +432,12 @@ impl<M: ForwardModel> Recycler<M> {
         }
     }
 
-    /// Phase 3 of serving (the scheduler's finish step): admit the new KV
-    /// into the cache and assemble the request's [`Outcome`]. `ids` must be
-    /// the prompt ids `prepare` saw; `g` the finished generation over them.
-    /// Borrows `ids` and copies only on the branches that admit a record —
-    /// the plain-hit path (most requests) is copy-free.
+    /// Phase 3 of serving (the scheduler's finish step, any number of
+    /// ticks after [`Recycler::prepare`]): admit the new KV into the cache
+    /// and assemble the request's [`Outcome`]. `ids` must be the prompt
+    /// ids `prepare` saw; `g` the finished generation over them. Borrows
+    /// `ids` and copies only on the branches that admit a record — the
+    /// plain-hit path (most requests) is copy-free.
     pub fn complete(
         &mut self,
         prompt: &str,

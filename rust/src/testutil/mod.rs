@@ -1,8 +1,14 @@
 //! Test infrastructure: a mini property-testing harness (proptest is not in
-//! the offline vendor set) and a deterministic mock [`ForwardModel`] so the
-//! coordinator/recycler stack can be tested without PJRT artifacts.
+//! the offline vendor set), a deterministic mock [`ForwardModel`] so the
+//! coordinator/recycler stack can be tested without PJRT artifacts, and a
+//! deterministic scheduler-trace harness ([`trace`]) that drives the
+//! coordinator's tick loop with scripted arrivals and records the full
+//! event trace for assertion, replay, and shrinking.
+//!
+//! [`ForwardModel`]: crate::engine::ForwardModel
 
 mod mock;
 pub mod prop;
+pub mod trace;
 
 pub use mock::MockModel;

@@ -1,22 +1,68 @@
 //! Mini property-testing harness (proptest substitute).
 //!
 //! `check(name, iters, |rng| ...)` runs a property over seeded random
-//! inputs; on failure it retries with the same seed to report the minimal
-//! reproduction seed. No shrinking — seeds are printed so a failing case is
-//! directly re-runnable, which is what debugging actually needs here.
+//! inputs. On failure it panics with the failing seed **and the exact
+//! one-line command that replays it locally**:
+//!
+//! ```text
+//! PALLAS_PROP_SEED=17 cargo test -q <test name>
+//! ```
+//!
+//! Environment knobs (read once per `check` call):
+//!
+//! * `PALLAS_PROP_SEED=<n>` — run ONLY seed `n` of every property (the
+//!   reproduction path: a CI property failure is one env var away from a
+//!   local single-case rerun).
+//! * `PALLAS_PROP_CASES=<k>` — multiply every property's iteration count
+//!   by `k` (the CI slow lane runs the suite at 10×; the default `cargo
+//!   test -q` stays fast at 1×).
+//!
+//! Input shrinking is the domain harness's job, not this one's — e.g. the
+//! scheduler-trace harness ([`crate::testutil::trace::shrink_script`])
+//! minimizes failing arrival schedules; here a printed seed already
+//! re-runs the exact failing case.
 
 use crate::util::rng::Rng;
 
-/// Run `prop` for `iters` seeded iterations; panic with the failing seed.
+/// Run `prop` for `iters` seeded iterations (times the
+/// `PALLAS_PROP_CASES` multiplier, or only the `PALLAS_PROP_SEED` seed
+/// when set); panic with the failing seed and its reproduction command.
 pub fn check<F: FnMut(&mut Rng) -> std::result::Result<(), String>>(
     name: &str,
     iters: u64,
+    prop: F,
+) {
+    let seed_override = std::env::var("PALLAS_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok());
+    let cases_mult = std::env::var("PALLAS_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .filter(|&m| m > 0)
+        .unwrap_or(1);
+    check_with(name, iters, seed_override, cases_mult, prop)
+}
+
+/// [`check`] with the environment knobs passed explicitly (unit-testable
+/// without mutating process-global env vars).
+pub fn check_with<F: FnMut(&mut Rng) -> std::result::Result<(), String>>(
+    name: &str,
+    iters: u64,
+    seed_override: Option<u64>,
+    cases_mult: u64,
     mut prop: F,
 ) {
-    for seed in 0..iters {
+    let seeds: Box<dyn Iterator<Item = u64>> = match seed_override {
+        Some(s) => Box::new(std::iter::once(s)),
+        None => Box::new(0..iters.saturating_mul(cases_mult.max(1))),
+    };
+    for seed in seeds {
         let mut rng = Rng::new(0x5EED_0000 + seed);
         if let Err(msg) = prop(&mut rng) {
-            panic!("property '{name}' failed at seed {seed}: {msg}");
+            panic!(
+                "property '{name}' failed at seed {seed}: {msg}\n\
+                 reproduce with: PALLAS_PROP_SEED={seed} cargo test -q"
+            );
         }
     }
 }
@@ -65,6 +111,50 @@ mod tests {
         check("failing", 10, |rng| {
             let x = rng.below(10);
             prop_assert!(x < 5, "x={x} too big");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn seed_override_runs_exactly_that_seed() {
+        // seed 3 under the base offset must be the ONLY case executed
+        let mut seen = Vec::new();
+        check_with("override", 1000, Some(3), 1, |rng| {
+            // regenerate deterministically to identify the seed
+            let fingerprint = rng.next_u64();
+            seen.push(fingerprint);
+            Ok(())
+        });
+        assert_eq!(seen.len(), 1, "override runs a single case");
+        assert_eq!(seen[0], Rng::new(0x5EED_0000 + 3).next_u64());
+    }
+
+    #[test]
+    fn cases_multiplier_scales_iterations() {
+        let mut n = 0u64;
+        check_with("mult", 7, None, 3, |_| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 21);
+        // zero multiplier is clamped to 1, never silently skipping the suite
+        let mut m = 0u64;
+        check_with("mult0", 5, None, 0, |_| {
+            m += 1;
+            Ok(())
+        });
+        assert_eq!(m, 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "PALLAS_PROP_SEED=4")]
+    fn failure_message_names_the_reproduction_command() {
+        check_with("repro", 10, None, 1, |rng| {
+            let x = rng.next_u64();
+            // fail deterministically at seed 4
+            if x == Rng::new(0x5EED_0000 + 4).next_u64() {
+                return Err("boom".into());
+            }
             Ok(())
         });
     }

@@ -1,0 +1,321 @@
+//! Deterministic scheduler-trace harness.
+//!
+//! Drives the coordinator's [`Scheduler`] **tick-by-tick** — no worker
+//! thread, no wall-clock coupling — with a scripted arrival schedule, and
+//! records the full per-tick [`SchedEvent`] trace plus every request's
+//! final output. Any interleaving of admissions, prefill chunks, decode
+//! dispatches, deferrals, and completions is therefore replayable
+//! bit-for-bit from its [`Script`] (and, inside a property test, from the
+//! seed that generated the script — see [`crate::testutil::prop`]).
+//!
+//! Used by `rust/tests/properties.rs` to prove the chunked-prefill
+//! scheduler token-identical to inline/sequential serving across random
+//! schedules, and by the head-of-line regression tests to assert that
+//! in-flight decode streams keep progressing while a long cache-cold
+//! prompt prefills.
+//!
+//! On a failure, [`shrink_script`] greedily minimizes the reproducing
+//! schedule: it drops arrivals one at a time and flattens arrival ticks
+//! toward zero while the failure predicate still holds, so the panic
+//! message carries the smallest script that still fails rather than the
+//! random one that happened to be generated.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::config::ServerConfig;
+use crate::coordinator::{Request, Response, SchedEvent, Scheduler};
+use crate::metrics::SchedulerStats;
+use crate::recycler::Recycler;
+use crate::testutil::MockModel;
+
+/// One scripted request: enters the scheduler's arrival set at `at_tick`.
+#[derive(Debug, Clone)]
+pub struct Arrival {
+    pub at_tick: usize,
+    pub prompt: String,
+    pub max_new: usize,
+    pub session: Option<String>,
+}
+
+/// A deterministic arrival schedule. Arrivals sharing a tick are delivered
+/// in script order (script index == request id - 1).
+#[derive(Debug, Clone, Default)]
+pub struct Script {
+    pub arrivals: Vec<Arrival>,
+}
+
+/// Everything one scripted run produced.
+pub struct TraceRun {
+    /// `(tick, event)` in execution order.
+    pub events: Vec<(usize, SchedEvent)>,
+    /// Per-arrival outcome (index == script index): generated token ids,
+    /// or the error message the scheduler replied with.
+    pub outputs: Vec<std::result::Result<Vec<u32>, String>>,
+    /// Ticks the run took to drain.
+    pub ticks: usize,
+    /// Scheduler counters at the end of the run.
+    pub stats: SchedulerStats,
+}
+
+impl TraceRun {
+    /// All events of one tick (assertion convenience).
+    pub fn tick_events(&self, tick: usize) -> Vec<&SchedEvent> {
+        self.events
+            .iter()
+            .filter(|(t, _)| *t == tick)
+            .map(|(_, e)| e)
+            .collect()
+    }
+
+    /// The tick a given event first matches on, if any.
+    pub fn first_tick_where(&self, mut pred: impl FnMut(&SchedEvent) -> bool) -> Option<usize> {
+        self.events
+            .iter()
+            .find(|(_, e)| pred(e))
+            .map(|(t, _)| *t)
+    }
+}
+
+/// Run a script to completion: construct the scheduler from `mk_recycler`,
+/// deliver each arrival at its tick, tick until every request has replied
+/// and the scheduler is idle. Errors (with the full trace attached) if the
+/// run does not converge within `max_ticks`.
+pub fn run_script<F>(
+    mk_recycler: F,
+    cfg: ServerConfig,
+    script: &Script,
+    max_ticks: usize,
+) -> std::result::Result<TraceRun, String>
+where
+    F: FnOnce() -> Recycler<MockModel>,
+{
+    let mut sched = Scheduler::new(mk_recycler(), cfg);
+    let mut events: Vec<(usize, SchedEvent)> = Vec::new();
+    let mut outputs: Vec<Option<std::result::Result<Vec<u32>, String>>> =
+        vec![None; script.arrivals.len()];
+    let mut pending_rx: Vec<(usize, mpsc::Receiver<Response>)> = Vec::new();
+    let last_arrival = script
+        .arrivals
+        .iter()
+        .map(|a| a.at_tick)
+        .max()
+        .unwrap_or(0);
+    let mut tick = 0usize;
+    loop {
+        let fresh: Vec<Request> = script
+            .arrivals
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| a.at_tick == tick)
+            .map(|(i, a)| {
+                let (tx, rx) = mpsc::channel();
+                pending_rx.push((i, rx));
+                Request {
+                    id: i as u64 + 1,
+                    prompt: a.prompt.clone(),
+                    max_new_tokens: a.max_new,
+                    session: a.session.clone(),
+                    reply: tx,
+                    queued_at: Instant::now(),
+                }
+            })
+            .collect();
+        let out = sched.tick(fresh);
+        for (tx, resp) in out.replies {
+            let _ = tx.send(resp);
+        }
+        for ev in out.events {
+            events.push((tick, ev));
+        }
+        pending_rx.retain(|(i, rx)| match rx.try_recv() {
+            Ok(Response::Ok(out)) => {
+                outputs[*i] = Some(Ok(out.ids));
+                false
+            }
+            Ok(Response::Err(e)) => {
+                outputs[*i] = Some(Err(e));
+                false
+            }
+            Err(mpsc::TryRecvError::Disconnected) => {
+                outputs[*i] = Some(Err("request dropped without reply".into()));
+                false
+            }
+            Err(mpsc::TryRecvError::Empty) => true,
+        });
+        if tick >= last_arrival && sched.is_idle() && pending_rx.is_empty() {
+            break;
+        }
+        tick += 1;
+        if tick > max_ticks {
+            return Err(format!(
+                "script did not converge within {max_ticks} ticks \
+                 ({} of {} replies); trace:\n{events:#?}",
+                outputs.iter().filter(|o| o.is_some()).count(),
+                outputs.len(),
+            ));
+        }
+    }
+    let outputs = outputs
+        .into_iter()
+        .map(|o| o.unwrap_or_else(|| Err("request never completed".into())))
+        .collect();
+    Ok(TraceRun {
+        events,
+        outputs,
+        ticks: tick + 1,
+        stats: sched.stats(),
+    })
+}
+
+/// Greedily minimize a failing script: while `fails` still holds, drop
+/// arrivals one at a time, then flatten arrival ticks to 0 (the smallest
+/// interleaving). Deterministic — same input, same minimal script. The
+/// predicate must be pure (it is re-run on every candidate).
+pub fn shrink_script<F>(script: &Script, mut fails: F) -> Script
+where
+    F: FnMut(&Script) -> bool,
+{
+    let mut cur = script.clone();
+    loop {
+        let mut shrunk = false;
+        let mut i = 0;
+        while cur.arrivals.len() > 1 && i < cur.arrivals.len() {
+            let mut cand = cur.clone();
+            cand.arrivals.remove(i);
+            if fails(&cand) {
+                cur = cand;
+                shrunk = true;
+            } else {
+                i += 1;
+            }
+        }
+        for i in 0..cur.arrivals.len() {
+            if cur.arrivals[i].at_tick > 0 {
+                let mut cand = cur.clone();
+                cand.arrivals[i].at_tick = 0;
+                if fails(&cand) {
+                    cur = cand;
+                    shrunk = true;
+                }
+            }
+        }
+        if !shrunk {
+            break;
+        }
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ModelConfig, ServerConfig};
+    use crate::engine::Engine;
+    use crate::index::NgramEmbedder;
+    use crate::recycler::RecyclePolicy;
+    use crate::tokenizer::Tokenizer;
+    use std::sync::Arc;
+
+    fn mk_recycler() -> Recycler<MockModel> {
+        Recycler::new(
+            Engine::new(MockModel::new(ModelConfig::nano())),
+            Arc::new(Tokenizer::new(vec![])),
+            Box::new(NgramEmbedder::new(64)),
+            Default::default(),
+            RecyclePolicy::Strict,
+        )
+    }
+
+    fn arrival(at_tick: usize, prompt: &str, max_new: usize) -> Arrival {
+        Arrival {
+            at_tick,
+            prompt: prompt.into(),
+            max_new,
+            session: None,
+        }
+    }
+
+    #[test]
+    fn scripted_run_records_full_lifecycle() {
+        let script = Script {
+            arrivals: vec![
+                arrival(0, "the first scripted prompt", 3),
+                arrival(2, "the second one arrives later", 2),
+            ],
+        };
+        let run = run_script(mk_recycler, ServerConfig::default(), &script, 1000).unwrap();
+        assert_eq!(run.outputs.len(), 2);
+        assert_eq!(run.outputs[0].as_ref().unwrap().len(), 3);
+        assert_eq!(run.outputs[1].as_ref().unwrap().len(), 2);
+        // the trace shows the full state machine for request 1
+        let admitted = run
+            .first_tick_where(|e| matches!(e, SchedEvent::Admitted { id: 1 }))
+            .expect("request 1 admitted");
+        assert_eq!(admitted, 0, "tick-0 arrival admits at tick 0");
+        assert!(run
+            .events
+            .iter()
+            .any(|(_, e)| matches!(e, SchedEvent::PrefillChunk { id: 1, .. })));
+        assert!(run
+            .events
+            .iter()
+            .any(|(_, e)| matches!(e, SchedEvent::DecodeStep { .. })));
+        assert!(run
+            .events
+            .iter()
+            .any(|(_, e)| matches!(e, SchedEvent::FirstToken { id: 1 })));
+        assert!(run
+            .events
+            .iter()
+            .any(|(_, e)| matches!(e, SchedEvent::Finished { id: 1, tokens: 3 })));
+        // request 2 must not be admitted before its scripted tick
+        let adm2 = run
+            .first_tick_where(|e| matches!(e, SchedEvent::Admitted { id: 2 }))
+            .expect("request 2 admitted");
+        assert!(adm2 >= 2, "arrival at tick 2 admitted at {adm2}");
+    }
+
+    #[test]
+    fn same_tick_arrivals_deliver_in_script_order() {
+        let script = Script {
+            arrivals: vec![
+                arrival(0, "aaaa bbbb cccc", 2),
+                arrival(0, "dddd eeee ffff", 2),
+            ],
+        };
+        // one prefill slot: the second arrival must defer behind the first
+        let cfg = ServerConfig {
+            max_prefilling_slots: 1,
+            prefill_chunk_tokens: 8,
+            ..Default::default()
+        };
+        let run = run_script(mk_recycler, cfg, &script, 1000).unwrap();
+        let a1 = run
+            .first_tick_where(|e| matches!(e, SchedEvent::Admitted { id: 1 }))
+            .unwrap();
+        let a2 = run
+            .first_tick_where(|e| matches!(e, SchedEvent::Admitted { id: 2 }))
+            .unwrap();
+        assert!(a1 <= a2, "script order preserved under the slot gate");
+        assert!(run.outputs.iter().all(|o| o.is_ok()));
+    }
+
+    #[test]
+    fn shrink_drops_irrelevant_arrivals() {
+        let script = Script {
+            arrivals: vec![
+                arrival(0, "innocent bystander", 1),
+                arrival(3, "the culprit", 1),
+                arrival(5, "another bystander", 1),
+            ],
+        };
+        // predicate: fails whenever "culprit" is scheduled at all
+        let minimal = shrink_script(&script, |s| {
+            s.arrivals.iter().any(|a| a.prompt.contains("culprit"))
+        });
+        assert_eq!(minimal.arrivals.len(), 1);
+        assert!(minimal.arrivals[0].prompt.contains("culprit"));
+        assert_eq!(minimal.arrivals[0].at_tick, 0, "tick flattened to 0");
+    }
+}

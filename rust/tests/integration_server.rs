@@ -1,14 +1,16 @@
 //! Integration: coordinator + TCP server over the line-delimited JSON
-//! protocol (mock model — no artifacts needed).
+//! protocol, and the chunked-prefill head-of-line regression suite
+//! (mock model — no artifacts needed).
 
 use std::sync::Arc;
 
 use recycle_serve::config::{ModelConfig, ServerConfig};
-use recycle_serve::coordinator::Coordinator;
+use recycle_serve::coordinator::{Coordinator, SchedEvent};
 use recycle_serve::engine::Engine;
 use recycle_serve::index::NgramEmbedder;
 use recycle_serve::recycler::{RecyclePolicy, Recycler};
 use recycle_serve::server::{Server, TcpClient};
+use recycle_serve::testutil::trace::{run_script, Arrival, Script};
 use recycle_serve::testutil::MockModel;
 use recycle_serve::tokenizer::Tokenizer;
 
@@ -93,6 +95,140 @@ fn session_chat_over_tcp() {
         "turn 2 must recycle the session transcript"
     );
     server.stop();
+}
+
+#[test]
+fn head_of_line_stall_bounded_by_prefill_chunk_budget() {
+    // Regression for the PR-2 scheduler's head-of-line blocking: one
+    // max-window, cache-cold prompt arriving mid-decode used to run its
+    // WHOLE prefill inline at admission, stalling every in-flight stream
+    // for the full prompt. With chunked prefill the in-flight streams
+    // must advance every single tick while the long prompt prefills, and
+    // no tick may carry more than `prefill_chunk_tokens` of prefill work.
+    // Driven tick-by-tick through the deterministic trace harness — no
+    // wall-clock anywhere.
+    let budget = 16usize;
+    let long_len = 200usize; // tokens (byte tokenizer), well past budget
+    let script = Script {
+        arrivals: vec![
+            Arrival {
+                at_tick: 0,
+                prompt: "aa bb cc dd".into(),
+                max_new: 40,
+                session: None,
+            },
+            Arrival {
+                at_tick: 0,
+                prompt: "ee ff gg hh".into(),
+                max_new: 40,
+                session: None,
+            },
+            Arrival {
+                at_tick: 2,
+                prompt: "z".repeat(long_len),
+                max_new: 4,
+                session: None,
+            },
+        ],
+    };
+    let cfg = ServerConfig {
+        max_batch: 8,
+        prefill_chunk_tokens: budget,
+        populate_cache: false,
+        ..Default::default()
+    };
+    let mk = || {
+        Recycler::new(
+            Engine::new(MockModel::new(ModelConfig::nano())),
+            Arc::new(Tokenizer::new(vec![])),
+            Box::new(NgramEmbedder::new(64)),
+            Default::default(),
+            RecyclePolicy::Strict,
+        )
+    };
+    let run = run_script(mk, cfg, &script, 10_000).unwrap();
+    assert!(run.outputs.iter().all(|o| o.is_ok()), "{:?}", run.outputs);
+    assert_eq!(run.outputs[2].as_ref().unwrap().len(), 4);
+
+    // the long prompt's prefill spans many ticks...
+    let admitted = run
+        .first_tick_where(|e| matches!(e, SchedEvent::Admitted { id: 3 }))
+        .expect("long prompt admitted");
+    let prefill_done = run
+        .first_tick_where(|e| matches!(e, SchedEvent::PrefillChunk { id: 3, done: true, .. }))
+        .expect("long prompt finished prefill");
+    assert!(
+        prefill_done - admitted + 1 >= long_len / budget,
+        "200 tokens at {budget}/tick must span >= {} ticks, took {}",
+        long_len / budget,
+        prefill_done - admitted + 1
+    );
+    // ...and during EVERY one of those ticks both in-flight streams
+    // advanced (a decode dispatch with occupancy >= 2 — no stall at all,
+    // let alone an unbounded one)
+    for t in admitted..=prefill_done {
+        assert!(
+            run.tick_events(t).iter().any(|e| matches!(
+                e,
+                SchedEvent::DecodeStep { occupancy } if *occupancy >= 2
+            )),
+            "tick {t}: in-flight decode stalled while the long prompt prefilled"
+        );
+    }
+    // per-tick prefill work is bounded by the chunk budget (the
+    // SchedulerStats counter the coordinator surfaces)
+    for (_, ev) in &run.events {
+        if let SchedEvent::PrefillChunk { tokens, .. } = ev {
+            assert!(*tokens <= budget, "chunk of {tokens} tokens > budget {budget}");
+        }
+    }
+    assert!(
+        run.stats.prefill_stall_tokens_max <= budget as u64,
+        "stall counter {} exceeds the chunk budget {budget}",
+        run.stats.prefill_stall_tokens_max
+    );
+    assert!(run.stats.prefill_ticks as usize >= long_len / budget);
+}
+
+#[test]
+fn coordinator_surfaces_chunked_prefill_counters() {
+    // Wire-level smoke: the same counters flow through CoordinatorStats
+    // when the worker thread drives the scheduler. The stall bound holds
+    // structurally whatever the thread timing does.
+    let budget = 16usize;
+    let coordinator = Coordinator::spawn(
+        || {
+            Recycler::new(
+                Engine::new(MockModel::new(ModelConfig::nano())),
+                Arc::new(Tokenizer::new(vec![])),
+                Box::new(NgramEmbedder::new(64)),
+                Default::default(),
+                RecyclePolicy::Strict,
+            )
+        },
+        ServerConfig {
+            max_batch: 4,
+            prefill_chunk_tokens: budget,
+            populate_cache: false,
+            ..Default::default()
+        },
+    );
+    // a long-decode request to keep streams in flight, then a cold
+    // 180-token prompt behind it
+    let rx_a = coordinator.submit("short warm prompt", 60, None).unwrap();
+    let rx_b = coordinator.submit(&"y".repeat(180), 4, None).unwrap();
+    assert!(rx_a.recv().unwrap().ok().is_ok());
+    assert!(rx_b.recv().unwrap().ok().is_ok());
+    let s = coordinator.stats().scheduler;
+    assert_eq!(s.first_tokens, 2, "TTFT recorded per request");
+    assert!(s.prefill_tokens >= 180 + 17);
+    assert!(
+        s.prefill_stall_tokens_max <= budget as u64,
+        "stall {} > budget {budget}",
+        s.prefill_stall_tokens_max
+    );
+    assert!(s.prefill_ticks >= (180 / budget) as u64);
+    coordinator.shutdown();
 }
 
 #[test]

@@ -6,9 +6,10 @@
 use std::collections::VecDeque;
 use std::sync::Arc;
 
-use recycle_serve::config::{CacheConfig, EvictionPolicy, ModelConfig};
-use recycle_serve::coordinator::SessionManager;
+use recycle_serve::config::{CacheConfig, EvictionPolicy, ModelConfig, ServerConfig};
+use recycle_serve::coordinator::{admission_prompt, SchedEvent, SessionManager};
 use recycle_serve::engine::{plan_chunks, DecodeStream, Engine};
+use recycle_serve::testutil::trace::{run_script, shrink_script, Arrival, Script, TraceRun};
 use recycle_serve::index::{FlatIndex, NgramEmbedder};
 use recycle_serve::kvcache::{persist, BlockPool, KvArena, KvRecord, KvStore, KvView};
 use recycle_serve::prefix::{common_prefix_len, reuse_depth, RadixTree};
@@ -890,6 +891,229 @@ fn prop_plan_chunks_covers_with_bounded_waste() {
         prop_assert!(total - n < *buckets.last().unwrap(), "waste too big");
         prop_assert!(plan.iter().all(|c| buckets.contains(c)), "bad bucket");
         Ok(())
+    });
+}
+
+// ---------- chunked prefill ----------
+
+#[test]
+fn prop_chunked_prefill_equals_inline_any_budget_and_split() {
+    // Engine-level half of the chunked-prefill exactness story: for random
+    // prompts, random recycled-prefix splits, and random per-step token
+    // budgets, prefilling through the suspendable API emits exactly the
+    // tokens the inline path emits (chunk-split invariance through the
+    // stream API), and each step respects its budget.
+    check("chunked prefill == inline (engine)", 80, |rng| {
+        let cfg = ModelConfig::nano();
+        let prompt = tokens(rng, 2, 120, cfg.vocab_size as u32);
+        let split = rng.below(prompt.len());
+        let budget = rng.range(1, 70);
+
+        let mut inline_e = Engine::new(MockModel::new(cfg.clone()));
+        let mut kv = inline_e.empty_kv();
+        if split > 0 {
+            inline_e
+                .prefill(&prompt[..split], &mut kv, 0)
+                .map_err(|e| e.to_string())?;
+        }
+        let want = inline_e
+            .generate(&prompt, kv, split, 6, false)
+            .map_err(|e| e.to_string())?;
+
+        let mut e = Engine::new(MockModel::new(cfg.clone()));
+        let mut kv2 = e.empty_kv();
+        if split > 0 {
+            e.prefill(&prompt[..split], &mut kv2, 0)
+                .map_err(|e| e.to_string())?;
+        }
+        let mut p = e
+            .start_prefill(&prompt, kv2, split, 6, false)
+            .map_err(|e| e.to_string())?;
+        while !p.is_done() {
+            let prog = e.step_prefill(&mut p, budget).map_err(|e| e.to_string())?;
+            prop_assert!(
+                (1..=budget).contains(&prog.tokens),
+                "budget {budget}: step took {} tokens",
+                prog.tokens
+            );
+        }
+        let mut s = e.finish_prefill(p).map_err(|e| e.to_string())?;
+        while !s.is_finished() {
+            e.step_streams(&mut [&mut s]).map_err(|e| e.to_string())?;
+        }
+        let g = s.into_generated();
+        prop_assert!(
+            g.ids == want.ids,
+            "diverged at split {split}/{} budget {budget}",
+            prompt.len()
+        );
+        prop_assert!(g.reused_tokens == want.reused_tokens, "reuse depth");
+        Ok(())
+    });
+}
+
+/// Serve a script's requests one at a time through `Recycler::generate_ids`
+/// (inline prefill, request-at-a-time — the paper's serving loop), building
+/// prompts exactly the way scheduler admission does (`admission_prompt`,
+/// including the session sliding window). The per-request expected outputs
+/// for the chunked-scheduler arm.
+fn sequential_reference(
+    policy: RecyclePolicy,
+    script: &Script,
+) -> Vec<std::result::Result<Vec<u32>, String>> {
+    let mut seq = mk_recycler(policy);
+    let mut sessions = SessionManager::new();
+    let mut expected = Vec::new();
+    for a in &script.arrivals {
+        let (ptext, pids) =
+            admission_prompt(&seq, &sessions, a.session.as_deref(), &a.prompt, a.max_new);
+        let admit_full = a.session.is_some();
+        match seq.generate_ids(&ptext, pids.clone(), a.max_new, admit_full) {
+            Ok(out) => {
+                if let Some(sid) = &a.session {
+                    let mut full_ids = pids;
+                    full_ids.extend_from_slice(&out.ids);
+                    sessions.commit(
+                        sid,
+                        &a.prompt,
+                        format!("{ptext}{}", out.text),
+                        full_ids,
+                        &out.text,
+                    );
+                }
+                expected.push(Ok(out.ids));
+            }
+            Err(e) => expected.push(Err(e.to_string())),
+        }
+    }
+    expected
+}
+
+/// Run the chunked-prefill scheduler over `script` and compare every
+/// request's tokens against the sequential reference. `Err` carries the
+/// first mismatch (or a non-converging run) — the shrink predicate.
+fn chunked_vs_sequential(
+    policy: RecyclePolicy,
+    cfg: &ServerConfig,
+    script: &Script,
+) -> std::result::Result<TraceRun, String> {
+    let expected = sequential_reference(policy, script);
+    let run = run_script(|| mk_recycler(policy), cfg.clone(), script, 50_000)?;
+    for (i, (want, got)) in expected.iter().zip(&run.outputs).enumerate() {
+        match (want, got) {
+            (Ok(w), Ok(g)) if w == g => {}
+            (Err(_), Err(_)) => {}
+            _ => {
+                return Err(format!(
+                    "request {i} diverged: sequential {want:?} vs chunked {got:?}"
+                ))
+            }
+        }
+    }
+    Ok(run)
+}
+
+#[test]
+fn prop_chunked_prefill_scheduler_token_identical_to_sequential() {
+    // THE chunked-prefill exactness property: any randomized schedule of
+    // fresh / extension / session arrivals, served by the tick-driven
+    // scheduler under a random chunk budget and prefill-slot count, emits
+    // for EVERY stream exactly the tokens inline request-at-a-time serving
+    // emits. Cache hit/miss decisions may differ between the arms (the
+    // interleaving changes what is cached when) — outputs must not, which
+    // is the paper's whole claim. On failure, the trace harness shrinks
+    // the schedule to a minimal reproduction before panicking.
+    check("chunked-prefill scheduler == sequential", 12, |rng| {
+        let policy = if rng.chance(0.5) {
+            RecyclePolicy::Strict
+        } else {
+            RecyclePolicy::Radix
+        };
+        let bases: Vec<String> =
+            (0..3).map(|i| format!("base {i} {}", text(rng, 30))).collect();
+        let n_req = rng.range(4, 10);
+        let mut arrivals: Vec<Arrival> = (0..n_req)
+            .map(|_| {
+                let at_tick = rng.below(8);
+                match rng.below(4) {
+                    0 => Arrival {
+                        at_tick,
+                        prompt: format!("q {}", text(rng, 40)),
+                        max_new: rng.range(1, 5),
+                        session: None,
+                    },
+                    1 => Arrival {
+                        at_tick,
+                        prompt: rng.choice(&bases).clone(),
+                        max_new: rng.range(1, 5),
+                        session: None,
+                    },
+                    2 => {
+                        let b = rng.choice(&bases).clone();
+                        let suffix = text(rng, 20);
+                        Arrival {
+                            at_tick,
+                            prompt: format!("{b} {suffix}"),
+                            max_new: rng.range(1, 5),
+                            session: None,
+                        }
+                    }
+                    _ => Arrival {
+                        at_tick,
+                        prompt: format!("m {}", text(rng, 14)),
+                        max_new: rng.range(1, 4),
+                        session: Some(format!("s{}", rng.below(2))),
+                    },
+                }
+            })
+            .collect();
+        // stable sort: delivery order == script order == the sequential
+        // arm's serving order (per-session turn order must agree)
+        arrivals.sort_by_key(|a| a.at_tick);
+        let script = Script { arrivals };
+        let cfg = ServerConfig {
+            max_batch: rng.range(2, 5),
+            prefill_chunk_tokens: rng.range(1, 48),
+            max_prefilling_slots: rng.range(1, 3),
+            ..Default::default()
+        };
+        match chunked_vs_sequential(policy, &cfg, &script) {
+            Ok(run) => {
+                // budget discipline: no single prefill step exceeds the
+                // chunk budget, and the per-tick stall bound holds
+                for (_, ev) in &run.events {
+                    if let SchedEvent::PrefillChunk { tokens, .. } = ev {
+                        prop_assert!(
+                            *tokens <= cfg.prefill_chunk_tokens,
+                            "chunk of {tokens} tokens exceeds budget {}",
+                            cfg.prefill_chunk_tokens
+                        );
+                    }
+                }
+                let cap =
+                    (cfg.prefill_chunk_tokens * cfg.max_prefilling_slots) as u64;
+                prop_assert!(
+                    run.stats.prefill_stall_tokens_max <= cap,
+                    "stall {} tokens exceeds budget*slots {cap}",
+                    run.stats.prefill_stall_tokens_max
+                );
+                Ok(())
+            }
+            Err(msg) => {
+                let minimal = shrink_script(&script, |s| {
+                    chunked_vs_sequential(policy, &cfg, s).is_err()
+                });
+                prop_assert!(
+                    false,
+                    "{msg}\nminimal failing script: {minimal:?}\n\
+                     cfg: chunk_tokens={} prefill_slots={} max_batch={}",
+                    cfg.prefill_chunk_tokens,
+                    cfg.max_prefilling_slots,
+                    cfg.max_batch
+                );
+                Ok(())
+            }
+        }
     });
 }
 
