@@ -1,0 +1,223 @@
+//! A7 — tiered KV store ablation: disk spill as the eviction destination
+//! vs drop-on-evict, under an arena sized to hold HALF the cache working
+//! set.
+//!
+//! Scenario: 8 distinct ~64-token prompts are warmed into the cache, but
+//! the arena only has room for about half of them alongside serving
+//! headroom — the recycler's arena-pressure pass must evict. With the
+//! spill tier OFF (`max_spill_bytes = 0`, the pre-tier behavior and this
+//! ablation's control arm) evicted records are destroyed, so every later
+//! request for one recomputes its prefill from scratch. With the tier ON,
+//! eviction serializes the record to disk and a later lookup transparently
+//! reloads it (shedding a hot sibling), so the request still recycles —
+//! paying a bounded reload latency instead of the full recompute.
+//!
+//! Reported per arm: hit rate, mean request latency, mean *hit* latency,
+//! spill/reload counters, and the tier's average reload latency. The
+//! spill arm must beat the control on hit rate, and — because a disk
+//! reload is far cheaper than recomputing a 64-token prefill on the
+//! delayed mock backend — on mean latency too (the "bounded overhead"
+//! claim, asserted).
+//!
+//! ```bash
+//! cargo bench --bench ablation_spill            # full
+//! cargo bench --bench ablation_spill -- --quick # smoke
+//! ```
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use recycle_serve::config::{CacheConfig, ModelConfig};
+use recycle_serve::engine::Engine;
+use recycle_serve::index::NgramEmbedder;
+use recycle_serve::kvcache::KvArena;
+use recycle_serve::recycler::{RecyclePolicy, Recycler};
+use recycle_serve::testutil::{MockModel, TempDir};
+use recycle_serve::tokenizer::Tokenizer;
+
+const N_PROMPTS: usize = 8;
+
+/// ~64-token distinct documents (byte-level tokenizer: chars == tokens).
+fn prompts() -> Vec<String> {
+    let topics = [
+        "alpha", "bravo", "charlie", "delta", "echo", "foxtrot", "golf", "hotel",
+    ];
+    (0..N_PROMPTS)
+        .map(|i| {
+            let mut s = format!("document {i} discusses {} at length: ", topics[i]);
+            while s.len() < 64 {
+                s.push_str(topics[i]);
+                s.push(' ');
+            }
+            s.truncate(64);
+            s
+        })
+        .collect()
+}
+
+struct ArmReport {
+    requests: usize,
+    hits: usize,
+    mean_ms: f64,
+    mean_hit_ms: f64,
+    spills: u64,
+    spill_hits: u64,
+    avg_reload_ms: f64,
+}
+
+impl ArmReport {
+    fn hit_rate(&self) -> f64 {
+        self.hits as f64 / self.requests as f64
+    }
+}
+
+/// Run one arm: warm all prompts under arena pressure, then serve
+/// `passes` rounds of extended requests over every prompt.
+fn run(spill_dir: Option<&TempDir>, passes: usize, delay: Duration) -> ArmReport {
+    let cfg = ModelConfig::nano();
+    // Arena: 32 blocks of 16 tokens. The 8 warmed records need ~32 blocks
+    // in total, and the headroom pass keeps >= 16 blocks free for serving
+    // — so the hot tier can pin only about HALF the working set.
+    let arena = KvArena::new(&cfg, 16, 32);
+    let engine = Engine::with_arena(MockModel::with_delay(cfg, delay), arena);
+    let cache = CacheConfig {
+        max_entries: 0,
+        max_bytes: 0,
+        max_spill_bytes: if spill_dir.is_some() { 256 << 20 } else { 0 },
+        spill_dir: spill_dir.map(|t| t.path_string()),
+        ..Default::default()
+    };
+    // Radix policy: exact longest-prefix retrieval, so the two arms differ
+    // only in what eviction did to the record — not in retrieval noise.
+    let mut r = Recycler::new(
+        engine,
+        Arc::new(Tokenizer::new(vec![])),
+        Box::new(NgramEmbedder::new(64)),
+        cache,
+        RecyclePolicy::Radix,
+    );
+    r.populate_cache = false;
+
+    let docs = prompts();
+    let refs: Vec<&str> = docs.iter().map(|s| s.as_str()).collect();
+    r.warm(&refs).expect("warm");
+
+    let mut report = ArmReport {
+        requests: 0,
+        hits: 0,
+        mean_ms: 0.0,
+        mean_hit_ms: 0.0,
+        spills: 0,
+        spill_hits: 0,
+        avg_reload_ms: 0.0,
+    };
+    let mut total_ms = 0.0;
+    let mut hit_ms = 0.0;
+    for _ in 0..passes {
+        for doc in &docs {
+            let q = format!("{doc} tell me more");
+            let out = r.generate(&q, 8).expect("serve");
+            report.requests += 1;
+            total_ms += out.latency_s * 1e3;
+            if out.cache_hit {
+                report.hits += 1;
+                hit_ms += out.latency_s * 1e3;
+            }
+        }
+    }
+    let s = r.store().stats();
+    report.mean_ms = total_ms / report.requests as f64;
+    report.mean_hit_ms = if report.hits > 0 {
+        hit_ms / report.hits as f64
+    } else {
+        f64::NAN
+    };
+    report.spills = s.spills;
+    report.spill_hits = s.spill_hits;
+    report.avg_reload_ms = s.avg_reload_ms();
+    report
+}
+
+fn main() {
+    common::banner(
+        "ablation_spill",
+        "A7 tiered KV store: spill-on-evict vs drop-on-evict",
+    );
+    let passes = if common::quick() { 1 } else { 3 };
+    let delay = Duration::from_micros(300);
+
+    let tmp = TempDir::new("bench_spill");
+    let off = run(None, passes, delay);
+    let on = run(Some(&tmp), passes, delay);
+
+    println!(
+        "{:<10} {:>9} {:>6} {:>9} {:>10} {:>13} {:>8} {:>11} {:>13}",
+        "mode", "requests", "hits", "hit_rate", "mean_ms", "mean_hit_ms", "spills",
+        "spill_hits", "avg_reload_ms"
+    );
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    for (mode, r) in [("spill-off", &off), ("spill-on", &on)] {
+        println!(
+            "{mode:<10} {:>9} {:>6} {:>9.3} {:>10.2} {:>13.2} {:>8} {:>11} {:>13.3}",
+            r.requests,
+            r.hits,
+            r.hit_rate(),
+            r.mean_ms,
+            r.mean_hit_ms,
+            r.spills,
+            r.spill_hits,
+            r.avg_reload_ms
+        );
+        rows.push(vec![
+            mode.to_string(),
+            r.requests.to_string(),
+            r.hits.to_string(),
+            format!("{:.4}", r.hit_rate()),
+            format!("{:.3}", r.mean_ms),
+            format!("{:.3}", r.mean_hit_ms),
+            r.spills.to_string(),
+            r.spill_hits.to_string(),
+            format!("{:.4}", r.avg_reload_ms),
+        ]);
+    }
+    let out = common::results_dir().join("ablation_spill.csv");
+    recycle_serve::util::csv::write_file(
+        &out,
+        &[
+            "mode", "requests", "hits", "hit_rate", "mean_ms", "mean_hit_ms",
+            "spills", "spill_hits", "avg_reload_ms",
+        ],
+        &rows,
+    )
+    .expect("write csv");
+    println!("\nwrote {}", out.display());
+    println!(
+        "spill tier: hit rate {:.0}% -> {:.0}%, mean latency {:.2} -> {:.2} ms \
+         (avg reload {:.3} ms)",
+        off.hit_rate() * 100.0,
+        on.hit_rate() * 100.0,
+        off.mean_ms,
+        on.mean_ms,
+        on.avg_reload_ms
+    );
+
+    assert!(
+        on.hit_rate() > off.hit_rate(),
+        "spill tier must recover hits drop-on-evict destroys: {:.3} !> {:.3}",
+        on.hit_rate(),
+        off.hit_rate()
+    );
+    assert!(
+        on.spill_hits > 0,
+        "the spill arm must actually reload from disk"
+    );
+    assert!(
+        on.mean_ms < off.mean_ms,
+        "reload overhead must stay bounded below the recompute it replaces \
+         ({:.2} !< {:.2} ms)",
+        on.mean_ms,
+        off.mean_ms
+    );
+}

@@ -42,23 +42,37 @@ impl EvictionPolicy {
         [Self::Lru, Self::Lfu, Self::Fifo, Self::CostAware];
 }
 
-/// KV store sizing + persistence knobs.
+/// KV store sizing + tiering knobs.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CacheConfig {
-    /// Max number of cached prompts (0 = unbounded).
+    /// Max number of hot (arena-resident) cached prompts (0 = unbounded).
     pub max_entries: usize,
-    /// Max total bytes of cached KV (0 = unbounded). Entries are accounted
-    /// by their *trimmed* size `kv_bytes_for_len(tokens)`.
+    /// Max *physical* bytes of hot cached KV (0 = unbounded): distinct
+    /// arena blocks referenced by cache entries, counted once however
+    /// many entries share them — block-granular, shared-aware accounting
+    /// (see `kvcache::store`).
     pub max_bytes: usize,
     pub eviction: EvictionPolicy,
     /// Retrieval similarity floor: candidates below this are treated as a
     /// miss before the prefix test even runs (paper uses top-1 retrieval
     /// with no floor; 0.0 reproduces that).
     pub min_similarity: f32,
-    /// Compress KV payloads with DEFLATE when persisting to disk.
+    /// Compress KV payloads with DEFLATE when persisting/spilling to disk.
     pub compress: bool,
     /// Directory for persisted entries (None = RAM only).
     pub persist_dir: Option<String>,
+    /// Cold-tier (disk spill) budget in serialized bytes. 0 disables
+    /// spilling — eviction destroys records (the pre-tier behavior and
+    /// the ablation's control arm). > 0 makes eviction *spill* the victim
+    /// to disk instead; lookups transparently reload spilled records, and
+    /// the tier itself evicts LRU (terminally) past this budget.
+    pub max_spill_bytes: usize,
+    /// Directory for the cold tier's spill files. None = a fresh unique
+    /// directory under the OS temp dir, removed when the store drops; a
+    /// configured directory is created if missing and left in place. If
+    /// the directory cannot be set up the store logs the error, flags
+    /// `CacheStats::spill_setup_failed`, and degrades to drop-on-evict.
+    pub spill_dir: Option<String>,
 }
 
 impl Default for CacheConfig {
@@ -70,6 +84,8 @@ impl Default for CacheConfig {
             min_similarity: 0.0,
             compress: false,
             persist_dir: None,
+            max_spill_bytes: 0,
+            spill_dir: None,
         }
     }
 }
@@ -108,6 +124,18 @@ impl CacheConfig {
             c.persist_dir = Some(
                 x.as_str()
                     .ok_or_else(|| Error::Config("persist_dir must be a string".into()))?
+                    .to_string(),
+            );
+        }
+        if let Some(x) = v.get("max_spill_bytes") {
+            c.max_spill_bytes = x
+                .as_usize()
+                .ok_or_else(|| Error::Config("max_spill_bytes must be a number".into()))?;
+        }
+        if let Some(x) = v.get("spill_dir") {
+            c.spill_dir = Some(
+                x.as_str()
+                    .ok_or_else(|| Error::Config("spill_dir must be a string".into()))?
                     .to_string(),
             );
         }
@@ -150,6 +178,23 @@ mod tests {
         assert_eq!(c.eviction, EvictionPolicy::Lfu);
         assert!(c.compress);
         assert_eq!(c.min_similarity, 0.0);
+        assert_eq!(c.max_spill_bytes, 0, "spilling defaults off");
+        assert_eq!(c.spill_dir, None);
+    }
+
+    #[test]
+    fn from_json_spill_knobs() {
+        let v = json::parse(
+            r#"{"max_spill_bytes": 1048576, "spill_dir": "/tmp/spill"}"#,
+        )
+        .unwrap();
+        let c = CacheConfig::from_json(&v).unwrap();
+        assert_eq!(c.max_spill_bytes, 1 << 20);
+        assert_eq!(c.spill_dir.as_deref(), Some("/tmp/spill"));
+        let bad = json::parse(r#"{"max_spill_bytes": "lots"}"#).unwrap();
+        assert!(CacheConfig::from_json(&bad).is_err());
+        let bad = json::parse(r#"{"spill_dir": 3}"#).unwrap();
+        assert!(CacheConfig::from_json(&bad).is_err());
     }
 
     #[test]

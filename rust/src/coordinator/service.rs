@@ -41,11 +41,16 @@
 //!   slot, prefilling or decoding, so a newcomer cannot eat blocks an
 //!   in-flight slot will need across its chunk boundaries. Dropping a
 //!   slot at any chunk boundary releases its blocks (clean shedding).
-//! * **Zero-yield shed latch** — arena-pressure shedding still goes
-//!   through [`Recycler`]'s stall latch; the chunked path adds one
-//!   shed-and-*resume* retry on a mid-prefill `ArenaExhausted`: the
-//!   stream keeps its completed chunks, so the retry re-runs only the
-//!   failed chunk and `prefill_calls` counts each chunk exactly once.
+//! * **Reclaim-gated shedding** — arena-pressure shedding goes through
+//!   [`Recycler`]'s headroom pass, which is gated on the tiered store's
+//!   *reclaimable* footprint (blocks whose every live reference is a
+//!   cache entry's): when per-tick shedding can free nothing it stops
+//!   immediately — and with a spill tier configured, victims land on
+//!   disk and stay hit-able instead of being destroyed. The chunked
+//!   path adds one shed-and-*resume* retry on a mid-prefill
+//!   `ArenaExhausted`: the stream keeps its completed chunks, so the
+//!   retry re-runs only the failed chunk and `prefill_calls` counts
+//!   each chunk exactly once.
 //! * **Headroom FIFO** — while any request is held back for arena
 //!   headroom, no fresh request is drained past it (unchanged).
 
@@ -58,6 +63,7 @@ use std::time::{Duration, Instant};
 use crate::config::ServerConfig;
 use crate::engine::{DecodeStream, ForwardModel, PrefillStream};
 use crate::error::{Error, Result};
+use crate::kvcache::CacheStats;
 use crate::metrics::{Counters, SchedulerStats};
 use crate::recycler::{Outcome, Recycler, ServeMeta};
 
@@ -80,7 +86,13 @@ pub struct CoordinatorStats {
     /// Continuous-batching occupancy + queue-wait + chunked-prefill
     /// counters (time-to-first-token, prefill stall bound).
     pub scheduler: SchedulerStats,
+    /// Tiered KV store counters: hot hit/miss/eviction plus the spill
+    /// tier's spill / spill-hit / reload-latency accounting.
+    pub cache: CacheStats,
+    /// Hot cache entries (== `cache.live_entries`, kept for dashboards).
     pub cache_entries: usize,
+    /// Logical hot-cache bytes (see `cache.physical_bytes` for the real
+    /// arena footprint).
     pub cache_bytes: usize,
     /// Paged-KV arena occupancy (cache records + in-flight requests).
     pub arena_used_blocks: usize,
@@ -1048,6 +1060,7 @@ fn worker_loop<M: ForwardModel>(
             stats.batches = sched.admission_waves();
             let recycler = sched.recycler();
             stats.engine = recycler.engine().counters();
+            stats.cache = recycler.store().stats();
             stats.cache_entries = recycler.store().len();
             stats.cache_bytes = recycler.store().live_bytes();
             stats.arena_used_blocks = recycler.arena().used_blocks();

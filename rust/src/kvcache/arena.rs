@@ -231,6 +231,16 @@ impl KvArena {
         self.inner.pool.snapshot()
     }
 
+    /// How many `(block_id, expected_refcount)` pairs match current
+    /// refcounts (one lock, no cloning — see
+    /// [`BlockPool::count_matching_refs`]).
+    pub fn count_matching_refs(
+        &self,
+        pairs: impl Iterator<Item = (usize, u32)>,
+    ) -> usize {
+        self.inner.pool.count_matching_refs(pairs)
+    }
+
     /// A new empty view over this arena (no blocks held yet).
     pub fn new_view(&self) -> KvView {
         KvView {
@@ -314,6 +324,15 @@ impl KvView {
     /// Physical block ids in table order (tests/diagnostics).
     pub fn block_ids(&self) -> Vec<usize> {
         self.blocks.iter().map(|b| b.block_id).collect()
+    }
+
+    /// Blocks for which this view holds the *only* live reference —
+    /// dropping the view returns exactly these to the pool. This is the
+    /// shared-aware *physical* footprint of an eviction: blocks still
+    /// referenced elsewhere (a cached sibling, an in-flight stream) are
+    /// excluded because releasing our handle does not free them.
+    pub fn unique_blocks(&self) -> usize {
+        self.blocks.iter().filter(|b| b.is_unique()).count()
     }
 
     /// Extend the valid length (after out-of-band `row_mut` writes).

@@ -135,6 +135,22 @@ impl BlockPool {
         (inner.free.clone(), inner.refcounts.clone())
     }
 
+    /// How many `(block_id, expected_refcount)` pairs match the pool's
+    /// current refcounts — one lock acquisition, no state cloning. The
+    /// tiered store's reclaimability probe, called once per eviction
+    /// under arena pressure, where cloning the whole pool state (as
+    /// [`snapshot`](Self::snapshot) does) would churn allocations on the
+    /// serving path.
+    pub fn count_matching_refs(
+        &self,
+        pairs: impl Iterator<Item = (usize, u32)>,
+    ) -> usize {
+        let inner = self.inner.lock().unwrap();
+        pairs
+            .filter(|&(id, rc)| inner.refcounts.get(id).copied() == Some(rc))
+            .count()
+    }
+
     /// Bytes of KV that `n_seqs` sequences of `tokens` positions would
     /// occupy with vs without prefix sharing of `shared_tokens` — the
     /// headline "context capacity expansion" arithmetic used by the

@@ -1,28 +1,55 @@
-//! The cross-prompt KV cache — the paper's central data structure.
+//! The cross-prompt KV cache — the paper's central data structure, grown
+//! into a **tiered store with physical accounting**.
+//!
+//! Layering, hot to cold:
 //!
 //! * [`arena`] — the paged substrate: one [`KvArena`] slab carved into
 //!   refcounted token blocks, with [`KvView`] presenting a logical
 //!   `[L, 2, H, len, D]` sequence over a block table. Cache injection is a
 //!   block-table clone (refcount bumps), not a tensor copy.
-//! * [`KvRecord`] — one cached prompt: token ids, embedding, and the
-//!   *paged* per-layer K/V for exactly `token_len` positions, i.e. the
-//!   paper's `C[i] = (c_i, input_ids(c_i), {K_l, V_l})`.
-//! * [`KvStore`] — capacity-bounded store with pluggable eviction
-//!   (LRU / LFU / FIFO / cost-aware) and hit/miss accounting.
-//! * [`persist`] — torch.save's stand-in: a checksummed binary file format
-//!   with optional DEFLATE compression, so caches survive restarts and can
-//!   overflow to disk.
 //! * [`blocks`] — the PagedAttention-inspired refcounted block pool the
 //!   arena allocates from; prefix *sharing* between entries falls out of
 //!   block refcounts (the paper's future-work direction, now the hot path).
+//! * [`KvRecord`] — one cached prompt: token ids, embedding, and the
+//!   *paged* per-layer K/V for exactly `token_len` positions, i.e. the
+//!   paper's `C[i] = (c_i, input_ids(c_i), {K_l, V_l})`.
+//! * [`KvStore`] — the **hot tier**: capacity-bounded by *shared-aware
+//!   physical footprint* (distinct arena blocks held by entries, counted
+//!   once however many entries share them — never logical trimmed bytes),
+//!   with pluggable eviction (LRU / LFU / FIFO / cost-aware) and hit/miss
+//!   accounting in [`CacheStats`]. An [`Eviction`] reports the blocks it
+//!   *actually* returns to the arena (the victim's uniquely-held blocks),
+//!   so callers can reason about real headroom instead of guessing.
+//! * [`tier`] — the **cold tier**: eviction's destination. Under memory
+//!   pressure a hot record is *spilled* (serialized via [`persist`],
+//!   CRC-stamped, budgeted by `CacheConfig::max_spill_bytes`, LRU within
+//!   the tier) instead of destroyed; index/radix entries survive the
+//!   spill, and a later lookup transparently reloads the record into the
+//!   arena ([`KvStore::reload_spilled`]) — counted as a `spill_hit` with
+//!   its reload latency. This is the paper's "cached KVs are serialized
+//!   to the CPU, reloaded, and supplied to generate", extended so the
+//!   cache working set can exceed arena capacity.
+//! * [`persist`] — torch.save's stand-in: a checksummed binary file format
+//!   with optional DEFLATE compression. Corrupt or truncated files are
+//!   rejected with a typed error (`Error::Corrupt`) — a bad spill file
+//!   degrades to a cache miss, never to garbage KV in the arena.
+//!
+//! Conservation across the tiers (property-tested in
+//! `rust/tests/properties.rs`): arena blocks satisfy `free +
+//! hot-referenced == capacity` at every step — spilled entries hold
+//! *zero* arena blocks, their bytes accounted instead as the tier's
+//! `cold_bytes` — and after any eviction the arena's free count grows by
+//! exactly the eviction's reported unique-block footprint.
 
 pub mod arena;
 pub mod blocks;
 pub mod persist;
 mod record;
 mod store;
+pub mod tier;
 
 pub use arena::{KvArena, KvGeometry, KvView, DEFAULT_BLOCK_TOKENS};
 pub use blocks::{BlockPool, BlockRef};
 pub use record::KvRecord;
-pub use store::{KvStore, StoreStats};
+pub use store::{CacheStats, Eviction, KvStore};
+pub use tier::SpillTier;

@@ -235,15 +235,23 @@ pub fn from_bytes(buf: &[u8], arena: &KvArena) -> Result<KvRecord> {
     })
 }
 
-/// Save to a file (atomic: write temp then rename).
-pub fn save(rec: &KvRecord, path: &Path, compress: bool) -> Result<()> {
+/// Atomically write pre-serialized record bytes (write temp, then
+/// rename) — the one home of the atomic-write discipline, shared by
+/// [`save`] and the spill tier (which serializes once to learn the size
+/// it must budget).
+pub fn save_bytes(path: &Path, bytes: &[u8]) -> Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
     let tmp = path.with_extension("tmp");
-    std::fs::write(&tmp, to_bytes(rec, compress))?;
+    std::fs::write(&tmp, bytes)?;
     std::fs::rename(&tmp, path)?;
     Ok(())
+}
+
+/// Save to a file (atomic: write temp then rename).
+pub fn save(rec: &KvRecord, path: &Path, compress: bool) -> Result<()> {
+    save_bytes(path, &to_bytes(rec, compress))
 }
 
 /// Load from a file, materializing into `arena`.
@@ -392,6 +400,29 @@ mod tests {
         for cut in [1, buf.len() / 3, buf.len() - 1] {
             assert!(from_bytes(&buf[..cut], &a).is_err(), "cut={cut}");
         }
+    }
+
+    #[test]
+    fn truncated_file_on_disk_rejected() {
+        // a spill/persist file cut mid-write (crash, full disk) must load
+        // as a typed error, never as a short-but-plausible record
+        let dir = std::env::temp_dir().join(format!(
+            "recycle_persist_trunc_{}",
+            std::process::id()
+        ));
+        let path = dir.join("t.kv");
+        let a = arena();
+        let r = rec_in(&a);
+        for compress in [false, true] {
+            save(&r, &path, compress).unwrap();
+            let full = std::fs::read(&path).unwrap();
+            std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+            match load(&path, &a) {
+                Err(Error::Corrupt(_)) => {}
+                other => panic!("truncated load not rejected: {other:?}"),
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -42,6 +42,21 @@ impl KvRecord {
         self.kv.num_blocks()
     }
 
+    /// Blocks this record is the sole holder of — the blocks an eviction
+    /// of this record *actually* returns to the arena (shared prefix
+    /// blocks and blocks pinned by in-flight views are excluded). This is
+    /// the physical eviction yield the tiered store reports.
+    pub fn unique_blocks(&self) -> usize {
+        self.kv.unique_blocks()
+    }
+
+    /// Bytes one arena block of this record's geometry occupies (the unit
+    /// of physical accounting).
+    pub fn block_bytes(&self) -> usize {
+        let g = self.kv.geometry();
+        g.bytes_per_token() * g.block_tokens
+    }
+
     /// Check payload/geometry consistency and compatibility with `cfg`.
     pub fn validate(&self, cfg: &ModelConfig) -> bool {
         self.kv.len() == self.token_len()

@@ -1,0 +1,390 @@
+//! The cold (disk) tier of the tiered KV store.
+//!
+//! Eviction from the hot (arena-resident) tier no longer destroys a
+//! record: [`SpillTier::spill`] serializes it through [`persist`]
+//! (CRC-stamped, optionally DEFLATE-compressed) into one file per entry
+//! (`<id>.kv`), and [`SpillTier::load`] materializes it back into the
+//! arena on a later lookup — the paper's "cached KVs are serialized to
+//! the CPU, reloaded, and supplied to generate", extended to disk so the
+//! cache working set can exceed arena capacity.
+//!
+//! The tier is budgeted by `CacheConfig::max_spill_bytes` over the
+//! *serialized* (on-disk) sizes and evicts LRU *within the tier* when the
+//! budget would overflow; those drops are terminal (the record is gone)
+//! and are surfaced through [`SpillTier::take_dropped`] so the owner can
+//! unindex them eagerly. Corrupt or truncated spill files surface as
+//! [`Error::Corrupt`](crate::error::Error) from `persist` — the tier
+//! never hands garbage KV to the arena; the caller drops the entry
+//! ([`SpillTier::drop_entry`]) and treats the lookup as a miss.
+//!
+//! A tier owns its directory only when it auto-created one (no
+//! `spill_dir` configured): that directory is removed on drop. A
+//! user-supplied directory is left in place, files included.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::error::{Error, Result};
+
+use super::{persist, KvArena, KvRecord};
+
+/// One spilled record's bookkeeping (the payload itself lives on disk).
+struct ColdEntry {
+    /// Serialized size on disk (what the tier budget accounts).
+    bytes: usize,
+    /// Token positions of the record — lets a reload pre-size its arena
+    /// demand without touching the file.
+    tokens: usize,
+    /// Spill-time clock tick — LRU order within the tier. A record that
+    /// is reloaded and later re-spilled gets a fresh tick.
+    spilled_at: u64,
+}
+
+/// Disk-backed cold tier: eviction destination for the hot KV store.
+pub struct SpillTier {
+    dir: PathBuf,
+    /// Remove `dir` on drop (it was auto-created under the OS temp dir).
+    owns_dir: bool,
+    /// Budget over serialized bytes; > 0 (a zero budget disables the tier
+    /// at construction in the store, so it never reaches here).
+    max_bytes: usize,
+    compress: bool,
+    entries: HashMap<u64, ColdEntry>,
+    clock: u64,
+    cold_bytes: usize,
+    /// Entries destroyed by the tier's own LRU (budget pressure), queued
+    /// for the owner to unindex.
+    dropped: Vec<u64>,
+    drops: u64,
+}
+
+impl SpillTier {
+    /// A tier over an explicit directory (created if missing; kept on
+    /// drop). Pre-existing `*.kv`/`*.tmp` files are swept at
+    /// construction: the tier's in-memory index does not persist across
+    /// restarts, so such files are unreachable garbage that would
+    /// silently escape the byte budget. A spill_dir therefore belongs to
+    /// exactly one live store — cross-restart persistence is
+    /// `persist_dir`'s job, not the spill tier's.
+    pub fn new(dir: PathBuf, max_bytes: usize, compress: bool) -> Result<Self> {
+        std::fs::create_dir_all(&dir)?;
+        if let Ok(rd) = std::fs::read_dir(&dir) {
+            for e in rd.flatten() {
+                let p = e.path();
+                if p.extension().is_some_and(|x| x == "kv" || x == "tmp") {
+                    let _ = std::fs::remove_file(&p);
+                }
+            }
+        }
+        Ok(SpillTier {
+            dir,
+            owns_dir: false,
+            max_bytes,
+            compress,
+            entries: HashMap::new(),
+            clock: 0,
+            cold_bytes: 0,
+            dropped: Vec::new(),
+            drops: 0,
+        })
+    }
+
+    /// A tier over a fresh unique directory under the OS temp dir,
+    /// removed (files included) when the tier drops.
+    pub fn at_tempdir(max_bytes: usize, compress: bool) -> Result<Self> {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "recycle_spill_{}_{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let mut t = Self::new(dir, max_bytes, compress)?;
+        t.owns_dir = true;
+        Ok(t)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Spilled entries currently resident in the tier.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Serialized bytes currently on disk.
+    pub fn cold_bytes(&self) -> usize {
+        self.cold_bytes
+    }
+
+    /// Entries the tier's own LRU has destroyed since construction.
+    pub fn drops(&self) -> u64 {
+        self.drops
+    }
+
+    pub fn contains(&self, id: u64) -> bool {
+        self.entries.contains_key(&id)
+    }
+
+    /// On-disk serialized size of entry `id` (None if not spilled).
+    pub fn bytes_of(&self, id: u64) -> Option<usize> {
+        self.entries.get(&id).map(|e| e.bytes)
+    }
+
+    /// Token positions of spilled entry `id` (None if not spilled) — the
+    /// arena demand of a reload, known without reading the file.
+    pub fn tokens_of(&self, id: u64) -> Option<usize> {
+        self.entries.get(&id).map(|e| e.tokens)
+    }
+
+    /// Drain the ids destroyed by tier-internal LRU eviction since the
+    /// last call, so the owner can unindex them eagerly.
+    pub fn take_dropped(&mut self) -> Vec<u64> {
+        std::mem::take(&mut self.dropped)
+    }
+
+    fn path_of(&self, id: u64) -> PathBuf {
+        self.dir.join(format!("{id}.kv"))
+    }
+
+    /// Destroy one cold entry (file included). True if it existed.
+    pub fn drop_entry(&mut self, id: u64) -> bool {
+        match self.entries.remove(&id) {
+            Some(e) => {
+                self.cold_bytes -= e.bytes;
+                let _ = std::fs::remove_file(self.path_of(id));
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Destroy the LRU cold entry to relieve budget pressure.
+    fn evict_lru(&mut self) -> bool {
+        let Some(victim) = self
+            .entries
+            .iter()
+            .min_by_key(|(id, e)| (e.spilled_at, **id))
+            .map(|(id, _)| *id)
+        else {
+            return false;
+        };
+        self.drop_entry(victim);
+        self.dropped.push(victim);
+        self.drops += 1;
+        true
+    }
+
+    /// Move a record into the cold tier: serialize (CRC-stamped), make
+    /// room by dropping LRU cold entries, and write atomically (temp +
+    /// rename). Returns the serialized size. Fails — leaving the tier
+    /// unchanged except for LRU drops already applied — when the record
+    /// alone exceeds the tier budget or the write fails; the caller then
+    /// falls back to destroying the record (the pre-tier behavior).
+    pub fn spill(&mut self, id: u64, rec: &KvRecord) -> Result<usize> {
+        let buf = persist::to_bytes(rec, self.compress);
+        if self.max_bytes > 0 && buf.len() > self.max_bytes {
+            return Err(Error::Rejected(format!(
+                "record of {} serialized bytes exceeds spill budget {}",
+                buf.len(),
+                self.max_bytes
+            )));
+        }
+        while self.max_bytes > 0 && self.cold_bytes + buf.len() > self.max_bytes {
+            if !self.evict_lru() {
+                break;
+            }
+        }
+        persist::save_bytes(&self.path_of(id), &buf)?;
+        // Re-spilling an id replaces its file; retire the old accounting.
+        if let Some(old) = self.entries.remove(&id) {
+            self.cold_bytes -= old.bytes;
+        }
+        self.clock += 1;
+        self.entries.insert(
+            id,
+            ColdEntry {
+                bytes: buf.len(),
+                tokens: rec.token_len(),
+                spilled_at: self.clock,
+            },
+        );
+        self.cold_bytes += buf.len();
+        Ok(buf.len())
+    }
+
+    /// The serialized bytes of spilled entry `id`, read once from disk
+    /// (validation happens at decode time, in `persist::from_bytes`).
+    /// The entry is untouched — callers retry decoding under arena
+    /// pressure without re-reading the file.
+    pub fn read(&self, id: u64) -> Result<Vec<u8>> {
+        if !self.entries.contains_key(&id) {
+            return Err(Error::Corrupt(format!("id {id} not in the spill tier")));
+        }
+        Ok(std::fs::read(self.path_of(id))?)
+    }
+
+    /// Reload a spilled record into `arena`, consuming the cold entry
+    /// (file deleted) on success. On failure the entry is left in place —
+    /// the caller decides: an `ArenaExhausted` is retryable after
+    /// shedding hot records; a `Corrupt`/IO error means the entry is dead
+    /// and should be [`drop_entry`](Self::drop_entry)-ed.
+    pub fn load(&mut self, id: u64, arena: &KvArena) -> Result<KvRecord> {
+        let rec = persist::from_bytes(&self.read(id)?, arena)?;
+        self.drop_entry(id);
+        Ok(rec)
+    }
+}
+
+impl Drop for SpillTier {
+    fn drop(&mut self) {
+        if self.owns_dir {
+            let _ = std::fs::remove_dir_all(&self.dir);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::kvcache::KvView;
+
+    fn arena() -> KvArena {
+        KvArena::new(&ModelConfig::nano(), 16, 256)
+    }
+
+    fn rec_in(a: &KvArena, len: usize, tag: u32) -> KvRecord {
+        let g = a.geometry();
+        let data: Vec<f32> = (0..g.elems_per_token() * len)
+            .map(|i| ((i as u32).wrapping_mul(tag) % 101) as f32)
+            .collect();
+        KvRecord {
+            text: format!("t{tag}"),
+            tokens: (0..len as u32).map(|t| t + tag).collect(),
+            embedding: vec![1.0, tag as f32],
+            kv: KvView::from_contiguous(a, &data, len).unwrap(),
+        }
+    }
+
+    #[test]
+    fn spill_load_roundtrip_consumes_entry() {
+        let a = arena();
+        let mut t = SpillTier::at_tempdir(1 << 20, false).unwrap();
+        let r = rec_in(&a, 10, 3);
+        let before = r.kv.to_contiguous();
+        let n = t.spill(7, &r).unwrap();
+        assert!(t.contains(7));
+        assert_eq!(t.cold_bytes(), n);
+        assert_eq!(t.len(), 1);
+        drop(r); // blocks released; reload must re-materialize
+
+        let back = t.load(7, &a).unwrap();
+        assert_eq!(back.kv.to_contiguous(), before);
+        assert!(!t.contains(7), "load consumes the cold entry");
+        assert_eq!(t.cold_bytes(), 0);
+        assert!(!t.dir().join("7.kv").exists(), "file deleted on load");
+    }
+
+    #[test]
+    fn budget_evicts_lru_within_tier() {
+        let a = arena();
+        let r = rec_in(&a, 8, 1);
+        let one = persist::to_bytes(&r, false).len();
+        // room for two entries, not three
+        let mut t = SpillTier::at_tempdir(2 * one + one / 2, false).unwrap();
+        t.spill(1, &rec_in(&a, 8, 1)).unwrap();
+        t.spill(2, &rec_in(&a, 8, 2)).unwrap();
+        t.spill(3, &rec_in(&a, 8, 3)).unwrap(); // drops 1 (LRU)
+        assert!(!t.contains(1) && t.contains(2) && t.contains(3));
+        assert_eq!(t.take_dropped(), vec![1]);
+        assert_eq!(t.drops(), 1);
+        assert!(t.cold_bytes() <= 2 * one + one / 2);
+    }
+
+    #[test]
+    fn oversized_record_is_rejected_not_stored() {
+        let a = arena();
+        let mut t = SpillTier::at_tempdir(16, false).unwrap();
+        match t.spill(1, &rec_in(&a, 8, 1)) {
+            Err(Error::Rejected(_)) => {}
+            other => panic!("expected Rejected, got {other:?}"),
+        }
+        assert_eq!(t.len(), 0);
+        assert_eq!(t.cold_bytes(), 0);
+    }
+
+    #[test]
+    fn corrupt_file_is_a_typed_error_and_entry_survives_until_dropped() {
+        let a = arena();
+        let mut t = SpillTier::at_tempdir(1 << 20, false).unwrap();
+        t.spill(5, &rec_in(&a, 6, 9)).unwrap();
+        // bit-flip the file on disk
+        let path = t.dir().join("5.kv");
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x20;
+        std::fs::write(&path, &bytes).unwrap();
+        match t.load(5, &a) {
+            Err(Error::Corrupt(_)) => {}
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+        assert!(t.contains(5), "failed load leaves the entry for the caller");
+        assert!(t.drop_entry(5));
+        assert!(!path.exists());
+    }
+
+    #[test]
+    fn tempdir_tier_cleans_up_on_drop() {
+        let a = arena();
+        let dir;
+        {
+            let mut t = SpillTier::at_tempdir(1 << 20, true).unwrap();
+            t.spill(1, &rec_in(&a, 4, 2)).unwrap();
+            dir = t.dir().to_path_buf();
+            assert!(dir.exists());
+        }
+        assert!(!dir.exists(), "owned tempdir must be removed on drop");
+    }
+
+    #[test]
+    fn stale_spill_files_swept_at_construction() {
+        // files from a dead process are unreachable (the index does not
+        // persist) and must not silently escape the byte budget
+        let dir = std::env::temp_dir().join(format!(
+            "recycle_spill_sweep_{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("999.kv"), b"stale").unwrap();
+        std::fs::write(dir.join("7.tmp"), b"partial write").unwrap();
+        std::fs::write(dir.join("keep.txt"), b"other").unwrap();
+        let t = SpillTier::new(dir.clone(), 1 << 20, false).unwrap();
+        assert!(!dir.join("999.kv").exists());
+        assert!(!dir.join("7.tmp").exists());
+        assert!(dir.join("keep.txt").exists(), "non-tier files untouched");
+        assert_eq!(t.cold_bytes(), 0);
+        drop(t);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn explicit_dir_is_kept_on_drop() {
+        let a = arena();
+        let dir = std::env::temp_dir().join(format!(
+            "recycle_spill_keep_{}",
+            std::process::id()
+        ));
+        {
+            let mut t = SpillTier::new(dir.clone(), 1 << 20, false).unwrap();
+            t.spill(1, &rec_in(&a, 4, 2)).unwrap();
+        }
+        assert!(dir.exists(), "caller-owned dir survives the tier");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -26,7 +26,7 @@ use crate::config::{CacheConfig, ModelConfig};
 use crate::engine::{Engine, ForwardModel, Generated};
 use crate::error::Result;
 use crate::index::{cosine, Embedder, FlatIndex, NgramEmbedder};
-use crate::kvcache::{KvArena, KvRecord, KvStore, KvView};
+use crate::kvcache::{Eviction, KvArena, KvRecord, KvStore, KvView};
 use crate::metrics::RequestRow;
 use crate::prefix::{reuse_depth, RadixTree};
 use crate::tokenizer::Tokenizer;
@@ -97,15 +97,12 @@ pub struct Recycler<M: ForwardModel> {
     store: KvStore,
     index: FlatIndex,
     radix: RadixTree,
-    /// id -> tokens side table for radix eviction.
+    /// id -> tokens side table: the prefix test reads it without touching
+    /// the record (or disk — a spilled candidate is only reloaded AFTER
+    /// its tokens pass the test), and unindexing a destroyed record needs
+    /// it for the radix removal. Entries survive a spill, like the index
+    /// and radix entries they back.
     tokens_of: HashMap<u64, Vec<u32>>,
-    /// Memo of the last shed attempt that stalled on a zero-yield eviction:
-    /// `(free_blocks, store_len)` at stall time. While that state is
-    /// unchanged, further shedding is futile (the remaining records'
-    /// blocks are pinned elsewhere) and skipped — without the latch, the
-    /// scheduler's per-tick headroom checks would destroy one pinned-share
-    /// record per tick for zero gained headroom.
-    shed_stall: Option<(usize, usize)>,
     pub policy: RecyclePolicy,
     /// Insert served prompts into the cache (online population).
     pub populate_cache: bool,
@@ -128,7 +125,6 @@ impl<M: ForwardModel> Recycler<M> {
             index: FlatIndex::new(dim),
             radix: RadixTree::new(),
             tokens_of: HashMap::new(),
-            shed_stall: None,
             policy,
             populate_cache: true,
         }
@@ -199,25 +195,61 @@ impl<M: ForwardModel> Recycler<M> {
         Ok(n)
     }
 
-    /// Evict cache entries until the arena has headroom for one worst-case
-    /// request (a full-context sequence). Cached records pin blocks; under
-    /// sustained population pressure the cache must shrink rather than
-    /// starve live requests into `ArenaExhausted` failures. Blocks shared
-    /// with other records are only truly freed when the last holder goes,
-    /// so this loops (bounded by the store size).
-    /// Evict one record by policy and drop it from index/radix/side
-    /// tables; its blocks return to the pool before this returns (unless
-    /// pinned by other holders). False when the store is empty.
+    /// Drop one id from index/radix/side tables (the record itself is
+    /// gone: destroyed by an eviction without a spill tier, dropped by
+    /// the tier's own LRU, or its spill file turned out corrupt).
+    fn unindex(&mut self, id: u64) {
+        self.index.remove(id);
+        if let Some(tokens) = self.tokens_of.remove(&id) {
+            self.radix.remove(&tokens);
+        }
+    }
+
+    /// Unindex records the cold tier's own LRU destroyed (spill-budget
+    /// pressure) — eager, so index/radix stay in lockstep with what a
+    /// lookup can still resolve (hot + spilled).
+    fn sync_cold_drops(&mut self) {
+        for id in self.store.take_cold_dropped() {
+            self.unindex(id);
+        }
+    }
+
+    /// Apply one store eviction to the side structures: a *spilled*
+    /// victim keeps its index/radix entries (its id still resolves
+    /// through the cold tier); a *dropped* one is unindexed.
+    fn apply_eviction(&mut self, ev: Eviction) {
+        if let Eviction::Dropped { id, .. } = ev {
+            self.unindex(id);
+        }
+    }
+
+    /// Evict one record by policy — into the cold tier when spilling is
+    /// configured, destroying it otherwise — and keep the side structures
+    /// consistent. False when the hot store is empty.
     fn evict_and_unindex(&mut self) -> bool {
-        let Some((id, rec)) = self.store.evict_one() else {
+        let Some(ev) = self.store.evict_one() else {
             return false;
         };
-        self.index.remove(id);
-        self.radix.remove(&rec.tokens);
-        self.tokens_of.remove(&id);
+        self.apply_eviction(ev);
+        self.sync_cold_drops();
         true
     }
 
+    /// Evict cache entries until the arena has headroom for one worst-case
+    /// request (a full-context sequence). Cached records pin blocks; under
+    /// sustained population pressure the cache must shrink rather than
+    /// starve live requests into `ArenaExhausted` failures.
+    ///
+    /// The loop is gated on the store's *reclaimable* footprint — blocks
+    /// whose every live reference is a cache entry's. When that hits
+    /// zero, no amount of shedding frees anything (the remaining blocks
+    /// are pinned by in-flight streams or attached views), so the pass
+    /// stops immediately instead of destroying one futile victim per
+    /// scheduler tick. Physical accounting makes that check exact, which
+    /// is why the old zero-yield stall memo is gone. Individual
+    /// evictions may still free nothing *yet* (a session chain's shared
+    /// blocks settle only when the last holder goes) — that is progress,
+    /// not a stall, and the loop keeps going while reclaim is possible.
     fn ensure_arena_headroom(&mut self) {
         // Cap the target at half the arena: a deliberately tiny arena
         // (capacity below one full-context sequence) must not drain the
@@ -226,43 +258,27 @@ impl<M: ForwardModel> Recycler<M> {
         let need = arena
             .blocks_for(self.engine.config().max_seq)
             .min(arena.capacity_blocks() / 2);
-        if self.engine.arena().free_blocks() >= need {
-            self.shed_stall = None;
-            return;
-        }
-        // Shedding records whose blocks are pinned elsewhere (in-flight
-        // decode streams, records sharing the prefix) frees nothing;
-        // without the stall latch the scheduler's per-tick headroom
-        // retries would destroy one such record per tick until the whole
-        // cache — and its hit rate — was gone.
-        let state = (self.engine.arena().free_blocks(), self.store.len());
-        if self.shed_stall == Some(state) {
-            return; // nothing changed since shedding last proved futile
-        }
         while self.engine.arena().free_blocks() < need {
-            let before = self.engine.arena().free_blocks();
+            if self.store.reclaimable_blocks() == 0 {
+                break; // shedding can free nothing right now
+            }
             if !self.evict_and_unindex() {
                 break; // store empty
             }
-            if self.engine.arena().free_blocks() == before {
-                // zero-yield eviction: remember the state so retries skip
-                self.shed_stall =
-                    Some((self.engine.arena().free_blocks(), self.store.len()));
-                return;
-            }
         }
-        self.shed_stall = None;
     }
 
-    /// Last-resort shedding when a live request actually failed allocation:
-    /// drain cache entries unconditionally (no zero-yield break — evicting
-    /// a session chain frees nothing until its newest record goes) until
-    /// the arena can hold `tokens` more positions or the store is empty.
-    /// Serving the request outranks cache retention.
+    /// Last-resort shedding when a live request actually failed
+    /// allocation: evict (spill) cache entries until the arena can hold
+    /// `tokens` more positions, the store is empty, or eviction can no
+    /// longer free anything. Serving the request outranks cache
+    /// retention.
     pub fn shed_for_tokens(&mut self, tokens: usize) {
         let need = self.engine.arena().blocks_for(tokens);
-        while self.engine.arena().free_blocks() < need && self.evict_and_unindex() {}
-        self.shed_stall = None;
+        while self.engine.arena().free_blocks() < need
+            && self.store.reclaimable_blocks() > 0
+            && self.evict_and_unindex()
+        {}
     }
 
     /// Prefill a prompt and insert its KV record into the cache.
@@ -282,15 +298,49 @@ impl<M: ForwardModel> Recycler<M> {
         let emb = self.embedder.embed(text);
         let rec = KvRecord::from_view(text, ids.clone(), emb.clone(), kv);
         let (id, evicted) = self.store.insert(rec);
-        for (eid, erec) in evicted {
-            self.index.remove(eid);
-            self.radix.remove(&erec.tokens);
-            self.tokens_of.remove(&eid);
+        for ev in evicted {
+            self.apply_eviction(ev);
         }
+        self.sync_cold_drops();
         self.index.add(id, &emb);
         self.radix.insert(&ids, id);
         self.tokens_of.insert(id, ids);
         id
+    }
+
+    /// Resolve a candidate id to its record: a hot hit outright, or a
+    /// transparent reload from the cold tier (shedding hot entries for
+    /// arena room) — the tiered store's promise that a spilled record
+    /// still serves its prefix hit. Counts the store hit (recency +
+    /// frequency) on success; `None` means the record is gone from both
+    /// tiers (or its spill file was corrupt / the arena cannot hold it) —
+    /// the caller records the miss.
+    fn fetch_hit(&mut self, id: u64) -> Option<Arc<KvRecord>> {
+        if self.store.contains(id) {
+            return self.store.hit(id);
+        }
+        if self.store.is_spilled(id) {
+            let arena = self.engine.arena().clone();
+            let (rec, evicted) = self.store.reload_spilled(id, &arena);
+            for ev in evicted {
+                self.apply_eviction(ev);
+            }
+            self.sync_cold_drops();
+            if rec.is_some() {
+                return self.store.hit(id); // hot now: count the hit
+            }
+            if !self.store.is_spilled(id) {
+                // the spill file was corrupt (typed error recorded in
+                // CacheStats::spill_load_errors) — the entry is dead
+                self.unindex(id);
+            }
+            // else: arena pressure won; keep the cold entry for a
+            // less-pressured retry and miss for now
+            return None;
+        }
+        // stale index entry: the cold tier's LRU destroyed the record
+        self.unindex(id);
+        None
     }
 
     /// The retrieval + prefix test. Returns (record, reuse_depth,
@@ -307,17 +357,25 @@ impl<M: ForwardModel> Recycler<M> {
                     self.store.note_miss();
                     return (None, sim as f64);
                 }
-                let Some(rec) = self.store.peek(cand) else {
+                // Prefix test against the token side table: rejecting a
+                // candidate never touches the record — in particular a
+                // SPILLED candidate is only reloaded from disk after its
+                // tokens pass the full-prefix test.
+                let (r, full) = match self.tokens_of.get(&cand) {
+                    Some(cand_tokens) => reuse_depth(cand_tokens, ids),
+                    None => (0, false), // stale index entry: a miss
+                };
+                if !full {
                     self.store.note_miss();
                     return (None, sim as f64);
-                };
-                let (r, full) = reuse_depth(&rec.tokens, ids);
-                if full {
-                    let rec = self.store.hit(cand).expect("peeked entry exists");
-                    (Some((rec, r)), sim as f64)
-                } else {
-                    self.store.note_miss();
-                    (None, sim as f64)
+                }
+                match self.fetch_hit(cand) {
+                    Some(rec) => (Some((rec, r)), sim as f64),
+                    None => {
+                        // gone from both tiers (or unreloadable right now)
+                        self.store.note_miss();
+                        (None, sim as f64)
+                    }
                 }
             }
             RecyclePolicy::Radix => {
@@ -325,17 +383,17 @@ impl<M: ForwardModel> Recycler<M> {
                     self.store.note_miss();
                     return (None, f64::NAN);
                 };
-                // A stale radix entry (key already evicted from the store)
-                // is a miss like any other — `store.hit` on a dead id
-                // records exactly one miss itself, so no extra `note_miss`
-                // here (miss accounting regression-tested below).
-                let Some(rec) = self.store.hit(key) else {
+                // A stale radix entry (record destroyed) is a miss like
+                // any other — fetch_hit unindexes it and the single
+                // note_miss below keeps miss accounting exact
+                // (regression-tested below). No
+                // `debug_assert_eq!(depth, rec.token_len())`: it only
+                // holds while radix and store are in perfect lockstep,
+                // which a stale entry violates by definition.
+                let Some(rec) = self.fetch_hit(key) else {
+                    self.store.note_miss();
                     return (None, f64::NAN);
                 };
-                // No `debug_assert_eq!(depth, rec.token_len())`: it only
-                // holds while radix and store are in perfect lockstep,
-                // which a stale entry violates by definition — asserting
-                // would turn a recoverable miss into a debug-build crash.
                 let sim = cosine(&rec.embedding, emb) as f64;
                 (Some((rec, depth)), sim)
             }
@@ -531,18 +589,25 @@ mod tests {
         ]))
     }
 
-    fn recycler(policy: RecyclePolicy) -> Recycler<MockModel> {
+    fn recycler_with(policy: RecyclePolicy, cache: CacheConfig) -> Recycler<MockModel> {
         let engine = Engine::new(MockModel::new(ModelConfig::nano()));
         Recycler::new(
             engine,
             toy_tokenizer(),
             Box::new(NgramEmbedder::new(64)),
+            cache,
+            policy,
+        )
+    }
+
+    fn recycler(policy: RecyclePolicy) -> Recycler<MockModel> {
+        recycler_with(
+            policy,
             CacheConfig {
                 max_entries: 8,
                 eviction: EvictionPolicy::Lru,
                 ..Default::default()
             },
-            policy,
         )
     }
 
@@ -804,6 +869,95 @@ mod tests {
         assert_eq!(r.index.len(), r.store.len());
         assert_eq!(r.radix.len(), r.store.len());
         assert_eq!(r.tokens_of.len(), r.store.len());
+    }
+
+    #[test]
+    fn spilled_record_hits_transparently_with_reload() {
+        // max_entries 1 + a spill tier: warming a second prompt spills the
+        // first to disk; a lookup of the spilled prompt must still be a
+        // prefix hit (transparent reload), counted in spill_hits.
+        let mut r = recycler_with(
+            RecyclePolicy::Strict,
+            CacheConfig {
+                max_entries: 1,
+                max_spill_bytes: 64 << 20,
+                ..Default::default()
+            },
+        );
+        r.populate_cache = false;
+        r.warm(&[CACHE]).unwrap();
+        r.warm(&[OTHER]).unwrap(); // CACHE -> cold tier
+        assert_eq!(r.store().len(), 1);
+        assert_eq!(r.store().spilled_len(), 1);
+        // index/radix entries survive the spill
+        assert_eq!(r.index.len(), r.store().total_len());
+        assert_eq!(r.radix.len(), r.store().total_len());
+
+        let out = r.generate(TEST, 4).unwrap();
+        assert!(out.cache_hit, "spilled record must still serve a hit");
+        let cache_len = r.tokenizer().encode(CACHE).len();
+        assert_eq!(out.reuse_depth, cache_len);
+        let s = r.store().stats();
+        assert_eq!(s.spill_hits, 1);
+        assert!(s.spills >= 2, "the reload re-spilled the other entry");
+        assert!(s.spill_load_errors == 0);
+    }
+
+    #[test]
+    fn radix_hit_reloads_spilled_record() {
+        let mut r = recycler_with(
+            RecyclePolicy::Radix,
+            CacheConfig {
+                max_entries: 1,
+                max_spill_bytes: 64 << 20,
+                ..Default::default()
+            },
+        );
+        r.populate_cache = false;
+        r.warm(&[CACHE]).unwrap();
+        r.warm(&[OTHER]).unwrap(); // CACHE -> cold tier
+        assert!(r.store().spilled_len() == 1);
+        let out = r.generate(TEST, 4).unwrap();
+        assert!(out.cache_hit, "radix entry survives the spill");
+        assert_eq!(out.reuse_depth, r.tokenizer().encode(CACHE).len());
+        assert_eq!(r.store().stats().spill_hits, 1);
+    }
+
+    #[test]
+    fn headroom_pass_stops_when_shedding_cannot_free() {
+        // Regression for the deleted zero-yield stall memo: when every
+        // cache block is pinned by an in-flight view, the headroom pass
+        // must evict NOTHING (reclaimable == 0), and must resume evicting
+        // the moment the pin drops — no latch state involved.
+        let cfg = ModelConfig::nano();
+        let arena = crate::kvcache::KvArena::new(&cfg, 16, 32);
+        let engine = Engine::with_arena(MockModel::new(cfg), arena);
+        let mut r = Recycler::new(
+            engine,
+            toy_tokenizer(),
+            Box::new(NgramEmbedder::new(64)),
+            CacheConfig {
+                max_entries: 0,
+                ..Default::default()
+            },
+            RecyclePolicy::Strict,
+        );
+        let id = r
+            .insert_prompt("some cached prompt made of quite a few words")
+            .unwrap();
+        let pinned = r.store().peek(id).unwrap().attach();
+        // burn free blocks below the headroom target (min(16, 16) = 16)
+        let mut scratch = r.arena().new_view();
+        scratch.reserve(14 * 16).unwrap();
+        assert!(r.arena().free_blocks() < 16, "test needs arena pressure");
+
+        r.ensure_arena_headroom();
+        assert_eq!(r.cache_len(), 1, "futile eviction must not run");
+
+        drop(pinned); // pin released: shedding is productive again
+        r.ensure_arena_headroom();
+        assert_eq!(r.cache_len(), 0, "productive eviction resumes");
+        drop(scratch);
     }
 
     #[test]

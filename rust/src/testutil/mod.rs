@@ -12,3 +12,38 @@ pub mod prop;
 pub mod trace;
 
 pub use mock::MockModel;
+
+/// RAII temporary directory for tests (the `tempfile` crate is not in the
+/// offline vendor set): a fresh unique directory under the OS temp dir,
+/// removed — files included — when the guard drops. Used as the spill
+/// directory of tiered-store tests so CI leaves no stray spill files.
+pub struct TempDir(std::path::PathBuf);
+
+impl TempDir {
+    pub fn new(tag: &str) -> Self {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "recycle_{tag}_{}_{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&dir).expect("create test tempdir");
+        TempDir(dir)
+    }
+
+    pub fn path(&self) -> &std::path::Path {
+        &self.0
+    }
+
+    /// The path as an owned string (what `CacheConfig::spill_dir` takes).
+    pub fn path_string(&self) -> String {
+        self.0.to_string_lossy().into_owned()
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}

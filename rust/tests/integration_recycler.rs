@@ -11,7 +11,7 @@ use recycle_serve::engine::Engine;
 use recycle_serve::index::NgramEmbedder;
 use recycle_serve::kvcache::persist;
 use recycle_serve::recycler::{RecyclePolicy, Recycler};
-use recycle_serve::testutil::MockModel;
+use recycle_serve::testutil::{MockModel, TempDir};
 use recycle_serve::tokenizer::Tokenizer;
 
 fn mk_recycler(policy: RecyclePolicy, cache: CacheConfig) -> Recycler<MockModel> {
@@ -77,6 +77,98 @@ fn corrupted_cache_file_fails_loudly() {
     std::fs::write(&path, &bytes).unwrap();
     assert!(persist::load(&path, r.arena()).is_err());
     std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn spilled_record_serves_prefix_hit_token_identical_to_unevicted() {
+    // Acceptance: a lookup whose record was spilled under pressure still
+    // returns a prefix hit, with output tokens identical to the
+    // never-evicted run, and spill_hits > 0 in CacheStats.
+    let cache_text = "what is the capital of france?";
+    let other_text = "how do rockets launch into orbit today?";
+    let test_text = "what is the capital of france? also name a nearby town.";
+
+    // arm 1: the record never leaves the hot tier
+    let mut a = mk_recycler(RecyclePolicy::Strict, CacheConfig::default());
+    a.populate_cache = false;
+    a.warm(&[cache_text]).unwrap();
+    let want = a.generate(test_text, 6).unwrap();
+    assert!(want.cache_hit, "reference arm must hit");
+
+    // arm 2: max_entries 1 forces the record through the cold tier
+    let tmp = TempDir::new("it_spill");
+    let mut b = mk_recycler(
+        RecyclePolicy::Strict,
+        CacheConfig {
+            max_entries: 1,
+            max_spill_bytes: 64 << 20,
+            spill_dir: Some(tmp.path_string()),
+            ..Default::default()
+        },
+    );
+    b.populate_cache = false;
+    b.warm(&[cache_text]).unwrap();
+    b.warm(&[other_text]).unwrap(); // evicts cache_text -> spilled to disk
+    assert_eq!(b.store().len(), 1);
+    assert_eq!(b.store().spilled_len(), 1, "eviction must spill, not drop");
+    assert!(b.store().cold_bytes() > 0);
+
+    let got = b.generate(test_text, 6).unwrap();
+    assert!(got.cache_hit, "spilled record must still serve a prefix hit");
+    assert_eq!(got.reuse_depth, want.reuse_depth);
+    assert_eq!(got.ids, want.ids, "token-identical to the never-evicted run");
+    assert_eq!(got.text, want.text);
+    let s = b.store().stats();
+    assert!(s.spill_hits > 0, "reload must be counted: {s:?}");
+    assert!(s.spills >= 1);
+    assert_eq!(s.spill_load_errors, 0);
+}
+
+#[test]
+fn corrupt_spill_file_is_a_typed_miss_not_garbage() {
+    // A bit-flipped spill file must surface as a recorded load error and a
+    // clean cache miss (baseline-identical output) — never as garbage KV
+    // injected into the arena.
+    let cache_text = "what is the capital of france?";
+    let other_text = "how do rockets launch into orbit today?";
+    let test_text = "what is the capital of france? also name a nearby town.";
+
+    let tmp = TempDir::new("it_corrupt_spill");
+    let mut r = mk_recycler(
+        RecyclePolicy::Strict,
+        CacheConfig {
+            max_entries: 1,
+            max_spill_bytes: 64 << 20,
+            spill_dir: Some(tmp.path_string()),
+            ..Default::default()
+        },
+    );
+    r.populate_cache = false;
+    r.warm(&[cache_text]).unwrap();
+    r.warm(&[other_text]).unwrap(); // cache_text -> spilled
+    assert_eq!(r.store().spilled_len(), 1);
+
+    // flip one bit of the (single) spill file on disk
+    let file = std::fs::read_dir(tmp.path())
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .find(|p| p.extension().is_some_and(|x| x == "kv"))
+        .expect("one spill file on disk");
+    let mut bytes = std::fs::read(&file).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x08;
+    std::fs::write(&file, &bytes).unwrap();
+
+    let mut base = mk_recycler(RecyclePolicy::Off, CacheConfig::default());
+    let want = base.generate(test_text, 5).unwrap();
+    let got = r.generate(test_text, 5).unwrap();
+    assert!(!got.cache_hit, "corrupt reload must degrade to a miss");
+    assert_eq!(got.ids, want.ids, "miss path serves baseline tokens");
+    let s = r.store().stats();
+    assert_eq!(s.spill_load_errors, 1, "typed load error recorded: {s:?}");
+    assert_eq!(s.spill_hits, 0);
+    assert_eq!(r.store().spilled_len(), 0, "dead cold entry dropped");
 }
 
 #[test]

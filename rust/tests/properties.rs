@@ -11,12 +11,12 @@ use recycle_serve::coordinator::{admission_prompt, SchedEvent, SessionManager};
 use recycle_serve::engine::{plan_chunks, DecodeStream, Engine};
 use recycle_serve::testutil::trace::{run_script, shrink_script, Arrival, Script, TraceRun};
 use recycle_serve::index::{FlatIndex, NgramEmbedder};
-use recycle_serve::kvcache::{persist, BlockPool, KvArena, KvRecord, KvStore, KvView};
+use recycle_serve::kvcache::{persist, BlockPool, Eviction, KvArena, KvRecord, KvStore, KvView};
 use recycle_serve::prefix::{common_prefix_len, reuse_depth, RadixTree};
 use recycle_serve::prop_assert;
 use recycle_serve::recycler::{Admission, RecyclePolicy, Recycler};
 use recycle_serve::testutil::prop::{check, text, tokens};
-use recycle_serve::testutil::MockModel;
+use recycle_serve::testutil::{MockModel, TempDir};
 use recycle_serve::tokenizer::{pretokenize, Tokenizer};
 use recycle_serve::util::json;
 use recycle_serve::util::rng::Rng;
@@ -222,8 +222,9 @@ fn prop_store_capacity_and_accounting_invariants() {
             match rng.below(3) {
                 0 => {
                     let (id, evicted) = store.insert(rec_of(&arena, rng.range(1, 30), step));
-                    for (eid, _) in &evicted {
-                        live.retain(|x| x != eid);
+                    for ev in &evicted {
+                        let eid = ev.id();
+                        live.retain(|x| *x != eid);
                     }
                     live.push(id);
                 }
@@ -245,6 +246,17 @@ fn prop_store_capacity_and_accounting_invariants() {
             prop_assert!(store.len() == live.len(), "live set diverged");
             let expect: usize = store.iter().map(|(_, r)| r.kv_bytes()).sum();
             prop_assert!(store.live_bytes() == expect, "byte accounting");
+            // physical accounting: distinct hot blocks, counted once
+            let mut distinct: Vec<usize> =
+                store.iter().flat_map(|(_, r)| r.kv.block_ids()).collect();
+            distinct.sort();
+            distinct.dedup();
+            prop_assert!(
+                store.physical_blocks() == distinct.len(),
+                "physical blocks {} != distinct {}",
+                store.physical_blocks(),
+                distinct.len()
+            );
         }
         Ok(())
     });
@@ -448,6 +460,226 @@ fn prop_arena_accounting_under_hit_miss_evict_continue() {
             assert_arena_conserved(&arena, &format!("step {step}"))?;
         }
         // drain everything: all blocks must return to the pool
+        drop(store);
+        inflight.clear();
+        prop_assert!(
+            arena.free_blocks() == arena.capacity_blocks(),
+            "leak: {} of {} blocks free after drain",
+            arena.free_blocks(),
+            arena.capacity_blocks()
+        );
+        Ok(())
+    });
+}
+
+/// The set of `<id>.kv` files in a spill dir with their sizes.
+fn spill_files(dir: &std::path::Path) -> Vec<(u64, usize)> {
+    let mut out = Vec::new();
+    if let Ok(rd) = std::fs::read_dir(dir) {
+        for e in rd.flatten() {
+            let p = e.path();
+            if p.extension().is_some_and(|x| x == "kv") {
+                if let Some(id) = p
+                    .file_stem()
+                    .and_then(|s| s.to_str())
+                    .and_then(|s| s.parse::<u64>().ok())
+                {
+                    let bytes = e.metadata().map(|m| m.len() as usize).unwrap_or(0);
+                    out.push((id, bytes));
+                }
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+#[test]
+fn prop_tiered_store_three_state_conservation_and_eviction_yield() {
+    // THE tiered-store conservation property, over random interleavings of
+    // miss-admit / hit-extend / session-continue / evict (spill) / reload /
+    // remove / request-completion events:
+    //
+    //  * arena blocks: free + hot-referenced == capacity at every step —
+    //    a spilled record holds ZERO arena blocks; its payload is
+    //    conserved on disk instead, as the tier's cold_bytes (the
+    //    three-state "free + hot + spilled" invariant, with the cold
+    //    state measured in serialized bytes);
+    //  * the on-disk file set is exactly the spilled id set and its sizes
+    //    sum to cold_bytes;
+    //  * store physical accounting == distinct hot block ids;
+    //  * every eviction's reported freed_blocks equals the arena's actual
+    //    free-count delta once the eviction settles (the acceptance
+    //    invariant for shared-aware physical accounting).
+    let cfg = ModelConfig::nano();
+    check("tiered store conservation", 40, |rng| {
+        let tmp = TempDir::new("tier_prop");
+        let arena = KvArena::new(&cfg, 8, 256);
+        let small_tier = rng.chance(0.3); // sometimes force tier-LRU drops
+        let mut store = KvStore::new(CacheConfig {
+            max_entries: rng.range(1, 6),
+            max_bytes: 0,
+            eviction: *rng.choice(&EvictionPolicy::ALL),
+            compress: rng.chance(0.5),
+            max_spill_bytes: if small_tier { 200_000 } else { 64 << 20 },
+            spill_dir: Some(tmp.path_string()),
+            ..Default::default()
+        });
+        let mut cold: std::collections::HashSet<u64> = std::collections::HashSet::new();
+        let mut inflight: Vec<KvView> = Vec::new();
+        fn apply(ev: &Eviction, cold: &mut std::collections::HashSet<u64>) {
+            if ev.is_spilled() {
+                cold.insert(ev.id());
+            }
+        }
+        for step in 0..50 {
+            match rng.below(6) {
+                // miss: admit a fresh record
+                0 => {
+                    let len = rng.range(1, 30);
+                    let g = arena.geometry();
+                    let data = vec![0.5f32; g.elems_per_token() * len];
+                    if let Ok(view) = KvView::from_contiguous(&arena, &data, len) {
+                        let tokens: Vec<u32> = (0..len as u32).collect();
+                        let rec = KvRecord::from_view(
+                            &format!("p{step}"),
+                            tokens,
+                            vec![1.0],
+                            &view,
+                        );
+                        let (_, evicted) = store.insert(rec);
+                        for ev in &evicted {
+                            apply(ev, &mut cold);
+                        }
+                    }
+                }
+                // hit: attach a hot record, extend it like decode does
+                1 => {
+                    let ids = store.ids();
+                    if !ids.is_empty() {
+                        let id = *rng.choice(&ids);
+                        let rec = store.hit(id).expect("hot entry");
+                        let mut v = rec.attach();
+                        drop(rec);
+                        let extra = rng.range(1, 10);
+                        for pos in v.len()..v.len() + extra {
+                            if v.row_mut(0, 0, 0, pos).is_err() {
+                                break; // arena pressure: stop extending
+                            }
+                            v.commit(pos + 1);
+                        }
+                        if rng.chance(0.6) {
+                            inflight.push(v);
+                        }
+                    }
+                }
+                // session-continue: attach + extend + admit the extension
+                2 => {
+                    let ids = store.ids();
+                    if !ids.is_empty() {
+                        let id = *rng.choice(&ids);
+                        let rec = store.hit(id).expect("hot entry");
+                        let mut v = rec.attach();
+                        drop(rec);
+                        let target = v.len() + rng.range(1, 8);
+                        let mut ok = true;
+                        for pos in v.len()..target {
+                            if v.row_mut(0, 0, 0, pos).is_err() {
+                                ok = false;
+                                break;
+                            }
+                            v.commit(pos + 1);
+                        }
+                        if ok {
+                            let tokens: Vec<u32> = (0..target as u32).collect();
+                            let (_, evicted) = store
+                                .insert(KvRecord::from_view("cont", tokens, vec![1.0], &v));
+                            for ev in &evicted {
+                                apply(ev, &mut cold);
+                            }
+                        }
+                    }
+                }
+                // pressure eviction, with the yield invariant checked
+                3 => {
+                    let free_before = arena.free_blocks();
+                    if let Some(ev) = store.evict_one() {
+                        let freed = ev.freed_blocks();
+                        apply(&ev, &mut cold);
+                        drop(ev); // settles a Dropped victim's blocks
+                        prop_assert!(
+                            arena.free_blocks() == free_before + freed,
+                            "step {step}: eviction reported {freed} freed blocks, \
+                             arena went {free_before} -> {}",
+                            arena.free_blocks()
+                        );
+                    }
+                }
+                // transparent reload of a spilled record
+                4 => {
+                    let cold_ids: Vec<u64> = cold.iter().copied().collect();
+                    if !cold_ids.is_empty() {
+                        let id = *rng.choice(&cold_ids);
+                        let (rec, evicted) = store.reload_spilled(id, &arena);
+                        for ev in &evicted {
+                            apply(ev, &mut cold);
+                        }
+                        if rec.is_some() {
+                            cold.remove(&id);
+                        }
+                        // on failure the entry is either still cold
+                        // (retryable arena pressure) or was collaterally
+                        // LRU-dropped by a shed-spill — the
+                        // take_cold_dropped drain below reconciles the
+                        // mirror either way, and the global spilled-set /
+                        // file-set invariants catch any desync
+                    }
+                }
+                // request completion: drop an in-flight view
+                _ => {
+                    if !inflight.is_empty() {
+                        let i = rng.below(inflight.len());
+                        inflight.remove(i);
+                    }
+                }
+            }
+            for d in store.take_cold_dropped() {
+                cold.remove(&d);
+            }
+            // arena conservation: spilled records hold no blocks
+            assert_arena_conserved(&arena, &format!("step {step}"))?;
+            // store physical accounting == distinct hot block ids
+            let mut distinct: Vec<usize> =
+                store.iter().flat_map(|(_, r)| r.kv.block_ids()).collect();
+            distinct.sort();
+            distinct.dedup();
+            prop_assert!(
+                store.physical_blocks() == distinct.len(),
+                "step {step}: physical {} != distinct {}",
+                store.physical_blocks(),
+                distinct.len()
+            );
+            // cold-tier conservation: tracked set == on-disk set, sizes
+            // sum to cold_bytes
+            prop_assert!(
+                store.spilled_len() == cold.len(),
+                "step {step}: spilled_len {} != tracked {}",
+                store.spilled_len(),
+                cold.len()
+            );
+            let files = spill_files(tmp.path());
+            let mut want: Vec<u64> = cold.iter().copied().collect();
+            want.sort();
+            let got: Vec<u64> = files.iter().map(|(id, _)| *id).collect();
+            prop_assert!(got == want, "step {step}: on-disk {got:?} != {want:?}");
+            let disk_bytes: usize = files.iter().map(|(_, b)| *b).sum();
+            prop_assert!(
+                disk_bytes == store.cold_bytes(),
+                "step {step}: disk {disk_bytes} != cold_bytes {}",
+                store.cold_bytes()
+            );
+        }
+        // drain everything: every arena block must return to the pool
         drop(store);
         inflight.clear();
         prop_assert!(
