@@ -19,6 +19,12 @@
 //! delayed mock backend — on mean latency too (the "bounded overhead"
 //! claim, asserted).
 //!
+//! A second sweep re-runs the spill arm under injected transient
+//! cold-tier read faults (0% / 1% / 10% per reload, seeded — see
+//! `recycle_serve::faults`): a failed reload falls back to recomputing
+//! that request, so hit rate and latency must degrade *smoothly* with the
+//! fault rate, never collapse or panic. Written to `ablation_faults.csv`.
+//!
 //! ```bash
 //! cargo bench --bench ablation_spill            # full
 //! cargo bench --bench ablation_spill -- --quick # smoke
@@ -31,6 +37,7 @@ use std::time::Duration;
 
 use recycle_serve::config::{CacheConfig, ModelConfig};
 use recycle_serve::engine::Engine;
+use recycle_serve::faults::{FaultHandle, FaultPlan, FaultSite};
 use recycle_serve::index::NgramEmbedder;
 use recycle_serve::kvcache::KvArena;
 use recycle_serve::recycler::{RecyclePolicy, Recycler};
@@ -64,6 +71,7 @@ struct ArmReport {
     mean_hit_ms: f64,
     spills: u64,
     spill_hits: u64,
+    spill_load_errors: u64,
     avg_reload_ms: f64,
 }
 
@@ -75,7 +83,12 @@ impl ArmReport {
 
 /// Run one arm: warm all prompts under arena pressure, then serve
 /// `passes` rounds of extended requests over every prompt.
-fn run(spill_dir: Option<&TempDir>, passes: usize, delay: Duration) -> ArmReport {
+fn run(
+    spill_dir: Option<&TempDir>,
+    passes: usize,
+    delay: Duration,
+    faults: FaultHandle,
+) -> ArmReport {
     let cfg = ModelConfig::nano();
     // Arena: 32 blocks of 16 tokens. The 8 warmed records need ~32 blocks
     // in total, and the headroom pass keeps >= 16 blocks free for serving
@@ -99,6 +112,7 @@ fn run(spill_dir: Option<&TempDir>, passes: usize, delay: Duration) -> ArmReport
         RecyclePolicy::Radix,
     );
     r.populate_cache = false;
+    r.install_faults(faults);
 
     let docs = prompts();
     let refs: Vec<&str> = docs.iter().map(|s| s.as_str()).collect();
@@ -111,6 +125,7 @@ fn run(spill_dir: Option<&TempDir>, passes: usize, delay: Duration) -> ArmReport
         mean_hit_ms: 0.0,
         spills: 0,
         spill_hits: 0,
+        spill_load_errors: 0,
         avg_reload_ms: 0.0,
     };
     let mut total_ms = 0.0;
@@ -136,6 +151,7 @@ fn run(spill_dir: Option<&TempDir>, passes: usize, delay: Duration) -> ArmReport
     };
     report.spills = s.spills;
     report.spill_hits = s.spill_hits;
+    report.spill_load_errors = s.spill_load_errors;
     report.avg_reload_ms = s.avg_reload_ms();
     report
 }
@@ -149,8 +165,8 @@ fn main() {
     let delay = Duration::from_micros(300);
 
     let tmp = TempDir::new("bench_spill");
-    let off = run(None, passes, delay);
-    let on = run(Some(&tmp), passes, delay);
+    let off = run(None, passes, delay, FaultHandle::off());
+    let on = run(Some(&tmp), passes, delay, FaultHandle::off());
 
     println!(
         "{:<10} {:>9} {:>6} {:>9} {:>10} {:>13} {:>8} {:>11} {:>13}",
@@ -220,4 +236,86 @@ fn main() {
         on.mean_ms,
         off.mean_ms
     );
+
+    // --- fault-rate sweep: transient cold-tier read faults ---
+    // Same spill-on scenario, with a seeded fault plan failing 0% / 1% /
+    // 10% of cold-tier reads. A failed reload keeps the record cold and
+    // recomputes that request, so degradation must be smooth: no panic,
+    // no hit-rate collapse, latency bounded by the recompute path.
+    println!("\nfault-rate sweep (transient spill-read faults):");
+    println!(
+        "{:<10} {:>9} {:>6} {:>9} {:>10} {:>8} {:>11} {:>12}",
+        "read_fault", "requests", "hits", "hit_rate", "mean_ms", "spills",
+        "spill_hits", "load_errors"
+    );
+    let mut fault_rows: Vec<Vec<String>> = Vec::new();
+    let mut swept: Vec<(f64, ArmReport)> = Vec::new();
+    for rate in [0.0, 0.01, 0.10] {
+        let dir = TempDir::new("bench_spill_faults");
+        let h = FaultPlan::new(0xFA17)
+            .with_rate(FaultSite::SpillRead, rate)
+            .install();
+        let rep = run(Some(&dir), passes, delay, h);
+        println!(
+            "{:<10.2} {:>9} {:>6} {:>9.3} {:>10.2} {:>8} {:>11} {:>12}",
+            rate,
+            rep.requests,
+            rep.hits,
+            rep.hit_rate(),
+            rep.mean_ms,
+            rep.spills,
+            rep.spill_hits,
+            rep.spill_load_errors
+        );
+        fault_rows.push(vec![
+            format!("{rate:.2}"),
+            rep.requests.to_string(),
+            rep.hits.to_string(),
+            format!("{:.4}", rep.hit_rate()),
+            format!("{:.3}", rep.mean_ms),
+            rep.spills.to_string(),
+            rep.spill_hits.to_string(),
+            rep.spill_load_errors.to_string(),
+        ]);
+        swept.push((rate, rep));
+    }
+    let out = common::results_dir().join("ablation_faults.csv");
+    recycle_serve::util::csv::write_file(
+        &out,
+        &[
+            "read_fault_rate", "requests", "hits", "hit_rate", "mean_ms",
+            "spills", "spill_hits", "spill_load_errors",
+        ],
+        &fault_rows,
+    )
+    .expect("write csv");
+    println!("wrote {}", out.display());
+
+    let clean = &swept[0].1;
+    assert_eq!(
+        clean.spill_load_errors, 0,
+        "a zero-rate plan must behave exactly like no plan"
+    );
+    assert_eq!(
+        clean.hits, on.hits,
+        "installed-but-zero fault plan changed behavior"
+    );
+    for (rate, rep) in &swept[1..] {
+        let pct = *rate * 100.0;
+        assert!(
+            rep.hit_rate() >= 0.5 * clean.hit_rate(),
+            "hit rate collapsed under {pct:.0}% read faults: \
+             {:.3} vs clean {:.3}",
+            rep.hit_rate(),
+            clean.hit_rate()
+        );
+        assert!(
+            rep.mean_ms <= 3.0 * clean.mean_ms.max(off.mean_ms),
+            "latency blew past the recompute bound under {pct:.0}% faults: \
+             {:.2} ms vs clean {:.2} / recompute {:.2}",
+            rep.mean_ms,
+            clean.mean_ms,
+            off.mean_ms
+        );
+    }
 }

@@ -173,5 +173,10 @@ fn main() -> Result<()> {
         n,
         100.0 * hits as f64 / n as f64
     );
+    // degraded-mode health: a misconfigured spill_dir silently costs hit
+    // rate, so surface it where the numbers are read
+    for warning in stats_on.health_warnings() {
+        println!("\nWARNING (degraded mode): {warning}");
+    }
     Ok(())
 }

@@ -139,7 +139,26 @@ impl CacheConfig {
                     .to_string(),
             );
         }
+        c.validate()?;
         Ok(c)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !(-1.0..=1.0).contains(&self.min_similarity) {
+            // cosine similarity lives in [-1, 1]; anything outside silently
+            // disables (or always passes) the retrieval floor
+            return Err(Error::Config(format!(
+                "min_similarity must be in [-1, 1], got {}",
+                self.min_similarity
+            )));
+        }
+        if self.persist_dir.as_deref() == Some("") {
+            return Err(Error::Config("persist_dir must not be empty".into()));
+        }
+        if self.spill_dir.as_deref() == Some("") {
+            return Err(Error::Config("spill_dir must not be empty".into()));
+        }
+        Ok(())
     }
 }
 
@@ -201,5 +220,26 @@ mod tests {
     fn from_json_type_errors() {
         let v = json::parse(r#"{"max_entries": "three"}"#).unwrap();
         assert!(CacheConfig::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn from_json_rejects_invalid_knob_values() {
+        // out-of-range or degenerate knob values are typed errors, not
+        // silent defaults
+        for bad in [
+            r#"{"min_similarity": 1.5}"#,
+            r#"{"min_similarity": -2.0}"#,
+            r#"{"max_entries": -4}"#,
+            r#"{"max_spill_bytes": -1}"#,
+            r#"{"spill_dir": ""}"#,
+            r#"{"persist_dir": ""}"#,
+        ] {
+            let v = json::parse(bad).unwrap();
+            let e = CacheConfig::from_json(&v).expect_err(bad);
+            assert!(matches!(e, Error::Config(_)), "{bad}: {e}");
+        }
+        // boundary values are legal
+        let v = json::parse(r#"{"min_similarity": -1.0}"#).unwrap();
+        assert_eq!(CacheConfig::from_json(&v).unwrap().min_similarity, -1.0);
     }
 }

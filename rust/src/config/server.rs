@@ -40,6 +40,20 @@ pub struct ServerConfig {
     /// per-tick prefill work is bounded by
     /// `prefill_chunk_tokens * max_prefilling_slots`.
     pub max_prefilling_slots: usize,
+    /// Per-request wall-clock deadline, enforced at scheduler ticks: a
+    /// request (queued, deferred, or running) older than this is reaped —
+    /// its slot frees every block reservation and the client receives a
+    /// typed `Error::DeadlineExceeded` instead of hanging forever.
+    pub request_timeout_ms: u64,
+    /// Total attempts for an operation that hits a *transient* fault
+    /// (`Error::is_transient`): 1 = fail fast, the default 3 = the first
+    /// try plus two retries. Terminal errors never retry.
+    pub transient_retry_limit: usize,
+    /// Base backoff between transient retries, measured in scheduler
+    /// ticks (no wall-clock sleeps on the worker thread): retry k waits
+    /// `retry_backoff_ticks << k` ticks while the rest of the batch keeps
+    /// decoding.
+    pub retry_backoff_ticks: usize,
 }
 
 impl Default for ServerConfig {
@@ -54,6 +68,9 @@ impl Default for ServerConfig {
             populate_cache: true,
             prefill_chunk_tokens: 32,
             max_prefilling_slots: 1,
+            request_timeout_ms: 30_000,
+            transient_retry_limit: 3,
+            retry_backoff_ticks: 1,
         }
     }
 }
@@ -91,6 +108,15 @@ impl ServerConfig {
         if let Some(n) = usize_field("max_prefilling_slots")? {
             c.max_prefilling_slots = n;
         }
+        if let Some(n) = usize_field("request_timeout_ms")? {
+            c.request_timeout_ms = n as u64;
+        }
+        if let Some(n) = usize_field("transient_retry_limit")? {
+            c.transient_retry_limit = n;
+        }
+        if let Some(n) = usize_field("retry_backoff_ticks")? {
+            c.retry_backoff_ticks = n;
+        }
         if let Some(x) = v.get("batch_window_ms") {
             c.batch_window_ms = x
                 .as_usize()
@@ -127,6 +153,19 @@ impl ServerConfig {
             return Err(Error::Config(
                 "prefill_chunk_tokens/max_prefilling_slots must be > 0".into(),
             ));
+        }
+        if self.request_timeout_ms == 0 {
+            // a zero deadline would reap every request at its first tick
+            return Err(Error::Config("request_timeout_ms must be > 0".into()));
+        }
+        if self.transient_retry_limit == 0 {
+            // zero attempts is meaningless; 1 = fail fast
+            return Err(Error::Config("transient_retry_limit must be >= 1".into()));
+        }
+        if self.retry_backoff_ticks == 0 {
+            // a zero base backoff would re-fire the faulty operation in the
+            // same tick it failed, defeating the point of backing off
+            return Err(Error::Config("retry_backoff_ticks must be >= 1".into()));
         }
         Ok(())
     }
@@ -190,6 +229,43 @@ mod tests {
         let d = ServerConfig::default();
         assert_eq!(d.prefill_chunk_tokens, 32);
         assert_eq!(d.max_prefilling_slots, 1);
+    }
+
+    #[test]
+    fn parses_failure_handling_knobs() {
+        let v = json::parse(
+            r#"{"request_timeout_ms": 1500, "transient_retry_limit": 5,
+                "retry_backoff_ticks": 2}"#,
+        )
+        .unwrap();
+        let c = ServerConfig::from_json(&v).unwrap();
+        assert_eq!(c.request_timeout_ms, 1500);
+        assert_eq!(c.transient_retry_limit, 5);
+        assert_eq!(c.retry_backoff_ticks, 2);
+        let d = ServerConfig::default();
+        assert_eq!(d.request_timeout_ms, 30_000);
+        assert_eq!(d.transient_retry_limit, 3);
+        assert_eq!(d.retry_backoff_ticks, 1);
+    }
+
+    #[test]
+    fn rejects_invalid_failure_handling_knobs() {
+        // zero/negative/non-numeric knob values must be typed errors, not
+        // silent defaults
+        for bad in [
+            r#"{"request_timeout_ms": 0}"#,
+            r#"{"request_timeout_ms": -5}"#,
+            r#"{"request_timeout_ms": "soon"}"#,
+            r#"{"transient_retry_limit": 0}"#,
+            r#"{"transient_retry_limit": -1}"#,
+            r#"{"retry_backoff_ticks": 0}"#,
+            r#"{"retry_backoff_ticks": -2}"#,
+            r#"{"queue_capacity": -1}"#,
+        ] {
+            let v = json::parse(bad).unwrap();
+            let e = ServerConfig::from_json(&v).expect_err(bad);
+            assert!(matches!(e, Error::Config(_)), "{bad}: {e}");
+        }
     }
 
     #[test]

@@ -23,6 +23,37 @@
 //! serving (`max_batch = 1`, the paper's setting) — property-tested in
 //! `rust/tests/properties.rs` through the deterministic scheduler-trace
 //! harness in [`crate::testutil::trace`].
+//!
+//! # Failure semantics
+//!
+//! Every submitted request gets **exactly one reply** — an outcome or a
+//! typed error — no matter what fails underneath (see the taxonomy table
+//! in [`crate::error`]):
+//!
+//! * **Shedding**: the bounded queue rejects at submit time with
+//!   [`crate::error::Error::Overloaded`] (depth + capacity attached), so
+//!   overload backpressure is explicit and immediate rather than an
+//!   unbounded latency tail.
+//! * **Deadlines**: a request that spends more than
+//!   `ServerConfig::request_timeout_ms` in the serving path — queued,
+//!   deferred, prefilling, or decoding — is reaped at the next scheduler
+//!   tick with a typed `DeadlineExceeded` reply; its KV blocks and
+//!   growth reservations are released at that tick boundary.
+//! * **Transient faults** (backend hiccup, spill IO, arena exhaustion
+//!   spikes): retried in place with exponential tick-based backoff, at
+//!   most `ServerConfig::transient_retry_limit` total attempts. Forward
+//!   steps are atomic-on-failure and KV rewrites idempotent
+//!   (`engine/batch.rs`), so retries are token-exact. Exhausting the
+//!   budget fails the request with the last error.
+//! * **Permanent faults** fail the request immediately; the slot's
+//!   blocks are released where it died and every other slot keeps
+//!   serving — one faulty request never wedges the scheduler.
+//!
+//! The chaos property suite (`rust/tests/properties.rs`) drives random
+//! workloads under seeded random fault plans ([`crate::faults`]) and
+//! asserts exactly this contract: termination, one reply per request,
+//! arena conservation after every schedule, and fault-free requests
+//! token-identical to an undisturbed run.
 
 mod batcher;
 mod queue;

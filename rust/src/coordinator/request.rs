@@ -22,14 +22,26 @@ pub struct Request {
 #[derive(Debug)]
 pub enum Response {
     Ok(Box<Outcome>),
-    Err(String),
+    /// Failure reply: human-readable message plus the stable
+    /// [`Error::kind`](crate::error::Error::kind) label, so transports
+    /// can expose a machine-readable `error_kind` field without parsing
+    /// messages.
+    Err { msg: String, kind: &'static str },
 }
 
 impl Response {
+    /// Build the failure reply for a typed error.
+    pub fn err(e: &crate::error::Error) -> Self {
+        Response::Err {
+            msg: e.to_string(),
+            kind: e.kind(),
+        }
+    }
+
     pub fn ok(self) -> Result<Outcome, String> {
         match self {
             Response::Ok(o) => Ok(*o),
-            Response::Err(e) => Err(e),
+            Response::Err { msg, .. } => Err(msg),
         }
     }
 }

@@ -53,6 +53,20 @@
 //!   each chunk exactly once.
 //! * **Headroom FIFO** — while any request is held back for arena
 //!   headroom, no fresh request is drained past it (unchanged).
+//! * **Bounded failure handling** — every failure is replied to exactly
+//!   once, with a typed message. Transient step failures
+//!   ([`Error::is_transient`]) get at most
+//!   `ServerConfig::transient_retry_limit` total attempts with
+//!   exponential tick-based backoff (`retry_backoff_ticks << (k-1)`
+//!   ticks before retry k; the slot keeps its blocks and resumes at its
+//!   last committed chunk, so retries are token-exact). A per-request
+//!   deadline (`request_timeout_ms`) reaps requests at tick boundaries
+//!   wherever they sit — queued, deferred, prefilling, or decoding — and
+//!   the bounded submit queue sheds with a typed
+//!   [`Error::Overloaded`] reply carrying its depth. Dropped slots
+//!   release their blocks and growth reservations, so arena conservation
+//!   holds across arbitrary fault schedules (property-tested by the
+//!   chaos suite in `rust/tests/properties.rs`).
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -97,6 +111,20 @@ pub struct CoordinatorStats {
     /// Paged-KV arena occupancy (cache records + in-flight requests).
     pub arena_used_blocks: usize,
     pub arena_capacity_blocks: usize,
+}
+
+impl CoordinatorStats {
+    /// Degraded-mode warnings across the serving stack (empty when
+    /// healthy). Currently: the cache's spill tier failing to set up
+    /// (`CacheStats::spill_setup_failed`) — serving continues but
+    /// evictions destroy records instead of spilling.
+    pub fn health_warnings(&self) -> Vec<String> {
+        let mut warnings = Vec::new();
+        if let Some(w) = self.cache.health_warning() {
+            warnings.push(w);
+        }
+        warnings
+    }
 }
 
 struct Shared {
@@ -169,28 +197,46 @@ impl Coordinator {
                 Ok(rx)
             }
             Err(QueueError::Full) => {
+                // Load shed at the bounded queue: the typed reply carries
+                // the observed depth so clients can back off informedly
+                // instead of parsing a message.
                 self.shared.stats.lock().unwrap().rejected += 1;
-                Err(Error::Rejected("queue full".into()))
+                Err(Error::Overloaded {
+                    depth: self.shared.queue.len(),
+                    capacity: self.shared.queue.capacity(),
+                })
             }
             Err(QueueError::Closed) => Err(Error::ShutDown),
         }
     }
 
+    /// Submit and wait, returning the worker's raw [`Response`] (message
+    /// plus the stable error-kind label) — transports use this to expose
+    /// `error_kind` without parsing messages. Submit-side shedding
+    /// (`Overloaded`/`ShutDown`) still surfaces as a typed `Err`.
+    pub fn serve(
+        &self,
+        prompt: &str,
+        max_new_tokens: usize,
+        session: Option<String>,
+    ) -> Result<Response> {
+        let rx = self.submit(prompt, max_new_tokens, session)?;
+        rx.recv().map_err(|_| Error::ShutDown)
+    }
+
     /// Submit and wait (convenience for examples/tests).
     pub fn generate(&self, prompt: &str, max_new_tokens: usize) -> Result<Outcome> {
-        let rx = self.submit(prompt, max_new_tokens, None)?;
-        let resp = rx
-            .recv()
-            .map_err(|_| Error::ShutDown)?;
-        resp.ok().map_err(Error::Rejected)
+        self.serve(prompt, max_new_tokens, None)?
+            .ok()
+            .map_err(Error::Rejected)
     }
 
     /// Multi-turn session request: builds the transcript prompt, serves it,
     /// records the turn.
     pub fn chat(&self, session_id: &str, user_msg: &str, max_new: usize) -> Result<Outcome> {
-        let rx = self.submit(user_msg, max_new, Some(session_id.to_string()))?;
-        let resp = rx.recv().map_err(|_| Error::ShutDown)?;
-        resp.ok().map_err(Error::Rejected)
+        self.serve(user_msg, max_new, Some(session_id.to_string()))?
+            .ok()
+            .map_err(Error::Rejected)
     }
 
     pub fn stats(&self) -> CoordinatorStats {
@@ -246,11 +292,25 @@ struct Slot {
     state: SlotState,
     /// First decode token already recorded for TTFT accounting.
     ttft_noted: bool,
+    /// Transient step failures this slot has absorbed so far. The slot is
+    /// failed once this reaches `ServerConfig::transient_retry_limit`
+    /// total attempts.
+    attempt: usize,
+    /// Ticks left before the slot may step again (exponential tick-based
+    /// backoff after a transient failure). While > 0 the prefill and
+    /// decode phases skip the slot; it keeps its blocks and reservations,
+    /// so a retried step resumes exactly where the failed one left off.
+    cooldown: usize,
 }
 
 impl Slot {
     fn is_prefilling(&self) -> bool {
         matches!(self.state, SlotState::Prefilling(_))
+    }
+
+    /// In retry backoff this tick (skipped by the step phases).
+    fn cooling(&self) -> bool {
+        self.cooldown > 0
     }
 }
 
@@ -262,8 +322,8 @@ enum Admit {
     /// The arena lacks headroom for this request right now; hold it back
     /// until running streams free blocks.
     Defer(Request),
-    /// Tokenization/validation failed; reply with the message.
-    Fail(Request, String),
+    /// Tokenization/validation failed; reply with the typed error.
+    Fail(Request, Error),
 }
 
 /// Why a tick held a request back (trace-visible admission outcome).
@@ -316,6 +376,19 @@ pub enum SchedEvent {
     Finished { id: u64, tokens: usize },
     /// Request failed and was replied to with the message.
     Failed { id: u64, msg: String },
+    /// A transient step failure armed a tick-based backoff retry; the
+    /// slot was kept (with its blocks) and will step again after
+    /// `cooldown_ticks` ticks. `attempt` counts the failures absorbed so
+    /// far (bounded by `ServerConfig::transient_retry_limit`).
+    Retried {
+        id: u64,
+        attempt: usize,
+        cooldown_ticks: usize,
+    },
+    /// Request exceeded `ServerConfig::request_timeout_ms` and was failed
+    /// by the deadline sweep (wherever it was: deferred, prefilling, or
+    /// decoding); its blocks and reservations were released.
+    TimedOut { id: u64, waited_ms: u64 },
 }
 
 /// Gate + tokenize + session-extend + lookup one request into a running
@@ -377,8 +450,10 @@ fn admit_one<M: ForwardModel>(
             meta,
             state: SlotState::Prefilling(stream),
             ttft_noted: false,
+            attempt: 0,
+            cooldown: 0,
         })),
-        Err(e) => Admit::Fail(req, e.to_string()),
+        Err(e) => Admit::Fail(req, e),
     }
 }
 
@@ -636,6 +711,7 @@ impl<M: ForwardModel> Scheduler<M> {
     /// publish-then-reply ordering.
     pub fn tick(&mut self, fresh: Vec<Request>) -> TickReport {
         let mut events = Vec::new();
+        let fresh = self.deadline_phase(fresh, &mut events);
         self.admit_wave(fresh, &mut events);
         self.prefill_phase(&mut events);
         self.decode_phase(&mut events);
@@ -643,6 +719,97 @@ impl<M: ForwardModel> Scheduler<M> {
         TickReport {
             events,
             replies: std::mem::take(&mut self.outbox),
+        }
+    }
+
+    /// Per-request deadline sweep, run at the top of every tick: any
+    /// request that has spent more than `request_timeout_ms` since
+    /// submission — wherever it sits (fresh off the queue, in the
+    /// holdback queue, prefilling, or decoding) — is failed with a typed
+    /// `DeadlineExceeded` reply. Dropping a running slot releases its
+    /// blocks and growth reservation at the tick boundary, so a wedged or
+    /// endlessly-retried request cannot pin arena capacity forever. Also
+    /// advances retry cooldowns (one tick closer to the next attempt).
+    fn deadline_phase(
+        &mut self,
+        fresh: Vec<Request>,
+        events: &mut Vec<SchedEvent>,
+    ) -> Vec<Request> {
+        let budget_ms = self.cfg.request_timeout_ms;
+        let mut i = 0;
+        while i < self.running.len() {
+            let waited_ms = self.running[i].req.queued_at.elapsed().as_millis() as u64;
+            if waited_ms <= budget_ms {
+                i += 1;
+                continue;
+            }
+            let slot = self.running.swap_remove(i);
+            self.fail_deadline(slot.req, waited_ms, events);
+            // i not advanced: swap_remove moved a new slot here; dropping
+            // `slot` released its stream's blocks
+        }
+        let mut keep = VecDeque::with_capacity(self.deferred.len());
+        for (req, hold) in std::mem::take(&mut self.deferred) {
+            let waited_ms = req.queued_at.elapsed().as_millis() as u64;
+            if waited_ms <= budget_ms {
+                keep.push_back((req, hold));
+            } else {
+                self.fail_deadline(req, waited_ms, events);
+            }
+        }
+        self.deferred = keep;
+        let mut pass = Vec::with_capacity(fresh.len());
+        for req in fresh {
+            let waited_ms = req.queued_at.elapsed().as_millis() as u64;
+            if waited_ms <= budget_ms {
+                pass.push(req);
+            } else {
+                self.fail_deadline(req, waited_ms, events);
+            }
+        }
+        for slot in &mut self.running {
+            slot.cooldown = slot.cooldown.saturating_sub(1);
+        }
+        pass
+    }
+
+    fn fail_deadline(&mut self, req: Request, waited_ms: u64, events: &mut Vec<SchedEvent>) {
+        let e = Error::DeadlineExceeded {
+            waited_ms,
+            budget_ms: self.cfg.request_timeout_ms,
+        };
+        self.failed += 1;
+        self.stats.deadline_timeouts += 1;
+        events.push(SchedEvent::TimedOut {
+            id: req.id,
+            waited_ms,
+        });
+        self.outbox.push((req.reply, Response::err(&e)));
+    }
+
+    /// Decide what a failed step means for slot `i`: a transient error
+    /// with retry budget left arms an exponential tick-based cooldown
+    /// (`retry_backoff_ticks << (attempt - 1)`) and keeps the slot —
+    /// returns `true`. A permanent error, or a transient one past
+    /// `transient_retry_limit` total attempts, returns `false`: the
+    /// caller must reply and drop the slot.
+    fn keep_for_retry(&mut self, i: usize, e: &Error, events: &mut Vec<SchedEvent>) -> bool {
+        let slot = &mut self.running[i];
+        if e.is_transient() && slot.attempt + 1 < self.cfg.transient_retry_limit {
+            slot.attempt += 1;
+            slot.cooldown = self.cfg.retry_backoff_ticks << (slot.attempt - 1);
+            self.stats.transient_retries += 1;
+            events.push(SchedEvent::Retried {
+                id: slot.req.id,
+                attempt: slot.attempt,
+                cooldown_ticks: slot.cooldown,
+            });
+            true
+        } else {
+            if e.is_transient() {
+                self.stats.retry_give_ups += 1;
+            }
+            false
         }
     }
 
@@ -760,13 +927,13 @@ impl<M: ForwardModel> Scheduler<M> {
                     });
                     hold_back(req, Hold::Headroom, &mut requeue_front, &mut self.deferred);
                 }
-                Admit::Fail(req, msg) => {
+                Admit::Fail(req, e) => {
                     self.failed += 1;
                     events.push(SchedEvent::Failed {
                         id: req.id,
-                        msg: msg.clone(),
+                        msg: e.to_string(),
                     });
-                    self.outbox.push((req.reply, Response::Err(msg)));
+                    self.outbox.push((req.reply, Response::err(&e)));
                 }
             }
         }
@@ -794,7 +961,7 @@ impl<M: ForwardModel> Scheduler<M> {
         let mut tick_chunks = 0usize;
         let mut i = 0;
         while i < self.running.len() {
-            if !self.running[i].is_prefilling() {
+            if !self.running[i].is_prefilling() || self.running[i].cooling() {
                 i += 1;
                 continue;
             }
@@ -855,8 +1022,7 @@ impl<M: ForwardModel> Scheduler<M> {
                                     id,
                                     msg: e.to_string(),
                                 });
-                                self.outbox
-                                    .push((slot.req.reply, Response::Err(e.to_string())));
+                                self.outbox.push((slot.req.reply, Response::err(&e)));
                                 continue; // i not advanced: swap_remove
                             }
                         }
@@ -864,19 +1030,26 @@ impl<M: ForwardModel> Scheduler<M> {
                     i += 1;
                 }
                 Err(e) => {
-                    // Failed twice (or a non-recoverable error): reply and
-                    // drop ON THE SPOT — the slot's partial blocks are
-                    // released with its stream, so a resource error fails
-                    // one request, not the scheduler.
-                    let slot = self.running.swap_remove(i);
-                    self.failed += 1;
-                    events.push(SchedEvent::Failed {
-                        id,
-                        msg: e.to_string(),
-                    });
-                    self.outbox
-                        .push((slot.req.reply, Response::Err(e.to_string())));
-                    // i not advanced: swap_remove moved a new slot here
+                    // A transient failure (model hiccup, IO, residual
+                    // arena pressure after the shed-resume above) gets a
+                    // bounded tick-based backoff retry: the stream stays
+                    // at its last committed chunk boundary, so the retry
+                    // re-runs only the failed chunk. Anything else — or an
+                    // exhausted retry budget — is replied-to and the slot
+                    // dropped ON THE SPOT, releasing its partial blocks so
+                    // one faulty request never wedges the scheduler.
+                    if self.keep_for_retry(i, &e, events) {
+                        i += 1;
+                    } else {
+                        let slot = self.running.swap_remove(i);
+                        self.failed += 1;
+                        events.push(SchedEvent::Failed {
+                            id,
+                            msg: e.to_string(),
+                        });
+                        self.outbox.push((slot.req.reply, Response::err(&e)));
+                        // i not advanced: swap_remove moved a new slot here
+                    }
                 }
             }
         }
@@ -890,7 +1063,9 @@ impl<M: ForwardModel> Scheduler<M> {
             .running
             .iter_mut()
             .filter_map(|s| match &mut s.state {
-                SlotState::Decoding(d) if !d.is_finished() => Some(d),
+                // cooling slots sit out the dispatch until their retry
+                // backoff elapses
+                SlotState::Decoding(d) if !d.is_finished() && s.cooldown == 0 => Some(d),
                 _ => None,
             })
             .collect();
@@ -920,10 +1095,11 @@ impl<M: ForwardModel> Scheduler<M> {
                     // not the batch.
                     let mut i = 0;
                     while i < self.running.len() {
-                        let active = matches!(
-                            &self.running[i].state,
-                            SlotState::Decoding(d) if !d.is_finished()
-                        );
+                        let active = self.running[i].cooldown == 0
+                            && matches!(
+                                &self.running[i].state,
+                                SlotState::Decoding(d) if !d.is_finished()
+                            );
                         if !active {
                             i += 1;
                             continue;
@@ -948,14 +1124,21 @@ impl<M: ForwardModel> Scheduler<M> {
                                 i += 1;
                             }
                             Err(e) => {
+                                // transient + budget left: keep the slot in
+                                // backoff (retries are token-exact — a
+                                // failed step left its logical state
+                                // untouched); otherwise reply-and-drop
+                                if self.keep_for_retry(i, &e, events) {
+                                    i += 1;
+                                    continue;
+                                }
                                 let r = self.running.swap_remove(i);
                                 self.failed += 1;
                                 events.push(SchedEvent::Failed {
                                     id,
                                     msg: e.to_string(),
                                 });
-                                self.outbox
-                                    .push((r.req.reply, Response::Err(e.to_string())));
+                                self.outbox.push((r.req.reply, Response::err(&e)));
                                 // i not advanced: swap_remove moved a new
                                 // slot here; dropping `r` released blocks
                             }
@@ -1048,6 +1231,7 @@ fn worker_loop<M: ForwardModel>(
             Vec::new()
         };
         let tick = sched.tick(fresh);
+        let made_progress = !tick.events.is_empty() || !tick.replies.is_empty();
         // publish scheduler + engine + cache state (submitted/rejected are
         // owned by the submit side) BEFORE delivering replies, so a
         // submitter that wakes on its reply reads counters that already
@@ -1068,6 +1252,12 @@ fn worker_loop<M: ForwardModel>(
         }
         for (tx, resp) in tick.replies {
             let _ = tx.send(resp);
+        }
+        if !made_progress && !sched.is_idle() {
+            // every runnable slot is sitting out a retry cooldown: yield
+            // briefly instead of hot-spinning ticks while the tick-based
+            // backoff elapses
+            std::thread::sleep(Duration::from_millis(1));
         }
     }
 }
@@ -1157,7 +1347,9 @@ mod tests {
         for i in 0..50 {
             match c.submit(&format!("p{i} xxxx"), 2, None) {
                 Ok(rx) => receivers.push(rx),
-                Err(Error::Rejected(_)) => {
+                Err(Error::Overloaded { depth, capacity }) => {
+                    assert_eq!(capacity, 1, "shed reply reports the bound");
+                    assert!(depth <= capacity);
                     rejected = true;
                     break;
                 }
@@ -1296,12 +1488,70 @@ mod tests {
         c.shutdown();
     }
 
-    #[test]
-    fn failure_surfaces_as_error_response() {
-        let c = Coordinator::spawn(
-            || {
+    fn faulty_coordinator(fail_call: usize, cfg: ServerConfig) -> Coordinator {
+        Coordinator::spawn(
+            move || {
                 let engine =
-                    Engine::new(MockModel::new(ModelConfig::nano()).fail_on_call(1));
+                    Engine::new(MockModel::new(ModelConfig::nano()).fail_on_call(fail_call));
+                Recycler::new(
+                    engine,
+                    std::sync::Arc::new(Tokenizer::new(vec![])),
+                    Box::new(NgramEmbedder::new(64)),
+                    Default::default(),
+                    RecyclePolicy::Strict,
+                )
+            },
+            cfg,
+        )
+    }
+
+    #[test]
+    fn transient_failure_is_retried_to_success() {
+        // one transient forward failure, default retry budget (3 attempts):
+        // the scheduler absorbs it with a backoff retry and the request
+        // still completes — no error ever reaches the client
+        let c = faulty_coordinator(1, ServerConfig::default());
+        let out = c.generate("boom but recoverable", 2).unwrap();
+        assert_eq!(out.ids.len(), 2);
+        let stats = c.stats();
+        assert_eq!(stats.failed, 0);
+        assert_eq!(stats.completed, 1);
+        assert!(stats.scheduler.transient_retries >= 1, "retry was counted");
+        assert_eq!(stats.scheduler.retry_give_ups, 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn fail_fast_surfaces_transient_error_when_retries_disabled() {
+        // transient_retry_limit 1 = fail fast: the same single fault now
+        // surfaces as a typed error response, and the stream's blocks are
+        // released so the next request serves cleanly
+        let c = faulty_coordinator(
+            1,
+            ServerConfig {
+                transient_retry_limit: 1,
+                ..Default::default()
+            },
+        );
+        let err = c.generate("boom", 2).unwrap_err();
+        assert!(err.to_string().contains("injected"));
+        let stats = c.stats();
+        assert_eq!(stats.failed, 1);
+        assert_eq!(stats.scheduler.transient_retries, 0);
+        assert_eq!(stats.scheduler.retry_give_ups, 1);
+        // next request works (failure was transient)
+        assert!(c.generate("fine now", 2).is_ok());
+        c.shutdown();
+    }
+
+    #[test]
+    fn permanent_fault_fails_immediately_despite_retry_budget() {
+        use crate::faults::{FaultPlan, FaultSite};
+        let h = FaultPlan::new(7).script(FaultSite::ModelPermanent, &[1]).install();
+        let c = Coordinator::spawn(
+            move || {
+                let engine =
+                    Engine::new(MockModel::new(ModelConfig::nano()).with_faults(h));
                 Recycler::new(
                     engine,
                     std::sync::Arc::new(Tokenizer::new(vec![])),
@@ -1312,11 +1562,47 @@ mod tests {
             },
             ServerConfig::default(),
         );
-        let err = c.generate("boom", 2).unwrap_err();
-        assert!(err.to_string().contains("injected"));
-        assert_eq!(c.stats().failed, 1);
-        // next request works (failure was transient)
-        assert!(c.generate("fine now", 2).is_ok());
+        let err = c.generate("doomed from the start", 2).unwrap_err();
+        assert!(err.to_string().contains("permanent"));
+        let stats = c.stats();
+        assert_eq!(stats.failed, 1);
+        assert_eq!(stats.scheduler.transient_retries, 0, "no retry wasted");
+        assert!(c.generate("healthy again", 2).is_ok());
+        c.shutdown();
+    }
+
+    #[test]
+    fn deadline_reaps_slow_request_with_typed_reply() {
+        // a 2ms budget against a model that sleeps 5ms per token: the
+        // deadline sweep must reap the slot at a tick boundary and reply
+        // with the typed deadline error instead of letting the client hang
+        let c = Coordinator::spawn(
+            || {
+                let engine = Engine::new(MockModel::with_delay(
+                    ModelConfig::nano(),
+                    Duration::from_millis(5),
+                ));
+                Recycler::new(
+                    engine,
+                    std::sync::Arc::new(Tokenizer::new(vec![])),
+                    Box::new(NgramEmbedder::new(64)),
+                    Default::default(),
+                    RecyclePolicy::Strict,
+                )
+            },
+            ServerConfig {
+                request_timeout_ms: 2,
+                ..Default::default()
+            },
+        );
+        let err = c.generate("this prompt cannot finish in time", 8).unwrap_err();
+        assert!(
+            err.to_string().contains("deadline exceeded"),
+            "typed deadline reply, got: {err}"
+        );
+        let stats = c.stats();
+        assert_eq!(stats.failed, 1);
+        assert_eq!(stats.scheduler.deadline_timeouts, 1);
         c.shutdown();
     }
 

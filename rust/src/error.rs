@@ -1,10 +1,38 @@
-//! Crate-wide error type.
+//! Crate-wide error type and failure taxonomy.
 //!
 //! Substrates return `Result<T, Error>`; the binary/examples surface it at
 //! the top level. Variants are grouped by subsystem so integration tests
 //! can assert on failure classes (e.g. corruption injection must yield
 //! `Error::Corrupt`, never a silent wrong answer). Hand-rolled `Display`
 //! because thiserror is not in the offline vendor set.
+//!
+//! # Failure taxonomy
+//!
+//! Every variant has a defined class that determines what the serving
+//! path does with it ([`Error::is_transient`] is the machine-readable
+//! form; the scheduler's retry loop and the TCP front's `error_kind`
+//! reply field both key off this table):
+//!
+//! | variant              | class     | serving-path outcome |
+//! |----------------------|-----------|----------------------|
+//! | `Xla`                | transient | retried with tick-based backoff up to `transient_retry_limit` attempts |
+//! | `Io`                 | transient | retried (model/spill); a failed spill write degrades to drop-on-evict |
+//! | `ArenaExhausted`     | transient | shed-and-resume first, then the same bounded retry |
+//! | `ShapeMismatch`      | terminal  | request fails immediately with a typed reply |
+//! | `PromptTooLong`      | terminal  | rejected at admission |
+//! | `ContextExhausted`   | terminal  | request fails; window accounting bug upstream |
+//! | `Rejected`           | terminal  | typed reply; never retried |
+//! | `Corrupt` / `Version`| terminal  | spill entry dropped, lookup degrades to a clean miss |
+//! | `Overloaded`         | shed      | load-shedding reply carrying queue depth/capacity; client may back off and resubmit |
+//! | `DeadlineExceeded`   | deadline  | slot reaped at a scheduler tick, reservations freed |
+//! | `ShutDown`           | terminal  | coordinator is gone |
+//! | `ArtifactMissing` / `ManifestInvalid` / `Json` / `Csv` / `Config` | terminal | startup/parse errors, never on the hot path |
+//!
+//! Transient means: the operation is safe to re-execute (forward steps
+//! are atomic-on-failure per `engine/batch.rs`, spill reads are
+//! side-effect free) and the condition is plausibly temporary. Everything
+//! else fails fast with a typed reply so clients never hang on a wedged
+//! request.
 
 use std::fmt;
 
@@ -22,6 +50,12 @@ pub enum Error {
     /// The paged KV arena ran out of blocks (admission/in-flight pressure).
     ArenaExhausted { needed: usize, free: usize },
     Rejected(String),
+    /// The request spent longer than its budget in the serving path; the
+    /// scheduler reaped the slot and freed its reservations.
+    DeadlineExceeded { waited_ms: u64, budget_ms: u64 },
+    /// Load shed: a bounded queue was full. Carries the observed depth so
+    /// clients can make an informed backoff decision.
+    Overloaded { depth: usize, capacity: usize },
     ShutDown,
 
     // --- persistence ---------------------------------------------------------
@@ -34,6 +68,43 @@ pub enum Error {
     Config(String),
 
     Io(std::io::Error),
+}
+
+impl Error {
+    /// Is this failure class safe and worthwhile to retry? (See the
+    /// module-level taxonomy table.) The scheduler's bounded
+    /// retry-with-backoff keys off this; everything else fails fast.
+    pub fn is_transient(&self) -> bool {
+        matches!(
+            self,
+            Error::Xla(_) | Error::Io(_) | Error::ArenaExhausted { .. }
+        )
+    }
+
+    /// Stable machine-readable label for the wire protocol's `error_kind`
+    /// reply field (one label per variant; clients must not parse the
+    /// human-readable message).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Error::ArtifactMissing(_) => "artifact_missing",
+            Error::ManifestInvalid(_) => "manifest_invalid",
+            Error::Xla(_) => "backend",
+            Error::ShapeMismatch(_) => "shape_mismatch",
+            Error::PromptTooLong { .. } => "prompt_too_long",
+            Error::ContextExhausted(_) => "context_exhausted",
+            Error::ArenaExhausted { .. } => "arena_exhausted",
+            Error::Rejected(_) => "rejected",
+            Error::DeadlineExceeded { .. } => "deadline_exceeded",
+            Error::Overloaded { .. } => "overloaded",
+            Error::ShutDown => "shut_down",
+            Error::Corrupt(_) => "corrupt",
+            Error::Version(_) => "version",
+            Error::Json(_) => "json",
+            Error::Csv(_) => "csv",
+            Error::Config(_) => "config",
+            Error::Io(_) => "io",
+        }
+    }
 }
 
 impl fmt::Display for Error {
@@ -54,6 +125,13 @@ impl fmt::Display for Error {
                 "kv arena exhausted: need {needed} blocks, {free} free"
             ),
             Error::Rejected(s) => write!(f, "request rejected: {s}"),
+            Error::DeadlineExceeded { waited_ms, budget_ms } => write!(
+                f,
+                "deadline exceeded: waited {waited_ms}ms > budget {budget_ms}ms"
+            ),
+            Error::Overloaded { depth, capacity } => {
+                write!(f, "overloaded: queue depth {depth}/{capacity}")
+            }
             Error::ShutDown => write!(f, "coordinator shut down"),
             Error::Corrupt(s) => write!(f, "corrupt cache file: {s}"),
             Error::Version(v) => write!(f, "unsupported cache file version {v}"),
@@ -88,3 +166,43 @@ impl From<xla::Error> for Error {
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transient_classification_matches_taxonomy() {
+        assert!(Error::Xla("x".into()).is_transient());
+        assert!(Error::Io(std::io::Error::other("x")).is_transient());
+        assert!(Error::ArenaExhausted { needed: 1, free: 0 }.is_transient());
+        assert!(!Error::ShapeMismatch("x".into()).is_transient());
+        assert!(!Error::Corrupt("x".into()).is_transient());
+        assert!(!Error::Overloaded { depth: 1, capacity: 1 }.is_transient());
+        assert!(!Error::DeadlineExceeded { waited_ms: 1, budget_ms: 1 }.is_transient());
+        assert!(!Error::Rejected("x".into()).is_transient());
+    }
+
+    #[test]
+    fn kinds_are_distinct_labels() {
+        let kinds = [
+            Error::Xla("x".into()).kind(),
+            Error::Overloaded { depth: 0, capacity: 0 }.kind(),
+            Error::DeadlineExceeded { waited_ms: 0, budget_ms: 0 }.kind(),
+            Error::Corrupt("x".into()).kind(),
+            Error::Rejected("x".into()).kind(),
+        ];
+        let mut uniq = kinds.to_vec();
+        uniq.sort();
+        uniq.dedup();
+        assert_eq!(uniq.len(), kinds.len());
+    }
+
+    #[test]
+    fn typed_display_for_new_variants() {
+        let d = Error::DeadlineExceeded { waited_ms: 55, budget_ms: 30 }.to_string();
+        assert!(d.contains("deadline exceeded") && d.contains("55") && d.contains("30"));
+        let o = Error::Overloaded { depth: 256, capacity: 256 }.to_string();
+        assert!(o.contains("overloaded") && o.contains("256/256"));
+    }
+}

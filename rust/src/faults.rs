@@ -1,0 +1,320 @@
+//! Deterministic, seed-driven fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] describes *which* failure sites misbehave and *when*:
+//! probabilistically (per-operation Bernoulli draws from a shared
+//! [`Rng`](crate::util::rng::Rng), so a plan seed replays bit-for-bit the
+//! way `PALLAS_PROP_SEED` replays a property case) or scripted (exact
+//! 1-based operation indices per site, for pinpoint regression tests).
+//! Installing a plan yields a [`FaultHandle`] — a cheap cloneable handle
+//! the failure-domain seams hold permanently:
+//!
+//! | domain                              | sites |
+//! |-------------------------------------|-------|
+//! | `ForwardModel` (mock backend)       | [`FaultSite::ModelTransient`], [`FaultSite::ModelPermanent`], [`FaultSite::ModelSlow`] |
+//! | `SpillTier` (disk cold tier)        | [`FaultSite::SpillWrite`], [`FaultSite::SpillRead`], [`FaultSite::SpillTorn`], [`FaultSite::SpillSlow`] |
+//! | `KvArena` (paged block allocator)   | [`FaultSite::ArenaSpike`] |
+//!
+//! (The fourth failure domain — the TCP front — is exercised from the
+//! *outside* by misbehaving-client integration tests; a client that
+//! disconnects mid-line needs no in-process seam.)
+//!
+//! The seams are compiled in unconditionally but **inert by default**:
+//! an uninstalled handle ([`FaultHandle::off`]) is a `None` and every
+//! [`FaultHandle::roll`] on it is a single branch — no lock, no RNG, no
+//! allocation — so the production request path pays one predictable-taken
+//! branch per potential fault site and nothing else.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// One injectable failure site. The per-site operation counter (the basis
+/// of scripted injection) counts every *attempt* at the site, fired or not.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultSite {
+    /// A forward call fails with a retryable backend error (`Error::Xla`).
+    ModelTransient,
+    /// A forward call fails with a non-retryable error
+    /// (`Error::ShapeMismatch`) — the request must die typed, not loop.
+    ModelPermanent,
+    /// A forward call stalls for the plan's `slow_step` before running.
+    ModelSlow,
+    /// A spill write fails with `Error::Io` before any bytes land.
+    SpillWrite,
+    /// A spill-file read fails with `Error::Io` (transient media error).
+    SpillRead,
+    /// A spill write persists a truncated file — later reloads must detect
+    /// it (`Error::Corrupt` via the CRC), never return wrong KV data.
+    SpillTorn,
+    /// A spill reload stalls for the plan's `slow_step` before decoding.
+    SpillSlow,
+    /// An arena block allocation reports exhaustion despite free blocks —
+    /// a refcount-pressure spike the shed/retry paths must absorb.
+    ArenaSpike,
+}
+
+impl FaultSite {
+    pub const ALL: [FaultSite; 8] = [
+        FaultSite::ModelTransient,
+        FaultSite::ModelPermanent,
+        FaultSite::ModelSlow,
+        FaultSite::SpillWrite,
+        FaultSite::SpillRead,
+        FaultSite::SpillTorn,
+        FaultSite::SpillSlow,
+        FaultSite::ArenaSpike,
+    ];
+}
+
+/// A deterministic fault schedule: per-site probabilities and/or scripted
+/// operation indices, all driven by one seed.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    seed: u64,
+    rates: HashMap<FaultSite, f64>,
+    scripts: HashMap<FaultSite, Vec<u64>>,
+    slow_step: Duration,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> Self {
+        FaultPlan {
+            seed,
+            rates: HashMap::new(),
+            scripts: HashMap::new(),
+            slow_step: Duration::from_micros(50),
+        }
+    }
+
+    /// Fire `site` on each operation independently with probability `p`.
+    pub fn with_rate(mut self, site: FaultSite, p: f64) -> Self {
+        self.rates.insert(site, p.clamp(0.0, 1.0));
+        self
+    }
+
+    /// Fire `site` exactly at the given 1-based operation indices
+    /// (in addition to any probabilistic rate on the same site).
+    pub fn script(mut self, site: FaultSite, ops: &[u64]) -> Self {
+        self.scripts.entry(site).or_default().extend_from_slice(ops);
+        self
+    }
+
+    /// How long `ModelSlow` / `SpillSlow` injections stall.
+    pub fn with_slow_step(mut self, d: Duration) -> Self {
+        self.slow_step = d;
+        self
+    }
+
+    /// Arm the plan: the returned handle (and its clones) is what the
+    /// failure-domain seams consult.
+    pub fn install(self) -> FaultHandle {
+        let rng = Rng::new(self.seed);
+        FaultHandle(Some(Arc::new(Inner {
+            plan: self,
+            state: Mutex::new(State {
+                rng,
+                counts: HashMap::new(),
+                injected: HashMap::new(),
+            }),
+        })))
+    }
+}
+
+struct Inner {
+    plan: FaultPlan,
+    state: Mutex<State>,
+}
+
+struct State {
+    rng: Rng,
+    /// Per-site operation counter (1-based after the bump).
+    counts: HashMap<FaultSite, u64>,
+    /// Per-site fired-fault counter.
+    injected: HashMap<FaultSite, u64>,
+}
+
+/// Shared handle to an installed [`FaultPlan`] — or, by default, to no
+/// plan at all. Cloning shares the plan state, so every seam holding a
+/// clone draws from the same deterministic schedule.
+#[derive(Clone, Default)]
+pub struct FaultHandle(Option<Arc<Inner>>);
+
+impl FaultHandle {
+    /// The inert handle: every roll is `false` at the cost of one branch.
+    pub fn off() -> Self {
+        FaultHandle(None)
+    }
+
+    /// Is a plan installed?
+    pub fn is_active(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Count one operation at `site` and decide whether it faults.
+    /// Scripted indices fire first; otherwise the site's rate draws from
+    /// the shared seeded RNG. An uninstalled handle returns `false`
+    /// without touching any state — the production fast path.
+    pub fn roll(&self, site: FaultSite) -> bool {
+        let Some(inner) = &self.0 else {
+            return false;
+        };
+        let mut st = inner.state.lock().expect("fault state lock");
+        let op = st.counts.entry(site).or_insert(0);
+        *op += 1;
+        let op = *op;
+        let scripted = inner
+            .plan
+            .scripts
+            .get(&site)
+            .is_some_and(|ops| ops.contains(&op));
+        let fired = scripted
+            || inner
+                .plan
+                .rates
+                .get(&site)
+                .copied()
+                .is_some_and(|p| p > 0.0 && st.rng.chance(p));
+        if fired {
+            *st.injected.entry(site).or_insert(0) += 1;
+        }
+        fired
+    }
+
+    /// The stall duration for slow-site injections (None when inert).
+    pub fn slow_step(&self) -> Option<Duration> {
+        self.0.as_ref().map(|i| i.plan.slow_step)
+    }
+
+    /// How many faults have fired at `site` so far.
+    pub fn injected(&self, site: FaultSite) -> u64 {
+        match &self.0 {
+            Some(inner) => {
+                let st = inner.state.lock().expect("fault state lock");
+                st.injected.get(&site).copied().unwrap_or(0)
+            }
+            None => 0,
+        }
+    }
+
+    /// Total faults fired across all sites.
+    pub fn total_injected(&self) -> u64 {
+        match &self.0 {
+            Some(inner) => {
+                let st = inner.state.lock().expect("fault state lock");
+                st.injected.values().sum()
+            }
+            None => 0,
+        }
+    }
+
+    /// How many operations `site` has seen (fired or not).
+    pub fn ops(&self, site: FaultSite) -> u64 {
+        match &self.0 {
+            Some(inner) => {
+                let st = inner.state.lock().expect("fault state lock");
+                st.counts.get(&site).copied().unwrap_or(0)
+            }
+            None => 0,
+        }
+    }
+}
+
+impl std::fmt::Debug for FaultHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.0 {
+            None => write!(f, "FaultHandle(off)"),
+            Some(inner) => write!(
+                f,
+                "FaultHandle(seed={}, injected={})",
+                inner.plan.seed,
+                self.total_injected()
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_handle_never_fires() {
+        let h = FaultHandle::off();
+        for site in FaultSite::ALL {
+            for _ in 0..100 {
+                assert!(!h.roll(site));
+            }
+            assert_eq!(h.injected(site), 0);
+            assert_eq!(h.ops(site), 0);
+        }
+        assert!(!h.is_active());
+        assert!(h.slow_step().is_none());
+    }
+
+    #[test]
+    fn default_handle_is_off() {
+        let h = FaultHandle::default();
+        assert!(!h.is_active());
+        assert!(!h.roll(FaultSite::ModelTransient));
+    }
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let mk = || FaultPlan::new(42).with_rate(FaultSite::SpillRead, 0.3).install();
+        let a = mk();
+        let b = mk();
+        let sa: Vec<bool> = (0..200).map(|_| a.roll(FaultSite::SpillRead)).collect();
+        let sb: Vec<bool> = (0..200).map(|_| b.roll(FaultSite::SpillRead)).collect();
+        assert_eq!(sa, sb, "same seed must replay the same fault schedule");
+        assert!(sa.iter().any(|&x| x), "rate 0.3 over 200 ops should fire");
+        assert!(!sa.iter().all(|&x| x), "rate 0.3 should not always fire");
+        assert_eq!(a.injected(FaultSite::SpillRead), b.injected(FaultSite::SpillRead));
+    }
+
+    #[test]
+    fn scripted_ops_fire_exactly() {
+        let h = FaultPlan::new(7)
+            .script(FaultSite::ModelTransient, &[2, 5])
+            .install();
+        let fired: Vec<bool> = (0..6).map(|_| h.roll(FaultSite::ModelTransient)).collect();
+        assert_eq!(fired, vec![false, true, false, false, true, false]);
+        assert_eq!(h.injected(FaultSite::ModelTransient), 2);
+        assert_eq!(h.ops(FaultSite::ModelTransient), 6);
+        // other sites untouched
+        assert!(!h.roll(FaultSite::SpillWrite));
+        assert_eq!(h.injected(FaultSite::SpillWrite), 0);
+    }
+
+    #[test]
+    fn clones_share_state() {
+        let h = FaultPlan::new(1)
+            .script(FaultSite::ArenaSpike, &[2])
+            .install();
+        let h2 = h.clone();
+        assert!(!h.roll(FaultSite::ArenaSpike)); // op 1
+        assert!(h2.roll(FaultSite::ArenaSpike)); // op 2 — shared counter
+        assert_eq!(h.total_injected(), 1);
+    }
+
+    #[test]
+    fn rate_one_always_fires_rate_zero_never() {
+        let h = FaultPlan::new(9)
+            .with_rate(FaultSite::SpillWrite, 1.0)
+            .with_rate(FaultSite::SpillRead, 0.0)
+            .install();
+        for _ in 0..50 {
+            assert!(h.roll(FaultSite::SpillWrite));
+            assert!(!h.roll(FaultSite::SpillRead));
+        }
+    }
+
+    #[test]
+    fn slow_step_configurable() {
+        let h = FaultPlan::new(3)
+            .with_slow_step(Duration::from_millis(2))
+            .install();
+        assert_eq!(h.slow_step(), Some(Duration::from_millis(2)));
+    }
+}

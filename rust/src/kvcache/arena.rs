@@ -116,6 +116,10 @@ struct ArenaInner {
     /// (which would alias — and under `Sync`, race — against concurrent
     /// reads of other blocks).
     slab: Box<[UnsafeCell<f32>]>,
+    /// Plan-driven fault seam (`FaultSite::ArenaSpike`): set at most once
+    /// via [`KvArena::install_faults`]; the production cost of an
+    /// uninstalled seam is one relaxed atomic load per allocation.
+    faults: std::sync::OnceLock<crate::faults::FaultHandle>,
 }
 
 // SAFETY: the slab cells are only accessed through the block discipline
@@ -185,8 +189,17 @@ impl KvArena {
                 pool: BlockPool::new(capacity_blocks, block_tokens),
                 geom,
                 slab,
+                faults: std::sync::OnceLock::new(),
             }),
         }
+    }
+
+    /// Attach a fault plan to this arena (and every clone of the handle).
+    /// `FaultSite::ArenaSpike` then makes allocations report exhaustion on
+    /// schedule, despite free blocks — the refcount-pressure spike the
+    /// shed/retry paths must absorb. One-shot: later installs are ignored.
+    pub fn install_faults(&self, h: crate::faults::FaultHandle) {
+        let _ = self.inner.faults.set(h);
     }
 
     /// Default sizing: [`DEFAULT_BLOCK_TOKENS`]-token blocks, capacity for
@@ -252,6 +265,11 @@ impl KvArena {
 
     /// Allocate one zeroed block.
     fn alloc_zeroed(&self) -> Result<BlockRef> {
+        if let Some(h) = self.inner.faults.get() {
+            if h.roll(crate::faults::FaultSite::ArenaSpike) {
+                return Err(Error::ArenaExhausted { needed: 1, free: 0 });
+            }
+        }
         let b = self.inner.pool.alloc().ok_or(Error::ArenaExhausted {
             needed: 1,
             free: 0,

@@ -91,6 +91,21 @@ impl CacheStats {
             self.spill_reload_us_total as f64 / self.spill_hits as f64 / 1e3
         }
     }
+
+    /// Human-readable degraded-mode warning, if the cache is running in
+    /// one (spilling requested but unavailable). `None` when healthy.
+    pub fn health_warning(&self) -> Option<String> {
+        if self.spill_setup_failed {
+            Some(
+                "spill directory setup failed: cache degraded to \
+                 drop-on-evict (evictions destroy records instead of \
+                 spilling to disk)"
+                    .to_string(),
+            )
+        } else {
+            None
+        }
+    }
 }
 
 /// What became of one evicted hot entry.
@@ -201,6 +216,14 @@ impl KvStore {
 
     pub fn config(&self) -> &CacheConfig {
         &self.cfg
+    }
+
+    /// Attach a fault plan to the cold tier (no-op when spilling is
+    /// disabled) — the `SpillTier` failure-domain seam.
+    pub fn install_faults(&mut self, h: crate::faults::FaultHandle) {
+        if let Some(t) = &mut self.tier {
+            t.set_faults(h);
+        }
     }
 
     /// Hot (arena-resident) entries.
@@ -500,8 +523,15 @@ impl KvStore {
         // only the decode-into-arena retries under residual pressure.
         let buf = match self.tier.as_ref().expect("tokens_of implies a tier").read(id) {
             Ok(b) => b,
+            Err(Error::Io(_)) => {
+                // transient read failure (media hiccup): keep the cold
+                // entry and its index entries — the next lookup for this
+                // id naturally retries the reload
+                self.stats.spill_load_errors += 1;
+                return (None, evicted);
+            }
             Err(_) => {
-                // unreadable file: typed load error, entry is dead
+                // entry desync (not in the tier): typed load error, dead
                 self.tier
                     .as_mut()
                     .expect("tokens_of implies a tier")

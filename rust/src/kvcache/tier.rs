@@ -26,6 +26,7 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::error::{Error, Result};
+use crate::faults::{FaultHandle, FaultSite};
 
 use super::{persist, KvArena, KvRecord};
 
@@ -57,6 +58,10 @@ pub struct SpillTier {
     /// for the owner to unindex.
     dropped: Vec<u64>,
     drops: u64,
+    /// Plan-driven fault seam (inert unless a `FaultPlan` is installed):
+    /// `SpillWrite`/`SpillTorn` fire per spill, `SpillRead` per file read,
+    /// `SpillSlow` per reload.
+    faults: FaultHandle,
 }
 
 impl SpillTier {
@@ -87,7 +92,13 @@ impl SpillTier {
             cold_bytes: 0,
             dropped: Vec::new(),
             drops: 0,
+            faults: FaultHandle::off(),
         })
+    }
+
+    /// Attach a fault plan (the `SpillTier` failure-domain seam).
+    pub fn set_faults(&mut self, h: FaultHandle) {
+        self.faults = h;
     }
 
     /// A tier over a fresh unique directory under the OS temp dir,
@@ -187,7 +198,20 @@ impl SpillTier {
     /// alone exceeds the tier budget or the write fails; the caller then
     /// falls back to destroying the record (the pre-tier behavior).
     pub fn spill(&mut self, id: u64, rec: &KvRecord) -> Result<usize> {
-        let buf = persist::to_bytes(rec, self.compress);
+        if self.faults.roll(FaultSite::SpillWrite) {
+            return Err(Error::Io(std::io::Error::other(
+                "injected spill write fault",
+            )));
+        }
+        let mut buf = persist::to_bytes(rec, self.compress);
+        if self.faults.roll(FaultSite::SpillTorn) {
+            // A torn write persists a prefix of the serialized bytes. The
+            // truncation happens BEFORE accounting, so cold_bytes still
+            // equals the on-disk size (conservation holds); the damage
+            // surfaces at reload time as a CRC failure (`Error::Corrupt`),
+            // never as silently wrong KV data.
+            buf.truncate(buf.len() / 2);
+        }
         if self.max_bytes > 0 && buf.len() > self.max_bytes {
             return Err(Error::Rejected(format!(
                 "record of {} serialized bytes exceeds spill budget {}",
@@ -226,6 +250,11 @@ impl SpillTier {
         if !self.entries.contains_key(&id) {
             return Err(Error::Corrupt(format!("id {id} not in the spill tier")));
         }
+        if self.faults.roll(FaultSite::SpillRead) {
+            return Err(Error::Io(std::io::Error::other(
+                "injected spill read fault",
+            )));
+        }
         Ok(std::fs::read(self.path_of(id))?)
     }
 
@@ -235,6 +264,11 @@ impl SpillTier {
     /// shedding hot records; a `Corrupt`/IO error means the entry is dead
     /// and should be [`drop_entry`](Self::drop_entry)-ed.
     pub fn load(&mut self, id: u64, arena: &KvArena) -> Result<KvRecord> {
+        if self.faults.roll(FaultSite::SpillSlow) {
+            if let Some(d) = self.faults.slow_step() {
+                std::thread::sleep(d);
+            }
+        }
         let rec = persist::from_bytes(&self.read(id)?, arena)?;
         self.drop_entry(id);
         Ok(rec)
@@ -337,6 +371,60 @@ mod tests {
         assert!(t.contains(5), "failed load leaves the entry for the caller");
         assert!(t.drop_entry(5));
         assert!(!path.exists());
+    }
+
+    #[test]
+    fn injected_write_fault_fails_spill_cleanly() {
+        use crate::faults::{FaultPlan, FaultSite};
+        let a = arena();
+        let mut t = SpillTier::at_tempdir(1 << 20, false).unwrap();
+        t.set_faults(FaultPlan::new(1).script(FaultSite::SpillWrite, &[1]).install());
+        match t.spill(1, &rec_in(&a, 6, 1)) {
+            Err(Error::Io(_)) => {}
+            other => panic!("expected Io, got {other:?}"),
+        }
+        assert_eq!(t.len(), 0, "failed spill leaves the tier unchanged");
+        assert_eq!(t.cold_bytes(), 0);
+        // the fault was single-shot: the retry lands
+        t.spill(1, &rec_in(&a, 6, 1)).unwrap();
+        assert!(t.contains(1));
+    }
+
+    #[test]
+    fn torn_write_keeps_accounting_consistent_and_fails_crc_on_reload() {
+        use crate::faults::{FaultPlan, FaultSite};
+        let a = arena();
+        let mut t = SpillTier::at_tempdir(1 << 20, false).unwrap();
+        t.set_faults(FaultPlan::new(2).script(FaultSite::SpillTorn, &[1]).install());
+        let n = t.spill(3, &rec_in(&a, 8, 5)).unwrap();
+        // cold_bytes equals the truncated on-disk size — conservation holds
+        let disk = std::fs::metadata(t.dir().join("3.kv")).unwrap().len() as usize;
+        assert_eq!(n, disk);
+        assert_eq!(t.cold_bytes(), disk);
+        // the damage surfaces as a typed Corrupt at reload, never bad KV
+        match t.load(3, &a) {
+            Err(Error::Corrupt(_)) => {}
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+        assert!(t.contains(3), "caller decides to drop the dead entry");
+        t.drop_entry(3);
+    }
+
+    #[test]
+    fn injected_read_fault_is_transient_entry_survives() {
+        use crate::faults::{FaultPlan, FaultSite};
+        let a = arena();
+        let mut t = SpillTier::at_tempdir(1 << 20, false).unwrap();
+        t.spill(9, &rec_in(&a, 6, 2)).unwrap();
+        t.set_faults(FaultPlan::new(3).script(FaultSite::SpillRead, &[1]).install());
+        match t.read(9) {
+            Err(e @ Error::Io(_)) => assert!(e.is_transient()),
+            other => panic!("expected Io, got {other:?}"),
+        }
+        assert!(t.contains(9), "read fault must not destroy the entry");
+        // next read succeeds — the fault was transient
+        assert!(t.read(9).is_ok());
+        assert!(t.load(9, &a).is_ok());
     }
 
     #[test]

@@ -26,6 +26,7 @@ pub mod config;
 pub mod coordinator;
 pub mod engine;
 pub mod error;
+pub mod faults;
 pub mod index;
 pub mod kvcache;
 pub mod metrics;

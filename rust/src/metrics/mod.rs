@@ -203,6 +203,15 @@ pub struct SchedulerStats {
     pub prefill_stall_tokens_max: u64,
     /// Prefill chunk retries (shed-and-resume after a failed step).
     pub prefill_retries: u64,
+    /// Transient step failures (model/IO/arena) that armed a backoff
+    /// retry instead of failing the request.
+    pub transient_retries: u64,
+    /// Requests failed after exhausting `transient_retry_limit` attempts.
+    pub retry_give_ups: u64,
+    /// Requests failed by the per-request deadline sweep
+    /// (`request_timeout_ms`), wherever they were: queued, deferred,
+    /// prefilling, or decoding.
+    pub deadline_timeouts: u64,
     /// Requests that have emitted their first decode token.
     pub first_tokens: u64,
     /// Total time-to-first-token (queue wait + prefill ticks) over those

@@ -165,6 +165,16 @@ impl<M: ForwardModel> Recycler<M> {
         &self.store
     }
 
+    /// Attach a fault plan to every failure domain this recycler owns:
+    /// the cold spill tier and the KV arena. The model's own seam lives
+    /// on [`crate::testutil::MockModel::with_faults`]. A cloned handle
+    /// shares one schedule, so one seeded plan drives all domains
+    /// deterministically.
+    pub fn install_faults(&mut self, h: crate::faults::FaultHandle) {
+        self.store.install_faults(h.clone());
+        self.engine.arena().install_faults(h);
+    }
+
     pub fn tokenizer(&self) -> Arc<Tokenizer> {
         Arc::clone(&self.tokenizer)
     }

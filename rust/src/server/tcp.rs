@@ -7,7 +7,7 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use crate::coordinator::Coordinator;
+use crate::coordinator::{Coordinator, Response};
 use crate::error::{Error, Result};
 use crate::util::json::{self, Value};
 
@@ -91,13 +91,27 @@ fn handle_conn(stream: TcpStream, coordinator: Arc<Coordinator>) {
         Ok(w) => w,
         Err(_) => return,
     };
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
-        if line.trim().is_empty() {
-            continue;
+    let mut reader = BufReader::new(stream);
+    // Byte-level framing (not `lines()`): a misbehaving client sending
+    // invalid UTF-8 gets a typed error reply and the connection KEEPS
+    // serving — only EOF or a real socket error closes it. (`lines()`
+    // folds invalid UTF-8 into `Err` and silently dropped the stream.)
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        buf.clear();
+        match reader.read_until(b'\n', &mut buf) {
+            Ok(0) | Err(_) => break, // EOF / socket error
+            Ok(_) => {}
         }
-        let reply = serve_line(&line, &coordinator);
+        let reply = match std::str::from_utf8(&buf) {
+            Ok(text) => {
+                if text.trim().is_empty() {
+                    continue;
+                }
+                serve_line(text, &coordinator)
+            }
+            Err(_) => error_reply(&Error::Json("request line is not valid UTF-8".into())),
+        };
         if writer
             .write_all((reply.to_json() + "\n").as_bytes())
             .is_err()
@@ -108,14 +122,21 @@ fn handle_conn(stream: TcpStream, coordinator: Arc<Coordinator>) {
     log::debug!("connection closed: {peer:?}");
 }
 
+/// The wire-format failure reply: message plus the stable
+/// machine-readable `error_kind` label from the failure taxonomy.
+fn error_reply(e: &Error) -> Value {
+    json::obj(vec![
+        ("ok", json::b(false)),
+        ("error", json::s(&e.to_string())),
+        ("error_kind", json::s(e.kind())),
+    ])
+}
+
 /// One request line -> one response value (pure; unit-testable).
 pub fn serve_line(line: &str, coordinator: &Coordinator) -> Value {
     match serve_line_inner(line, coordinator) {
         Ok(v) => v,
-        Err(e) => json::obj(vec![
-            ("ok", json::b(false)),
-            ("error", json::s(&e.to_string())),
-        ]),
+        Err(e) => error_reply(&e),
     }
 }
 
@@ -130,19 +151,25 @@ fn serve_line_inner(line: &str, coordinator: &Coordinator) -> Result<Value> {
         .get("session")
         .and_then(|v| v.as_str())
         .map(|s| s.to_string());
-    let outcome = match session {
-        Some(sid) => coordinator.chat(&sid, prompt, max_new)?,
-        None => coordinator.generate(prompt, max_new)?,
-    };
-    Ok(json::obj(vec![
-        ("ok", json::b(true)),
-        ("output", json::s(&outcome.text)),
-        ("latency_s", json::n(outcome.latency_s)),
-        ("reuse_depth", json::n(outcome.reuse_depth as f64)),
-        ("cache_hit", json::b(outcome.cache_hit)),
-        ("prompt_tokens", json::n(outcome.prompt_tokens as f64)),
-        ("new_tokens", json::n(outcome.ids.len() as f64)),
-    ]))
+    // `serve` hands back the worker's raw reply, so a scheduler-side
+    // failure (deadline, retry exhaustion, ...) keeps its typed kind all
+    // the way to the wire instead of collapsing into "rejected".
+    match coordinator.serve(prompt, max_new, session)? {
+        Response::Ok(outcome) => Ok(json::obj(vec![
+            ("ok", json::b(true)),
+            ("output", json::s(&outcome.text)),
+            ("latency_s", json::n(outcome.latency_s)),
+            ("reuse_depth", json::n(outcome.reuse_depth as f64)),
+            ("cache_hit", json::b(outcome.cache_hit)),
+            ("prompt_tokens", json::n(outcome.prompt_tokens as f64)),
+            ("new_tokens", json::n(outcome.ids.len() as f64)),
+        ])),
+        Response::Err { msg, kind } => Ok(json::obj(vec![
+            ("ok", json::b(false)),
+            ("error", json::s(&msg)),
+            ("error_kind", json::s(kind)),
+        ])),
+    }
 }
 
 /// Minimal blocking client for tests/examples.

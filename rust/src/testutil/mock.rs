@@ -15,6 +15,7 @@ use std::time::Duration;
 use crate::config::ModelConfig;
 use crate::engine::{BatchItem, ForwardModel};
 use crate::error::{Error, Result};
+use crate::faults::{FaultHandle, FaultSite};
 use crate::kvcache::KvView;
 
 pub struct MockModel {
@@ -23,6 +24,8 @@ pub struct MockModel {
     pub delay_per_token: Duration,
     /// Fail the Nth forward call (failure injection).
     fail_on_call: Option<usize>,
+    /// Plan-driven fault seam (inert unless a `FaultPlan` is installed).
+    faults: FaultHandle,
     calls: AtomicUsize,
 }
 
@@ -32,6 +35,7 @@ impl MockModel {
             cfg,
             delay_per_token: Duration::ZERO,
             fail_on_call: None,
+            faults: FaultHandle::off(),
             calls: AtomicUsize::new(0),
         }
     }
@@ -46,6 +50,14 @@ impl MockModel {
     /// Make the `n`-th forward call (1-based) return an error.
     pub fn fail_on_call(mut self, n: usize) -> Self {
         self.fail_on_call = Some(n);
+        self
+    }
+
+    /// Attach a fault plan (the `ForwardModel` failure-domain seam:
+    /// `ModelTransient`, `ModelPermanent`, `ModelSlow` fire per forward
+    /// call).
+    pub fn with_faults(mut self, h: FaultHandle) -> Self {
+        self.faults = h;
         self
     }
 
@@ -67,6 +79,17 @@ impl MockModel {
         let n = self.calls.fetch_add(1, Ordering::Relaxed) + 1;
         if self.fail_on_call == Some(n) {
             return Err(Error::Xla("injected failure".into()));
+        }
+        if self.faults.roll(FaultSite::ModelTransient) {
+            return Err(Error::Xla("injected transient model fault".into()));
+        }
+        if self.faults.roll(FaultSite::ModelPermanent) {
+            return Err(Error::ShapeMismatch("injected permanent model fault".into()));
+        }
+        if self.faults.roll(FaultSite::ModelSlow) {
+            if let Some(d) = self.faults.slow_step() {
+                std::thread::sleep(d);
+            }
         }
         let c = tokens.len();
         let v = self.cfg.vocab_size;
@@ -191,6 +214,30 @@ mod tests {
         assert!(m.forward_chunk(&[1], 1, &mut kv, 0).is_ok());
         assert!(m.forward_chunk(&[2], 1, &mut kv, 1).is_err());
         assert!(m.forward_chunk(&[2], 1, &mut kv, 1).is_ok());
+    }
+
+    #[test]
+    fn fault_plan_drives_forward_errors() {
+        use crate::faults::{FaultPlan, FaultSite};
+        // per-site op counters: call 2's transient fault short-circuits, so
+        // the permanent site sees its 2nd op on forward call 3
+        let h = FaultPlan::new(5)
+            .script(FaultSite::ModelTransient, &[2])
+            .script(FaultSite::ModelPermanent, &[2])
+            .install();
+        let m = MockModel::new(ModelConfig::nano()).with_faults(h.clone());
+        let mut kv = arena(&m).new_view();
+        assert!(m.forward_chunk(&[1], 1, &mut kv, 0).is_ok());
+        match m.forward_chunk(&[2], 1, &mut kv, 1) {
+            Err(e) => assert!(e.is_transient(), "ModelTransient must be retryable"),
+            ok => panic!("expected transient fault, got {:?}", ok.map(|_| ())),
+        }
+        match m.forward_chunk(&[2], 1, &mut kv, 1) {
+            Err(e) => assert!(!e.is_transient(), "ModelPermanent must be terminal"),
+            ok => panic!("expected permanent fault, got {:?}", ok.map(|_| ())),
+        }
+        assert!(m.forward_chunk(&[2], 1, &mut kv, 1).is_ok());
+        assert_eq!(h.total_injected(), 2);
     }
 
     #[test]

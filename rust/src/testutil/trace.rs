@@ -133,8 +133,8 @@ where
                 outputs[*i] = Some(Ok(out.ids));
                 false
             }
-            Ok(Response::Err(e)) => {
-                outputs[*i] = Some(Err(e));
+            Ok(Response::Err { msg, .. }) => {
+                outputs[*i] = Some(Err(msg));
                 false
             }
             Err(mpsc::TryRecvError::Disconnected) => {

@@ -72,6 +72,11 @@ fn malformed_request_gets_error_not_disconnect() {
     let mut line = String::new();
     r.read_line(&mut line).unwrap();
     assert!(line.contains("\"ok\":false"));
+    // the reply carries the machine-readable taxonomy label
+    assert!(
+        line.contains("\"error_kind\":\"json\""),
+        "missing error_kind: {line}"
+    );
     // connection still usable
     w.write_all(br#"{"prompt": "still alive", "max_new_tokens": 2}"#)
         .unwrap();
@@ -79,6 +84,78 @@ fn malformed_request_gets_error_not_disconnect() {
     line.clear();
     r.read_line(&mut line).unwrap();
     assert!(line.contains("\"ok\":true"));
+    server.stop();
+}
+
+#[test]
+fn invalid_utf8_line_gets_typed_error_and_connection_survives() {
+    // A client pushing raw non-UTF-8 bytes must get a typed error reply on
+    // the same connection — not a silent disconnect (the pre-hardening
+    // `lines()` framing folded invalid UTF-8 into Err and dropped the
+    // stream).
+    let (_c, server) = spawn_stack();
+    use std::io::{BufRead, BufReader, Write};
+    let stream = std::net::TcpStream::connect(server.addr()).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+    w.write_all(b"\xff\xfe not utf8 \x80\n").unwrap();
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":false"), "bad reply: {line}");
+    assert!(
+        line.contains("\"error_kind\":\"json\""),
+        "missing error_kind: {line}"
+    );
+    assert!(line.contains("UTF-8"), "unhelpful message: {line}");
+    // same connection, valid request: still served
+    w.write_all(br#"{"prompt": "after the garbage", "max_new_tokens": 2}"#)
+        .unwrap();
+    w.write_all(b"\n").unwrap();
+    line.clear();
+    r.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":true"), "connection died: {line}");
+    server.stop();
+}
+
+#[test]
+fn scheduler_errors_keep_their_kind_on_the_wire() {
+    // A serving-path failure must reach the client with its taxonomy
+    // label, not collapse into a generic rejection: an over-window prompt
+    // fails admission with `prompt_too_long`.
+    let (_c, server) = spawn_stack();
+    let mut client = TcpClient::connect(server.addr()).unwrap();
+    let long = "w".repeat(4 * ModelConfig::nano().max_seq);
+    let resp = client.request(&long, 2, None).unwrap();
+    assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(false));
+    let kind = resp
+        .get("error_kind")
+        .and_then(|v| v.as_str())
+        .unwrap_or_default()
+        .to_string();
+    assert!(
+        kind == "prompt_too_long" || kind == "context_exhausted",
+        "expected an admission kind, got {kind:?}: {}",
+        resp.to_json()
+    );
+    server.stop();
+}
+
+#[test]
+fn client_disconnect_mid_line_leaves_server_serving() {
+    // A client that dies mid-request-line (no trailing newline) must only
+    // kill its own connection thread; the accept loop and other clients
+    // keep working.
+    let (_c, server) = spawn_stack();
+    {
+        use std::io::Write;
+        let mut w = std::net::TcpStream::connect(server.addr()).unwrap();
+        w.write_all(br#"{"prompt": "I will never finish this li"#)
+            .unwrap();
+        // dropped here: EOF mid-line on the server side
+    }
+    let mut client = TcpClient::connect(server.addr()).unwrap();
+    let resp = client.request("a well behaved request", 2, None).unwrap();
+    assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
     server.stop();
 }
 

@@ -3,12 +3,13 @@
 //! vendor set). Each property runs over hundreds of seeded random inputs;
 //! failures report the reproducing seed.
 
-use std::collections::VecDeque;
+use std::collections::{HashSet, VecDeque};
 use std::sync::Arc;
 
 use recycle_serve::config::{CacheConfig, EvictionPolicy, ModelConfig, ServerConfig};
 use recycle_serve::coordinator::{admission_prompt, SchedEvent, SessionManager};
 use recycle_serve::engine::{plan_chunks, DecodeStream, Engine};
+use recycle_serve::faults::{FaultHandle, FaultPlan, FaultSite};
 use recycle_serve::testutil::trace::{run_script, shrink_script, Arrival, Script, TraceRun};
 use recycle_serve::index::{FlatIndex, NgramEmbedder};
 use recycle_serve::kvcache::{persist, BlockPool, Eviction, KvArena, KvRecord, KvStore, KvView};
@@ -1193,7 +1194,16 @@ fn sequential_reference(
     policy: RecyclePolicy,
     script: &Script,
 ) -> Vec<std::result::Result<Vec<u32>, String>> {
-    let mut seq = mk_recycler(policy);
+    sequential_reference_on(mk_recycler(policy), script)
+}
+
+/// [`sequential_reference`] over a caller-built recycler (the chaos suite
+/// matches the scheduler arm's arena sizing so both arms see identical
+/// resource limits).
+fn sequential_reference_on(
+    mut seq: Recycler<MockModel>,
+    script: &Script,
+) -> Vec<std::result::Result<Vec<u32>, String>> {
     let mut sessions = SessionManager::new();
     let mut expected = Vec::new();
     for a in &script.arrivals {
@@ -1375,4 +1385,239 @@ fn prop_recycled_equals_baseline_any_split() {
         );
         Ok(())
     });
+}
+
+// ---------- chaos: fault injection vs the serving contract ----------
+
+/// The scheduler arm of a chaos run: mock backend + spill tier + arena all
+/// share one installed fault plan. The arena is caller-owned so its block
+/// accounting can be audited after the scheduler (and the recycler inside
+/// it) has been dropped.
+fn mk_chaos_recycler(arena: &KvArena, h: &FaultHandle) -> Recycler<MockModel> {
+    let mut r = Recycler::new(
+        Engine::with_arena(
+            MockModel::new(ModelConfig::nano()).with_faults(h.clone()),
+            arena.clone(),
+        ),
+        Arc::new(Tokenizer::new(vec![])),
+        Box::new(NgramEmbedder::new(64)),
+        CacheConfig {
+            // small hot tier + a cold tier so random workloads actually
+            // evict, spill, and reload — the SpillWrite/Read/Torn sites
+            // see traffic instead of idling
+            max_entries: 4,
+            max_spill_bytes: 1 << 20,
+            ..Default::default()
+        },
+        RecyclePolicy::Strict,
+    );
+    r.install_faults(h.clone());
+    r
+}
+
+/// A randomized serving workload (fresh prompts, shared-prefix repeats and
+/// extensions, two interleaved sessions) — the same shape the
+/// chunked-prefill exactness property drives.
+fn random_workload(rng: &mut Rng) -> Script {
+    let bases: Vec<String> =
+        (0..3).map(|i| format!("base {i} {}", text(rng, 30))).collect();
+    let n_req = rng.range(4, 10);
+    let mut arrivals: Vec<Arrival> = (0..n_req)
+        .map(|_| {
+            let at_tick = rng.below(8);
+            match rng.below(4) {
+                0 => Arrival {
+                    at_tick,
+                    prompt: format!("q {}", text(rng, 40)),
+                    max_new: rng.range(1, 5),
+                    session: None,
+                },
+                1 => Arrival {
+                    at_tick,
+                    prompt: rng.choice(&bases).clone(),
+                    max_new: rng.range(1, 5),
+                    session: None,
+                },
+                2 => {
+                    let b = rng.choice(&bases).clone();
+                    let suffix = text(rng, 20);
+                    Arrival {
+                        at_tick,
+                        prompt: format!("{b} {suffix}"),
+                        max_new: rng.range(1, 5),
+                        session: None,
+                    }
+                }
+                _ => Arrival {
+                    at_tick,
+                    prompt: format!("m {}", text(rng, 14)),
+                    max_new: rng.range(1, 4),
+                    session: Some(format!("s{}", rng.below(2))),
+                },
+            }
+        })
+        .collect();
+    // stable sort: delivery order == script order == the sequential arm's
+    // serving order (per-session turn order must agree between the arms)
+    arrivals.sort_by_key(|a| a.at_tick);
+    Script { arrivals }
+}
+
+/// A random fault plan over the tick-safe sites. The slow sites are left
+/// out (wall-clock stalls add nothing to a tick-driven run); permanent and
+/// arena rates stay low so most requests still exercise a full lifecycle
+/// rather than dying at admission.
+fn random_fault_plan(rng: &mut Rng) -> FaultPlan {
+    let mut plan = FaultPlan::new(rng.next_u64());
+    if rng.chance(0.8) {
+        plan = plan.with_rate(FaultSite::ModelTransient, 0.03 * rng.below(4) as f64);
+    }
+    if rng.chance(0.3) {
+        plan = plan.with_rate(FaultSite::ModelPermanent, 0.02);
+    }
+    if rng.chance(0.5) {
+        plan = plan.with_rate(FaultSite::SpillWrite, 0.1 * rng.below(4) as f64);
+    }
+    if rng.chance(0.5) {
+        plan = plan.with_rate(FaultSite::SpillRead, 0.1 * rng.below(4) as f64);
+    }
+    if rng.chance(0.5) {
+        plan = plan.with_rate(FaultSite::SpillTorn, 0.1 * rng.below(4) as f64);
+    }
+    if rng.chance(0.4) {
+        plan = plan.with_rate(FaultSite::ArenaSpike, 0.02 * rng.below(3) as f64);
+    }
+    if rng.chance(0.3) {
+        // pinpoint strike early in the run, on top of any rates
+        plan = plan.script(FaultSite::ModelTransient, &[rng.range(1, 30) as u64]);
+    }
+    plan
+}
+
+/// One chaos run, asserting the full failure contract from
+/// `coordinator/mod.rs` ("Failure semantics"):
+///
+/// 1. **termination** — the run converges within the tick bound;
+/// 2. **exactly one reply** per request (no dropped reply channels);
+/// 3. **arena conservation** — blocks stay conserved and fully drain once
+///    the scheduler is gone, however the fault schedule interleaved;
+/// 4. **fault-free identity** — every request that still succeeded emits
+///    exactly the tokens an undisturbed sequential run emits (retries and
+///    cache-path faults are invisible in the output stream).
+///
+/// `Err` carries the first violation — also the shrink predicate.
+fn chaos_contract(
+    plan: &FaultPlan,
+    cfg: &ServerConfig,
+    script: &Script,
+) -> std::result::Result<(), String> {
+    let arena = KvArena::new(&ModelConfig::nano(), 8, 512);
+    let h = plan.clone().install();
+    let run = run_script(|| mk_chaos_recycler(&arena, &h), cfg.clone(), script, 50_000)?;
+    for (i, o) in run.outputs.iter().enumerate() {
+        if let Err(m) = o {
+            if m.contains("dropped without reply") || m.contains("never completed") {
+                return Err(format!("request {i} broke the one-reply contract: {m}"));
+            }
+        }
+    }
+    assert_arena_conserved(&arena, "after chaos run")?;
+    if arena.free_blocks() != arena.capacity_blocks() {
+        return Err(format!(
+            "block leak: {} of {} blocks still held after the scheduler drained",
+            arena.used_blocks(),
+            arena.capacity_blocks()
+        ));
+    }
+    // fault-free identity, against a sequential run with the same arena
+    // sizing and no plan installed; a session is only comparable up to its
+    // first faulted turn (later turns legitimately see a shorter
+    // transcript than the undisturbed run)
+    let reference = sequential_reference_on(
+        mk_chaos_recycler(
+            &KvArena::new(&ModelConfig::nano(), 8, 512),
+            &FaultHandle::off(),
+        ),
+        script,
+    );
+    let mut tainted: HashSet<&str> = HashSet::new();
+    for (i, a) in script.arrivals.iter().enumerate() {
+        if let Some(s) = &a.session {
+            if tainted.contains(s.as_str()) {
+                continue;
+            }
+            if run.outputs[i].is_err() {
+                tainted.insert(s.as_str());
+                continue;
+            }
+        }
+        if let Ok(got) = &run.outputs[i] {
+            match &reference[i] {
+                Ok(want) if want == got => {}
+                other => {
+                    return Err(format!(
+                        "request {i} survived faults but diverged: \
+                         faulted run {got:?} vs fault-free {other:?}"
+                    ))
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_chaos_random_faults_keep_the_serving_contract() {
+    // THE chaos property: a random workload under a seeded random fault
+    // plan never wedges the scheduler, never drops a reply, conserves the
+    // arena, and leaves every surviving request token-identical to an
+    // undisturbed run. Failures print the seed (via the prop harness), the
+    // fault plan, and a shrunk minimal script.
+    check("chaos: faults vs serving contract", 10, |rng| {
+        let script = random_workload(rng);
+        let plan = random_fault_plan(rng);
+        let cfg = ServerConfig {
+            max_batch: rng.range(2, 5),
+            prefill_chunk_tokens: rng.range(1, 48),
+            max_prefilling_slots: rng.range(1, 3),
+            ..Default::default()
+        };
+        if let Err(msg) = chaos_contract(&plan, &cfg, &script) {
+            let minimal =
+                shrink_script(&script, |s| chaos_contract(&plan, &cfg, s).is_err());
+            prop_assert!(
+                false,
+                "{msg}\nminimal failing script: {minimal:?}\nplan: {plan:?}\n\
+                 cfg: chunk_tokens={} prefill_slots={} max_batch={}",
+                cfg.prefill_chunk_tokens,
+                cfg.max_prefilling_slots,
+                cfg.max_batch
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn chaos_smoke_fixed_seed() {
+    // Fast-lane pin: one known-seed chaos case (well under a second) so
+    // the default `cargo test -q` always exercises the fault machinery
+    // end to end; the scheduled slow lane runs the full property at 10x.
+    let mut rng = Rng::new(0xC4A05);
+    let script = random_workload(&mut rng);
+    let plan = FaultPlan::new(0xFA17)
+        .with_rate(FaultSite::ModelTransient, 0.05)
+        .with_rate(FaultSite::SpillRead, 0.2)
+        .with_rate(FaultSite::SpillTorn, 0.2)
+        .with_rate(FaultSite::ArenaSpike, 0.02)
+        .script(FaultSite::ModelPermanent, &[40]);
+    let cfg = ServerConfig {
+        max_batch: 3,
+        prefill_chunk_tokens: 16,
+        max_prefilling_slots: 2,
+        ..Default::default()
+    };
+    if let Err(msg) = chaos_contract(&plan, &cfg, &script) {
+        panic!("fixed-seed chaos smoke failed: {msg}");
+    }
 }
