@@ -1,0 +1,437 @@
+//! A8 — sharded multi-worker serving ablation: the prefix-affinity
+//! router over N schedulers, with the shared spill tier as the
+//! cache-mobility layer.
+//!
+//! Three sweeps over the real `Coordinator` (router + N workers, each a
+//! full Scheduler + KvArena + KvStore + Recycler stack on its own
+//! thread), driven by the delayed mock backend so wall-clock is a cost
+//! model, not noise:
+//!
+//! 1. **Throughput scaling** — 48 distinct-family prompts submitted
+//!    concurrently against 1 / 2 / 4 workers. Work is dominated by the
+//!    per-token prefill delay, which serializes per worker, so tokens/s
+//!    must grow with the worker count (asserted on the round-robin arms,
+//!    whose placement is perfectly balanced by construction).
+//!
+//! 2. **Placement quality** — the seeded multi-tenant trace
+//!    (`bench::multi_tenant_trace`: bursty arrivals, heavy-tailed
+//!    session reuse, tenant-shared prompt templates) served serially
+//!    under PrefixAffinity vs RoundRobin at 2 and 4 workers.
+//!    PrefixAffinity co-locates each tenant's prefix family on one
+//!    worker, so its hit set is a superset of round-robin's partitioned
+//!    caches — it must win on hit rate AND mean latency (asserted).
+//!
+//! 3. **Cross-worker cache mobility** — 2 round-robin workers over a
+//!    shared `spill_dir` with per-worker namespaces and `max_entries=1`.
+//!    Worker 0 computes and then spills a record; worker 1, which never
+//!    saw the prompt, must serve an extension of it by *adopting* the
+//!    spilled record out of its sibling's namespace: a spill-reload hit
+//!    on a worker that did not produce the record (asserted via the
+//!    per-worker `adoptions` counter in `cluster_stats()`).
+//!
+//! ```bash
+//! cargo bench --bench ablation_sharding            # full
+//! cargo bench --bench ablation_sharding -- --quick # smoke
+//! ```
+
+mod common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use recycle_serve::bench::{multi_tenant_trace, TraceSpec};
+use recycle_serve::config::{CacheConfig, ModelConfig, RoutingPolicy, ServerConfig};
+use recycle_serve::coordinator::Coordinator;
+use recycle_serve::engine::Engine;
+use recycle_serve::index::NgramEmbedder;
+use recycle_serve::kvcache::KvArena;
+use recycle_serve::recycler::{RecyclePolicy, Recycler};
+use recycle_serve::testutil::{MockModel, TempDir};
+use recycle_serve::tokenizer::Tokenizer;
+use recycle_serve::util::timing::Stopwatch;
+
+/// Simulated per-token encode cost: large enough that prefill work
+/// dominates scheduling overhead, so throughput reflects placement.
+const DELAY: Duration = Duration::from_micros(200);
+const MAX_NEW: usize = 8;
+
+/// A full serving cluster on the delayed mock backend. Each worker gets
+/// its own arena; when the cache has a `spill_dir`, each worker derives
+/// its collision-safe namespace from its index (the production scheme).
+fn cluster(
+    workers: usize,
+    routing: RoutingPolicy,
+    cache: CacheConfig,
+    arena_blocks: usize,
+) -> Coordinator {
+    Coordinator::spawn(
+        move |w| {
+            let cfg = ModelConfig::nano();
+            let arena = KvArena::new(&cfg, 16, arena_blocks);
+            let engine = Engine::with_arena(MockModel::with_delay(cfg, DELAY), arena);
+            let mut cache = cache.clone();
+            if cache.spill_dir.is_some() {
+                cache.spill_namespace = format!("w{w}_");
+            }
+            Recycler::new(
+                engine,
+                Arc::new(Tokenizer::new(vec![])),
+                Box::new(NgramEmbedder::new(64)),
+                cache,
+                RecyclePolicy::Radix,
+            )
+        },
+        ServerConfig {
+            num_workers: workers,
+            routing,
+            queue_capacity: 4096,
+            ..Default::default()
+        },
+    )
+}
+
+struct ArmReport {
+    phase: &'static str,
+    workers: usize,
+    routing: &'static str,
+    requests: usize,
+    hits: usize,
+    mean_ms: f64,
+    wall_s: f64,
+    tokens_generated: u64,
+    spills: u64,
+    spill_hits: u64,
+    adoptions: u64,
+}
+
+impl ArmReport {
+    fn hit_rate(&self) -> f64 {
+        self.hits as f64 / self.requests.max(1) as f64
+    }
+    fn tokens_per_s(&self) -> f64 {
+        self.tokens_generated as f64 / self.wall_s
+    }
+    fn row(&self) -> Vec<String> {
+        vec![
+            self.phase.to_string(),
+            self.workers.to_string(),
+            self.routing.to_string(),
+            self.requests.to_string(),
+            self.hits.to_string(),
+            format!("{:.4}", self.hit_rate()),
+            format!("{:.3}", self.mean_ms),
+            format!("{:.4}", self.wall_s),
+            format!("{:.1}", self.tokens_per_s()),
+            self.spills.to_string(),
+            self.spill_hits.to_string(),
+            self.adoptions.to_string(),
+        ]
+    }
+}
+
+fn report(
+    phase: &'static str,
+    c: &Coordinator,
+    routing: &'static str,
+    requests: usize,
+    hits: usize,
+    total_ms: f64,
+    wall_s: f64,
+) -> ArmReport {
+    let s = c.cluster_stats();
+    ArmReport {
+        phase,
+        workers: c.num_workers(),
+        routing,
+        requests,
+        hits,
+        mean_ms: total_ms / requests.max(1) as f64,
+        wall_s,
+        tokens_generated: s.aggregate.engine.tokens_generated,
+        spills: s.aggregate.cache.spills,
+        spill_hits: s.aggregate.cache.spill_hits,
+        adoptions: s.aggregate.cache.adoptions,
+    }
+}
+
+/// Distinct-family prompts (~80 byte-level tokens each, unique within
+/// the leading fingerprint window) — zero recycling, pure serving work.
+fn scaling_prompts(n: usize) -> Vec<String> {
+    (0..n)
+        .map(|i| {
+            let mut s = format!("request {i:03} wants a summary of topic {i:03}: ");
+            while s.len() < 80 {
+                s.push_str("data ");
+            }
+            s.truncate(80);
+            s
+        })
+        .collect()
+}
+
+/// Sweep 1: submit every prompt up front, then collect; wall-clock
+/// covers the whole drain, so tokens/s measures cluster parallelism.
+fn run_scaling(workers: usize, routing: RoutingPolicy, prompts: &[String]) -> ArmReport {
+    let c = cluster(workers, routing, CacheConfig::default(), 512);
+    let sw = Stopwatch::start();
+    let rxs: Vec<_> = prompts
+        .iter()
+        .map(|p| c.submit(p, MAX_NEW, None).expect("submit"))
+        .collect();
+    let mut hits = 0;
+    let mut total_ms = 0.0;
+    for rx in rxs {
+        let out = rx.recv().expect("worker reply").ok().expect("request ok");
+        total_ms += out.latency_s * 1e3;
+        if out.cache_hit {
+            hits += 1;
+        }
+    }
+    let wall = sw.elapsed_secs();
+    let rep = report("scaling", &c, routing.name(), prompts.len(), hits, total_ms, wall);
+    c.shutdown();
+    rep
+}
+
+/// Sweep 2: the shared multi-tenant trace, served serially so cache
+/// population is deterministic — hit rate and mean *service* latency
+/// isolate placement quality from queueing.
+fn run_quality(workers: usize, routing: RoutingPolicy, spec: TraceSpec) -> ArmReport {
+    let c = cluster(
+        workers,
+        routing,
+        CacheConfig {
+            max_entries: 256,
+            ..Default::default()
+        },
+        768,
+    );
+    let trace = multi_tenant_trace(spec);
+    let mut hits = 0;
+    let mut total_ms = 0.0;
+    let sw = Stopwatch::start();
+    for r in &trace {
+        let out = match &r.session {
+            Some(s) => c.chat(s, &r.prompt, r.max_new_tokens),
+            None => c.generate(&r.prompt, r.max_new_tokens),
+        }
+        .expect("serve trace request");
+        total_ms += out.latency_s * 1e3;
+        if out.cache_hit {
+            hits += 1;
+        }
+    }
+    let wall = sw.elapsed_secs();
+    let rep = report("quality", &c, routing.name(), trace.len(), hits, total_ms, wall);
+    c.shutdown();
+    rep
+}
+
+/// Sweep 3: force worker 0 to spill a record into the shared dir, then
+/// make worker 1 serve an extension of it — the hit must come from
+/// adopting the sibling's spilled record (cross-worker cache mobility).
+fn run_adoption() -> ArmReport {
+    let tmp = TempDir::new("bench_sharding_spill");
+    let cache = CacheConfig {
+        max_entries: 1,
+        max_spill_bytes: 64 << 20,
+        spill_dir: Some(tmp.path_string()),
+        ..Default::default()
+    };
+    let c = cluster(2, RoutingPolicy::RoundRobin, cache, 64);
+    let pad = |mut s: String| {
+        while s.len() < 64 {
+            s.push_str("corpus ");
+        }
+        s.truncate(64);
+        s
+    };
+    let base = pad("shared corpus alpha, the one worth recycling: ".into());
+    let fill1 = pad("unrelated filler bravo: ".into());
+    let fill2 = pad("unrelated filler charlie: ".into());
+
+    let mut hits = 0;
+    let mut total_ms = 0.0;
+    let sw = Stopwatch::start();
+    // Round-robin over 2 workers alternates deterministically:
+    //   base  -> w0 (cached hot)
+    //   fill1 -> w1
+    //   fill2 -> w0 (max_entries=1 evicts base -> spilled under w0_)
+    //   probe -> w1 (never saw base; must adopt w0's spilled record)
+    let probe = format!("{base} tell me more");
+    for p in [&base, &fill1, &fill2, &probe] {
+        let out = c.generate(p, MAX_NEW).expect("serve");
+        total_ms += out.latency_s * 1e3;
+        if out.cache_hit {
+            hits += 1;
+        }
+    }
+    let wall = sw.elapsed_secs();
+    let cs = c.cluster_stats();
+    let rep = report("adoption", &c, "round-robin", 4, hits, total_ms, wall);
+    c.shutdown();
+
+    assert!(
+        rep.adoptions >= 1,
+        "expected >= 1 cross-worker adoption, got {}",
+        rep.adoptions
+    );
+    let adopter = cs
+        .workers
+        .iter()
+        .find(|w| w.stats.cache.adoptions > 0)
+        .expect("an adopting worker");
+    assert!(
+        adopter.stats.cache.spill_hits > 0,
+        "an adoption is a spill-reload hit; worker {} counts none",
+        adopter.worker
+    );
+    assert!(
+        cs.workers
+            .iter()
+            .any(|w| w.worker != adopter.worker && w.stats.cache.spills > 0),
+        "the adopted record must have been spilled by a DIFFERENT worker"
+    );
+    assert_eq!(rep.hits, 1, "only the probe recycles in this scenario");
+    rep
+}
+
+fn arm<'a>(
+    arms: &'a [ArmReport],
+    phase: &str,
+    routing: &str,
+    workers: usize,
+) -> &'a ArmReport {
+    arms.iter()
+        .find(|r| r.phase == phase && r.routing == routing && r.workers == workers)
+        .expect("arm not found")
+}
+
+fn main() {
+    common::banner(
+        "ablation_sharding",
+        "A8 sharded serving: router scaling, placement quality, cache mobility",
+    );
+    let quick = common::quick();
+    let n_scaling = if quick { 24 } else { 48 };
+    let spec = TraceSpec {
+        tenants: 4,
+        requests: if quick { 48 } else { 96 },
+        mean_burst: 4,
+        session_reuse: 0.3,
+        min_words: 3,
+        max_words: 12,
+        max_new_tokens: MAX_NEW,
+        seed: 0x5AFE,
+    };
+
+    let mut arms: Vec<ArmReport> = Vec::new();
+    let prompts = scaling_prompts(n_scaling);
+    for routing in [RoutingPolicy::RoundRobin, RoutingPolicy::PrefixAffinity] {
+        for workers in [1usize, 2, 4] {
+            arms.push(run_scaling(workers, routing, &prompts));
+        }
+    }
+    for workers in [2usize, 4] {
+        for routing in [RoutingPolicy::PrefixAffinity, RoutingPolicy::RoundRobin] {
+            arms.push(run_quality(workers, routing, spec));
+        }
+    }
+    arms.push(run_adoption());
+
+    println!(
+        "{:<9} {:>7} {:<16} {:>8} {:>5} {:>9} {:>9} {:>8} {:>11} {:>7} {:>11} {:>10}",
+        "phase", "workers", "routing", "requests", "hits", "hit_rate", "mean_ms",
+        "wall_s", "tokens_per_s", "spills", "spill_hits", "adoptions"
+    );
+    for r in &arms {
+        println!(
+            "{:<9} {:>7} {:<16} {:>8} {:>5} {:>9.3} {:>9.2} {:>8.3} {:>11.1} {:>7} {:>11} {:>10}",
+            r.phase,
+            r.workers,
+            r.routing,
+            r.requests,
+            r.hits,
+            r.hit_rate(),
+            r.mean_ms,
+            r.wall_s,
+            r.tokens_per_s(),
+            r.spills,
+            r.spill_hits,
+            r.adoptions
+        );
+    }
+    let out = common::results_dir().join("ablation_sharding.csv");
+    recycle_serve::util::csv::write_file(
+        &out,
+        &[
+            "phase", "workers", "routing", "requests", "hits", "hit_rate",
+            "mean_ms", "wall_s", "tokens_per_s", "spills", "spill_hits",
+            "adoptions",
+        ],
+        &arms.iter().map(|r| r.row()).collect::<Vec<_>>(),
+    )
+    .expect("write csv");
+    println!("\nwrote {}", out.display());
+
+    // --- assertion 1: tokens/s scales with workers (round-robin arms:
+    // placement is perfectly balanced, so scaling is structural) ---
+    let (rr1, rr2, rr4) = (
+        arm(&arms, "scaling", "round-robin", 1).tokens_per_s(),
+        arm(&arms, "scaling", "round-robin", 2).tokens_per_s(),
+        arm(&arms, "scaling", "round-robin", 4).tokens_per_s(),
+    );
+    println!(
+        "\nscaling (round-robin): {rr1:.0} -> {rr2:.0} -> {rr4:.0} tokens/s \
+         ({:.2}x at 2 workers, {:.2}x at 4)",
+        rr2 / rr1,
+        rr4 / rr1
+    );
+    assert!(
+        rr2 > 1.2 * rr1,
+        "2 workers must out-serve 1: {rr2:.0} !> 1.2 * {rr1:.0} tokens/s"
+    );
+    assert!(
+        rr4 > 1.6 * rr1,
+        "4 workers must out-serve 1 by a wide margin: {rr4:.0} !> 1.6 * {rr1:.0}"
+    );
+    let (pa1, pa4) = (
+        arm(&arms, "scaling", "prefix-affinity", 1).tokens_per_s(),
+        arm(&arms, "scaling", "prefix-affinity", 4).tokens_per_s(),
+    );
+    assert!(
+        pa4 > 1.3 * pa1,
+        "prefix-affinity must also scale (least-loaded spread of new \
+         families): {pa4:.0} !> 1.3 * {pa1:.0}"
+    );
+
+    // --- assertion 2: prefix affinity beats round-robin on hit rate AND
+    // mean latency at every sharded width ---
+    for workers in [2usize, 4] {
+        let pa = arm(&arms, "quality", "prefix-affinity", workers);
+        let rr = arm(&arms, "quality", "round-robin", workers);
+        println!(
+            "quality at {workers} workers: hit rate {:.3} (PA) vs {:.3} (RR), \
+             mean {:.2} vs {:.2} ms",
+            pa.hit_rate(),
+            rr.hit_rate(),
+            pa.mean_ms,
+            rr.mean_ms
+        );
+        assert!(
+            pa.hit_rate() > rr.hit_rate(),
+            "prefix affinity must beat round-robin on hit rate at \
+             {workers} workers: {:.3} !> {:.3}",
+            pa.hit_rate(),
+            rr.hit_rate()
+        );
+        assert!(
+            pa.mean_ms < rr.mean_ms,
+            "prefix affinity must beat round-robin on mean latency at \
+             {workers} workers: {:.2} !< {:.2} ms",
+            pa.mean_ms,
+            rr.mean_ms
+        );
+    }
+    println!("adoption: cross-worker spill-reload hit confirmed");
+}

@@ -30,7 +30,7 @@ fn run_conversation(
     max_new: usize,
 ) -> Result<(Table, u64, f64)> {
     let coordinator = Coordinator::spawn(
-        move || {
+        move |_worker| {
             let rt = Runtime::load(&artifacts).expect("artifacts");
             let tok = rt.tokenizer();
             Recycler::new(

@@ -26,7 +26,7 @@ type Result<T> = std::result::Result<T, Box<dyn std::error::Error>>;
 
 fn spawn_stack(artifacts: PathBuf, policy: RecyclePolicy) -> Result<(Arc<Coordinator>, Server)> {
     let coordinator = Arc::new(Coordinator::spawn(
-        move || {
+        move |_worker| {
             let rt = Runtime::load(&artifacts).expect("artifacts");
             let tok = rt.tokenizer();
             let mut r = Recycler::new(
@@ -120,6 +120,9 @@ fn main() -> Result<()> {
     let (lat_on, hits, reused) = drive(s_on.addr(), &stream, max_new)?;
     let wall_on = sw.elapsed_secs();
     let stats_on = c_on.stats();
+    // Aggregate + per-worker breakdown over the wire (`{"cmd":"stats"}`),
+    // fetched before stop() like any other client request.
+    let cluster = TcpClient::connect(s_on.addr())?.stats()?;
     s_on.stop();
 
     // --- report ---
@@ -173,6 +176,8 @@ fn main() -> Result<()> {
         n,
         100.0 * hits as f64 / n as f64
     );
+    println!("\ncluster stats (the `{{\"cmd\":\"stats\"}}` wire reply, recycling ON):");
+    println!("{}", cluster.to_json());
     // degraded-mode health: a misconfigured spill_dir silently costs hit
     // rate, so surface it where the numbers are read
     for warning in stats_on.health_warnings() {

@@ -10,5 +10,6 @@ mod workload;
 pub use eval::{config_or_fallback, eval_recycler, run_comparison,
                tokenizer_or_fallback, ComparisonReport, EvalOptions};
 pub use tables::{format_row_series, format_table, Table};
-pub use workload::{overlap_workload, paper_cache_prompts, paper_test_prompts,
-                   session_workload, OverlapSpec, Workload};
+pub use workload::{multi_tenant_trace, overlap_workload, paper_cache_prompts,
+                   paper_test_prompts, session_workload, OverlapSpec,
+                   TraceRequest, TraceSpec, Workload};

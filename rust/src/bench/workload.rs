@@ -6,6 +6,11 @@
 //!   build from the same source of truth).
 //! * Synthetic overlap workloads with a controlled k/m ratio for the §5.5
 //!   sweep and the ablations.
+//! * A seeded **multi-tenant serving trace** ([`multi_tenant_trace`]):
+//!   bursty arrivals, heavy-tailed tenant popularity and session reuse,
+//!   mixed prompt lengths — the shared input of the sharding ablation
+//!   bench and the routing-invariance property suite, so both exercise
+//!   the same traffic shape.
 
 use std::path::Path;
 
@@ -107,6 +112,121 @@ pub fn overlap_workload(spec: OverlapSpec) -> Workload {
     }
 }
 
+/// One request in a seeded multi-tenant serving trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceRequest {
+    /// Arrival slot: requests sharing a slot arrive back-to-back (a
+    /// burst); consumers map slots to scheduler ticks or submission
+    /// rounds as they see fit. Nondecreasing across the trace.
+    pub at_tick: usize,
+    /// Issuing tenant. One tenant = one stable prompt-template prefix =
+    /// one prefix family under affinity routing.
+    pub tenant: usize,
+    /// `Some` for a turn of a multi-turn session, `None` for a one-shot.
+    pub session: Option<String>,
+    pub prompt: String,
+    pub max_new_tokens: usize,
+}
+
+/// Knobs for [`multi_tenant_trace`].
+#[derive(Debug, Clone, Copy)]
+pub struct TraceSpec {
+    /// Distinct tenants (prompt-template prefix families). Popularity is
+    /// heavy-tailed: low tenant ids issue most of the traffic.
+    pub tenants: usize,
+    /// Total requests in the trace.
+    pub requests: usize,
+    /// Mean arrivals per burst; actual burst sizes are uniform in
+    /// `1..=2*mean_burst`, separated by multi-slot gaps (bursty, not
+    /// Poisson-smooth).
+    pub mean_burst: usize,
+    /// Probability a request continues an existing session rather than
+    /// opening new work. Continuations prefer recently-active sessions
+    /// (heavy-tailed reuse), like real chat traffic.
+    pub session_reuse: f64,
+    /// Prompt body length bounds in words — mixed short and long prompts
+    /// in one trace.
+    pub min_words: usize,
+    pub max_words: usize,
+    pub max_new_tokens: usize,
+    pub seed: u64,
+}
+
+impl Default for TraceSpec {
+    fn default() -> Self {
+        TraceSpec {
+            tenants: 4,
+            requests: 64,
+            mean_burst: 4,
+            session_reuse: 0.4,
+            min_words: 4,
+            max_words: 24,
+            max_new_tokens: 8,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+/// Generate a deterministic multi-tenant serving trace (see [`TraceSpec`]).
+/// Same spec -> byte-identical trace, so ablation numbers and property
+/// shrinks are reproducible from the printed seed alone.
+pub fn multi_tenant_trace(spec: TraceSpec) -> Vec<TraceRequest> {
+    assert!(spec.tenants > 0 && spec.requests > 0);
+    assert!(spec.min_words > 0 && spec.max_words >= spec.min_words);
+    let mut rng = Rng::new(spec.seed);
+    // Stable per-tenant template prefixes, longer than any router
+    // fingerprint window: every request of a tenant starts with its
+    // template, so a tenant is exactly one prefix family.
+    let templates: Vec<String> = (0..spec.tenants)
+        .map(|t| format!("tenant {t:03} standing instructions: {}.", sentence(&mut rng, 8)))
+        .collect();
+    let mut out = Vec::with_capacity(spec.requests);
+    // (session id, owning tenant), most recently active last.
+    let mut sessions: Vec<(String, usize)> = Vec::new();
+    let mut tick = 0usize;
+    let mut left_in_burst = 1 + rng.below(spec.mean_burst.max(1) * 2);
+    for i in 0..spec.requests {
+        if left_in_burst == 0 {
+            tick += 1 + rng.below(4); // inter-burst gap
+            left_in_burst = 1 + rng.below(spec.mean_burst.max(1) * 2);
+        }
+        left_in_burst -= 1;
+        let body_words = rng.range(spec.min_words, spec.max_words + 1);
+        let (tenant, session, prompt) = if !sessions.is_empty()
+            && rng.chance(spec.session_reuse)
+        {
+            // Heavy-tailed continuation: cubing the uniform draw piles
+            // the mass onto the most recently active sessions.
+            let n = sessions.len();
+            let back = ((n as f64) * rng.f64().powi(3)) as usize % n;
+            let idx = n - 1 - back;
+            let (id, t) = sessions.remove(idx);
+            sessions.push((id.clone(), t));
+            (t, Some(id), sentence(&mut rng, body_words))
+        } else {
+            // heavy-tailed tenant popularity: low ids dominate
+            let t = (((spec.tenants as f64) * rng.f64().powi(2)) as usize)
+                % spec.tenants;
+            let prompt = format!("{} {}", templates[t], sentence(&mut rng, body_words));
+            if rng.chance(0.5) {
+                let id = format!("s{i:04}");
+                sessions.push((id.clone(), t));
+                (t, Some(id), prompt)
+            } else {
+                (t, None, prompt)
+            }
+        };
+        out.push(TraceRequest {
+            at_tick: tick,
+            tenant,
+            session,
+            prompt,
+            max_new_tokens: spec.max_new_tokens,
+        });
+    }
+    out
+}
+
 /// Multi-turn user messages for the session/e2e demo.
 pub fn session_workload(turns: usize, seed: u64) -> Vec<String> {
     let mut rng = Rng::new(seed);
@@ -185,5 +305,100 @@ mod tests {
         let a = overlap_workload(spec);
         let b = overlap_workload(spec);
         assert_eq!(a.test_prompts, b.test_prompts);
+    }
+
+    #[test]
+    fn trace_is_deterministic_by_seed() {
+        let spec = TraceSpec::default();
+        assert_eq!(multi_tenant_trace(spec), multi_tenant_trace(spec));
+        let other = TraceSpec { seed: 1, ..spec };
+        assert_ne!(multi_tenant_trace(spec), multi_tenant_trace(other));
+    }
+
+    #[test]
+    fn trace_arrivals_are_bursty_and_ordered() {
+        let trace = multi_tenant_trace(TraceSpec {
+            requests: 200,
+            ..Default::default()
+        });
+        assert_eq!(trace.len(), 200);
+        // nondecreasing arrival slots
+        for w in trace.windows(2) {
+            assert!(w[1].at_tick >= w[0].at_tick);
+        }
+        // bursty: some slot holds several arrivals AND some gap > 1 exists
+        let mut per_slot = std::collections::HashMap::new();
+        for r in &trace {
+            *per_slot.entry(r.at_tick).or_insert(0usize) += 1;
+        }
+        assert!(per_slot.values().any(|&n| n >= 2), "no bursts generated");
+        assert!(
+            trace.windows(2).any(|w| w[1].at_tick > w[0].at_tick + 1),
+            "no inter-burst gaps generated"
+        );
+    }
+
+    #[test]
+    fn trace_tenants_share_template_prefixes() {
+        let trace = multi_tenant_trace(TraceSpec {
+            requests: 200,
+            ..Default::default()
+        });
+        // fresh (non-continuation) requests of one tenant share a long
+        // common prefix — the prefix family affinity routing keys on
+        let mut by_tenant: std::collections::HashMap<usize, Vec<&str>> =
+            std::collections::HashMap::new();
+        for r in trace.iter().filter(|r| r.prompt.starts_with("tenant ")) {
+            by_tenant.entry(r.tenant).or_default().push(&r.prompt);
+        }
+        let mut checked = 0;
+        for (_, prompts) in by_tenant {
+            if prompts.len() < 2 {
+                continue;
+            }
+            let shared = prompts[0]
+                .bytes()
+                .zip(prompts[1].bytes())
+                .take_while(|(a, b)| a == b)
+                .count();
+            assert!(shared > 32, "template prefix too short: {shared} bytes");
+            checked += 1;
+        }
+        assert!(checked >= 2, "trace never reused a tenant template");
+    }
+
+    #[test]
+    fn trace_reuses_sessions_heavy_tailed() {
+        let trace = multi_tenant_trace(TraceSpec {
+            requests: 200,
+            session_reuse: 0.6,
+            ..Default::default()
+        });
+        let mut turns: std::collections::HashMap<&str, usize> =
+            std::collections::HashMap::new();
+        for r in &trace {
+            if let Some(s) = &r.session {
+                *turns.entry(s.as_str()).or_insert(0) += 1;
+            }
+        }
+        assert!(
+            turns.values().any(|&n| n >= 3),
+            "no session accumulated multiple turns: {turns:?}"
+        );
+        // one-shots coexist with sessions (mixed traffic)
+        assert!(trace.iter().any(|r| r.session.is_none()));
+    }
+
+    #[test]
+    fn trace_mixes_prompt_lengths() {
+        let trace = multi_tenant_trace(TraceSpec {
+            requests: 200,
+            min_words: 4,
+            max_words: 24,
+            ..Default::default()
+        });
+        let lengths: std::collections::HashSet<usize> =
+            trace.iter().map(|r| r.prompt.split(' ').count()).collect();
+        assert!(lengths.len() > 5, "prompt lengths not mixed: {lengths:?}");
     }
 }

@@ -73,6 +73,20 @@ pub struct CacheConfig {
     /// the directory cannot be set up the store logs the error, flags
     /// `CacheStats::spill_setup_failed`, and degrades to drop-on-evict.
     pub spill_dir: Option<String>,
+    /// Namespace prefix for this store's spill files (`{ns}{id}.kv`),
+    /// opting into **shared-spill semantics**: several stores (one per
+    /// serving worker) may point at the same `spill_dir` without their
+    /// per-store entry ids colliding on disk, the construction-time
+    /// orphan sweep is restricted to this tier's own namespace (it can
+    /// never delete a sibling worker's live files), and a lookup miss may
+    /// *adopt* a sibling's spilled record whose tokens prefix the new
+    /// prompt — cross-worker cache mobility through the cold tier. Keep
+    /// it stable across restarts (it is the worker's spill identity, e.g.
+    /// `w0_`) so a restarting worker sweeps only its own stale garbage.
+    /// Must not end in a digit (namespace+id concatenation stays
+    /// unambiguous). Empty (default) = legacy single-store naming; the
+    /// store then neither shares nor adopts.
+    pub spill_namespace: String,
 }
 
 impl Default for CacheConfig {
@@ -86,6 +100,7 @@ impl Default for CacheConfig {
             persist_dir: None,
             max_spill_bytes: 0,
             spill_dir: None,
+            spill_namespace: String::new(),
         }
     }
 }
@@ -139,6 +154,12 @@ impl CacheConfig {
                     .to_string(),
             );
         }
+        if let Some(x) = v.get("spill_namespace") {
+            c.spill_namespace = x
+                .as_str()
+                .ok_or_else(|| Error::Config("spill_namespace must be a string".into()))?
+                .to_string();
+        }
         c.validate()?;
         Ok(c)
     }
@@ -157,6 +178,29 @@ impl CacheConfig {
         }
         if self.spill_dir.as_deref() == Some("") {
             return Err(Error::Config("spill_dir must not be empty".into()));
+        }
+        if !self.spill_namespace.is_empty() {
+            if !self
+                .spill_namespace
+                .chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+            {
+                return Err(Error::Config(format!(
+                    "spill_namespace must be [A-Za-z0-9_-], got '{}'",
+                    self.spill_namespace
+                )));
+            }
+            if self
+                .spill_namespace
+                .ends_with(|c: char| c.is_ascii_digit())
+            {
+                // `{ns}{id}` must parse back unambiguously: "w1" + 23 and
+                // "w12" + 3 would both claim "w123.kv"
+                return Err(Error::Config(format!(
+                    "spill_namespace must not end in a digit, got '{}'",
+                    self.spill_namespace
+                )));
+            }
         }
         Ok(())
     }
@@ -233,6 +277,8 @@ mod tests {
             r#"{"max_spill_bytes": -1}"#,
             r#"{"spill_dir": ""}"#,
             r#"{"persist_dir": ""}"#,
+            r#"{"spill_namespace": "w0/"}"#,
+            r#"{"spill_namespace": "w1"}"#,
         ] {
             let v = json::parse(bad).unwrap();
             let e = CacheConfig::from_json(&v).expect_err(bad);
@@ -241,5 +287,12 @@ mod tests {
         // boundary values are legal
         let v = json::parse(r#"{"min_similarity": -1.0}"#).unwrap();
         assert_eq!(CacheConfig::from_json(&v).unwrap().min_similarity, -1.0);
+    }
+
+    #[test]
+    fn from_json_spill_namespace() {
+        let v = json::parse(r#"{"spill_namespace": "w0_"}"#).unwrap();
+        assert_eq!(CacheConfig::from_json(&v).unwrap().spill_namespace, "w0_");
+        assert_eq!(CacheConfig::default().spill_namespace, "");
     }
 }

@@ -9,4 +9,4 @@ mod server;
 
 pub use cache::{CacheConfig, EvictionPolicy};
 pub use model::ModelConfig;
-pub use server::ServerConfig;
+pub use server::{RoutingPolicy, ServerConfig};

@@ -3,6 +3,49 @@
 use crate::error::{Error, Result};
 use crate::util::json::Value;
 
+/// How the router places a request on a worker (`num_workers > 1`).
+/// Every policy pins a *session's* later turns to the worker holding its
+/// transcript — session stickiness is a correctness requirement, not an
+/// optimization; the policy only chooses where sessionless requests and
+/// *first* session turns land.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RoutingPolicy {
+    /// Fingerprint the prompt's leading bytes and stick each prefix
+    /// family to one worker, so repeats and extensions of a prompt land
+    /// where its KV blocks are already hot; falls back to least-loaded
+    /// when the affine worker's queue is saturated (sessionless requests
+    /// only). The default, and the configuration the paper's recycling
+    /// thesis needs at scale.
+    #[default]
+    PrefixAffinity,
+    /// Rotate across workers — the cache-oblivious ablation baseline.
+    RoundRobin,
+    /// Send to the shallowest queue — the load-only ablation baseline.
+    LeastLoaded,
+}
+
+impl RoutingPolicy {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "prefix-affinity" | "affinity" => Ok(Self::PrefixAffinity),
+            "round-robin" | "rr" => Ok(Self::RoundRobin),
+            "least-loaded" | "ll" => Ok(Self::LeastLoaded),
+            _ => Err(Error::Config(format!("unknown routing policy '{s}'"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::PrefixAffinity => "prefix-affinity",
+            Self::RoundRobin => "round-robin",
+            Self::LeastLoaded => "least-loaded",
+        }
+    }
+
+    pub const ALL: [RoutingPolicy; 3] =
+        [Self::PrefixAffinity, Self::RoundRobin, Self::LeastLoaded];
+}
+
 /// Coordinator + TCP server configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServerConfig {
@@ -54,6 +97,15 @@ pub struct ServerConfig {
     /// `retry_backoff_ticks << k` ticks while the rest of the batch keeps
     /// decoding.
     pub retry_backoff_ticks: usize,
+    /// How many scheduler workers the coordinator shards requests over.
+    /// Each worker owns a full `Scheduler` + arena + recycler stack;
+    /// `queue_capacity`, cache, and arena budgets are all per worker.
+    /// 1 (the default) reproduces the single-scheduler coordinator
+    /// exactly — same thread layout, same stats, same behavior.
+    pub num_workers: usize,
+    /// Placement policy the router uses at `num_workers > 1` (ignored at
+    /// 1, where every request lands on the only worker).
+    pub routing: RoutingPolicy,
 }
 
 impl Default for ServerConfig {
@@ -71,6 +123,8 @@ impl Default for ServerConfig {
             request_timeout_ms: 30_000,
             transient_retry_limit: 3,
             retry_backoff_ticks: 1,
+            num_workers: 1,
+            routing: RoutingPolicy::PrefixAffinity,
         }
     }
 }
@@ -116,6 +170,15 @@ impl ServerConfig {
         }
         if let Some(n) = usize_field("retry_backoff_ticks")? {
             c.retry_backoff_ticks = n;
+        }
+        if let Some(n) = usize_field("num_workers")? {
+            c.num_workers = n;
+        }
+        if let Some(x) = v.get("routing") {
+            c.routing = RoutingPolicy::parse(
+                x.as_str()
+                    .ok_or_else(|| Error::Config("routing must be a string".into()))?,
+            )?;
         }
         if let Some(x) = v.get("batch_window_ms") {
             c.batch_window_ms = x
@@ -166,6 +229,11 @@ impl ServerConfig {
             // a zero base backoff would re-fire the faulty operation in the
             // same tick it failed, defeating the point of backing off
             return Err(Error::Config("retry_backoff_ticks must be >= 1".into()));
+        }
+        if self.num_workers == 0 {
+            // zero workers means no scheduler thread: nothing could ever
+            // serve a request
+            return Err(Error::Config("num_workers must be >= 1".into()));
         }
         Ok(())
     }
@@ -265,6 +333,37 @@ mod tests {
             let v = json::parse(bad).unwrap();
             let e = ServerConfig::from_json(&v).expect_err(bad);
             assert!(matches!(e, Error::Config(_)), "{bad}: {e}");
+        }
+    }
+
+    #[test]
+    fn parses_sharding_knobs() {
+        let v = json::parse(r#"{"num_workers": 4, "routing": "round-robin"}"#).unwrap();
+        let c = ServerConfig::from_json(&v).unwrap();
+        assert_eq!(c.num_workers, 4);
+        assert_eq!(c.routing, RoutingPolicy::RoundRobin);
+        // defaults: single worker, prefix-affinity placement
+        let d = ServerConfig::default();
+        assert_eq!(d.num_workers, 1);
+        assert_eq!(d.routing, RoutingPolicy::PrefixAffinity);
+        for (s, p) in [
+            ("prefix-affinity", RoutingPolicy::PrefixAffinity),
+            ("affinity", RoutingPolicy::PrefixAffinity),
+            ("rr", RoutingPolicy::RoundRobin),
+            ("least-loaded", RoutingPolicy::LeastLoaded),
+            ("ll", RoutingPolicy::LeastLoaded),
+        ] {
+            assert_eq!(RoutingPolicy::parse(s).unwrap(), p);
+            assert_eq!(RoutingPolicy::parse(p.name()).unwrap(), p);
+        }
+        for bad in [
+            r#"{"num_workers": 0}"#,
+            r#"{"num_workers": -2}"#,
+            r#"{"routing": "random"}"#,
+            r#"{"routing": 3}"#,
+        ] {
+            let v = json::parse(bad).unwrap();
+            assert!(ServerConfig::from_json(&v).is_err(), "{bad}");
         }
     }
 

@@ -1,14 +1,42 @@
-//! The serving coordinator: bounded request queue, continuous-batching
-//! scheduler with chunked prefill, session manager, and the worker loop
-//! that drives the recycler.
+//! The serving coordinator: a prefix-affinity **router** over N
+//! self-contained scheduler **workers**, each a bounded request queue +
+//! continuous-batching scheduler with chunked prefill + session manager
+//! driving its own recycler stack.
 //!
-//! Threading model (tokio is not in the offline vendor set): submitters
-//! enqueue into a bounded [`queue::RequestQueue`]; one worker thread runs
-//! the tick-driven [`Scheduler`] in [`service`]. Each request is a
-//! per-slot state machine — lookup → **chunked-prefill** → decode →
-//! finish — held in a running set. Admission attaches the recycled
-//! prefix without running any forward; each tick then advances the
-//! admitting slots' prefill by at most
+//! # Worker/router architecture
+//!
+//! ```text
+//!   submitters ──> Coordinator (router.rs)
+//!                   │ placement: session-sticky, then policy
+//!                   │  (prefix-affinity | round-robin | least-loaded)
+//!                   ├─> Worker 0: RequestQueue -> Scheduler -> Recycler
+//!                   ├─> Worker 1:      "            "            "
+//!                   └─> Worker N-1     "            "            "
+//!                        └── shared spill_dir (cold tier): records
+//!                            spilled by one worker are adoptable by
+//!                            the others (cross-worker cache mobility)
+//! ```
+//!
+//! The public [`Coordinator`] (in `router.rs`) owns
+//! `ServerConfig::num_workers` workers and places each request on
+//! exactly one (see `router.rs` for the placement rules: session
+//! stickiness is a correctness invariant under every policy; prefix
+//! affinity is the hit-rate-preserving default; placement changes
+//! latency and hit rate, never tokens). At `num_workers = 1` the router
+//! degenerates to the old single-scheduler coordinator exactly. Each
+//! worker's `KvStore` may share one `spill_dir` through per-worker
+//! `CacheConfig::spill_namespace`s, making the CRC-stamped spill files
+//! the cluster's cache-mobility layer.
+//!
+//! # Worker threading model
+//!
+//! Threading model (tokio is not in the offline vendor set): the router
+//! enqueues into the chosen worker's bounded [`queue::RequestQueue`];
+//! that worker's thread runs the tick-driven [`Scheduler`] in
+//! [`service`]. Each request is a per-slot state machine — lookup →
+//! **chunked-prefill** → decode → finish — held in a running set.
+//! Admission attaches the recycled prefix without running any forward;
+//! each tick then advances the admitting slots' prefill by at most
 //! `ServerConfig::prefill_chunk_tokens` prompt tokens alongside the
 //! single `forward_batch` call that advances all decoding streams one
 //! token ([`crate::engine`]'s stream API), so a long cache-cold prompt
@@ -22,7 +50,9 @@
 //! batched decode and chunked prefill are token-identical to sequential
 //! serving (`max_batch = 1`, the paper's setting) — property-tested in
 //! `rust/tests/properties.rs` through the deterministic scheduler-trace
-//! harness in [`crate::testutil::trace`].
+//! harness in [`crate::testutil::trace`], and routing invariance
+//! (any placement ≡ N=1, token-for-token) is property-tested the same
+//! way.
 //!
 //! # Failure semantics
 //!
@@ -58,14 +88,15 @@
 mod batcher;
 mod queue;
 mod request;
+mod router;
 mod service;
 mod session;
 
 pub use batcher::{drain_batch, drain_ready};
 pub use queue::{QueueError, RequestQueue};
 pub use request::{Request, Response};
+pub use router::{ClusterStats, Coordinator, WorkerStats};
 pub use service::{
-    admission_prompt, Coordinator, CoordinatorStats, DeferReason, SchedEvent, Scheduler,
-    TickReport,
+    admission_prompt, CoordinatorStats, DeferReason, SchedEvent, Scheduler, TickReport,
 };
 pub use session::{truncate_to_window, SessionManager, Turn};

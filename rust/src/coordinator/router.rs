@@ -1,0 +1,522 @@
+//! The prefix-affinity router: the cluster front over N serving workers.
+//!
+//! [`Coordinator`] owns `ServerConfig::num_workers` self-contained
+//! [`Worker`]s — each a full `Scheduler` + arena + recycler stack on its
+//! own thread with its own bounded queue — and places every submitted
+//! request on exactly one of them. Placement is where the paper's
+//! recycling thesis meets horizontal scaling: a router that scatters a
+//! prompt family across workers destroys every prefix hit the recycler
+//! worked to keep, so the default [`RoutingPolicy::PrefixAffinity`]
+//! fingerprints the prompt's leading bytes and sticks each prefix family
+//! to one worker, with `RoundRobin` and `LeastLoaded` as the
+//! cache-oblivious ablation baselines.
+//!
+//! Placement rules, in priority order:
+//!
+//! 1. **Session stickiness (all policies)** — a session's later turns
+//!    always go to the worker that served its first turn. This is a
+//!    *correctness* requirement, not a preference: the per-worker
+//!    `SessionManager` owns the transcript, and a turn landing elsewhere
+//!    would silently drop the conversation history. Session turns never
+//!    fall back under overload; they get the honest `Overloaded` reply.
+//! 2. **Policy choice (sessionless requests + first session turns)** —
+//!    prefix-family affinity, round-robin rotation, or shallowest queue.
+//! 3. **Overload fallback (PrefixAffinity, sessionless only)** — when
+//!    the affine worker's queue is full, the request spills to the
+//!    least-loaded sibling instead of being rejected: affinity is a hit-
+//!    rate preference, shedding available capacity is not acceptable.
+//!
+//! Placement changes *latency and hit rate, never tokens*: workers run
+//! the same deterministic scheduler stack, so any placement of a request
+//! set yields token-identical outputs (the routing-invariance property
+//! in `rust/tests/properties.rs`). With `num_workers = 1` every rule
+//! degenerates to "worker 0" and the router IS the old single-scheduler
+//! coordinator, behavior-preserved.
+//!
+//! The workers' KV stores may share one `spill_dir` (distinct
+//! `CacheConfig::spill_namespace` per worker): an affinity miss on
+//! worker B can then *adopt* a record worker A spilled — cross-worker
+//! cache mobility through the cold tier instead of recomputation (see
+//! `kvcache::store::KvStore::adopt_foreign`).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+use crate::config::{RoutingPolicy, ServerConfig};
+use crate::engine::ForwardModel;
+use crate::error::{Error, Result};
+use crate::recycler::{Outcome, Recycler};
+use crate::util::json::{self, Value};
+
+use super::queue::QueueError;
+use super::request::{Request, Response};
+use super::service::{CoordinatorStats, Worker};
+
+/// Leading bytes hashed into the prefix-family fingerprint. The byte-
+/// level tokenizer makes bytes ≈ tokens, so 32 bytes ≈ two arena blocks
+/// of shared prompt — long enough to separate unrelated prompts, short
+/// enough that template-sharing prompts (the recyclable kind) collide
+/// onto the same worker, which is the point.
+const PREFIX_FINGERPRINT_BYTES: usize = 32;
+
+/// FNV-1a over the prompt's leading bytes.
+fn prefix_fingerprint(prompt: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in prompt.as_bytes().iter().take(PREFIX_FINGERPRINT_BYTES) {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    h
+}
+
+/// Mutable routing tables, behind one short-lived lock per placement.
+#[derive(Default)]
+struct RouterState {
+    /// session id -> pinned worker (stickiness, all policies).
+    sessions: HashMap<String, usize>,
+    /// prefix-family fingerprint -> affine worker (PrefixAffinity).
+    families: HashMap<u64, usize>,
+    /// Round-robin cursor.
+    rr: usize,
+}
+
+/// Handle to the running worker fleet. Dropping it shuts every worker
+/// down (close all queues first, then join — workers drain in parallel).
+pub struct Coordinator {
+    workers: Vec<Worker>,
+    state: Mutex<RouterState>,
+    next_id: AtomicU64,
+    cfg: ServerConfig,
+}
+
+impl Coordinator {
+    /// Spawn `cfg.num_workers` workers. `mk_recycler` runs ON each worker
+    /// thread with that worker's index (the PJRT runtime's handles are
+    /// not `Send`, so each model is constructed where it will be used);
+    /// the index also lets the factory derive per-worker state such as a
+    /// `spill_namespace` over a shared `spill_dir`.
+    pub fn spawn<M, F>(mk_recycler: F, cfg: ServerConfig) -> Coordinator
+    where
+        M: ForwardModel + 'static,
+        F: Fn(usize) -> Recycler<M> + Send + Sync + 'static,
+    {
+        let n = cfg.num_workers.max(1);
+        let mk = Arc::new(mk_recycler);
+        let workers = (0..n)
+            .map(|i| {
+                let mk = Arc::clone(&mk);
+                Worker::spawn(i, move || mk(i), cfg.clone())
+            })
+            .collect();
+        Coordinator {
+            workers,
+            state: Mutex::new(RouterState::default()),
+            next_id: AtomicU64::new(1),
+            cfg,
+        }
+    }
+
+    pub fn config(&self) -> &ServerConfig {
+        &self.cfg
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// The worker with the shallowest queue (ties to the lowest index).
+    fn least_loaded(&self) -> usize {
+        self.workers
+            .iter()
+            .enumerate()
+            .min_by_key(|(i, w)| (w.queue_depth(), *i))
+            .map(|(i, _)| i)
+            .expect("at least one worker")
+    }
+
+    /// Choose the primary worker for a request (see the module docs for
+    /// the placement rules). Records the placement in the session /
+    /// family tables so later arrivals stick.
+    fn route(&self, prompt: &str, session: Option<&str>) -> usize {
+        if self.workers.len() == 1 {
+            return 0;
+        }
+        let mut state = self.state.lock().unwrap();
+        if let Some(s) = session {
+            if let Some(&w) = state.sessions.get(s) {
+                return w;
+            }
+        }
+        let w = match self.cfg.routing {
+            RoutingPolicy::PrefixAffinity => {
+                let fam = prefix_fingerprint(prompt);
+                match state.families.get(&fam) {
+                    Some(&w) => w,
+                    None => {
+                        let w = self.least_loaded();
+                        state.families.insert(fam, w);
+                        w
+                    }
+                }
+            }
+            RoutingPolicy::RoundRobin => {
+                let w = state.rr % self.workers.len();
+                state.rr += 1;
+                w
+            }
+            RoutingPolicy::LeastLoaded => self.least_loaded(),
+        };
+        if let Some(s) = session {
+            state.sessions.insert(s.to_string(), w);
+        }
+        w
+    }
+
+    /// Submit a request; returns a receiver for the response.
+    pub fn submit(
+        &self,
+        prompt: &str,
+        max_new_tokens: usize,
+        session: Option<String>,
+    ) -> Result<mpsc::Receiver<Response>> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let widx = self.route(prompt, session.as_deref());
+        let mk_req = |tx: mpsc::Sender<Response>| Request {
+            id,
+            prompt: prompt.to_string(),
+            max_new_tokens,
+            session: session.clone(),
+            reply: tx,
+            queued_at: Instant::now(),
+        };
+        let (tx, rx) = mpsc::channel();
+        match self.workers[widx].try_push(mk_req(tx)) {
+            Ok(()) => return Ok(rx),
+            Err(QueueError::Closed) => return Err(Error::ShutDown),
+            Err(QueueError::Full) => {}
+        }
+        // Overload fallback: a saturated affine worker sheds *sessionless*
+        // requests to the least-loaded sibling — affinity is a hit-rate
+        // preference, rejecting while capacity sits idle is not. Session
+        // turns never move (their transcript lives on the pinned worker).
+        if session.is_none()
+            && self.cfg.routing == RoutingPolicy::PrefixAffinity
+            && self.workers.len() > 1
+        {
+            let alt = self.least_loaded();
+            if alt != widx {
+                let (tx, rx) = mpsc::channel();
+                match self.workers[alt].try_push(mk_req(tx)) {
+                    Ok(()) => return Ok(rx),
+                    Err(QueueError::Closed) => return Err(Error::ShutDown),
+                    Err(QueueError::Full) => {}
+                }
+            }
+        }
+        // Terminal load shed: the typed reply carries the (per-worker)
+        // observed depth so clients can back off informedly.
+        self.workers[widx].note_rejected();
+        Err(Error::Overloaded {
+            depth: self.workers[widx].queue_depth(),
+            capacity: self.workers[widx].queue_capacity(),
+        })
+    }
+
+    /// Submit and wait, returning the worker's raw [`Response`] (message
+    /// plus the stable error-kind label) — transports use this to expose
+    /// `error_kind` without parsing messages. Submit-side shedding
+    /// (`Overloaded`/`ShutDown`) still surfaces as a typed `Err`.
+    pub fn serve(
+        &self,
+        prompt: &str,
+        max_new_tokens: usize,
+        session: Option<String>,
+    ) -> Result<Response> {
+        let rx = self.submit(prompt, max_new_tokens, session)?;
+        rx.recv().map_err(|_| Error::ShutDown)
+    }
+
+    /// Submit and wait (convenience for examples/tests).
+    pub fn generate(&self, prompt: &str, max_new_tokens: usize) -> Result<Outcome> {
+        self.serve(prompt, max_new_tokens, None)?
+            .ok()
+            .map_err(Error::Rejected)
+    }
+
+    /// Multi-turn session request: builds the transcript prompt, serves it,
+    /// records the turn.
+    pub fn chat(&self, session_id: &str, user_msg: &str, max_new: usize) -> Result<Outcome> {
+        self.serve(user_msg, max_new, Some(session_id.to_string()))?
+            .ok()
+            .map_err(Error::Rejected)
+    }
+
+    /// Cluster-aggregate stats (the merge of every worker's stats; at one
+    /// worker this is exactly that worker's stats).
+    pub fn stats(&self) -> CoordinatorStats {
+        let mut agg = CoordinatorStats::default();
+        for w in &self.workers {
+            agg.merge(&w.stats());
+        }
+        agg
+    }
+
+    /// Aggregate + per-worker stats breakdown (the `{"cmd":"stats"}` wire
+    /// payload and the ablation bench's per-worker probe).
+    pub fn cluster_stats(&self) -> ClusterStats {
+        let workers: Vec<WorkerStats> = self
+            .workers
+            .iter()
+            .map(|w| WorkerStats {
+                worker: w.index,
+                queue_depth: w.queue_depth(),
+                stats: w.stats(),
+            })
+            .collect();
+        let mut aggregate = CoordinatorStats::default();
+        for w in &workers {
+            aggregate.merge(&w.stats);
+        }
+        ClusterStats {
+            routing: self.cfg.routing,
+            aggregate,
+            workers,
+        }
+    }
+
+    /// Requests queued across all workers.
+    pub fn queue_depth(&self) -> usize {
+        self.workers.iter().map(|w| w.queue_depth()).sum()
+    }
+
+    /// Graceful shutdown: stop accepting on every worker, then join them
+    /// (all queues close before the first join, so workers drain their
+    /// backlogs in parallel).
+    pub fn shutdown(mut self) {
+        self.close_and_join();
+    }
+
+    fn close_and_join(&mut self) {
+        for w in &self.workers {
+            w.close();
+        }
+        for w in &mut self.workers {
+            w.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.close_and_join();
+    }
+}
+
+/// One worker's row in the cluster breakdown.
+#[derive(Debug, Clone)]
+pub struct WorkerStats {
+    pub worker: usize,
+    pub queue_depth: usize,
+    pub stats: CoordinatorStats,
+}
+
+/// Aggregate + per-worker serving stats, JSON-serializable for the
+/// `{"cmd":"stats"}` wire request.
+#[derive(Debug, Clone)]
+pub struct ClusterStats {
+    pub routing: RoutingPolicy,
+    pub aggregate: CoordinatorStats,
+    pub workers: Vec<WorkerStats>,
+}
+
+impl ClusterStats {
+    pub fn to_json(&self) -> Value {
+        let stats_obj = |s: &CoordinatorStats, extra: Vec<(&str, Value)>| {
+            let mut fields = vec![
+                ("submitted", json::n(s.submitted as f64)),
+                ("completed", json::n(s.completed as f64)),
+                ("failed", json::n(s.failed as f64)),
+                ("rejected", json::n(s.rejected as f64)),
+                ("hit_rate", json::n(s.cache.hit_rate())),
+                ("cache_hits", json::n(s.cache.hits as f64)),
+                ("cache_misses", json::n(s.cache.misses as f64)),
+                ("spills", json::n(s.cache.spills as f64)),
+                ("spill_hits", json::n(s.cache.spill_hits as f64)),
+                ("adoptions", json::n(s.cache.adoptions as f64)),
+                ("tokens_generated", json::n(s.engine.tokens_generated as f64)),
+                ("tokens_reused", json::n(s.engine.tokens_reused as f64)),
+                ("avg_ttft_ms", json::n(s.scheduler.avg_ttft_ms())),
+                ("avg_occupancy", json::n(s.scheduler.avg_occupancy())),
+                ("peak_occupancy", json::n(s.scheduler.peak_occupancy as f64)),
+                ("arena_used_blocks", json::n(s.arena_used_blocks as f64)),
+                (
+                    "arena_capacity_blocks",
+                    json::n(s.arena_capacity_blocks as f64),
+                ),
+            ];
+            fields.extend(extra);
+            json::obj(fields)
+        };
+        json::obj(vec![
+            ("routing", json::s(self.routing.name())),
+            ("num_workers", json::n(self.workers.len() as f64)),
+            ("aggregate", stats_obj(&self.aggregate, vec![])),
+            (
+                "workers",
+                json::arr(
+                    self.workers
+                        .iter()
+                        .map(|w| {
+                            stats_obj(
+                                &w.stats,
+                                vec![
+                                    ("worker", json::n(w.worker as f64)),
+                                    ("queue_depth", json::n(w.queue_depth as f64)),
+                                ],
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::engine::Engine;
+    use crate::index::NgramEmbedder;
+    use crate::recycler::RecyclePolicy;
+    use crate::testutil::MockModel;
+    use crate::tokenizer::Tokenizer;
+
+    fn cluster(n: usize, routing: RoutingPolicy) -> Coordinator {
+        Coordinator::spawn(
+            |_| {
+                let engine = Engine::new(MockModel::new(ModelConfig::nano()));
+                Recycler::new(
+                    engine,
+                    Arc::new(Tokenizer::new(vec![])),
+                    Box::new(NgramEmbedder::new(64)),
+                    Default::default(),
+                    RecyclePolicy::Strict,
+                )
+            },
+            ServerConfig {
+                num_workers: n,
+                routing,
+                ..Default::default()
+            },
+        )
+    }
+
+    #[test]
+    fn single_worker_routes_everything_to_worker_0() {
+        let c = cluster(1, RoutingPolicy::RoundRobin);
+        for p in ["alpha", "beta", "gamma"] {
+            assert_eq!(c.route(p, None), 0);
+            assert_eq!(c.route(p, Some("s")), 0);
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn round_robin_rotates_sessionless_requests() {
+        let c = cluster(3, RoutingPolicy::RoundRobin);
+        let placements: Vec<usize> =
+            (0..6).map(|i| c.route(&format!("p{i}"), None)).collect();
+        assert_eq!(placements, vec![0, 1, 2, 0, 1, 2]);
+        c.shutdown();
+    }
+
+    #[test]
+    fn prefix_affinity_sticks_prompt_families_and_sessions() {
+        let c = cluster(4, RoutingPolicy::PrefixAffinity);
+        // same leading 32 bytes = same family = same worker, regardless of
+        // the suffix
+        let base = "a".repeat(32);
+        let w0 = c.route(&base, None);
+        assert_eq!(c.route(&format!("{base} extended further"), None), w0);
+        assert_eq!(c.route(&base, None), w0);
+        // a session pins to its first worker even when later turns carry
+        // completely unrelated prompt text
+        let ws = c.route("session opener text", Some("sess"));
+        assert_eq!(c.route("zzz unrelated follow-up", Some("sess")), ws);
+        c.shutdown();
+    }
+
+    #[test]
+    fn least_loaded_prefers_shallowest_queue() {
+        let c = cluster(2, RoutingPolicy::LeastLoaded);
+        // queues are empty: ties break to worker 0 deterministically
+        assert_eq!(c.route("x", None), 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn multi_worker_cluster_serves_and_aggregates() {
+        let c = cluster(2, RoutingPolicy::RoundRobin);
+        for i in 0..4 {
+            let out = c.generate(&format!("prompt number {i} padded out"), 3).unwrap();
+            assert_eq!(out.ids.len(), 3);
+        }
+        let agg = c.stats();
+        assert_eq!(agg.submitted, 4);
+        assert_eq!(agg.completed, 4);
+        let cs = c.cluster_stats();
+        assert_eq!(cs.workers.len(), 2);
+        // round-robin: both workers served half the sessionless load
+        assert_eq!(cs.workers[0].stats.submitted, 2);
+        assert_eq!(cs.workers[1].stats.submitted, 2);
+        let js = cs.to_json().to_json();
+        assert!(js.contains("\"aggregate\""));
+        assert!(js.contains("\"workers\""));
+        assert!(js.contains("\"adoptions\""));
+        c.shutdown();
+    }
+
+    #[test]
+    fn affinity_repeat_prompts_hit_one_workers_cache() {
+        let c = cluster(2, RoutingPolicy::PrefixAffinity);
+        let base = "shared template prefix that exceeds the fingerprint width";
+        let a = c.generate(base, 3).unwrap();
+        assert!(!a.cache_hit);
+        let b = c.generate(&format!("{base} with a question appended"), 3).unwrap();
+        assert!(b.cache_hit, "family affinity must land the repeat on the same worker");
+        assert!(b.reuse_depth > 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn session_turns_stay_on_one_worker_across_the_cluster() {
+        let c = cluster(3, RoutingPolicy::RoundRobin);
+        let t1 = c.chat("conv", "hello there friend", 3).unwrap();
+        assert!(!t1.cache_hit);
+        let t2 = c.chat("conv", "tell me more", 3).unwrap();
+        assert!(t2.cache_hit, "turn 2 must find turn 1's transcript KV");
+        assert!(t2.prompt_tokens > t1.prompt_tokens);
+        // exactly one worker saw both turns
+        let per_worker: Vec<u64> = c
+            .cluster_stats()
+            .workers
+            .iter()
+            .map(|w| w.stats.submitted)
+            .collect();
+        assert!(per_worker.contains(&2), "one worker owns the session: {per_worker:?}");
+        c.shutdown();
+    }
+
+    #[test]
+    fn fingerprint_separates_on_leading_bytes_only() {
+        let a = "x".repeat(PREFIX_FINGERPRINT_BYTES);
+        assert_eq!(
+            prefix_fingerprint(&a),
+            prefix_fingerprint(&format!("{a}suffix-is-ignored"))
+        );
+        assert_ne!(prefix_fingerprint("abc"), prefix_fingerprint("abd"));
+    }
+}

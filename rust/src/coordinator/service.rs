@@ -69,7 +69,6 @@
 //!   chaos suite in `rust/tests/properties.rs`).
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -125,143 +124,123 @@ impl CoordinatorStats {
         }
         warnings
     }
+
+    /// Fold another worker's stats into this one — the cluster aggregate
+    /// the router exposes. Counts and totals add; per-event maxima
+    /// (`ttft_ms_max`, `peak_occupancy`, …) take the max; degraded-mode
+    /// flags OR. At one worker the merge of `[w0]` is exactly `w0`, so
+    /// the aggregate view is identity at `num_workers = 1`.
+    pub fn merge(&mut self, o: &CoordinatorStats) {
+        self.submitted += o.submitted;
+        self.completed += o.completed;
+        self.failed += o.failed;
+        self.rejected += o.rejected;
+        self.batches += o.batches;
+        self.engine.merge(&o.engine);
+        self.scheduler.merge(&o.scheduler);
+        self.cache.merge(&o.cache);
+        self.cache_entries += o.cache_entries;
+        self.cache_bytes += o.cache_bytes;
+        self.arena_used_blocks += o.arena_used_blocks;
+        self.arena_capacity_blocks += o.arena_capacity_blocks;
+    }
 }
 
-struct Shared {
-    queue: RequestQueue<Request>,
-    stats: Mutex<CoordinatorStats>,
-    next_id: AtomicU64,
+/// State shared between one worker's submit side and its thread.
+pub(super) struct WorkerShared {
+    pub(super) queue: RequestQueue<Request>,
+    pub(super) stats: Mutex<CoordinatorStats>,
 }
 
-/// Handle to a running coordinator. Dropping it shuts the worker down.
-pub struct Coordinator {
-    shared: Arc<Shared>,
-    worker: Option<JoinHandle<()>>,
-    cfg: ServerConfig,
+/// One serving worker: a full `Scheduler` + arena + recycler stack driven
+/// by its own thread off its own bounded queue. The router
+/// ([`super::router::Coordinator`]) owns N of these and places requests
+/// across them; at N=1 the single worker IS the old single-scheduler
+/// coordinator — same thread layout, same queue semantics, same stats.
+pub(super) struct Worker {
+    pub(super) shared: Arc<WorkerShared>,
+    pub(super) index: usize,
+    handle: Option<JoinHandle<()>>,
 }
 
-impl Coordinator {
-    /// Spawn the worker thread. `mk_recycler` runs ON the worker thread —
+impl Worker {
+    /// Spawn worker `index`. `mk_recycler` runs ON the worker thread —
     /// the PJRT runtime's handles are not `Send`, so the model must be
     /// constructed where it will be used.
-    pub fn spawn<M, F>(mk_recycler: F, cfg: ServerConfig) -> Coordinator
+    pub(super) fn spawn<M, F>(index: usize, mk_recycler: F, cfg: ServerConfig) -> Worker
     where
         M: ForwardModel + 'static,
         F: FnOnce() -> Recycler<M> + Send + 'static,
     {
-        let shared = Arc::new(Shared {
+        let shared = Arc::new(WorkerShared {
             queue: RequestQueue::new(cfg.queue_capacity),
             stats: Mutex::new(CoordinatorStats::default()),
-            next_id: AtomicU64::new(1),
         });
         let worker_shared = Arc::clone(&shared);
-        let wcfg = cfg.clone();
-        let worker = std::thread::Builder::new()
-            .name("recycle-coordinator".into())
+        let handle = std::thread::Builder::new()
+            .name(format!("recycle-worker-{index}"))
             .spawn(move || {
                 // populate_cache is applied from the config by
                 // Scheduler::new — the single owner of that flag
-                worker_loop(worker_shared, mk_recycler(), wcfg)
+                worker_loop(worker_shared, mk_recycler(), cfg)
             })
             .expect("spawn coordinator worker");
-        Coordinator {
+        Worker {
             shared,
-            worker: Some(worker),
-            cfg,
+            index,
+            handle: Some(handle),
         }
     }
 
-    pub fn config(&self) -> &ServerConfig {
-        &self.cfg
-    }
-
-    /// Submit a request; returns a receiver for the response.
-    pub fn submit(
-        &self,
-        prompt: &str,
-        max_new_tokens: usize,
-        session: Option<String>,
-    ) -> Result<mpsc::Receiver<Response>> {
-        let (tx, rx) = mpsc::channel();
-        let req = Request {
-            id: self.shared.next_id.fetch_add(1, Ordering::Relaxed),
-            prompt: prompt.to_string(),
-            max_new_tokens,
-            session,
-            reply: tx,
-            queued_at: Instant::now(),
-        };
+    /// Try to place `req` on this worker's queue; bumps `submitted` on
+    /// success. A `Full` result is NOT counted here — the router may
+    /// still retry the request on a sibling, and only the terminal
+    /// rejection is recorded (via [`Worker::note_rejected`] on the
+    /// worker that turned the request into an [`Error::Overloaded`]
+    /// reply).
+    pub(super) fn try_push(&self, req: Request) -> std::result::Result<(), QueueError> {
         match self.shared.queue.push(req) {
             Ok(()) => {
                 self.shared.stats.lock().unwrap().submitted += 1;
-                Ok(rx)
+                Ok(())
             }
-            Err(QueueError::Full) => {
-                // Load shed at the bounded queue: the typed reply carries
-                // the observed depth so clients can back off informedly
-                // instead of parsing a message.
-                self.shared.stats.lock().unwrap().rejected += 1;
-                Err(Error::Overloaded {
-                    depth: self.shared.queue.len(),
-                    capacity: self.shared.queue.capacity(),
-                })
-            }
-            Err(QueueError::Closed) => Err(Error::ShutDown),
+            Err(e) => Err(e),
         }
     }
 
-    /// Submit and wait, returning the worker's raw [`Response`] (message
-    /// plus the stable error-kind label) — transports use this to expose
-    /// `error_kind` without parsing messages. Submit-side shedding
-    /// (`Overloaded`/`ShutDown`) still surfaces as a typed `Err`.
-    pub fn serve(
-        &self,
-        prompt: &str,
-        max_new_tokens: usize,
-        session: Option<String>,
-    ) -> Result<Response> {
-        let rx = self.submit(prompt, max_new_tokens, session)?;
-        rx.recv().map_err(|_| Error::ShutDown)
+    /// Count a terminal load-shed rejection against this worker.
+    pub(super) fn note_rejected(&self) {
+        self.shared.stats.lock().unwrap().rejected += 1;
     }
 
-    /// Submit and wait (convenience for examples/tests).
-    pub fn generate(&self, prompt: &str, max_new_tokens: usize) -> Result<Outcome> {
-        self.serve(prompt, max_new_tokens, None)?
-            .ok()
-            .map_err(Error::Rejected)
-    }
-
-    /// Multi-turn session request: builds the transcript prompt, serves it,
-    /// records the turn.
-    pub fn chat(&self, session_id: &str, user_msg: &str, max_new: usize) -> Result<Outcome> {
-        self.serve(user_msg, max_new, Some(session_id.to_string()))?
-            .ok()
-            .map_err(Error::Rejected)
-    }
-
-    pub fn stats(&self) -> CoordinatorStats {
-        *self.shared.stats.lock().unwrap()
-    }
-
-    pub fn queue_depth(&self) -> usize {
+    pub(super) fn queue_depth(&self) -> usize {
         self.shared.queue.len()
     }
 
-    /// Graceful shutdown: stop accepting, drain, join.
-    pub fn shutdown(mut self) {
+    pub(super) fn queue_capacity(&self) -> usize {
+        self.shared.queue.capacity()
+    }
+
+    pub(super) fn stats(&self) -> CoordinatorStats {
+        *self.shared.stats.lock().unwrap()
+    }
+
+    /// Stop accepting; the thread drains its backlog then exits.
+    pub(super) fn close(&self) {
         self.shared.queue.close();
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
+    }
+
+    pub(super) fn join(&mut self) {
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
         }
     }
 }
 
-impl Drop for Coordinator {
+impl Drop for Worker {
     fn drop(&mut self) {
-        self.shared.queue.close();
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+        self.close();
+        self.join();
     }
 }
 
@@ -1266,6 +1245,7 @@ fn worker_loop<M: ForwardModel>(
 mod tests {
     use super::*;
     use crate::config::ModelConfig;
+    use crate::coordinator::Coordinator;
     use crate::engine::Engine;
     use crate::index::NgramEmbedder;
     use crate::recycler::RecyclePolicy;
@@ -1274,7 +1254,7 @@ mod tests {
 
     fn coordinator(cfg: ServerConfig) -> Coordinator {
         Coordinator::spawn(
-            || {
+            |_| {
                 let engine = Engine::new(MockModel::new(ModelConfig::nano()));
                 Recycler::new(
                     engine,
@@ -1490,7 +1470,7 @@ mod tests {
 
     fn faulty_coordinator(fail_call: usize, cfg: ServerConfig) -> Coordinator {
         Coordinator::spawn(
-            move || {
+            move |_| {
                 let engine =
                     Engine::new(MockModel::new(ModelConfig::nano()).fail_on_call(fail_call));
                 Recycler::new(
@@ -1549,9 +1529,9 @@ mod tests {
         use crate::faults::{FaultPlan, FaultSite};
         let h = FaultPlan::new(7).script(FaultSite::ModelPermanent, &[1]).install();
         let c = Coordinator::spawn(
-            move || {
+            move |_| {
                 let engine =
-                    Engine::new(MockModel::new(ModelConfig::nano()).with_faults(h));
+                    Engine::new(MockModel::new(ModelConfig::nano()).with_faults(h.clone()));
                 Recycler::new(
                     engine,
                     std::sync::Arc::new(Tokenizer::new(vec![])),
@@ -1577,7 +1557,7 @@ mod tests {
         // deadline sweep must reap the slot at a tick boundary and reply
         // with the typed deadline error instead of letting the client hang
         let c = Coordinator::spawn(
-            || {
+            |_| {
                 let engine = Engine::new(MockModel::with_delay(
                     ModelConfig::nano(),
                     Duration::from_millis(5),
@@ -1650,10 +1630,23 @@ mod tests {
     }
 
     #[test]
-    fn shutdown_then_submit_fails() {
-        let c = coordinator(ServerConfig::default());
-        let shared = std::sync::Arc::clone(&c.shared);
-        c.shutdown();
+    fn closed_worker_rejects_submission() {
+        let mut w = Worker::spawn(
+            0,
+            || {
+                let engine = Engine::new(MockModel::new(ModelConfig::nano()));
+                Recycler::new(
+                    engine,
+                    std::sync::Arc::new(Tokenizer::new(vec![])),
+                    Box::new(NgramEmbedder::new(64)),
+                    Default::default(),
+                    RecyclePolicy::Strict,
+                )
+            },
+            ServerConfig::default(),
+        );
+        w.close();
+        w.join();
         let (tx, _rx) = mpsc::channel();
         let req = Request {
             id: 1,
@@ -1663,6 +1656,6 @@ mod tests {
             reply: tx,
             queued_at: Instant::now(),
         };
-        assert_eq!(shared.queue.push(req).err(), Some(QueueError::Closed));
+        assert_eq!(w.try_push(req).err(), Some(QueueError::Closed));
     }
 }

@@ -235,6 +235,39 @@ pub fn from_bytes(buf: &[u8], arena: &KvArena) -> Result<KvRecord> {
     })
 }
 
+/// Parse just the token ids out of serialized record bytes (full CRC
+/// verified, header decoded up to the token array) without materializing
+/// the payload into an arena. Spill files are self-describing, so this is
+/// how a worker filters a sibling's spilled records down to
+/// prefix-matching adoption candidates before paying for a decode.
+pub fn peek_tokens(buf: &[u8]) -> Result<Vec<u32>> {
+    if buf.len() < 8 {
+        return Err(Error::Corrupt("file too small".into()));
+    }
+    let (body, crc_bytes) = buf.split_at(buf.len() - 4);
+    let want = u32::from_le_bytes(crc_bytes.try_into().unwrap());
+    if crc32::hash(body) != want {
+        return Err(Error::Corrupt("crc mismatch".into()));
+    }
+    let mut r = Reader { buf: body, pos: 0 };
+    if r.u32()? != MAGIC {
+        return Err(Error::Corrupt("bad magic".into()));
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        return Err(Error::Version(version));
+    }
+    let _flags = r.u32()?;
+    let _geometry = (r.u32()?, r.u32()?, r.u32()?);
+    let text_len = r.u32()? as usize;
+    r.take(text_len)?;
+    let n_tokens = r.u32()? as usize;
+    Ok(r.take(n_tokens * 4)?
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
 /// Atomically write pre-serialized record bytes (write temp, then
 /// rename) — the one home of the atomic-write discipline, shared by
 /// [`save`] and the spill tier (which serializes once to learn the size
@@ -353,6 +386,21 @@ mod tests {
             + 4 + 4 + r.kv.to_contiguous().len() * 4
             + 4;
         assert_eq!(out.len(), expected, "exact-capacity estimate drifted");
+    }
+
+    #[test]
+    fn peek_tokens_matches_full_decode_and_rejects_corruption() {
+        let a = arena();
+        let r = rec_in(&a);
+        for compress in [false, true] {
+            let buf = to_bytes(&r, compress);
+            assert_eq!(peek_tokens(&buf).unwrap(), r.tokens, "compress={compress}");
+            let mut bad = buf.clone();
+            let mid = bad.len() / 2;
+            bad[mid] ^= 0x10;
+            assert!(peek_tokens(&bad).is_err(), "bitflip must not peek");
+            assert!(peek_tokens(&buf[..buf.len() / 2]).is_err());
+        }
     }
 
     #[test]

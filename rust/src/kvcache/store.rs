@@ -71,6 +71,11 @@ pub struct CacheStats {
     pub spilled_entries: usize,
     /// Serialized bytes currently on disk in the cold tier.
     pub cold_bytes: usize,
+    /// Cross-worker adoptions: lookups served by reloading a *sibling*
+    /// store's spilled record out of a shared `spill_dir` — a spill-reload
+    /// hit on a worker that did not produce the record. Each adoption is
+    /// also counted in `spill_hits`.
+    pub adoptions: u64,
     /// Total / worst reload latency over `spill_hits`, microseconds.
     pub spill_reload_us_total: u64,
     pub spill_reload_us_max: u64,
@@ -89,6 +94,40 @@ impl CacheStats {
             0.0
         } else {
             self.spill_reload_us_total as f64 / self.spill_hits as f64 / 1e3
+        }
+    }
+
+    /// Fold another store's counters into this one — per-worker
+    /// `CacheStats` roll up into a cluster aggregate: counts add, worst
+    /// latencies take the max, degraded-mode flags OR together.
+    pub fn merge(&mut self, o: &CacheStats) {
+        self.inserts += o.inserts;
+        self.evictions += o.evictions;
+        self.hits += o.hits;
+        self.misses += o.misses;
+        self.live_entries += o.live_entries;
+        self.live_bytes += o.live_bytes;
+        self.physical_blocks += o.physical_blocks;
+        self.physical_bytes += o.physical_bytes;
+        self.spills += o.spills;
+        self.spill_hits += o.spill_hits;
+        self.spill_drops += o.spill_drops;
+        self.spill_load_errors += o.spill_load_errors;
+        self.spilled_entries += o.spilled_entries;
+        self.cold_bytes += o.cold_bytes;
+        self.adoptions += o.adoptions;
+        self.spill_reload_us_total += o.spill_reload_us_total;
+        self.spill_reload_us_max = self.spill_reload_us_max.max(o.spill_reload_us_max);
+        self.spill_setup_failed |= o.spill_setup_failed;
+    }
+
+    /// Hit rate over lookups that reached the store (0 when none did).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
         }
     }
 
@@ -171,6 +210,11 @@ pub struct KvStore {
     block_refs: HashMap<usize, u32>,
     /// The cold tier; None = spilling disabled (eviction destroys).
     tier: Option<SpillTier>,
+    /// Memoized token peeks of *sibling* namespaces' spill files in a
+    /// shared `spill_dir` (adoption candidates). `None` = the file was
+    /// unreadable/corrupt when peeked — never retried, never deleted
+    /// (it is the sibling's file to manage).
+    foreign_seen: HashMap<PathBuf, Option<Vec<u32>>>,
     next_id: u64,
     clock: u64,
     stats: CacheStats,
@@ -184,9 +228,12 @@ impl KvStore {
         let mut stats = CacheStats::default();
         let tier = if cfg.max_spill_bytes > 0 {
             let built = match &cfg.spill_dir {
-                Some(d) => {
-                    SpillTier::new(PathBuf::from(d), cfg.max_spill_bytes, cfg.compress)
-                }
+                Some(d) => SpillTier::with_namespace(
+                    PathBuf::from(d),
+                    cfg.spill_namespace.clone(),
+                    cfg.max_spill_bytes,
+                    cfg.compress,
+                ),
                 None => SpillTier::at_tempdir(cfg.max_spill_bytes, cfg.compress),
             };
             match built {
@@ -208,6 +255,7 @@ impl KvStore {
             entries: HashMap::new(),
             block_refs: HashMap::new(),
             tier,
+            foreign_seen: HashMap::new(),
             next_id: 0,
             clock: 0,
             stats,
@@ -590,6 +638,131 @@ impl KvStore {
         )
     }
 
+    /// Cross-worker cache mobility: on a lookup miss, try to *adopt* a
+    /// sibling store's spilled record out of the shared `spill_dir` —
+    /// the serialization boundary that lets a record spilled by worker A
+    /// serve worker B's prompt without recomputation. Only enabled under
+    /// shared-spill semantics (an explicit `spill_dir` AND a non-empty
+    /// `spill_namespace`); otherwise an immediate no-op.
+    ///
+    /// The candidate is the *longest* foreign record whose tokens are an
+    /// exact prefix of `ids`. Adoption **copies**: the sibling's file is
+    /// read and decoded into this store's arena under a FRESH local id,
+    /// and the file itself is never renamed, deleted, or mutated — the
+    /// owner's cold-tier index stays valid, and concurrent adoption by
+    /// several workers is race-free (atomic rename publication + CRC
+    /// verification from PR 4 make a file either absent or whole).
+    /// Unreadable/corrupt candidates are memoized and skipped, never
+    /// swept — they are the sibling's to manage.
+    ///
+    /// Success counts a `spill_hit` (it is one: a lookup served from the
+    /// cold tier) plus an `adoption`, with reload latency accounted like
+    /// any other reload. Returns the fresh id + record, and every hot
+    /// eviction shed to make room (the caller unindexes dropped ones).
+    pub fn adopt_foreign(
+        &mut self,
+        ids: &[u32],
+        arena: &KvArena,
+    ) -> (Option<(u64, Arc<KvRecord>)>, Vec<Eviction>) {
+        let mut evicted = Vec::new();
+        if self.cfg.spill_dir.is_none()
+            || self.cfg.spill_namespace.is_empty()
+            || ids.is_empty()
+        {
+            return (None, evicted);
+        }
+        let Some(tier) = self.tier.as_ref() else {
+            return (None, evicted);
+        };
+        // Scan sibling namespaces, memoizing token peeks so steady-state
+        // misses cost one read_dir, not one file read per candidate.
+        let files = tier.foreign_kv_files();
+        let mut best: Option<(usize, PathBuf)> = None;
+        for path in files {
+            let toks = self.foreign_seen.entry(path.clone()).or_insert_with(|| {
+                std::fs::read(&path)
+                    .ok()
+                    .and_then(|buf| persist::peek_tokens(&buf).ok())
+            });
+            let Some(toks) = toks else { continue };
+            let d = toks.len();
+            if d == 0 || d > ids.len() || ids[..d] != toks[..] {
+                continue;
+            }
+            if best.as_ref().map_or(true, |(bd, _)| d > *bd) {
+                best = Some((d, path));
+            }
+        }
+        let Some((depth, path)) = best else {
+            return (None, evicted);
+        };
+        let sw = Stopwatch::start();
+        // Pre-shed for the arena demand, with the same futility gate as
+        // reload_spilled: shedding pinned-only entries frees nothing.
+        let need = arena.blocks_for(depth);
+        while arena.free_blocks() < need {
+            if self.reclaimable_blocks() == 0 {
+                return (None, evicted);
+            }
+            match self.evict_one() {
+                Some(ev) => evicted.push(ev),
+                None => return (None, evicted),
+            }
+        }
+        // Read ONCE. The owner may legitimately delete/reload the file
+        // between the peek and now — that is a clean miss, and the stale
+        // memo entry is dropped so the path can be re-peeked if reused.
+        let buf = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(_) => {
+                self.foreign_seen.remove(&path);
+                return (None, evicted);
+            }
+        };
+        let record = loop {
+            match persist::from_bytes(&buf, arena) {
+                Ok(rec) => break rec,
+                Err(Error::ArenaExhausted { .. }) => {
+                    if self.reclaimable_blocks() == 0 {
+                        return (None, evicted);
+                    }
+                    match self.evict_one() {
+                        Some(ev) => evicted.push(ev),
+                        None => return (None, evicted),
+                    }
+                }
+                Err(_) => {
+                    // corrupt despite the peek (torn media): memoize as
+                    // dead and give up — the file stays, it is not ours
+                    self.foreign_seen.insert(path, None);
+                    self.stats.spill_load_errors += 1;
+                    return (None, evicted);
+                }
+            }
+        };
+        // hot-capacity admission, then insert under a FRESH local id —
+        // the record is now this store's, fully decoupled from the file
+        while !self.entries.is_empty() && self.would_overflow(&record) {
+            match self.evict_one() {
+                Some(ev) => evicted.push(ev),
+                None => break,
+            }
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.insert_entry(id, record);
+        self.stats.inserts += 1;
+        self.stats.spill_hits += 1;
+        self.stats.adoptions += 1;
+        let us = (sw.elapsed_secs() * 1e6) as u64;
+        self.stats.spill_reload_us_total += us;
+        self.stats.spill_reload_us_max = self.stats.spill_reload_us_max.max(us);
+        (
+            self.entries.get(&id).map(|e| (id, Arc::clone(&e.record))),
+            evicted,
+        )
+    }
+
     /// Drain the ids the cold tier's own LRU destroyed (spill-budget
     /// pressure) since the last call, so the owner can unindex them.
     pub fn take_cold_dropped(&mut self) -> Vec<u64> {
@@ -899,6 +1072,66 @@ mod tests {
         assert_eq!(st.spill_hits, 1);
         assert_eq!(st.spills, 2);
         assert!(st.spill_reload_us_max >= 1 || st.spill_reload_us_total == 0);
+    }
+
+    #[test]
+    fn adopt_foreign_copies_a_sibling_stores_spilled_record() {
+        // cross-worker cache mobility through a shared spill_dir: store B
+        // adopts (by COPY) a record store A spilled, under a fresh local
+        // id, leaving A's file and cold-tier entry untouched.
+        let dir = std::env::temp_dir()
+            .join(format!("recycle_store_adopt_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        let mk = |ns: &str| {
+            KvStore::new(CacheConfig {
+                max_entries: 1,
+                max_spill_bytes: 64 << 20,
+                spill_dir: Some(dir.to_string_lossy().into_owned()),
+                spill_namespace: ns.into(),
+                ..Default::default()
+            })
+        };
+        let mut a = mk("w0_");
+        let mut b = mk("w1_");
+        let (ida, _) = a.insert(rec(20));
+        let payload = a.peek(ida).unwrap().kv.to_contiguous();
+        a.insert(rec(30)); // evicts ida -> w0_<ida>.kv in the shared dir
+        assert!(a.is_spilled(ida));
+
+        let arena = ARENA.with(|ar| ar.clone());
+        // B's prompt extends the spilled record's tokens: adoptable
+        let prompt: Vec<u32> = (0..25).collect();
+        let (got, ev) = b.adopt_foreign(&prompt, &arena);
+        assert!(ev.is_empty(), "B was empty, nothing to shed");
+        let (idb, recb) = got.expect("adoption succeeds");
+        assert_eq!(recb.tokens, (0..20u32).collect::<Vec<_>>());
+        assert_eq!(recb.kv.to_contiguous(), payload, "payload survives the hop");
+        assert!(b.contains(idb));
+        let st = b.stats();
+        assert_eq!(st.adoptions, 1);
+        assert_eq!(st.spill_hits, 1, "an adoption IS a spill hit");
+        // copy, not steal: the sibling's cold entry and file are intact
+        assert!(a.is_spilled(ida));
+        assert!(dir.join(format!("w0_{ida}.kv")).exists());
+
+        // a prompt no foreign record prefixes: clean no-op
+        let (none, _) = b.adopt_foreign(&[99, 98, 97], &arena);
+        assert!(none.is_none());
+        assert_eq!(b.stats().adoptions, 1);
+
+        // empty namespace = shared-spill semantics off: immediate no-op
+        let mut legacy = KvStore::new(CacheConfig {
+            max_entries: 1,
+            max_spill_bytes: 64 << 20,
+            spill_dir: Some(dir.to_string_lossy().into_owned()),
+            ..Default::default()
+        });
+        let (none, _) = legacy.adopt_foreign(&prompt, &arena);
+        assert!(none.is_none());
+        drop(a);
+        drop(b);
+        drop(legacy);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -3,10 +3,18 @@
 //! Eviction from the hot (arena-resident) tier no longer destroys a
 //! record: [`SpillTier::spill`] serializes it through [`persist`]
 //! (CRC-stamped, optionally DEFLATE-compressed) into one file per entry
-//! (`<id>.kv`), and [`SpillTier::load`] materializes it back into the
-//! arena on a later lookup — the paper's "cached KVs are serialized to
-//! the CPU, reloaded, and supplied to generate", extended to disk so the
-//! cache working set can exceed arena capacity.
+//! (`{namespace}{id}.kv`), and [`SpillTier::load`] materializes it back
+//! into the arena on a later lookup — the paper's "cached KVs are
+//! serialized to the CPU, reloaded, and supplied to generate", extended
+//! to disk so the cache working set can exceed arena capacity.
+//!
+//! Several tiers (one per serving worker) may share one `spill_dir`: each
+//! gets a distinct filename namespace so per-store entry ids cannot
+//! collide on disk, the construction sweep is restricted to the tier's
+//! own namespace, and [`SpillTier::foreign_kv_files`] enumerates
+//! siblings' records as candidates for cross-worker adoption (spill files
+//! are fully self-describing — text, tokens, embedding, payload — so any
+//! worker can reload any record).
 //!
 //! The tier is budgeted by `CacheConfig::max_spill_bytes` over the
 //! *serialized* (on-disk) sizes and evicts LRU *within the tier* when the
@@ -30,6 +38,16 @@ use crate::faults::{FaultHandle, FaultSite};
 
 use super::{persist, KvArena, KvRecord};
 
+/// Does a file stem (e.g. `w0_17`) belong to namespace `ns`? Tier files
+/// are exactly `{ns}{id}` with a non-empty all-digit id, so `w0_17` is in
+/// `w0_` but `w0_17x`, `w0_` and a sibling's `w1_17` are not. With the
+/// legacy empty namespace this is "stem is all digits", which keeps a
+/// ""-tier from ever sweeping a namespaced sibling's files.
+fn stem_in_namespace(ns: &str, stem: &str) -> bool {
+    stem.strip_prefix(ns)
+        .is_some_and(|id| !id.is_empty() && id.bytes().all(|b| b.is_ascii_digit()))
+}
+
 /// One spilled record's bookkeeping (the payload itself lives on disk).
 struct ColdEntry {
     /// Serialized size on disk (what the tier budget accounts).
@@ -45,6 +63,12 @@ struct ColdEntry {
 /// Disk-backed cold tier: eviction destination for the hot KV store.
 pub struct SpillTier {
     dir: PathBuf,
+    /// Filename prefix (`{ns}{id}.kv`) giving this tier a private
+    /// namespace inside a `spill_dir` shared with sibling stores (one per
+    /// serving worker). Empty = legacy single-store naming. The
+    /// construction sweep and `drop_entry` only ever touch files in this
+    /// namespace, so siblings cannot destroy each other's live records.
+    namespace: String,
     /// Remove `dir` on drop (it was auto-created under the OS temp dir).
     owns_dir: bool,
     /// Budget over serialized bytes; > 0 (a zero budget disables the tier
@@ -66,24 +90,44 @@ pub struct SpillTier {
 
 impl SpillTier {
     /// A tier over an explicit directory (created if missing; kept on
-    /// drop). Pre-existing `*.kv`/`*.tmp` files are swept at
-    /// construction: the tier's in-memory index does not persist across
-    /// restarts, so such files are unreachable garbage that would
-    /// silently escape the byte budget. A spill_dir therefore belongs to
-    /// exactly one live store — cross-restart persistence is
-    /// `persist_dir`'s job, not the spill tier's.
+    /// drop), with the legacy empty namespace. Equivalent to
+    /// [`with_namespace`](Self::with_namespace) with `namespace = ""`.
     pub fn new(dir: PathBuf, max_bytes: usize, compress: bool) -> Result<Self> {
+        Self::with_namespace(dir, String::new(), max_bytes, compress)
+    }
+
+    /// A tier over an explicit directory (created if missing; kept on
+    /// drop), writing files as `{namespace}{id}.kv`. Pre-existing files
+    /// **in this tier's own namespace** are swept at construction: the
+    /// tier's in-memory index does not persist across restarts, so such
+    /// files are unreachable garbage that would silently escape the byte
+    /// budget. Files in *other* namespaces are left alone — a shared
+    /// `spill_dir` holds one namespace per live store, and a restarting
+    /// worker (same stable namespace) sweeps only its own stale files,
+    /// never a sibling's live ones. Cross-restart persistence is
+    /// `persist_dir`'s job, not the spill tier's.
+    pub fn with_namespace(
+        dir: PathBuf,
+        namespace: String,
+        max_bytes: usize,
+        compress: bool,
+    ) -> Result<Self> {
         std::fs::create_dir_all(&dir)?;
         if let Ok(rd) = std::fs::read_dir(&dir) {
             for e in rd.flatten() {
                 let p = e.path();
-                if p.extension().is_some_and(|x| x == "kv" || x == "tmp") {
+                if p.extension().is_some_and(|x| x == "kv" || x == "tmp")
+                    && p.file_stem()
+                        .and_then(|s| s.to_str())
+                        .is_some_and(|s| stem_in_namespace(&namespace, s))
+                {
                     let _ = std::fs::remove_file(&p);
                 }
             }
         }
         Ok(SpillTier {
             dir,
+            namespace,
             owns_dir: false,
             max_bytes,
             compress,
@@ -117,6 +161,34 @@ impl SpillTier {
 
     pub fn dir(&self) -> &Path {
         &self.dir
+    }
+
+    /// This tier's filename namespace ("" = legacy single-store naming).
+    pub fn namespace(&self) -> &str {
+        &self.namespace
+    }
+
+    /// `.kv` files in the shared directory that belong to *other*
+    /// namespaces — sibling workers' spilled records, the candidates for
+    /// cross-worker adoption. Files this tier owns (its namespace) and
+    /// non-tier files are excluded; `.tmp` files are in-flight writes and
+    /// never candidates.
+    pub fn foreign_kv_files(&self) -> Vec<PathBuf> {
+        let Ok(rd) = std::fs::read_dir(&self.dir) else {
+            return Vec::new();
+        };
+        let mut out: Vec<PathBuf> = rd
+            .flatten()
+            .map(|e| e.path())
+            .filter(|p| {
+                p.extension().is_some_and(|x| x == "kv")
+                    && p.file_stem()
+                        .and_then(|s| s.to_str())
+                        .is_some_and(|s| !stem_in_namespace(&self.namespace, s))
+            })
+            .collect();
+        out.sort(); // deterministic candidate order
+        out
     }
 
     /// Spilled entries currently resident in the tier.
@@ -160,7 +232,7 @@ impl SpillTier {
     }
 
     fn path_of(&self, id: u64) -> PathBuf {
-        self.dir.join(format!("{id}.kv"))
+        self.dir.join(format!("{}{id}.kv", self.namespace))
     }
 
     /// Destroy one cold entry (file included). True if it existed.
@@ -458,6 +530,84 @@ mod tests {
         assert!(dir.join("keep.txt").exists(), "non-tier files untouched");
         assert_eq!(t.cold_bytes(), 0);
         drop(t);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn two_namespaced_tiers_share_a_dir_without_sweeping_each_other() {
+        // THE shared-spill regression: worker B constructing its tier in a
+        // spill_dir worker A is already using must not delete A's live
+        // files (and vice versa on a later reconstruction) — only stale
+        // files in a tier's OWN namespace are swept.
+        let a = arena();
+        let dir = std::env::temp_dir().join(format!(
+            "recycle_spill_shared_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut t0 =
+            SpillTier::with_namespace(dir.clone(), "w0_".into(), 1 << 20, false).unwrap();
+        t0.spill(5, &rec_in(&a, 6, 1)).unwrap();
+        assert!(dir.join("w0_5.kv").exists());
+
+        // stale garbage in w1_'s namespace from a dead run
+        std::fs::write(dir.join("w1_999.kv"), b"stale").unwrap();
+        let mut t1 =
+            SpillTier::with_namespace(dir.clone(), "w1_".into(), 1 << 20, false).unwrap();
+        assert!(
+            dir.join("w0_5.kv").exists(),
+            "sibling construction must not sweep w0's live file"
+        );
+        assert!(
+            !dir.join("w1_999.kv").exists(),
+            "own stale file is swept"
+        );
+        t1.spill(5, &rec_in(&a, 6, 2)).unwrap();
+        assert!(
+            dir.join("w0_5.kv").exists() && dir.join("w1_5.kv").exists(),
+            "same entry id maps to distinct per-namespace files"
+        );
+
+        // both records load back intact under the colliding id
+        let r0 = t0.load(5, &a).unwrap();
+        let r1 = t1.load(5, &a).unwrap();
+        assert_eq!(r0.text, "t1");
+        assert_eq!(r1.text, "t2");
+
+        // a ""-namespace tier in the same dir cannot sweep namespaced files
+        t0.spill(6, &rec_in(&a, 4, 3)).unwrap();
+        let legacy = SpillTier::new(dir.clone(), 1 << 20, false).unwrap();
+        assert!(
+            dir.join("w0_6.kv").exists(),
+            "legacy empty-namespace sweep is digits-only"
+        );
+        drop(legacy);
+        drop(t0);
+        drop(t1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn foreign_kv_files_lists_only_sibling_namespaces() {
+        let a = arena();
+        let dir = std::env::temp_dir().join(format!(
+            "recycle_spill_foreign_{}",
+            std::process::id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        let mut t0 =
+            SpillTier::with_namespace(dir.clone(), "w0_".into(), 1 << 20, false).unwrap();
+        let mut t1 =
+            SpillTier::with_namespace(dir.clone(), "w1_".into(), 1 << 20, false).unwrap();
+        t0.spill(1, &rec_in(&a, 4, 1)).unwrap();
+        t1.spill(2, &rec_in(&a, 4, 2)).unwrap();
+        std::fs::write(dir.join("notes.txt"), b"x").unwrap();
+        let foreign0 = t0.foreign_kv_files();
+        assert_eq!(foreign0, vec![dir.join("w1_2.kv")]);
+        let foreign1 = t1.foreign_kv_files();
+        assert_eq!(foreign1, vec![dir.join("w0_1.kv")]);
+        drop(t0);
+        drop(t1);
         std::fs::remove_dir_all(&dir).ok();
     }
 

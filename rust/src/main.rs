@@ -2,7 +2,9 @@
 //!
 //! Subcommands:
 //!   serve  [--artifacts DIR] [--listen ADDR] [--policy strict|radix|off]
-//!          [--max-entries N] [--compress]   — run the TCP server.
+//!          [--max-entries N] [--compress] [--workers N]
+//!          [--routing prefix-affinity|round-robin|least-loaded]
+//!          [--spill-dir DIR] [--spill-mb N]  — run the TCP server.
 //!   eval   [--artifacts DIR] [--data DIR] [--results DIR] [--max-new N]
 //!          [--policy ...]                    — paper §4.4 two-arm evaluation.
 //!   info   [--artifacts DIR]                 — print manifest/config summary.
@@ -15,7 +17,7 @@ use std::sync::Arc;
 use recycle_serve::bench::{format_table, paper_cache_prompts, paper_test_prompts,
                            run_comparison, EvalOptions, Workload};
 use recycle_serve::error::{Error, Result};
-use recycle_serve::config::{CacheConfig, ServerConfig};
+use recycle_serve::config::{CacheConfig, RoutingPolicy, ServerConfig};
 use recycle_serve::coordinator::Coordinator;
 use recycle_serve::engine::Engine;
 use recycle_serve::index::NgramEmbedder;
@@ -95,25 +97,42 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cache = CacheConfig {
         max_entries: args.get_usize("max-entries", 64)?,
         compress: args.has("compress"),
+        spill_dir: args.flags.get("spill-dir").cloned(),
+        max_spill_bytes: args.get_usize("spill-mb", 0)? << 20,
         ..Default::default()
     };
+    cache.validate()?;
     // Validate artifacts cheaply on the main thread for a clear error.
     let manifest = recycle_serve::runtime::Manifest::load(&artifacts)?;
+    let routing = RoutingPolicy::parse(&args.get("routing", "prefix-affinity"))?;
     let cfg = ServerConfig {
         listen: args.get("listen", "127.0.0.1:7077"),
         max_batch: args.get_usize("max-batch", 8)?,
+        num_workers: args.get_usize("workers", 1)?.max(1),
+        routing,
         ..Default::default()
     };
     println!(
-        "recycle-serve: model '{}' from {} | policy {} | listening on {}",
+        "recycle-serve: model '{}' from {} | policy {} | {} worker(s), routing {} | listening on {}",
         manifest.model.name,
         artifacts.display(),
         policy.name(),
+        cfg.num_workers,
+        cfg.routing.name(),
         cfg.listen
     );
     let listen = cfg.listen.clone();
     let coordinator = Arc::new(Coordinator::spawn(
-        move || build_recycler(&artifacts, policy, cache).expect("runtime init"),
+        move |worker| {
+            let mut cache = cache.clone();
+            if cache.spill_dir.is_some() {
+                // Per-worker spill identity: workers share the configured
+                // spill_dir without file collisions, sweep only their own
+                // stale files, and can adopt each other's spilled records.
+                cache.spill_namespace = format!("w{worker}_");
+            }
+            build_recycler(&artifacts, policy, cache).expect("runtime init")
+        },
         cfg,
     ));
     let server = Server::start(Arc::clone(&coordinator), &listen)?;
@@ -190,7 +209,10 @@ fn main() -> Result<()> {
                 eprintln!("unknown command: {o}\n");
             }
             eprintln!("usage: recycle-serve <serve|eval|info> [--artifacts DIR] ...");
-            eprintln!("  serve --listen 127.0.0.1:7077 --policy strict|radix|off");
+            eprintln!(
+                "  serve --listen 127.0.0.1:7077 --policy strict|radix|off \
+                 --workers 4 --routing prefix-affinity --spill-dir /tmp/spill --spill-mb 256"
+            );
             eprintln!("  eval  --data data --results results --max-new 32");
             eprintln!("  info");
             Err(Error::Config("no command given".into()))

@@ -160,6 +160,18 @@ impl Counters {
         }
     }
 
+    /// Fold another worker's counters into this one (cluster aggregate:
+    /// all fields are sums).
+    pub fn merge(&mut self, o: &Counters) {
+        self.requests += o.requests;
+        self.cache_hits += o.cache_hits;
+        self.cache_misses += o.cache_misses;
+        self.tokens_prefilled += o.tokens_prefilled;
+        self.tokens_reused += o.tokens_reused;
+        self.tokens_generated += o.tokens_generated;
+        self.rejected += o.rejected;
+    }
+
     /// Fraction of prompt tokens that were NOT recomputed — the paper's
     /// "compute saved over the fixed window" framing.
     pub fn reuse_fraction(&self) -> f64 {
@@ -286,6 +298,31 @@ impl SchedulerStats {
         } else {
             self.ttft_ms_total as f64 / self.first_tokens as f64
         }
+    }
+
+    /// Fold another worker's scheduler counters into this one (cluster
+    /// aggregate): totals add, per-event maxima take the max. Derived
+    /// rates (`avg_occupancy`, `avg_ttft_ms`, …) then read as
+    /// cluster-wide means, weighted by each worker's event counts.
+    pub fn merge(&mut self, o: &SchedulerStats) {
+        self.decode_steps += o.decode_steps;
+        self.decode_slot_steps += o.decode_slot_steps;
+        self.peak_occupancy = self.peak_occupancy.max(o.peak_occupancy);
+        self.admitted += o.admitted;
+        self.queue_wait_ms_total += o.queue_wait_ms_total;
+        self.queue_wait_ms_max = self.queue_wait_ms_max.max(o.queue_wait_ms_max);
+        self.prefill_chunks += o.prefill_chunks;
+        self.prefill_tokens += o.prefill_tokens;
+        self.prefill_ticks += o.prefill_ticks;
+        self.prefill_stall_tokens_max =
+            self.prefill_stall_tokens_max.max(o.prefill_stall_tokens_max);
+        self.prefill_retries += o.prefill_retries;
+        self.transient_retries += o.transient_retries;
+        self.retry_give_ups += o.retry_give_ups;
+        self.deadline_timeouts += o.deadline_timeouts;
+        self.first_tokens += o.first_tokens;
+        self.ttft_ms_total += o.ttft_ms_total;
+        self.ttft_ms_max = self.ttft_ms_max.max(o.ttft_ms_max);
     }
 }
 

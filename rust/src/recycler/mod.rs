@@ -353,6 +353,52 @@ impl<M: ForwardModel> Recycler<M> {
         None
     }
 
+    /// Cross-worker adoption, the miss-path fallback of [`Recycler::lookup`]:
+    /// scan sibling namespaces' spill files in the shared `spill_dir` for the
+    /// deepest record whose tokens prefix `ids`, COPY it into the local hot
+    /// tier under a fresh local id (the owner's file and cold entry are never
+    /// touched), and index it like any admitted record so the NEXT lookup
+    /// resolves it locally. This is the cluster's cache-mobility layer: a
+    /// prompt family placed on a different worker than the one that computed
+    /// its prefix can still reuse that work through the shared cold tier.
+    /// A no-op unless both `spill_dir` and `spill_namespace` are configured,
+    /// so single-worker (`num_workers = 1`) behaviour — including exact
+    /// hit/miss accounting — is unchanged.
+    fn adopt_or_miss(
+        &mut self,
+        ids: &[u32],
+        emb: &[f32],
+        miss_sim: f64,
+    ) -> (Option<(Arc<KvRecord>, usize)>, f64) {
+        let adoptable = {
+            let cfg = self.store.config();
+            cfg.spill_dir.is_some() && !cfg.spill_namespace.is_empty()
+        };
+        if !adoptable {
+            self.store.note_miss();
+            return (None, miss_sim);
+        }
+        let arena = self.engine.arena().clone();
+        let (adopted, evicted) = self.store.adopt_foreign(ids, &arena);
+        for ev in evicted {
+            self.apply_eviction(ev);
+        }
+        self.sync_cold_drops();
+        let Some((id, rec)) = adopted else {
+            self.store.note_miss();
+            return (None, miss_sim);
+        };
+        self.index.add(id, &rec.embedding);
+        self.radix.insert(&rec.tokens, id);
+        self.tokens_of.insert(id, rec.tokens.clone());
+        let depth = rec.tokens.len();
+        let sim = cosine(&rec.embedding, emb) as f64;
+        // Count the hit (hit counter + recency/frequency touch) like any
+        // served record; the adoptee is hot, so this cannot fail.
+        let rec = self.store.hit(id).unwrap_or(rec);
+        (Some((rec, depth)), sim)
+    }
+
     /// The retrieval + prefix test. Returns (record, reuse_depth,
     /// similarity) on a hit; logs similarity of the candidate either way.
     fn lookup(&mut self, ids: &[u32], emb: &[f32]) -> (Option<(Arc<KvRecord>, usize)>, f64) {
@@ -360,12 +406,10 @@ impl<M: ForwardModel> Recycler<M> {
             RecyclePolicy::Off => (None, f64::NAN),
             RecyclePolicy::Strict => {
                 let Some((cand, sim)) = self.index.nearest(emb) else {
-                    self.store.note_miss();
-                    return (None, f64::NAN);
+                    return self.adopt_or_miss(ids, emb, f64::NAN);
                 };
                 if sim < self.store.config().min_similarity {
-                    self.store.note_miss();
-                    return (None, sim as f64);
+                    return self.adopt_or_miss(ids, emb, sim as f64);
                 }
                 // Prefix test against the token side table: rejecting a
                 // candidate never touches the record — in particular a
@@ -376,33 +420,28 @@ impl<M: ForwardModel> Recycler<M> {
                     None => (0, false), // stale index entry: a miss
                 };
                 if !full {
-                    self.store.note_miss();
-                    return (None, sim as f64);
+                    return self.adopt_or_miss(ids, emb, sim as f64);
                 }
                 match self.fetch_hit(cand) {
                     Some(rec) => (Some((rec, r)), sim as f64),
-                    None => {
-                        // gone from both tiers (or unreloadable right now)
-                        self.store.note_miss();
-                        (None, sim as f64)
-                    }
+                    // gone from both tiers (or unreloadable right now)
+                    None => self.adopt_or_miss(ids, emb, sim as f64),
                 }
             }
             RecyclePolicy::Radix => {
                 let Some((depth, key)) = self.radix.longest_prefix(ids) else {
-                    self.store.note_miss();
-                    return (None, f64::NAN);
+                    return self.adopt_or_miss(ids, emb, f64::NAN);
                 };
                 // A stale radix entry (record destroyed) is a miss like
                 // any other — fetch_hit unindexes it and the single
-                // note_miss below keeps miss accounting exact
-                // (regression-tested below). No
+                // adopt_or_miss fallback (which notes the miss when no
+                // sibling record is adoptable) keeps miss accounting
+                // exact (regression-tested below). No
                 // `debug_assert_eq!(depth, rec.token_len())`: it only
                 // holds while radix and store are in perfect lockstep,
                 // which a stale entry violates by definition.
                 let Some(rec) = self.fetch_hit(key) else {
-                    self.store.note_miss();
-                    return (None, f64::NAN);
+                    return self.adopt_or_miss(ids, emb, f64::NAN);
                 };
                 let sim = cosine(&rec.embedding, emb) as f64;
                 (Some((rec, depth)), sim)
@@ -931,6 +970,58 @@ mod tests {
         assert!(out.cache_hit, "radix entry survives the spill");
         assert_eq!(out.reuse_depth, r.tokenizer().encode(CACHE).len());
         assert_eq!(r.store().stats().spill_hits, 1);
+    }
+
+    #[test]
+    fn lookup_miss_adopts_sibling_workers_spilled_record() {
+        // Two recyclers (workers) share one spill_dir under distinct
+        // namespaces. A computes CACHE's prefix and spills it; B — which
+        // never saw CACHE — must adopt A's spilled record on its own
+        // lookup miss and serve the extension as a hit, without touching
+        // A's file (cross-worker cache mobility through the cold tier).
+        let dir = std::env::temp_dir()
+            .join(format!("recycle_adopt_rec_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let shared = |ns: &str| CacheConfig {
+            max_entries: 1,
+            max_spill_bytes: 64 << 20,
+            spill_dir: Some(dir.to_string_lossy().into_owned()),
+            spill_namespace: ns.into(),
+            ..Default::default()
+        };
+        let mut a = recycler_with(RecyclePolicy::Strict, shared("w0_"));
+        a.populate_cache = false;
+        a.warm(&[CACHE]).unwrap();
+        a.warm(&[OTHER]).unwrap(); // CACHE -> shared cold tier
+        assert_eq!(a.store().spilled_len(), 1);
+
+        let mut b = recycler_with(RecyclePolicy::Strict, shared("w1_"));
+        b.populate_cache = false;
+        let out = b.generate(TEST, 4).unwrap();
+        assert!(out.cache_hit, "adoption must serve a cross-worker hit");
+        assert_eq!(out.reuse_depth, b.tokenizer().encode(CACHE).len());
+        let s = b.store().stats();
+        assert_eq!(s.adoptions, 1);
+        assert_eq!(s.spill_hits, 1, "adoption counts as a spill hit");
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.misses, 0);
+        // the adoptee is indexed like an admitted record
+        assert_eq!(b.index.len(), b.store().total_len());
+        assert_eq!(b.radix.len(), b.store().total_len());
+
+        // token identity with a cold baseline — placement and adoption
+        // change latency and hit rate, never tokens
+        let mut base = recycler(RecyclePolicy::Off);
+        assert_eq!(base.generate(TEST, 4).unwrap().ids, out.ids);
+
+        // adoption copies: the owner's record still serves its own hit
+        let out_a = a.generate(TEST, 4).unwrap();
+        assert!(out_a.cache_hit, "owner's record survives adoption");
+        assert_eq!(a.store().stats().adoptions, 0);
+
+        drop(a);
+        drop(b);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -4,18 +4,33 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use crate::coordinator::{Coordinator, Response};
 use crate::error::{Error, Result};
 use crate::util::json::{self, Value};
 
+/// How long a connection thread blocks in a read before re-checking the
+/// shutdown flag. Bounds [`Server::stop`]'s join latency on idle
+/// connections; partial request lines accumulate across timeouts, so
+/// framing is unaffected.
+const CONN_POLL: Duration = Duration::from_millis(50);
+
 /// Running TCP server handle.
 pub struct Server {
     addr: SocketAddr,
     accept_thread: Option<JoinHandle<()>>,
-    shutdown: Arc<std::sync::atomic::AtomicBool>,
+    /// Live connection threads. The accept loop registers each spawn and
+    /// reaps finished handles in passing; [`Server::stop`] joins the
+    /// remainder, so shutdown leaks no threads even with clients still
+    /// connected (their reads time out on `CONN_POLL` and observe the
+    /// flag). A plain detach-on-spawn would leak every open connection's
+    /// thread past `stop()` — the registry makes teardown total.
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    shutdown: Arc<AtomicBool>,
 }
 
 impl Server {
@@ -25,30 +40,37 @@ impl Server {
         let listener = TcpListener::bind(listen)?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
-        let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let conns = Arc::new(Mutex::new(Vec::new()));
         let flag = Arc::clone(&shutdown);
+        let registry = Arc::clone(&conns);
         let accept_thread = std::thread::Builder::new()
             .name("recycle-server-accept".into())
             .spawn(move || {
                 loop {
-                    if flag.load(std::sync::atomic::Ordering::Relaxed) {
+                    if flag.load(Ordering::Relaxed) {
                         break;
                     }
                     match listener.accept() {
                         Ok((stream, _)) => {
                             let c = Arc::clone(&coordinator);
-                            // Detached: a connection thread exits when its
-                            // client disconnects (or the coordinator shuts
-                            // down and requests start failing). Joining here
-                            // would deadlock stop() against clients that are
-                            // still connected.
-                            std::thread::Builder::new()
+                            let f = Arc::clone(&flag);
+                            // Joining here would head-of-line-block the
+                            // accept loop on connected clients, so the
+                            // handle goes into the registry instead and
+                            // stop() joins it; finished handles are
+                            // reaped in passing to keep the registry
+                            // bounded by *live* connections.
+                            let h = std::thread::Builder::new()
                                 .name("recycle-server-conn".into())
-                                .spawn(move || handle_conn(stream, c))
+                                .spawn(move || handle_conn(stream, c, f))
                                 .expect("spawn conn thread");
+                            let mut reg = registry.lock().unwrap();
+                            reg.retain(|h: &JoinHandle<()>| !h.is_finished());
+                            reg.push(h);
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(std::time::Duration::from_millis(5));
+                            std::thread::sleep(Duration::from_millis(5));
                         }
                         Err(_) => break,
                     }
@@ -58,6 +80,7 @@ impl Server {
         Ok(Server {
             addr,
             accept_thread: Some(accept_thread),
+            conns,
             shutdown,
         })
     }
@@ -66,27 +89,37 @@ impl Server {
         self.addr
     }
 
+    /// Stop accepting, then join the accept thread AND every connection
+    /// thread: when this returns, the server owns no running threads.
     pub fn stop(mut self) {
-        self.shutdown
-            .store(true, std::sync::atomic::Ordering::Relaxed);
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
+        }
+        let handles: Vec<JoinHandle<()>> =
+            std::mem::take(&mut *self.conns.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
         }
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.shutdown
-            .store(true, std::sync::atomic::Ordering::Relaxed);
-        if let Some(t) = self.accept_thread.take() {
-            let _ = t.join();
-        }
+        self.stop_and_join();
     }
 }
 
-fn handle_conn(stream: TcpStream, coordinator: Arc<Coordinator>) {
+fn handle_conn(stream: TcpStream, coordinator: Arc<Coordinator>, shutdown: Arc<AtomicBool>) {
     let peer = stream.peer_addr().ok();
+    // Bounded reads so the thread can observe shutdown between requests;
+    // failing to set the timeout degrades to blocking reads (the thread
+    // then exits on client disconnect, as before the registry existed).
+    let _ = stream.set_read_timeout(Some(CONN_POLL));
     let mut writer = match stream.try_clone() {
         Ok(w) => w,
         Err(_) => return,
@@ -97,11 +130,28 @@ fn handle_conn(stream: TcpStream, coordinator: Arc<Coordinator>) {
     // serving — only EOF or a real socket error closes it. (`lines()`
     // folds invalid UTF-8 into `Err` and silently dropped the stream.)
     let mut buf: Vec<u8> = Vec::new();
-    loop {
+    'serve: loop {
         buf.clear();
-        match reader.read_until(b'\n', &mut buf) {
-            Ok(0) | Err(_) => break, // EOF / socket error
-            Ok(_) => {}
+        // Accumulate one full line; a read timeout only re-checks the
+        // shutdown flag (bytes already read stay in `buf` — a slow
+        // client's partial request is never dropped).
+        loop {
+            match reader.read_until(b'\n', &mut buf) {
+                Ok(0) => break 'serve, // EOF
+                Ok(_) if buf.ends_with(b"\n") => break,
+                // EOF with an unterminated final line: serve it; the
+                // next read returns Ok(0) and closes the connection.
+                Ok(_) => break,
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    if shutdown.load(Ordering::Relaxed) {
+                        break 'serve;
+                    }
+                }
+                Err(_) => break 'serve, // socket error
+            }
         }
         let reply = match std::str::from_utf8(&buf) {
             Ok(text) => {
@@ -142,6 +192,17 @@ pub fn serve_line(line: &str, coordinator: &Coordinator) -> Value {
 
 fn serve_line_inner(line: &str, coordinator: &Coordinator) -> Result<Value> {
     let req = json::parse(line)?;
+    // Control-plane commands ride the same wire as prompts. `stats`
+    // returns the aggregate + per-worker cluster breakdown.
+    if let Some(cmd) = req.get("cmd").and_then(|v| v.as_str()) {
+        return match cmd {
+            "stats" => Ok(json::obj(vec![
+                ("ok", json::b(true)),
+                ("stats", coordinator.cluster_stats().to_json()),
+            ])),
+            _ => Err(Error::Json(format!("unknown cmd '{cmd}'"))),
+        };
+    }
     let prompt = req.req_str("prompt")?;
     let max_new = req
         .get("max_new_tokens")
@@ -203,6 +264,17 @@ impl TcpClient {
             fields.push(("session", json::s(s)));
         }
         let line = json::obj(fields).to_json() + "\n";
+        self.roundtrip(&line)
+    }
+
+    /// Fetch the server's aggregate + per-worker stats breakdown
+    /// (`{"cmd":"stats"}`).
+    pub fn stats(&mut self) -> Result<Value> {
+        let line = json::obj(vec![("cmd", json::s("stats"))]).to_json() + "\n";
+        self.roundtrip(&line)
+    }
+
+    fn roundtrip(&mut self, line: &str) -> Result<Value> {
         self.writer.write_all(line.as_bytes())?;
         let mut reply = String::new();
         self.reader.read_line(&mut reply)?;

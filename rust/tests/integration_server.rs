@@ -14,9 +14,20 @@ use recycle_serve::testutil::trace::{run_script, Arrival, Script};
 use recycle_serve::testutil::MockModel;
 use recycle_serve::tokenizer::Tokenizer;
 
-fn spawn_stack() -> (Arc<Coordinator>, Server) {
+/// Worker count for the shared stack: CI runs this whole suite at both
+/// `RECYCLE_NUM_WORKERS=1` (the behavior-preserving default) and `=4`
+/// (the sharded router path) — every wire-level contract here must hold
+/// under any placement.
+fn num_workers_from_env() -> usize {
+    std::env::var("RECYCLE_NUM_WORKERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1)
+}
+
+fn spawn_stack_with(cfg: ServerConfig) -> (Arc<Coordinator>, Server) {
     let coordinator = Arc::new(Coordinator::spawn(
-        || {
+        |_worker| {
             Recycler::new(
                 Engine::new(MockModel::new(ModelConfig::nano())),
                 Arc::new(Tokenizer::new(vec![])),
@@ -25,11 +36,18 @@ fn spawn_stack() -> (Arc<Coordinator>, Server) {
                 RecyclePolicy::Strict,
             )
         },
-        ServerConfig::default(),
+        cfg,
     ));
     // port 0: the OS picks a free port
     let server = Server::start(Arc::clone(&coordinator), "127.0.0.1:0").unwrap();
     (coordinator, server)
+}
+
+fn spawn_stack() -> (Arc<Coordinator>, Server) {
+    spawn_stack_with(ServerConfig {
+        num_workers: num_workers_from_env(),
+        ..Default::default()
+    })
 }
 
 #[test]
@@ -274,7 +292,7 @@ fn coordinator_surfaces_chunked_prefill_counters() {
     // structurally whatever the thread timing does.
     let budget = 16usize;
     let coordinator = Coordinator::spawn(
-        || {
+        |_worker| {
             Recycler::new(
                 Engine::new(MockModel::new(ModelConfig::nano())),
                 Arc::new(Tokenizer::new(vec![])),
@@ -306,6 +324,106 @@ fn coordinator_surfaces_chunked_prefill_counters() {
     );
     assert!(s.prefill_ticks >= (180 / budget) as u64);
     coordinator.shutdown();
+}
+
+#[test]
+fn stats_command_reports_cluster_breakdown() {
+    let (_c, server) = spawn_stack();
+    let mut client = TcpClient::connect(server.addr()).unwrap();
+    client.request("seed the counters please", 2, None).unwrap();
+    let resp = client.stats().unwrap();
+    assert_eq!(resp.get("ok").and_then(|v| v.as_bool()), Some(true));
+    let stats = resp.get("stats").expect("stats payload");
+    assert_eq!(
+        stats.get("num_workers").and_then(|v| v.as_usize()),
+        Some(num_workers_from_env())
+    );
+    let agg = stats.get("aggregate").expect("aggregate block");
+    assert!(agg.get("completed").and_then(|v| v.as_i64()).unwrap() >= 1);
+    assert!(agg.get("hit_rate").and_then(|v| v.as_f64()).is_some());
+    let workers = stats.get("workers").and_then(|v| v.as_arr()).expect("rows");
+    assert_eq!(workers.len(), num_workers_from_env());
+    // per-worker rows carry identity + queue depth alongside the counters
+    assert_eq!(workers[0].get("worker").and_then(|v| v.as_usize()), Some(0));
+    assert!(workers[0].get("queue_depth").is_some());
+    // aggregate = sum of the per-worker rows (the merge law, over the wire)
+    let sum: i64 = workers
+        .iter()
+        .map(|w| w.get("completed").and_then(|v| v.as_i64()).unwrap())
+        .sum();
+    assert_eq!(agg.get("completed").and_then(|v| v.as_i64()), Some(sum));
+    server.stop();
+}
+
+#[test]
+fn unknown_cmd_is_a_typed_error_not_a_disconnect() {
+    let (_c, server) = spawn_stack();
+    use std::io::{BufRead, BufReader, Write};
+    let stream = std::net::TcpStream::connect(server.addr()).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream);
+    w.write_all(b"{\"cmd\": \"selfdestruct\"}\n").unwrap();
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":false"), "bad reply: {line}");
+    assert!(line.contains("selfdestruct"), "unhelpful message: {line}");
+    // same connection still serves prompts
+    w.write_all(br#"{"prompt": "still here", "max_new_tokens": 2}"#)
+        .unwrap();
+    w.write_all(b"\n").unwrap();
+    line.clear();
+    r.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":true"), "connection died: {line}");
+    server.stop();
+}
+
+#[test]
+fn four_worker_cluster_serves_over_tcp() {
+    // Explicit N=4 regardless of the env knob: distinct prompt families
+    // spread across workers, and the wire stats expose the breakdown.
+    let (c, server) = spawn_stack_with(ServerConfig {
+        num_workers: 4,
+        ..Default::default()
+    });
+    let mut client = TcpClient::connect(server.addr()).unwrap();
+    for i in 0..8 {
+        let r = client
+            .request(
+                &format!("prompt family number {i} padded well past the fingerprint"),
+                2,
+                None,
+            )
+            .unwrap();
+        assert_eq!(r.get("ok").and_then(|v| v.as_bool()), Some(true), "req {i}");
+    }
+    assert_eq!(c.stats().completed, 8);
+    let resp = client.stats().unwrap();
+    let stats = resp.get("stats").expect("stats payload");
+    assert_eq!(stats.get("num_workers").and_then(|v| v.as_usize()), Some(4));
+    assert_eq!(
+        stats.get("workers").and_then(|v| v.as_arr()).unwrap().len(),
+        4
+    );
+    server.stop();
+}
+
+#[test]
+fn stop_joins_idle_connection_threads() {
+    // Regression: stop() used to join only the accept thread, leaking one
+    // detached thread per still-connected client. With the connection
+    // registry + bounded reads, stop() must return promptly even while a
+    // client holds its connection open and idle.
+    let (_c, server) = spawn_stack();
+    let idle = std::net::TcpStream::connect(server.addr()).unwrap();
+    // give the accept loop a beat to register the connection
+    std::thread::sleep(std::time::Duration::from_millis(30));
+    let t0 = std::time::Instant::now();
+    server.stop(); // would block forever on a leaked blocking read
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(5),
+        "stop() stalled on an idle connection"
+    );
+    drop(idle);
 }
 
 #[test]

@@ -6,8 +6,9 @@
 use std::collections::{HashSet, VecDeque};
 use std::sync::Arc;
 
-use recycle_serve::config::{CacheConfig, EvictionPolicy, ModelConfig, ServerConfig};
-use recycle_serve::coordinator::{admission_prompt, SchedEvent, SessionManager};
+use recycle_serve::bench::{multi_tenant_trace, TraceSpec};
+use recycle_serve::config::{CacheConfig, EvictionPolicy, ModelConfig, RoutingPolicy, ServerConfig};
+use recycle_serve::coordinator::{admission_prompt, Coordinator, SchedEvent, SessionManager};
 use recycle_serve::engine::{plan_chunks, DecodeStream, Engine};
 use recycle_serve::faults::{FaultHandle, FaultPlan, FaultSite};
 use recycle_serve::testutil::trace::{run_script, shrink_script, Arrival, Script, TraceRun};
@@ -1620,4 +1621,93 @@ fn chaos_smoke_fixed_seed() {
     if let Err(msg) = chaos_contract(&plan, &cfg, &script) {
         panic!("fixed-seed chaos smoke failed: {msg}");
     }
+}
+
+// ---------- sharded routing ----------
+
+#[test]
+fn prop_routing_placement_never_changes_tokens() {
+    // The router's contract: placement changes latency and hit rate,
+    // NEVER tokens. One seeded multi-tenant trace (bursty arrivals,
+    // heavy-tailed session reuse, mixed prompt lengths — the same
+    // generator the sharding ablation bench drives) is served under
+    // N=1, N=3 round-robin, and N=3 prefix-affinity; every request's
+    // output ids must be identical across all placements, and every
+    // worker arena must conserve blocks with zero leaks after shutdown.
+    check("routing invariance", 5, |rng| {
+        let trace = multi_tenant_trace(TraceSpec {
+            tenants: 3,
+            requests: 18,
+            mean_burst: 3,
+            session_reuse: 0.4,
+            min_words: 2,
+            max_words: 10,
+            max_new_tokens: 4,
+            seed: rng.next_u64(),
+        });
+        let arms = [
+            (1usize, RoutingPolicy::PrefixAffinity),
+            (3, RoutingPolicy::RoundRobin),
+            (3, RoutingPolicy::PrefixAffinity),
+        ];
+        let mut outputs: Vec<Vec<Vec<u32>>> = Vec::new();
+        for (n, routing) in arms {
+            let cfg = ModelConfig::nano();
+            // caller-owned arenas: conservation stays checkable after the
+            // workers (and their recyclers) are gone
+            let arenas: Vec<KvArena> =
+                (0..n).map(|_| KvArena::new(&cfg, 16, 256)).collect();
+            let worker_arenas = arenas.clone();
+            let c = Coordinator::spawn(
+                move |w| {
+                    Recycler::new(
+                        Engine::with_arena(
+                            MockModel::new(ModelConfig::nano()),
+                            worker_arenas[w].clone(),
+                        ),
+                        Arc::new(Tokenizer::new(vec![])),
+                        Box::new(NgramEmbedder::new(64)),
+                        CacheConfig::default(),
+                        RecyclePolicy::Strict,
+                    )
+                },
+                ServerConfig {
+                    num_workers: n,
+                    routing,
+                    queue_capacity: 1024,
+                    ..Default::default()
+                },
+            );
+            let mut ids = Vec::new();
+            for r in &trace {
+                let out = match &r.session {
+                    Some(s) => c.chat(s, &r.prompt, r.max_new_tokens),
+                    None => c.generate(&r.prompt, r.max_new_tokens),
+                };
+                match out {
+                    Ok(o) => ids.push(o.ids),
+                    Err(e) => prop_assert!(false, "arm n={n} {routing:?} failed: {e}"),
+                }
+            }
+            c.shutdown();
+            for (w, arena) in arenas.iter().enumerate() {
+                assert_arena_conserved(arena, &format!("worker {w} after shutdown"))?;
+                prop_assert!(
+                    arena.free_blocks() == arena.capacity_blocks(),
+                    "worker {w} leaked {} blocks (n={n}, {routing:?})",
+                    arena.capacity_blocks() - arena.free_blocks()
+                );
+            }
+            outputs.push(ids);
+        }
+        prop_assert!(
+            outputs[0] == outputs[1],
+            "round-robin placement diverged from single-worker tokens"
+        );
+        prop_assert!(
+            outputs[0] == outputs[2],
+            "prefix-affinity placement diverged from single-worker tokens"
+        );
+        Ok(())
+    });
 }
