@@ -87,6 +87,29 @@ pub struct CacheConfig {
     /// unambiguous). Empty (default) = legacy single-store naming; the
     /// store then neither shares nor adopts.
     pub spill_namespace: String,
+    /// Segment-tier indexing stride in tokens: every admitted record is
+    /// additionally sliced into fixed-stride token spans, each embedded
+    /// and indexed independently, so an exact-prefix miss can fall
+    /// through to a *segment* match at a different offset (position
+    /// re-anchoring at attach; see `recycler`). 0 disables the segment
+    /// tier entirely. The stride is the retrieval grain: smaller catches
+    /// shorter shared documents but costs more index entries.
+    pub segment_tokens: usize,
+    /// Per-request fidelity budget for the segment tier: the tolerated
+    /// output infidelity (1 - text similarity vs a baseline run, the
+    /// `bench/eval.rs` score) of serving through a re-anchored segment.
+    /// **0.0 (default) disables segment serving** — the recycler is then
+    /// byte-identical to exact-prefix-only, preserving every
+    /// token-identity property. > 0 enables the path; the budget is
+    /// certified offline by `benches/ablation_segment.rs`, which measures
+    /// the segment arm's infidelity against the baseline arm and asserts
+    /// it stays within this budget.
+    pub segment_fidelity_budget: f64,
+    /// Retrieval similarity floor for segment candidates (embedding
+    /// cosine between the query window and the indexed span). Stricter
+    /// than `min_similarity` by default: a segment hit rewrites KV into a
+    /// foreign position, so weak matches must lose to recompute.
+    pub segment_min_similarity: f32,
 }
 
 impl Default for CacheConfig {
@@ -101,6 +124,9 @@ impl Default for CacheConfig {
             max_spill_bytes: 0,
             spill_dir: None,
             spill_namespace: String::new(),
+            segment_tokens: 0,
+            segment_fidelity_budget: 0.0,
+            segment_min_similarity: 0.80,
         }
     }
 }
@@ -160,6 +186,21 @@ impl CacheConfig {
                 .ok_or_else(|| Error::Config("spill_namespace must be a string".into()))?
                 .to_string();
         }
+        if let Some(x) = v.get("segment_tokens") {
+            c.segment_tokens = x
+                .as_usize()
+                .ok_or_else(|| Error::Config("segment_tokens must be a number".into()))?;
+        }
+        if let Some(x) = v.get("segment_fidelity_budget") {
+            c.segment_fidelity_budget = x.as_f64().ok_or_else(|| {
+                Error::Config("segment_fidelity_budget must be a number".into())
+            })?;
+        }
+        if let Some(x) = v.get("segment_min_similarity") {
+            c.segment_min_similarity = x.as_f64().ok_or_else(|| {
+                Error::Config("segment_min_similarity must be a number".into())
+            })? as f32;
+        }
         c.validate()?;
         Ok(c)
     }
@@ -171,6 +212,19 @@ impl CacheConfig {
             return Err(Error::Config(format!(
                 "min_similarity must be in [-1, 1], got {}",
                 self.min_similarity
+            )));
+        }
+        if !(-1.0..=1.0).contains(&self.segment_min_similarity) {
+            return Err(Error::Config(format!(
+                "segment_min_similarity must be in [-1, 1], got {}",
+                self.segment_min_similarity
+            )));
+        }
+        if !(0.0..=1.0).contains(&self.segment_fidelity_budget) {
+            // infidelity is 1 - text similarity, which lives in [0, 1]
+            return Err(Error::Config(format!(
+                "segment_fidelity_budget must be in [0, 1], got {}",
+                self.segment_fidelity_budget
             )));
         }
         if self.persist_dir.as_deref() == Some("") {
@@ -287,6 +341,32 @@ mod tests {
         // boundary values are legal
         let v = json::parse(r#"{"min_similarity": -1.0}"#).unwrap();
         assert_eq!(CacheConfig::from_json(&v).unwrap().min_similarity, -1.0);
+    }
+
+    #[test]
+    fn from_json_segment_knobs() {
+        let v = json::parse(
+            r#"{"segment_tokens": 16, "segment_fidelity_budget": 0.1,
+                "segment_min_similarity": 0.9}"#,
+        )
+        .unwrap();
+        let c = CacheConfig::from_json(&v).unwrap();
+        assert_eq!(c.segment_tokens, 16);
+        assert_eq!(c.segment_fidelity_budget, 0.1);
+        assert_eq!(c.segment_min_similarity, 0.9);
+        // defaults: segment tier indexed off, serving gated off
+        let d = CacheConfig::default();
+        assert_eq!(d.segment_tokens, 0);
+        assert_eq!(d.segment_fidelity_budget, 0.0);
+        for bad in [
+            r#"{"segment_tokens": "many"}"#,
+            r#"{"segment_fidelity_budget": 1.5}"#,
+            r#"{"segment_fidelity_budget": -0.1}"#,
+            r#"{"segment_min_similarity": 2.0}"#,
+        ] {
+            let v = json::parse(bad).unwrap();
+            assert!(CacheConfig::from_json(&v).is_err(), "{bad}");
+        }
     }
 
     #[test]

@@ -106,6 +106,13 @@ pub struct ServerConfig {
     /// Placement policy the router uses at `num_workers > 1` (ignored at
     /// 1, where every request lands on the only worker).
     pub routing: RoutingPolicy,
+    /// Serving-level override of the recycler's segment-tier fidelity
+    /// budget (`CacheConfig::segment_fidelity_budget`), applied by
+    /// `Scheduler::new` the way `populate_cache` is. `None` (default)
+    /// leaves the recycler's own cache config authoritative; `Some(0.0)`
+    /// forces exact-only serving cluster-wide regardless of how each
+    /// worker's cache was built.
+    pub segment_fidelity_budget: Option<f64>,
 }
 
 impl Default for ServerConfig {
@@ -125,6 +132,7 @@ impl Default for ServerConfig {
             retry_backoff_ticks: 1,
             num_workers: 1,
             routing: RoutingPolicy::PrefixAffinity,
+            segment_fidelity_budget: None,
         }
     }
 }
@@ -197,6 +205,11 @@ impl ServerConfig {
                 .as_bool()
                 .ok_or_else(|| Error::Config("populate_cache must be a bool".into()))?;
         }
+        if let Some(x) = v.get("segment_fidelity_budget") {
+            c.segment_fidelity_budget = Some(x.as_f64().ok_or_else(|| {
+                Error::Config("segment_fidelity_budget must be a number".into())
+            })?);
+        }
         c.validate()?;
         Ok(c)
     }
@@ -234,6 +247,14 @@ impl ServerConfig {
             // zero workers means no scheduler thread: nothing could ever
             // serve a request
             return Err(Error::Config("num_workers must be >= 1".into()));
+        }
+        if let Some(b) = self.segment_fidelity_budget {
+            if !(0.0..=1.0).contains(&b) {
+                // infidelity is 1 - text similarity, which lives in [0, 1]
+                return Err(Error::Config(format!(
+                    "segment_fidelity_budget must be in [0, 1], got {b}"
+                )));
+            }
         }
         Ok(())
     }
@@ -361,6 +382,23 @@ mod tests {
             r#"{"num_workers": -2}"#,
             r#"{"routing": "random"}"#,
             r#"{"routing": 3}"#,
+        ] {
+            let v = json::parse(bad).unwrap();
+            assert!(ServerConfig::from_json(&v).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn parses_segment_budget_override() {
+        let v = json::parse(r#"{"segment_fidelity_budget": 0.05}"#).unwrap();
+        let c = ServerConfig::from_json(&v).unwrap();
+        assert_eq!(c.segment_fidelity_budget, Some(0.05));
+        // default: no override, the recycler's cache config stands
+        assert_eq!(ServerConfig::default().segment_fidelity_budget, None);
+        for bad in [
+            r#"{"segment_fidelity_budget": 1.5}"#,
+            r#"{"segment_fidelity_budget": -0.1}"#,
+            r#"{"segment_fidelity_budget": "small"}"#,
         ] {
             let v = json::parse(bad).unwrap();
             assert!(ServerConfig::from_json(&v).is_err(), "{bad}");

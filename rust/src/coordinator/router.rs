@@ -49,6 +49,7 @@ use crate::engine::ForwardModel;
 use crate::error::{Error, Result};
 use crate::recycler::{Outcome, Recycler};
 use crate::util::json::{self, Value};
+use crate::util::sync::lock_recover;
 
 use super::queue::QueueError;
 use super::request::{Request, Response};
@@ -62,6 +63,16 @@ use super::service::{CoordinatorStats, Worker};
 const PREFIX_FINGERPRINT_BYTES: usize = 32;
 
 /// FNV-1a over the prompt's leading bytes.
+///
+/// Prompts shorter than [`PREFIX_FINGERPRINT_BYTES`] hash whatever bytes
+/// they have (the `take` just doesn't saturate): the fingerprint is still
+/// a pure function of the prompt text, so short prompts route
+/// deterministically — the same short prompt always lands on the same
+/// worker. The empty prompt hashes to the FNV offset basis, one ordinary
+/// family. Distinct prompts *can* collide (64-bit FNV over ≤32 bytes) and
+/// pile onto one worker; that skew is absorbed by the overload fallback in
+/// [`Coordinator::submit`], and made diagnosable by its
+/// `overload_fallbacks` counter in `{"cmd":"stats"}`.
 fn prefix_fingerprint(prompt: &str) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for &b in prompt.as_bytes().iter().take(PREFIX_FINGERPRINT_BYTES) {
@@ -88,6 +99,11 @@ pub struct Coordinator {
     workers: Vec<Worker>,
     state: Mutex<RouterState>,
     next_id: AtomicU64,
+    /// Sessionless requests that spilled off a saturated affine worker to
+    /// the least-loaded sibling. A climbing value under PrefixAffinity is
+    /// the fingerprint-collision / hot-family skew signal — visible in
+    /// `{"cmd":"stats"}` so skew is diagnosable without logs.
+    overload_fallbacks: AtomicU64,
     cfg: ServerConfig,
 }
 
@@ -114,6 +130,7 @@ impl Coordinator {
             workers,
             state: Mutex::new(RouterState::default()),
             next_id: AtomicU64::new(1),
+            overload_fallbacks: AtomicU64::new(0),
             cfg,
         }
     }
@@ -143,7 +160,10 @@ impl Coordinator {
         if self.workers.len() == 1 {
             return 0;
         }
-        let mut state = self.state.lock().unwrap();
+        // poison-recovering lock: the routing tables are valid at every
+        // step (plain maps + a cursor), so a panic elsewhere must not
+        // cascade into every later placement
+        let mut state = lock_recover(&self.state);
         if let Some(s) = session {
             if let Some(&w) = state.sessions.get(s) {
                 return w;
@@ -209,7 +229,10 @@ impl Coordinator {
             if alt != widx {
                 let (tx, rx) = mpsc::channel();
                 match self.workers[alt].try_push(mk_req(tx)) {
-                    Ok(()) => return Ok(rx),
+                    Ok(()) => {
+                        self.overload_fallbacks.fetch_add(1, Ordering::Relaxed);
+                        return Ok(rx);
+                    }
                     Err(QueueError::Closed) => return Err(Error::ShutDown),
                     Err(QueueError::Full) => {}
                 }
@@ -281,9 +304,15 @@ impl Coordinator {
         }
         ClusterStats {
             routing: self.cfg.routing,
+            overload_fallbacks: self.overload_fallbacks.load(Ordering::Relaxed),
             aggregate,
             workers,
         }
+    }
+
+    /// Sessionless requests that spilled off a saturated affine worker.
+    pub fn overload_fallbacks(&self) -> u64 {
+        self.overload_fallbacks.load(Ordering::Relaxed)
     }
 
     /// Requests queued across all workers.
@@ -327,6 +356,8 @@ pub struct WorkerStats {
 #[derive(Debug, Clone)]
 pub struct ClusterStats {
     pub routing: RoutingPolicy,
+    /// Router-owned skew signal (see [`Coordinator::overload_fallbacks`]).
+    pub overload_fallbacks: u64,
     pub aggregate: CoordinatorStats,
     pub workers: Vec<WorkerStats>,
 }
@@ -345,6 +376,11 @@ impl ClusterStats {
                 ("spills", json::n(s.cache.spills as f64)),
                 ("spill_hits", json::n(s.cache.spill_hits as f64)),
                 ("adoptions", json::n(s.cache.adoptions as f64)),
+                ("segment_hits", json::n(s.cache.segment_hits as f64)),
+                (
+                    "reanchored_tokens",
+                    json::n(s.cache.reanchored_tokens as f64),
+                ),
                 ("tokens_generated", json::n(s.engine.tokens_generated as f64)),
                 ("tokens_reused", json::n(s.engine.tokens_reused as f64)),
                 ("avg_ttft_ms", json::n(s.scheduler.avg_ttft_ms())),
@@ -362,6 +398,10 @@ impl ClusterStats {
         json::obj(vec![
             ("routing", json::s(self.routing.name())),
             ("num_workers", json::n(self.workers.len() as f64)),
+            (
+                "overload_fallbacks",
+                json::n(self.overload_fallbacks as f64),
+            ),
             ("aggregate", stats_obj(&self.aggregate, vec![])),
             (
                 "workers",
@@ -518,5 +558,79 @@ mod tests {
             prefix_fingerprint(&format!("{a}suffix-is-ignored"))
         );
         assert_ne!(prefix_fingerprint("abc"), prefix_fingerprint("abd"));
+    }
+
+    #[test]
+    fn short_prompts_route_deterministically() {
+        // prompts shorter than the 32-byte window (including empty) must
+        // be pure functions of their text: repeats always land on the
+        // worker the family table pinned first
+        for p in ["", "a", "hi", "short one"] {
+            assert_eq!(prefix_fingerprint(p), prefix_fingerprint(p));
+        }
+        assert_ne!(prefix_fingerprint("a"), prefix_fingerprint("b"));
+        let c = cluster(4, RoutingPolicy::PrefixAffinity);
+        for p in ["", "a", "hi", "short one"] {
+            let w = c.route(p, None);
+            for _ in 0..3 {
+                assert_eq!(c.route(p, None), w, "short prompt {p:?} moved");
+            }
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn overload_fallback_is_counted_and_visible_in_stats() {
+        // tiny queues + a slow-draining worker: saturate the affine
+        // worker's queue with one prompt family, then watch the same
+        // family spill to the sibling and bump the router's skew counter
+        let c = Coordinator::spawn(
+            |_| {
+                let engine = Engine::new(MockModel::with_delay(
+                    ModelConfig::nano(),
+                    std::time::Duration::from_millis(5),
+                ));
+                Recycler::new(
+                    engine,
+                    Arc::new(Tokenizer::new(vec![])),
+                    Box::new(NgramEmbedder::new(64)),
+                    Default::default(),
+                    RecyclePolicy::Strict,
+                )
+            },
+            ServerConfig {
+                num_workers: 2,
+                routing: RoutingPolicy::PrefixAffinity,
+                queue_capacity: 1,
+                ..Default::default()
+            },
+        );
+        let fam = "one shared family prefix padded well past the window";
+        // flood one family faster than a 5ms/token worker can drain it;
+        // with capacity 1 the affine queue saturates almost immediately
+        let mut receivers = Vec::new();
+        for _ in 0..40 {
+            match c.submit(fam, 2, None) {
+                Ok(rx) => receivers.push(rx),
+                Err(Error::Overloaded { .. }) => {} // both queues full: fine
+                Err(e) => panic!("unexpected submit error: {e}"),
+            }
+            if c.overload_fallbacks() > 0 {
+                break;
+            }
+        }
+        assert!(
+            c.overload_fallbacks() > 0,
+            "saturating the affine worker must trigger a counted fallback"
+        );
+        let js = c.cluster_stats().to_json().to_json();
+        assert!(
+            js.contains("\"overload_fallbacks\""),
+            "skew counter missing from the stats payload: {js}"
+        );
+        for rx in receivers {
+            let _ = rx.recv();
+        }
+        c.shutdown();
     }
 }

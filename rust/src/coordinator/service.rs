@@ -79,6 +79,7 @@ use crate::error::{Error, Result};
 use crate::kvcache::CacheStats;
 use crate::metrics::{Counters, SchedulerStats};
 use crate::recycler::{Outcome, Recycler, ServeMeta};
+use crate::util::sync::lock_recover;
 
 use super::batcher::{drain_batch, drain_ready};
 use super::queue::{QueueError, RequestQueue};
@@ -201,7 +202,9 @@ impl Worker {
     pub(super) fn try_push(&self, req: Request) -> std::result::Result<(), QueueError> {
         match self.shared.queue.push(req) {
             Ok(()) => {
-                self.shared.stats.lock().unwrap().submitted += 1;
+                // poison-recovering lock: a worker thread that panicked
+                // mid-publish must not cascade into the submit path
+                lock_recover(&self.shared.stats).submitted += 1;
                 Ok(())
             }
             Err(e) => Err(e),
@@ -210,7 +213,7 @@ impl Worker {
 
     /// Count a terminal load-shed rejection against this worker.
     pub(super) fn note_rejected(&self) {
-        self.shared.stats.lock().unwrap().rejected += 1;
+        lock_recover(&self.shared.stats).rejected += 1;
     }
 
     pub(super) fn queue_depth(&self) -> usize {
@@ -222,7 +225,9 @@ impl Worker {
     }
 
     pub(super) fn stats(&self) -> CoordinatorStats {
-        *self.shared.stats.lock().unwrap()
+        // a dead worker degrades to its last published snapshot instead of
+        // panicking the caller (router stats aggregation, `{"cmd":"stats"}`)
+        *lock_recover(&self.shared.stats)
     }
 
     /// Stop accepting; the thread drains its backlog then exits.
@@ -616,6 +621,11 @@ impl<M: ForwardModel> Scheduler<M> {
         // the config is authoritative however the scheduler is driven
         // (worker thread or the tick-level trace harness)
         recycler.populate_cache = cfg.populate_cache;
+        if let Some(b) = cfg.segment_fidelity_budget {
+            // cluster-wide segment-tier budget outranks whatever the
+            // recycler factory configured (None leaves it alone)
+            recycler.set_segment_fidelity_budget(b);
+        }
         Scheduler {
             recycler,
             cfg,
@@ -1184,7 +1194,7 @@ impl<M: ForwardModel> Scheduler<M> {
 }
 
 fn worker_loop<M: ForwardModel>(
-    shared: Arc<Shared>,
+    shared: Arc<WorkerShared>,
     recycler: Recycler<M>,
     cfg: ServerConfig,
 ) {
@@ -1216,7 +1226,7 @@ fn worker_loop<M: ForwardModel>(
         // submitter that wakes on its reply reads counters that already
         // include its own completion
         {
-            let mut stats = shared.stats.lock().unwrap();
+            let mut stats = lock_recover(&shared.stats);
             stats.scheduler = sched.stats();
             stats.completed = sched.completed();
             stats.failed = sched.failed();

@@ -64,6 +64,12 @@ impl FlatIndex {
     /// kernels/sim_topk.py). Four independent accumulators break the
     /// serial FP dependency chain so the loop vectorizes/pipelines; the
     /// summation order is fixed (pairwise) and identical across calls.
+    ///
+    /// Degenerate inputs (a NaN/Inf component anywhere in the query or a
+    /// stored row) clamp that pair's score to 0.0 — "no similarity" —
+    /// instead of letting a NaN poison the `top_k` ordering and eject
+    /// valid candidates. Zero-norm embeddings (an empty prompt through
+    /// the ngram embedder) already score 0.0 against everything.
     pub fn scores(&self, query: &[f32]) -> Vec<f32> {
         assert_eq!(query.len(), self.dim, "query dim mismatch");
         let mut out = Vec::with_capacity(self.keys.len());
@@ -81,7 +87,7 @@ impl FlatIndex {
             for (&a, &b) in r4.remainder().iter().zip(q4.remainder()) {
                 dot += a * b;
             }
-            out.push(dot);
+            out.push(if dot.is_finite() { dot } else { 0.0 });
         }
         out
     }
@@ -98,8 +104,11 @@ impl FlatIndex {
         }
         let scores = self.scores(query);
         let mut pairs: Vec<(u64, f32)> = self.keys.iter().copied().zip(scores).collect();
+        // total order: `scores` clamps non-finite dots, and `total_cmp`
+        // keeps the selection well-defined even if a NaN ever slipped
+        // through — ordering bugs here silently eject valid candidates
         let better = |a: &(u64, f32), b: &(u64, f32)| {
-            b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0))
+            b.1.total_cmp(&a.1).then(a.0.cmp(&b.0))
         };
         if k < pairs.len() {
             // partition: everything before index k "beats" everything after
@@ -233,6 +242,44 @@ mod tests {
                 assert!((g.1 - w.1).abs() < 1e-4, "k={k}: {} vs {}", g.1, w.1);
             }
         }
+    }
+
+    #[test]
+    fn nan_embedding_scores_zero_and_never_panics() {
+        // a poisoned (NaN) row must not break the selection comparator or
+        // outrank finite candidates
+        let mut ix = FlatIndex::new(2);
+        ix.add(1, &[f32::NAN, 0.0]);
+        ix.add(2, &[1.0, 0.0]);
+        ix.add(3, &[0.5, 0.0]);
+        let top = ix.top_k(&[1.0, 0.0], 3);
+        assert_eq!(top[0].0, 2);
+        assert_eq!(top[1].0, 3);
+        // the NaN row clamps to 0.0 instead of ejecting valid candidates
+        let nan_entry = top.iter().find(|(k, _)| *k == 1).unwrap();
+        assert_eq!(nan_entry.1, 0.0);
+    }
+
+    #[test]
+    fn nan_query_is_clean_zero_everywhere() {
+        let mut ix = FlatIndex::new(2);
+        ix.add(1, &[1.0, 0.0]);
+        ix.add(2, &[0.0, 1.0]);
+        let s = ix.scores(&[f32::NAN, f32::NAN]);
+        assert!(s.iter().all(|&x| x == 0.0), "NaN query must clamp: {s:?}");
+        // nearest still returns a well-defined (tie-broken) answer
+        assert_eq!(ix.nearest(&[f32::NAN, f32::NAN]).unwrap().0, 1);
+    }
+
+    #[test]
+    fn zero_norm_query_scores_zero() {
+        // the ngram embedder maps an empty prompt to the zero vector; it
+        // must score 0.0 against every entry (a clean miss under any
+        // positive similarity threshold), not NaN
+        let mut ix = FlatIndex::new(3);
+        ix.add(1, &unit(&[1.0, 2.0, 3.0]));
+        let s = ix.scores(&[0.0; 3]);
+        assert_eq!(s, vec![0.0]);
     }
 
     #[test]

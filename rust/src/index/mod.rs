@@ -6,6 +6,21 @@
 //!   vectors (the same algorithm faiss's `IndexFlatIP` runs at this scale,
 //!   and the paper's `argmax_i <e_i, e_t>` retrieval).
 //!
+//! Two recycler tiers run on these primitives, as two separate
+//! `FlatIndex` instances inside `recycler`:
+//!
+//! * **whole-prompt index** — one vector per cached record; tier-1
+//!   exact-prefix retrieval (`RecyclePolicy::Strict`).
+//! * **segment index** — one vector per fixed-stride token span of each
+//!   record; tier-2 segment lookup, where a semantic nearest-neighbour
+//!   only *proposes* a span and exact token comparison decides whether
+//!   it can be re-anchored.
+//!
+//! Degenerate inputs are clamped rather than propagated: [`cosine`]
+//! defines the zero-vector cases below, and `FlatIndex` treats a
+//! non-finite or zero-norm query/entry score as "no match" instead of
+//! letting a NaN poison the comparator (see `flat::tests`).
+//!
 //! An alternative embedder backed by the AOT `embed.hlo.txt` artifact lives
 //! in `engine::embedder` (it needs the PJRT runtime).
 

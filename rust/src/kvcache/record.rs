@@ -86,6 +86,24 @@ impl KvRecord {
     pub fn attach(&self) -> KvView {
         self.kv.clone()
     }
+
+    /// Fixed-stride segment spans `[start, end)` over this record's
+    /// tokens — the indexing grain of the segment tier (see `recycler`).
+    /// Only full-stride spans are produced: a trailing fragment shorter
+    /// than `stride` is not worth a segment entry (the exact-prefix path
+    /// already covers offset-0 reuse, and a re-anchor shorter than the
+    /// stride rarely beats recompute). `stride == 0` means segmenting is
+    /// off. Spans are computed, not stored: the record's persisted form
+    /// (spill tier, disk cache) is unchanged, and a different stride after
+    /// a config change simply re-derives them.
+    pub fn segment_spans(&self, stride: usize) -> Vec<(usize, usize)> {
+        if stride == 0 {
+            return Vec::new();
+        }
+        (0..self.tokens.len() / stride)
+            .map(|i| (i * stride, (i + 1) * stride))
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -159,6 +177,18 @@ mod tests {
         let mut rec = KvRecord::from_view("p", vec![1, 2, 3], vec![1.0], &v);
         rec.kv.truncate(1); // payload now shorter than the token list
         assert!(!rec.validate(&cfg()));
+    }
+
+    #[test]
+    fn segment_spans_cover_full_strides_only() {
+        let a = arena();
+        let v = view_of(&a, 22);
+        let rec = KvRecord::from_view("p", (0..22).collect(), vec![1.0], &v);
+        assert_eq!(rec.segment_spans(8), vec![(0, 8), (8, 16)]);
+        assert_eq!(rec.segment_spans(22), vec![(0, 22)]);
+        assert_eq!(rec.segment_spans(23), Vec::<(usize, usize)>::new());
+        assert_eq!(rec.segment_spans(0), Vec::<(usize, usize)>::new());
+        assert_eq!(rec.segment_spans(1).len(), 22);
     }
 
     #[test]

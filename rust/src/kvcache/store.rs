@@ -76,6 +76,14 @@ pub struct CacheStats {
     /// hit on a worker that did not produce the record. Each adoption is
     /// also counted in `spill_hits`.
     pub adoptions: u64,
+    /// Lookups served by the segment tier: an exact-prefix/radix miss
+    /// that matched a cached *segment* at a different offset and attached
+    /// it via position re-anchoring (see `recycler`). Each segment hit is
+    /// also counted in `hits` (it resolved through the store).
+    pub segment_hits: u64,
+    /// Cached KV positions re-anchored into a new offset by segment hits
+    /// (the reuse-depth analogue for the segment tier).
+    pub reanchored_tokens: u64,
     /// Total / worst reload latency over `spill_hits`, microseconds.
     pub spill_reload_us_total: u64,
     pub spill_reload_us_max: u64,
@@ -116,6 +124,8 @@ impl CacheStats {
         self.spilled_entries += o.spilled_entries;
         self.cold_bytes += o.cold_bytes;
         self.adoptions += o.adoptions;
+        self.segment_hits += o.segment_hits;
+        self.reanchored_tokens += o.reanchored_tokens;
         self.spill_reload_us_total += o.spill_reload_us_total;
         self.spill_reload_us_max = self.spill_reload_us_max.max(o.spill_reload_us_max);
         self.spill_setup_failed |= o.spill_setup_failed;
@@ -264,6 +274,16 @@ impl KvStore {
 
     pub fn config(&self) -> &CacheConfig {
         &self.cfg
+    }
+
+    /// Serving-level override of the segment-tier fidelity budget (see
+    /// `ServerConfig::segment_fidelity_budget`). The one cache knob that
+    /// is re-settable after construction: the scheduler applies the
+    /// cluster-wide budget onto factory-built recyclers at spawn. Every
+    /// other knob stays construction-time immutable (spill/eviction state
+    /// depends on them).
+    pub fn set_segment_fidelity_budget(&mut self, budget: f64) {
+        self.cfg.segment_fidelity_budget = budget;
     }
 
     /// Attach a fault plan to the cold tier (no-op when spilling is
@@ -511,6 +531,18 @@ impl KvStore {
     /// Read without touching recency/frequency (inspection, benches).
     pub fn peek(&self, id: u64) -> Option<Arc<KvRecord>> {
         self.entries.get(&id).map(|e| Arc::clone(&e.record))
+    }
+
+    /// Count a segment-tier hit: `tokens` cached positions re-anchored
+    /// into a new offset. The segment tier only runs after the exact tier
+    /// recorded this request as a miss, and the resolving
+    /// [`hit`](Self::hit)/reload then counted a store hit — so the
+    /// provisional miss is retracted here, keeping hits/misses exactly
+    /// one-per-request with `segment_hits` a subset of `hits`.
+    pub fn note_segment_hit(&mut self, tokens: usize) {
+        self.stats.misses = self.stats.misses.saturating_sub(1);
+        self.stats.segment_hits += 1;
+        self.stats.reanchored_tokens += tokens as u64;
     }
 
     /// Is `id` hot (arena-resident)?

@@ -1,6 +1,7 @@
-//! The paper's algorithm: cross-prompt KV recycling.
+//! The paper's algorithm: cross-prompt KV recycling — now a TWO-TIER
+//! lookup.
 //!
-//! Per request (paper §2.5/§3.1/§4.4):
+//! **Tier 1 — exact prefix** (paper §2.5/§3.1/§4.4). Per request:
 //!  1. embed the prompt,
 //!  2. retrieve the most similar cached prompt (`i* = argmax <e_i, e_t>`),
 //!  3. exact-prefix token test (`r == k`, strict),
@@ -11,8 +12,36 @@
 //!     builds the cache in a separate offline pass — [`Recycler::warm`] —
 //!     but online population is the serving-system generalization).
 //!
+//! **Tier 2 — segment re-anchoring** (the paper's §6 "beyond exact
+//! prefix" direction). A tier-1 miss falls through to segment lookup:
+//! each admitted record is also indexed at a fixed token stride
+//! ([`KvRecord::segment_spans`], `CacheConfig::segment_tokens`), each
+//! segment embedded independently. The query's token windows are embedded
+//! and matched against the segment index; a semantic candidate above
+//! `segment_min_similarity` is then **verified by exact token
+//! subsequence** and extended maximally in both directions — so the tier
+//! only ever re-anchors spans whose tokens literally occur in the query,
+//! just at a *different position* than where they were cached. The attach
+//! re-anchors at serve time: the head of the prompt (everything before
+//! the matched span) is prefilled fresh, the cached span's rows are
+//! copied into their new positions behind the arena block table, and the
+//! engine continues from there. A shared document pasted after different
+//! preambles — offset-shifted reuse the prefix tier can never catch — is
+//! the target workload (`benches/ablation_segment.rs`).
+//!
+//! The tier is gated by a per-request **fidelity budget**
+//! (`CacheConfig::segment_fidelity_budget`, overridable cluster-wide via
+//! `ServerConfig::segment_fidelity_budget`): `0.0` (the default) disables
+//! segment serving entirely, preserving every token-identity property of
+//! the exact tier byte-for-byte; a positive budget enables it, and the
+//! ablation bench certifies measured infidelity (1 − output similarity
+//! vs. the baseline arm, `bench::eval` scoring) stays within the budget.
+//! Position re-anchoring is approximate on a real positional-encoding
+//! backend; the budget is the contract that bounds the approximation.
+//!
 //! Policies:
-//!  * [`RecyclePolicy::Off`]      — always baseline (the paper's control arm).
+//!  * [`RecyclePolicy::Off`]      — always baseline (the paper's control
+//!    arm; neither tier runs).
 //!  * [`RecyclePolicy::Strict`]   — the paper: embedding top-1 + full-prefix.
 //!  * [`RecyclePolicy::Radix`]    — future-work §6.2: longest cached prefix
 //!    across all entries via the token radix tree (no embedding involved in
@@ -103,9 +132,37 @@ pub struct Recycler<M: ForwardModel> {
     /// it for the radix removal. Entries survive a spill, like the index
     /// and radix entries they back.
     tokens_of: HashMap<u64, Vec<u32>>,
+    /// Segment tier (tier 2): embeddings of fixed-stride record slices.
+    /// Keys are segment ids (`next_seg`), resolved through `seg_of`.
+    /// Like `index`/`radix`, entries survive a spill of their record and
+    /// die with it ([`Recycler::unindex`]).
+    seg_index: FlatIndex,
+    /// segment id -> (record id, span) — the reverse map a segment hit
+    /// resolves through.
+    seg_of: HashMap<u64, SegRef>,
+    /// record id -> its segment ids (for unindexing).
+    segs_of_rec: HashMap<u64, Vec<u64>>,
+    next_seg: u64,
     pub policy: RecyclePolicy,
     /// Insert served prompts into the cache (online population).
     pub populate_cache: bool,
+}
+
+/// One indexed segment: span `[start, end)` of record `rec`'s tokens.
+#[derive(Debug, Clone, Copy)]
+struct SegRef {
+    rec: u64,
+    start: usize,
+    end: usize,
+}
+
+/// A tier-2 hit, ready to seed the engine: `kv` holds `cur_len` valid
+/// positions (fresh-prefilled head + `reused` re-anchored cached rows).
+struct SegmentHit {
+    kv: KvView,
+    cur_len: usize,
+    reused: usize,
+    similarity: f64,
 }
 
 impl<M: ForwardModel> Recycler<M> {
@@ -125,6 +182,10 @@ impl<M: ForwardModel> Recycler<M> {
             index: FlatIndex::new(dim),
             radix: RadixTree::new(),
             tokens_of: HashMap::new(),
+            seg_index: FlatIndex::new(dim),
+            seg_of: HashMap::new(),
+            segs_of_rec: HashMap::new(),
+            next_seg: 0,
             policy,
             populate_cache: true,
         }
@@ -212,6 +273,65 @@ impl<M: ForwardModel> Recycler<M> {
         self.index.remove(id);
         if let Some(tokens) = self.tokens_of.remove(&id) {
             self.radix.remove(&tokens);
+        }
+        if let Some(keys) = self.segs_of_rec.remove(&id) {
+            for k in keys {
+                self.seg_index.remove(k);
+                self.seg_of.remove(&k);
+            }
+        }
+    }
+
+    /// Is the segment tier live? Off under the control-arm policy, a zero
+    /// stride (no segmenting), or a zero fidelity budget (exact-only
+    /// serving — the byte-identity contract).
+    fn segment_enabled(&self) -> bool {
+        let cfg = self.store.config();
+        self.policy != RecyclePolicy::Off
+            && cfg.segment_tokens > 0
+            && cfg.segment_fidelity_budget > 0.0
+    }
+
+    /// Apply the serving-level fidelity-budget override (see
+    /// `ServerConfig::segment_fidelity_budget`). Enabling the tier on a
+    /// recycler whose cache was warmed while it was off back-fills the
+    /// segment index from the hot store, so factory-warmed caches serve
+    /// segment hits too.
+    pub fn set_segment_fidelity_budget(&mut self, budget: f64) {
+        self.store.set_segment_fidelity_budget(budget);
+        if !self.segment_enabled() {
+            return;
+        }
+        let ids: Vec<u64> = self
+            .store
+            .ids()
+            .into_iter()
+            .filter(|id| !self.segs_of_rec.contains_key(id))
+            .collect();
+        for id in ids {
+            if let Some(rec) = self.store.peek(id) {
+                self.index_segments_of(id, &rec);
+            }
+        }
+    }
+
+    /// Index one record's fixed-stride segments into the segment tier
+    /// (no-op while the tier is disabled). Each span is decoded and
+    /// embedded independently — the semantic keys a tier-2 lookup
+    /// matches query windows against.
+    fn index_segments_of(&mut self, id: u64, rec: &KvRecord) {
+        if !self.segment_enabled() {
+            return;
+        }
+        let stride = self.store.config().segment_tokens;
+        for (a, b) in rec.segment_spans(stride) {
+            let text = self.tokenizer.decode(&rec.tokens[a..b]);
+            let emb = self.embedder.embed(&text);
+            let key = self.next_seg;
+            self.next_seg += 1;
+            self.seg_index.add(key, &emb);
+            self.seg_of.insert(key, SegRef { rec: id, start: a, end: b });
+            self.segs_of_rec.entry(id).or_default().push(key);
         }
     }
 
@@ -314,6 +434,9 @@ impl<M: ForwardModel> Recycler<M> {
         self.sync_cold_drops();
         self.index.add(id, &emb);
         self.radix.insert(&ids, id);
+        if let Some(rec) = self.store.peek(id) {
+            self.index_segments_of(id, &rec);
+        }
         self.tokens_of.insert(id, ids);
         id
     }
@@ -390,6 +513,7 @@ impl<M: ForwardModel> Recycler<M> {
         };
         self.index.add(id, &rec.embedding);
         self.radix.insert(&rec.tokens, id);
+        self.index_segments_of(id, &rec);
         self.tokens_of.insert(id, rec.tokens.clone());
         let depth = rec.tokens.len();
         let sim = cosine(&rec.embedding, emb) as f64;
@@ -447,6 +571,125 @@ impl<M: ForwardModel> Recycler<M> {
                 (Some((rec, depth)), sim)
             }
         }
+    }
+
+    /// Tier-2 lookup: semantic segment retrieval + exact-subsequence
+    /// verification + position re-anchoring. Runs only after the exact
+    /// tier missed (and noted the miss). Returns `None` — a plain miss —
+    /// whenever anything falls short: tier disabled, prompt shorter than
+    /// the stride, best candidate under `segment_min_similarity`, the
+    /// candidate's tokens not literally present in the query, the record
+    /// gone from both store tiers, or the arena too full for the
+    /// re-anchor attach.
+    fn segment_lookup(&mut self, ids: &[u32]) -> Option<SegmentHit> {
+        if !self.segment_enabled() || self.seg_index.is_empty() {
+            return None;
+        }
+        let stride = self.store.config().segment_tokens;
+        let min_sim = self.store.config().segment_min_similarity;
+        if ids.len() < stride {
+            return None;
+        }
+        // Slide a stride-length window over the query at a one-token hop
+        // and keep the best-scoring segment across all windows. The dense
+        // hop guarantees a cached segment present anywhere in the query is
+        // scanned at its exact offset (embedding equality, similarity
+        // 1.0) — a coarser hop would make retrieval depend on how the
+        // shared span happens to align against the window grid. Each probe
+        // is one n-gram hash + one flat-index scan; fine at this scale,
+        // and the tier only pays it on exact-tier misses.
+        let mut key = 0u64;
+        let mut sim = f32::NEG_INFINITY;
+        for w in 0..=ids.len() - stride {
+            let text = self.tokenizer.decode(&ids[w..w + stride]);
+            let emb = self.embedder.embed(&text);
+            if let Some((k, s)) = self.seg_index.nearest(&emb) {
+                if s > sim {
+                    sim = s;
+                    key = k;
+                }
+            }
+        }
+        if sim < min_sim {
+            return None; // also catches the no-candidate sentinel
+        }
+        // Semantic retrieval proposes; exact tokens dispose. The candidate
+        // span must occur verbatim in the query (first occurrence wins),
+        // and the match is then extended maximally both ways so one
+        // segment-grain probe re-anchors the full shared run.
+        let (rec_id, dst, src, len) = {
+            let seg = self.seg_of.get(&key)?;
+            let (rec_id, mut src) = (seg.rec, seg.start);
+            let cand = self.tokens_of.get(&rec_id)?;
+            let want = &cand[src..seg.end];
+            let mut len = want.len();
+            let mut dst = (0..=ids.len() - len).find(|&p| &ids[p..p + len] == want)?;
+            while dst > 0 && src > 0 && ids[dst - 1] == cand[src - 1] {
+                dst -= 1;
+                src -= 1;
+                len += 1;
+            }
+            while dst + len < ids.len()
+                && src + len < cand.len()
+                && ids[dst + len] == cand[src + len]
+            {
+                len += 1;
+            }
+            (rec_id, dst, src, len)
+        };
+        let rec = self.fetch_hit(rec_id)?;
+        match self.reanchor_attach(&rec, src, dst, len, ids) {
+            Ok((kv, cur_len)) => Some(SegmentHit {
+                kv,
+                cur_len,
+                reused: len,
+                similarity: sim as f64,
+            }),
+            // Arena exhausted mid-attach: the partial view frees on drop;
+            // serve as a plain miss (generate's shed-and-retry backstop
+            // still guards the baseline path).
+            Err(_) => None,
+        }
+    }
+
+    /// Build a KV view with `rec`'s rows `[src, src+len)` re-anchored at
+    /// position `dst`: prefill the fresh head `ids[..dst]` exactly, then
+    /// copy the cached span's rows into their new positions (COW row
+    /// writes behind the arena block table — the donor record is never
+    /// touched). Unlike the prefix tier's O(blocks) attach this copies
+    /// `len` tokens of KV, but a row copy is still far cheaper than the
+    /// forward pass it replaces. Position re-anchoring is exact on the
+    /// mock backend (content-addressed KV markers) and approximate under
+    /// real positional encodings — which is precisely what the fidelity
+    /// budget bounds.
+    fn reanchor_attach(
+        &mut self,
+        rec: &KvRecord,
+        src: usize,
+        dst: usize,
+        len: usize,
+        ids: &[u32],
+    ) -> Result<(KvView, usize)> {
+        let (n_layer, n_head) = {
+            let c = self.engine.config();
+            (c.n_layer, c.n_head)
+        };
+        let mut kv = self.engine.empty_kv();
+        if dst > 0 {
+            self.engine.prefill(&ids[..dst], &mut kv, 0)?;
+        }
+        for i in 0..len {
+            for l in 0..n_layer {
+                for k in 0..2 {
+                    for h in 0..n_head {
+                        kv.row_mut(l, k, h, dst + i)?
+                            .copy_from_slice(rec.kv.row(l, k, h, src + i));
+                    }
+                }
+            }
+        }
+        kv.commit(dst + len);
+        Ok((kv, dst + len))
     }
 
     /// Serve one prompt: the paper's per-test-prompt loop.
@@ -516,13 +759,25 @@ impl<M: ForwardModel> Recycler<M> {
         self.ensure_arena_headroom();
         let emb = self.embedder.embed(prompt);
         let (hit, similarity) = self.lookup(ids, &emb);
-        let (kv, cur_len, cache_hit, depth) = match hit {
+        let (kv, cur_len, cache_hit, depth, similarity) = match hit {
             Some((rec, depth)) => {
                 // Zero-copy injection: attach the record's block table
                 // (refcount bumps, O(prefix blocks) — no tensor memcpy).
-                (rec.attach(), depth, true, depth)
+                (rec.attach(), depth, true, depth, similarity)
             }
-            None => (self.engine.empty_kv(), 0, false, 0),
+            // Exact tier missed (and noted the miss): fall through to the
+            // segment tier. A segment hit converts the miss
+            // (note_segment_hit) and serves re-anchored KV; cache_hit =
+            // true keeps want_capture off — re-anchored KV is served,
+            // never admitted (only exactly-computed prefixes enter the
+            // cache).
+            None => match self.segment_lookup(ids) {
+                Some(seg) => {
+                    self.store.note_segment_hit(seg.reused);
+                    (seg.kv, seg.cur_len, true, seg.reused, seg.similarity)
+                }
+                None => (self.engine.empty_kv(), 0, false, 0, similarity),
+            },
         };
         let want_capture = self.populate_cache && !cache_hit && !admit_full;
         Admission {
@@ -1070,5 +1325,129 @@ mod tests {
         // baseline equivalence for the identical-prompt case
         let mut b = recycler(RecyclePolicy::Off);
         assert_eq!(b.generate(CACHE, 3).unwrap().ids, out.ids);
+    }
+
+    // ---- segment tier (tier 2) ----
+
+    /// A shared document long enough to span several stride-8 segments.
+    const DOC: &str = "the quick brown fox jumps over the lazy dog near the wide river";
+
+    fn seg_cache(stride: usize, budget: f64) -> CacheConfig {
+        CacheConfig {
+            max_entries: 8,
+            segment_tokens: stride,
+            segment_fidelity_budget: budget,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn segment_hit_serves_shared_document_at_shifted_offset() {
+        let mut r = recycler_with(RecyclePolicy::Strict, seg_cache(8, 0.2));
+        r.populate_cache = false;
+        let cached = format!("alpha beta: {DOC}");
+        r.warm(&[cached.as_str()]).unwrap();
+        // same document, different (longer) head: the prefix tier can
+        // never catch this — the shared span sits at a shifted offset
+        let query = format!("a very different preamble, then {DOC}");
+        let out = r.generate(&query, 4).unwrap();
+        assert!(out.cache_hit, "shared document must segment-hit");
+        let s = r.store().stats();
+        assert_eq!(s.segment_hits, 1);
+        assert!(s.reanchored_tokens >= 8, "got {}", s.reanchored_tokens);
+        assert_eq!(s.hits, 1, "segment hit is the request's one hit");
+        assert_eq!(s.misses, 0, "provisional exact-tier miss converted");
+        assert!(out.reuse_depth >= 8);
+        // content-exact on the mock backend: tokens match the baseline
+        let mut base = recycler(RecyclePolicy::Off);
+        assert_eq!(base.generate(&query, 4).unwrap().ids, out.ids);
+    }
+
+    #[test]
+    fn zero_budget_keeps_serving_exact_only() {
+        // budget 0.0 is the byte-identity contract: the tier neither
+        // indexes nor serves, so behaviour is exact-prefix-only
+        let mut r = recycler_with(RecyclePolicy::Strict, seg_cache(8, 0.0));
+        r.populate_cache = false;
+        let cached = format!("alpha beta: {DOC}");
+        r.warm(&[cached.as_str()]).unwrap();
+        assert!(r.seg_index.is_empty(), "budget 0 must not index segments");
+        let query = format!("a very different preamble, then {DOC}");
+        let out = r.generate(&query, 4).unwrap();
+        assert!(!out.cache_hit);
+        assert_eq!(out.reuse_depth, 0);
+        assert_eq!(r.store().stats().segment_hits, 0);
+    }
+
+    #[test]
+    fn budget_override_backfills_warmed_cache() {
+        // the scheduler applies ServerConfig::segment_fidelity_budget
+        // AFTER a factory may have warmed the cache; enabling must
+        // back-fill the segment index from the hot store
+        let mut r = recycler_with(RecyclePolicy::Strict, seg_cache(8, 0.0));
+        r.populate_cache = false;
+        let cached = format!("alpha beta: {DOC}");
+        r.warm(&[cached.as_str()]).unwrap();
+        assert!(r.seg_index.is_empty());
+        r.set_segment_fidelity_budget(0.2);
+        assert!(!r.seg_index.is_empty(), "enable back-fills warmed records");
+        let query = format!("a very different preamble, then {DOC}");
+        let out = r.generate(&query, 4).unwrap();
+        assert!(out.cache_hit);
+        assert_eq!(r.store().stats().segment_hits, 1);
+    }
+
+    #[test]
+    fn segment_eviction_keeps_side_structures_in_lockstep() {
+        // destroying a record (max_entries 1, no spill tier) must drop
+        // its segment entries with it
+        let mut r = recycler_with(
+            RecyclePolicy::Strict,
+            CacheConfig {
+                max_entries: 1,
+                segment_tokens: 4,
+                segment_fidelity_budget: 0.2,
+                ..Default::default()
+            },
+        );
+        r.populate_cache = false;
+        r.warm(&["alpha beta gamma delta epsilon zeta"]).unwrap();
+        let first = r.seg_index.len();
+        assert!(first > 0);
+        r.warm(&["eta theta iota kappa lambda mu nu"]).unwrap();
+        assert_eq!(r.segs_of_rec.len(), 1, "evicted record unindexed");
+        let live: usize = r.segs_of_rec.values().map(|v| v.len()).sum();
+        assert_eq!(r.seg_index.len(), live);
+        assert_eq!(r.seg_of.len(), live);
+    }
+
+    #[test]
+    fn empty_prompt_misses_cleanly_without_panicking() {
+        // regression: an empty prompt embeds to a zero-norm vector, and
+        // the index comparator used to be able to panic on the NaN
+        // scores that produced. The lookup must come back a clean miss
+        // and the engine's typed rejection must surface as an Err.
+        let mut r = recycler_with(RecyclePolicy::Strict, seg_cache(8, 0.2));
+        r.warm(&[CACHE]).unwrap();
+        let hits_before = r.store().stats().hits;
+        let out = r.generate("", 2);
+        assert!(out.is_err(), "empty prompts are rejected, not served");
+        assert_eq!(r.store().stats().hits, hits_before, "no hit counted");
+    }
+
+    #[test]
+    fn segment_tier_never_admits_reanchored_kv() {
+        // a segment hit serves approximated KV; it must never be captured
+        // back into the cache (only exactly-computed prefixes are)
+        let mut r = recycler_with(RecyclePolicy::Strict, seg_cache(8, 0.2));
+        r.populate_cache = true; // online population ON
+        let cached = format!("alpha beta: {DOC}");
+        r.warm(&[cached.as_str()]).unwrap();
+        let len_before = r.cache_len();
+        let query = format!("a very different preamble, then {DOC}");
+        let out = r.generate(&query, 4).unwrap();
+        assert!(out.cache_hit);
+        assert_eq!(r.store().stats().segment_hits, 1);
+        assert_eq!(r.cache_len(), len_before, "no admission on a segment hit");
     }
 }

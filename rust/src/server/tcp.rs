@@ -12,6 +12,7 @@ use std::time::Duration;
 use crate::coordinator::{Coordinator, Response};
 use crate::error::{Error, Result};
 use crate::util::json::{self, Value};
+use crate::util::sync::lock_recover;
 
 /// How long a connection thread blocks in a read before re-checking the
 /// shutdown flag. Bounds [`Server::stop`]'s join latency on idle
@@ -65,7 +66,10 @@ impl Server {
                                 .name("recycle-server-conn".into())
                                 .spawn(move || handle_conn(stream, c, f))
                                 .expect("spawn conn thread");
-                            let mut reg = registry.lock().unwrap();
+                            // poison-recovering lock: a connection thread
+                            // that panicked must not kill the accept loop
+                            // (and with it every future connection)
+                            let mut reg = lock_recover(&registry);
                             reg.retain(|h: &JoinHandle<()>| !h.is_finished());
                             reg.push(h);
                         }
@@ -100,8 +104,10 @@ impl Server {
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
+        // poison recovery keeps stop() total even after a connection
+        // thread panicked while registering
         let handles: Vec<JoinHandle<()>> =
-            std::mem::take(&mut *self.conns.lock().unwrap());
+            std::mem::take(&mut *lock_recover(&self.conns));
         for h in handles {
             let _ = h.join();
         }

@@ -7,4 +7,5 @@ pub mod crc32;
 pub mod csv;
 pub mod json;
 pub mod rng;
+pub mod sync;
 pub mod timing;

@@ -1,0 +1,51 @@
+//! Poison-tolerant locking.
+//!
+//! A `Mutex` poisons when a thread panics while holding it; every later
+//! `lock().unwrap()` then panics too, turning one crashed worker or
+//! connection thread into a cascade through `stats()` / `stop()` / the
+//! accept loop. For the locks in this codebase — stats counters and
+//! registries whose invariants never span a panic point — the right
+//! degradation is to take the inner guard and keep serving: the worst
+//! case is a stale counter, not a wedged server.
+
+use std::sync::{Mutex, MutexGuard};
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+///
+/// Use only for state that is valid at every instruction boundary
+/// (counters, maps of handles); state with multi-step invariants should
+/// keep the poisoning panic instead.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn recovers_after_a_panicked_holder() {
+        let m = Arc::new(Mutex::new(7u64));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("holder dies with the lock");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex must actually be poisoned");
+        // the cascade repro: plain unwrap would panic here
+        let mut g = lock_recover(&m);
+        assert_eq!(*g, 7);
+        *g += 1;
+        drop(g);
+        assert_eq!(*lock_recover(&m), 8);
+    }
+
+    #[test]
+    fn plain_lock_passthrough() {
+        let m = Mutex::new(1i32);
+        *lock_recover(&m) += 1;
+        assert_eq!(*lock_recover(&m), 2);
+    }
+}

@@ -1711,3 +1711,111 @@ fn prop_routing_placement_never_changes_tokens() {
         Ok(())
     });
 }
+
+// ---------- segment tier (tier-2 recycling) ----------
+
+/// `mk_recycler` with a caller-chosen cache config (the segment-tier
+/// properties vary the stride and budget).
+fn mk_recycler_cache(policy: RecyclePolicy, cache: CacheConfig) -> Recycler<MockModel> {
+    Recycler::new(
+        Engine::new(MockModel::new(ModelConfig::nano())),
+        Arc::new(Tokenizer::new(vec![])),
+        Box::new(NgramEmbedder::new(64)),
+        cache,
+        policy,
+    )
+}
+
+#[test]
+fn prop_zero_budget_segment_tier_is_byte_identical_to_exact_only() {
+    // The fidelity-budget contract: budget 0.0 must leave the recycler
+    // byte-identical to an exact-prefix-only build — same outputs AND
+    // same error outcomes — across random workloads, under both lookup
+    // policies, even with a nonzero indexing stride configured.
+    check("segment budget-0 identity", 40, |rng| {
+        let script = random_workload(rng);
+        let stride = rng.range(2, 12);
+        for policy in [RecyclePolicy::Strict, RecyclePolicy::Radix] {
+            let exact = sequential_reference_on(mk_recycler(policy), &script);
+            let gated = sequential_reference_on(
+                mk_recycler_cache(
+                    policy,
+                    CacheConfig {
+                        max_entries: 8,
+                        segment_tokens: stride,
+                        segment_fidelity_budget: 0.0,
+                        ..Default::default()
+                    },
+                ),
+                &script,
+            );
+            prop_assert!(
+                exact == gated,
+                "budget 0 diverged from exact-only under {policy:?} (stride {stride})"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_segment_reanchor_conserves_arena_and_tokens() {
+    // Offset-shifted shared-document prompts force tier-2 hits: fresh
+    // prefilled heads + re-anchored cached spans + COW decode extensions
+    // all mix in one arena. Conservation must hold after every request,
+    // every block must return once the recycler is gone, and — the mock
+    // backend's KV being content-addressed — served tokens must equal the
+    // cold baseline's.
+    let cfg = ModelConfig::nano();
+    check("segment re-anchor conservation", 30, |rng| {
+        let doc = format!("shared document {}", text(rng, 50));
+        let arena = KvArena::new(&cfg, 8, 512);
+        let mut r = Recycler::new(
+            Engine::with_arena(MockModel::new(cfg.clone()), arena.clone()),
+            Arc::new(Tokenizer::new(vec![])),
+            Box::new(NgramEmbedder::new(64)),
+            CacheConfig {
+                max_entries: 0, // unbounded: the doc record must survive
+                segment_tokens: rng.range(4, 10),
+                segment_fidelity_budget: 0.2,
+                ..Default::default()
+            },
+            RecyclePolicy::Strict,
+        );
+        let mut base = mk_recycler(RecyclePolicy::Off);
+        let mut doc_requests = 0;
+        for i in 0..rng.range(4, 9) {
+            let prompt = if rng.below(3) == 0 {
+                format!("fresh {}", text(rng, 20))
+            } else {
+                doc_requests += 1;
+                format!("head {i} {} {doc}", text(rng, 8))
+            };
+            let max_new = rng.range(1, 4);
+            let out = r.generate(&prompt, max_new);
+            prop_assert!(out.is_ok(), "segment arm failed: {out:?}");
+            let want = base.generate(&prompt, max_new);
+            prop_assert!(want.is_ok(), "baseline arm failed: {want:?}");
+            prop_assert!(
+                out.unwrap().ids == want.unwrap().ids,
+                "segment serving changed tokens on {prompt:?}"
+            );
+            assert_arena_conserved(&arena, "after request")?;
+        }
+        let stats = r.store().stats();
+        if doc_requests >= 2 {
+            prop_assert!(
+                stats.segment_hits >= 1,
+                "{doc_requests} shifted doc requests produced no segment hit"
+            );
+        }
+        drop(r);
+        assert_arena_conserved(&arena, "after drop")?;
+        prop_assert!(
+            arena.free_blocks() == arena.capacity_blocks(),
+            "re-anchored serving leaked {} blocks",
+            arena.capacity_blocks() - arena.free_blocks()
+        );
+        Ok(())
+    });
+}
