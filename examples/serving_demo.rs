@@ -168,6 +168,22 @@ fn main() -> Result<()> {
         stats_off.scheduler.avg_queue_wait_ms(),
         stats_on.scheduler.avg_queue_wait_ms()
     );
+    // capacity-multiplier meters: physical vs logical cold-tier bytes
+    // (their ratio is the spill-compression win) and quantized residents
+    println!(
+        "cold bytes phys/logic  : {:>4}/{:<9} {:>4}/{:<9}",
+        stats_off.cache.cold_bytes_physical,
+        stats_off.cache.cold_bytes_logical,
+        stats_on.cache.cold_bytes_physical,
+        stats_on.cache.cold_bytes_logical
+    );
+    println!(
+        "quantized blocks/bytes : {:>4}/{:<9} {:>4}/{:<9}",
+        stats_off.cache.quantized_blocks,
+        stats_off.cache.quantized_bytes,
+        stats_on.cache.quantized_blocks,
+        stats_on.cache.quantized_bytes
+    );
     let speedup = (lat_off.mean() - lat_on.mean()) / lat_off.mean() * 100.0;
     println!("\nmean-latency speedup   : {speedup:.1}%");
     println!(

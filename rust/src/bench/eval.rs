@@ -56,6 +56,21 @@ pub struct ComparisonReport {
 }
 
 impl ComparisonReport {
+    /// Output fidelity of the recycled arm: the mean baseline-vs-recycled
+    /// output similarity across the workload (1.0 = token-identical).
+    /// This is the gate a lossy cache representation (quantized hot
+    /// blocks) must clear before its capacity win counts.
+    pub fn fidelity(&self) -> f64 {
+        self.comparison.avg_output_similarity()
+    }
+
+    /// Whether the recycled arm's outputs are faithful enough to trust.
+    /// Fails closed: an empty workload or NaN similarity is *not* a pass.
+    pub fn passes_fidelity(&self, min: f64) -> bool {
+        let f = self.fidelity();
+        f.is_finite() && f >= min
+    }
+
     /// Render the §5.1 summary table rows (same metrics, same order).
     pub fn summary_rows(&self) -> Vec<(&'static str, String)> {
         let c = &self.comparison;
@@ -227,6 +242,23 @@ mod tests {
         // greedy + exact KV -> outputs identical -> similarity 1.0
         assert!(c.avg_output_similarity() > 0.999);
         assert!(report.alpha.is_finite() && report.alpha > 0.0);
+        // the fidelity gate reads the same similarity and must pass here
+        assert!(report.passes_fidelity(0.999));
+        assert!(!report.passes_fidelity(1.01), "gate must not pass above its own score");
+    }
+
+    #[test]
+    fn fidelity_gate_fails_closed_on_empty_workload() {
+        // no prompts -> similarity mean is NaN -> the gate must refuse
+        let report = ComparisonReport {
+            baseline_rows: vec![],
+            recycled_rows: vec![],
+            comparison: Comparison::merge(&[], &[], |_, _| 0.0),
+            speedup_samples: vec![],
+            alpha: 0.0,
+        };
+        assert!(!report.fidelity().is_finite() || report.fidelity() == 0.0);
+        assert!(!report.passes_fidelity(0.5));
     }
 
     #[test]

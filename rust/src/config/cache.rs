@@ -57,8 +57,25 @@ pub struct CacheConfig {
     /// miss before the prefix test even runs (paper uses top-1 retrieval
     /// with no floor; 0.0 reproduces that).
     pub min_similarity: f32,
-    /// Compress KV payloads with DEFLATE when persisting/spilling to disk.
+    /// Legacy (v1) payload-only DEFLATE when persisting/spilling to
+    /// disk. Superseded by `spill_compression`, which wins when both are
+    /// set; kept so existing configs keep their exact on-disk format.
     pub compress: bool,
+    /// Compress spill files with the whole-body DEFLATE (v2) codec, so
+    /// `max_spill_bytes` budgets *physical* compressed bytes and the cold
+    /// tier holds correspondingly more records within the same budget.
+    /// Existing raw (v1) files still reload bit-identically — decoding
+    /// dispatches on each file's version header. Off by default: the
+    /// on-disk format only changes when asked.
+    pub spill_compression: bool,
+    /// Keep hot entries quantized (8-bit rows, per-block scales) instead
+    /// of f32 arena blocks: resident entries hold **zero** arena blocks
+    /// and `max_bytes` budgets their ~4x-smaller quantized footprint,
+    /// multiplying hot capacity. A hit dequantizes into a fresh
+    /// arena-backed record on attach (small per-hit cost); fidelity is
+    /// gated offline by `benches/ablation_spill.rs`'s eval arm. Off by
+    /// default: the f32 path is byte-identical to prior behavior.
+    pub quantized_blocks: bool,
     /// Directory for persisted entries (None = RAM only).
     pub persist_dir: Option<String>,
     /// Cold-tier (disk spill) budget in serialized bytes. 0 disables
@@ -120,6 +137,8 @@ impl Default for CacheConfig {
             eviction: EvictionPolicy::Lru,
             min_similarity: 0.0,
             compress: false,
+            spill_compression: false,
+            quantized_blocks: false,
             persist_dir: None,
             max_spill_bytes: 0,
             spill_dir: None,
@@ -160,6 +179,16 @@ impl CacheConfig {
             c.compress = x
                 .as_bool()
                 .ok_or_else(|| Error::Config("compress must be a bool".into()))?;
+        }
+        if let Some(x) = v.get("spill_compression") {
+            c.spill_compression = x
+                .as_bool()
+                .ok_or_else(|| Error::Config("spill_compression must be a bool".into()))?;
+        }
+        if let Some(x) = v.get("quantized_blocks") {
+            c.quantized_blocks = x
+                .as_bool()
+                .ok_or_else(|| Error::Config("quantized_blocks must be a bool".into()))?;
         }
         if let Some(x) = v.get("persist_dir") {
             c.persist_dir = Some(
@@ -366,6 +395,32 @@ mod tests {
         ] {
             let v = json::parse(bad).unwrap();
             assert!(CacheConfig::from_json(&v).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn from_json_capacity_multiplier_knobs() {
+        // both knobs default off: the on-disk and in-arena formats only
+        // change when explicitly asked
+        let d = CacheConfig::default();
+        assert!(!d.spill_compression);
+        assert!(!d.quantized_blocks);
+        let v = json::parse(
+            r#"{"spill_compression": true, "quantized_blocks": true}"#,
+        )
+        .unwrap();
+        let c = CacheConfig::from_json(&v).unwrap();
+        assert!(c.spill_compression);
+        assert!(c.quantized_blocks);
+        for bad in [
+            r#"{"spill_compression": "yes"}"#,
+            r#"{"spill_compression": 1}"#,
+            r#"{"quantized_blocks": "on"}"#,
+            r#"{"quantized_blocks": 0}"#,
+        ] {
+            let v = json::parse(bad).unwrap();
+            let e = CacheConfig::from_json(&v).expect_err(bad);
+            assert!(matches!(e, Error::Config(_)), "{bad}: {e}");
         }
     }
 

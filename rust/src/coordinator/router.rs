@@ -375,6 +375,16 @@ impl ClusterStats {
                 ("cache_misses", json::n(s.cache.misses as f64)),
                 ("spills", json::n(s.cache.spills as f64)),
                 ("spill_hits", json::n(s.cache.spill_hits as f64)),
+                (
+                    "cold_bytes_physical",
+                    json::n(s.cache.cold_bytes_physical as f64),
+                ),
+                (
+                    "cold_bytes_logical",
+                    json::n(s.cache.cold_bytes_logical as f64),
+                ),
+                ("quantized_blocks", json::n(s.cache.quantized_blocks as f64)),
+                ("quantized_bytes", json::n(s.cache.quantized_bytes as f64)),
                 ("adoptions", json::n(s.cache.adoptions as f64)),
                 ("segment_hits", json::n(s.cache.segment_hits as f64)),
                 (
@@ -516,6 +526,10 @@ mod tests {
         assert!(js.contains("\"aggregate\""));
         assert!(js.contains("\"workers\""));
         assert!(js.contains("\"adoptions\""));
+        // capacity-multiplier meters ride the same wire payload
+        assert!(js.contains("\"cold_bytes_physical\""));
+        assert!(js.contains("\"cold_bytes_logical\""));
+        assert!(js.contains("\"quantized_blocks\""));
         c.shutdown();
     }
 

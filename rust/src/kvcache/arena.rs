@@ -46,7 +46,7 @@ use std::sync::Arc;
 use crate::config::ModelConfig;
 use crate::error::{Error, Result};
 
-use super::blocks::{BlockPool, BlockRef};
+use super::blocks::{BlockPool, BlockRef, QuantBlock};
 
 /// Default positions per block (PagedAttention's canonical 16).
 pub const DEFAULT_BLOCK_TOKENS: usize = 16;
@@ -557,6 +557,94 @@ impl KvView {
     }
 }
 
+/// A quantized copy of a view's payload: 8-bit blocks with per-block
+/// power-of-two scales, holding **zero** arena blocks. This is the hot
+/// tier's capacity multiplier (`CacheConfig::quantized_blocks`): the store
+/// keeps `QuantKv`s at ~1/4 the bytes of the f32 slab rows, and a cache
+/// hit dequantizes back into the arena on attach. Block granularity
+/// matches the arena (`block_tokens * elems_per_token` values per
+/// [`QuantBlock`]), so per-block scales track the same locality the paged
+/// layout does.
+pub struct QuantKv {
+    geom: KvGeometry,
+    n_tokens: usize,
+    blocks: Vec<QuantBlock>,
+}
+
+impl std::fmt::Debug for QuantKv {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "QuantKv(tokens={}, blocks={})",
+            self.n_tokens,
+            self.blocks.len()
+        )
+    }
+}
+
+impl QuantKv {
+    /// Quantize a view's gathered payload (the view itself is untouched;
+    /// the caller decides whether to drop it and release its blocks).
+    pub fn from_view(view: &KvView) -> QuantKv {
+        let geom = view.geometry().clone();
+        let flat = view.to_contiguous();
+        let chunk = geom.block_elems().max(1);
+        QuantKv {
+            n_tokens: view.len(),
+            blocks: flat.chunks(chunk).map(QuantBlock::quantize).collect(),
+            geom,
+        }
+    }
+
+    pub fn n_tokens(&self) -> usize {
+        self.n_tokens
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn geometry(&self) -> &KvGeometry {
+        &self.geom
+    }
+
+    /// Physical bytes held (i8 payloads + scale words).
+    pub fn quant_bytes(&self) -> usize {
+        self.blocks.iter().map(|b| b.bytes()).sum()
+    }
+
+    /// Bytes the same payload occupies as f32 arena rows — the logical
+    /// size the capacity comparison is made against.
+    pub fn logical_bytes(&self) -> usize {
+        self.geom.bytes_per_token() * self.n_tokens
+    }
+
+    /// Dequantize to a contiguous trimmed `[L, 2, H, n_tokens, D]` buffer.
+    pub fn to_f32(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.geom.elems_per_token() * self.n_tokens];
+        let chunk = self.geom.block_elems().max(1);
+        for (i, b) in self.blocks.iter().enumerate() {
+            let start = i * chunk;
+            b.dequantize_into(&mut out[start..start + b.len()]);
+        }
+        out
+    }
+
+    /// Materialize back into arena blocks (the attach path of a quantized
+    /// cache hit). Fails with `ArenaExhausted` under block pressure —
+    /// callers retry after shedding, exactly like a spill reload.
+    pub fn materialize(&self, arena: &KvArena) -> Result<KvView> {
+        if *arena.geometry() != self.geom {
+            return Err(Error::ShapeMismatch(format!(
+                "quantized payload geometry {:?} does not match arena {:?}",
+                self.geom,
+                arena.geometry()
+            )));
+        }
+        KvView::from_contiguous(arena, &self.to_f32(), self.n_tokens)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -685,5 +773,60 @@ mod tests {
         let cfg = ModelConfig::nano();
         let a = KvArena::with_defaults(&cfg);
         assert!(a.capacity_blocks() * a.block_tokens() >= cfg.max_seq * 64);
+    }
+
+    #[test]
+    fn quant_kv_holds_no_blocks_and_materializes_back() {
+        let a = arena();
+        let mut v = a.new_view();
+        // integer-valued rows bounded by 127 -> exact under pow2 scales
+        let g = a.geometry().clone();
+        let rows: Vec<f32> = (0..g.planes() * 13 * g.head_dim)
+            .map(|i| (i % 120) as f32)
+            .collect();
+        v.scatter_chunk(&rows, 13, 13, 0).unwrap();
+        let q = QuantKv::from_view(&v);
+        let flat = v.to_contiguous();
+        drop(v);
+        assert_eq!(a.used_blocks(), 0, "QuantKv must pin zero arena blocks");
+        assert_eq!(q.n_tokens(), 13);
+        assert!(
+            q.quant_bytes() * 3 < q.logical_bytes(),
+            "quantized bytes {} must be well under logical {}",
+            q.quant_bytes(),
+            q.logical_bytes()
+        );
+        let back = q.materialize(&a).unwrap();
+        assert_eq!(back.len(), 13);
+        assert_eq!(back.to_contiguous(), flat, "integer payload round-trips exactly");
+    }
+
+    #[test]
+    fn quant_kv_rejects_wrong_geometry() {
+        let a = arena();
+        let mut v = a.new_view();
+        fill(&mut v, 0, 5, 1.0);
+        let q = QuantKv::from_view(&v);
+        let mut other_cfg = ModelConfig::nano();
+        other_cfg.n_layer += 1;
+        let other = KvArena::new(&other_cfg, 8, 32);
+        match q.materialize(&other) {
+            Err(Error::ShapeMismatch(_)) => {}
+            o => panic!("expected shape mismatch, got {o:?}"),
+        }
+    }
+
+    #[test]
+    fn quant_kv_exhaustion_is_transient_not_panic() {
+        let a = arena();
+        let mut v = a.new_view();
+        fill(&mut v, 0, 16, 2.0); // 2 blocks of 8
+        let q = QuantKv::from_view(&v);
+        drop(v);
+        let small = KvArena::new(&ModelConfig::nano(), 8, 1);
+        match q.materialize(&small) {
+            Err(Error::ArenaExhausted { .. }) => {}
+            o => panic!("expected exhaustion, got {o:?}"),
+        }
     }
 }

@@ -172,6 +172,88 @@ impl BlockPool {
     }
 }
 
+/// Smallest power-of-two scale whose 8-bit symmetric range `[-127, 127]`
+/// covers `max_abs`. Power-of-two scales make the codec *exact* on
+/// dyadic-grid data (any value `k * 2^n` with `|value / scale| <= 127`
+/// round-trips bit-identically, because both the division and the
+/// multiplication are exact in f32) — which is what lets the
+/// token-identity suite hold on the quantized hot tier for integer-valued
+/// KV rows, while arbitrary rows degrade gracefully to <= scale/2 error.
+pub fn pow2_scale(max_abs: f32) -> f32 {
+    if !max_abs.is_finite() || max_abs <= 0.0 {
+        return 1.0;
+    }
+    let mut s = 1.0f32;
+    if max_abs > 127.0 {
+        while max_abs > 127.0 * s {
+            s *= 2.0;
+        }
+    } else {
+        while s * 0.5 > 0.0 && max_abs <= 127.0 * (s * 0.5) {
+            s *= 0.5;
+        }
+    }
+    s
+}
+
+/// One quantized KV block: 8-bit symmetric values under a shared
+/// power-of-two scale. This is the hot tier's capacity multiplier — a
+/// `QuantBlock` stores a block's worth of f32 rows in a quarter of the
+/// bytes, and dequantizes into a fresh arena block on attach.
+pub struct QuantBlock {
+    data: Box<[i8]>,
+    scale: f32,
+}
+
+impl QuantBlock {
+    /// Quantize a run of f32 values (one block's worth) under one
+    /// power-of-two scale chosen from the run's max magnitude.
+    pub fn quantize(values: &[f32]) -> QuantBlock {
+        let max_abs = values
+            .iter()
+            .filter(|v| v.is_finite())
+            .fold(0.0f32, |m, v| m.max(v.abs()));
+        let scale = pow2_scale(max_abs);
+        let data: Box<[i8]> = values
+            .iter()
+            .map(|&v| (v / scale).round().clamp(-127.0, 127.0) as i8)
+            .collect();
+        QuantBlock { data, scale }
+    }
+
+    /// Dequantize into `out` (must be exactly `self.len()` values).
+    pub fn dequantize_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.data.len(), "dequantize size mismatch");
+        for (o, &q) in out.iter_mut().zip(self.data.iter()) {
+            *o = q as f32 * self.scale;
+        }
+    }
+
+    /// Stored values.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Physical bytes held: one i8 per value plus the scale word.
+    pub fn bytes(&self) -> usize {
+        self.data.len() + 4
+    }
+
+    pub fn scale(&self) -> f32 {
+        self.scale
+    }
+}
+
+impl std::fmt::Debug for QuantBlock {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "QuantBlock(len={}, scale={})", self.data.len(), self.scale)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -259,5 +341,58 @@ mod tests {
         assert_eq!(unshared, 4 * 4 * 16);
         assert_eq!(shared, (2 + 4 * 2) * 16);
         assert!(shared < unshared);
+    }
+
+    #[test]
+    fn pow2_scale_covers_and_is_minimal() {
+        assert_eq!(pow2_scale(0.0), 1.0);
+        assert_eq!(pow2_scale(f32::NAN), 1.0);
+        assert_eq!(pow2_scale(100.0), 1.0);
+        assert_eq!(pow2_scale(127.0), 1.0);
+        assert_eq!(pow2_scale(128.0), 2.0);
+        assert_eq!(pow2_scale(300.0), 4.0);
+        assert_eq!(pow2_scale(42.0), 0.5);
+        assert_eq!(pow2_scale(0.4), 1.0 / 256.0);
+        for m in [0.3f32, 1.0, 63.0, 64.0, 500.0, 1e-6, 1e6] {
+            let s = pow2_scale(m);
+            assert!(m <= 127.0 * s, "scale {s} does not cover {m}");
+            assert!(
+                s <= f32::MIN_POSITIVE || m > 127.0 * (s * 0.5),
+                "scale {s} not minimal for {m}"
+            );
+        }
+    }
+
+    #[test]
+    fn quant_roundtrip_exact_on_integer_grid() {
+        // integers |v| <= 127 under a power-of-two scale are exact — the
+        // property the token-identity suite relies on
+        let vals: Vec<f32> = (-127..=127).map(|i| i as f32).collect();
+        let q = QuantBlock::quantize(&vals);
+        let mut out = vec![0f32; vals.len()];
+        q.dequantize_into(&mut out);
+        assert_eq!(out, vals);
+    }
+
+    #[test]
+    fn quant_roundtrip_bounded_error_and_quarter_size() {
+        let vals: Vec<f32> = (0..256).map(|i| (i as f32) * 0.731 - 90.0).collect();
+        let q = QuantBlock::quantize(&vals);
+        assert_eq!(q.bytes(), vals.len() + 4, "i8 payload + scale word");
+        assert!(q.bytes() * 4 < vals.len() * 4 + 32, "must be ~4x smaller");
+        let mut out = vec![0f32; vals.len()];
+        q.dequantize_into(&mut out);
+        for (a, b) in vals.iter().zip(&out) {
+            assert!((a - b).abs() <= q.scale() / 2.0 + 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn quant_zeros_stay_zero() {
+        let vals = vec![0f32; 64];
+        let q = QuantBlock::quantize(&vals);
+        let mut out = vec![1f32; 64];
+        q.dequantize_into(&mut out);
+        assert!(out.iter().all(|&v| v == 0.0));
     }
 }

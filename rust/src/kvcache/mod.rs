@@ -20,26 +20,55 @@
 //!   accounting in [`CacheStats`]. An [`Eviction`] reports the blocks it
 //!   *actually* returns to the arena (the victim's uniquely-held blocks),
 //!   so callers can reason about real headroom instead of guessing.
+//!
+//!   The hot tier has **two resident formats**. The default keeps each
+//!   entry's payload in f32 arena blocks, shared COW with in-flight
+//!   requests. With `CacheConfig::quantized_blocks` on, entries instead
+//!   rest as [`QuantRecord`]s — 8-bit rows ([`QuantBlock`]) under
+//!   per-block power-of-two scales, holding **zero** arena blocks — and
+//!   `max_bytes` budgets their ~4x-smaller quantized footprint
+//!   (`CacheStats::quantized_bytes`), multiplying how many entries one
+//!   budget admits. A hit dequantizes into a fresh arena-backed record
+//!   on attach; eviction spills through the dequantized parts without
+//!   touching the arena. With the knob off the store is byte-identical
+//!   to the pure-f32 path (property-pinned).
 //! * [`tier`] — the **cold tier**: eviction's destination. Under memory
 //!   pressure a hot record is *spilled* (serialized via [`persist`],
 //!   CRC-stamped, budgeted by `CacheConfig::max_spill_bytes`, LRU within
 //!   the tier) instead of destroyed; index/radix entries survive the
 //!   spill, and a later lookup transparently reloads the record into the
 //!   arena ([`KvStore::reload_spilled`]) — counted as a `spill_hit` with
-//!   its reload latency. This is the paper's "cached KVs are serialized
-//!   to the CPU, reloaded, and supplied to generate", extended so the
-//!   cache working set can exceed arena capacity.
-//! * [`persist`] — torch.save's stand-in: a checksummed binary file format
-//!   with optional DEFLATE compression. Corrupt or truncated files are
-//!   rejected with a typed error (`Error::Corrupt`) — a bad spill file
-//!   degrades to a cache miss, never to garbage KV in the arena.
+//!   its reload latency (clocked from the disk read, so decompress time
+//!   is inside and other records' shed costs are not). This is the
+//!   paper's "cached KVs are serialized to the CPU, reloaded, and
+//!   supplied to generate", extended so the cache working set can exceed
+//!   arena capacity.
+//!
+//!   The cold tier also has **two codecs**. The legacy v1 format stores
+//!   the record raw (optionally with a payload-only DEFLATE under the
+//!   old `compress` knob); with `CacheConfig::spill_compression` on, new
+//!   spills use the v2 format — the whole record body DEFLATE-compressed
+//!   behind a versioned header — so `max_spill_bytes` budgets *physical*
+//!   compressed bytes and holds correspondingly more records. The tier
+//!   tracks both meters: `cold_bytes` (physical, the budget unit) and
+//!   `cold_bytes_logical` (what the same entries would occupy raw);
+//!   their ratio is the compression capacity multiplier. Decoding
+//!   dispatches on each file's version word, so a tier switched to v2
+//!   still reloads its legacy raw files bit-identically.
+//! * [`persist`] — torch.save's stand-in: a checksummed binary file
+//!   format, versioned v1 (raw / payload-compressed) and v2
+//!   (whole-body compressed). Corrupt or truncated files of either
+//!   version are rejected with a typed error (`Error::Corrupt`) — a bad
+//!   spill file degrades to a cache miss, never to garbage KV in the
+//!   arena.
 //!
 //! Conservation across the tiers (property-tested in
 //! `rust/tests/properties.rs`): arena blocks satisfy `free +
 //! hot-referenced == capacity` at every step — spilled entries hold
 //! *zero* arena blocks, their bytes accounted instead as the tier's
-//! `cold_bytes` — and after any eviction the arena's free count grows by
-//! exactly the eviction's reported unique-block footprint.
+//! physical `cold_bytes` (which equals the summed on-disk file sizes
+//! under either codec) — and after any eviction the arena's free count
+//! grows by exactly the eviction's reported unique-block footprint.
 
 pub mod arena;
 pub mod blocks;
@@ -48,8 +77,9 @@ mod record;
 mod store;
 pub mod tier;
 
-pub use arena::{KvArena, KvGeometry, KvView, DEFAULT_BLOCK_TOKENS};
-pub use blocks::{BlockPool, BlockRef};
-pub use record::KvRecord;
+pub use arena::{KvArena, KvGeometry, KvView, QuantKv, DEFAULT_BLOCK_TOKENS};
+pub use blocks::{BlockPool, BlockRef, QuantBlock};
+pub use persist::{Codec, RecordParts};
+pub use record::{KvRecord, QuantRecord};
 pub use store::{CacheStats, Eviction, KvStore};
 pub use tier::SpillTier;

@@ -1,8 +1,10 @@
 //! Disk persistence for KV records — the `torch.save` stand-in.
 //!
-//! File layout (little-endian, unchanged since version 1 — the paged-arena
-//! refactor serializes the *gathered* payload, so files are byte-identical
-//! to the dense-buffer encoder and old caches stay loadable):
+//! Two on-disk versions coexist, selected by a [`Codec`]:
+//!
+//! **Version 1** (little-endian, unchanged since the dense-buffer encoder —
+//! the paged-arena refactor serializes the *gathered* payload, so files are
+//! byte-identical to the original encoder and old caches stay loadable):
 //!
 //! ```text
 //! magic   u32  = 0x4B56_5243  ("KVRC")
@@ -16,11 +18,30 @@
 //! crc32 u32 over everything above
 //! ```
 //!
+//! **Version 2** compresses the *whole body* (metadata + payload) with
+//! DEFLATE, so text/token/embedding bytes stop costing the spill budget
+//! too. The fixed header stays uncompressed and records both the logical
+//! and stored body sizes, which is how the spill tier budgets *physical*
+//! bytes while still reporting the logical bytes a raw encoding would
+//! have taken:
+//!
+//! ```text
+//! magic   u32  = 0x4B56_5243  ("KVRC")
+//! version u32  = 2
+//! flags   u32  (bit 0: body DEFLATE-compressed)
+//! body_raw_len    u32 (bytes, before compression)
+//! body_stored_len u32 (bytes, as stored)
+//! body: geometry (3 u32), text (len u32 + bytes),
+//!       tokens (len u32 + u32 ids), embedding (len u32 + f32s),
+//!       payload (raw_len u32 f32-count + f32 bytes)
+//! crc32 u32 over everything above
+//! ```
+//!
 //! Encoding uses bulk little-endian byte-slice writes (one `memcpy` per
-//! array on LE targets, not one `put_u32` per element) into an
-//! exact-capacity buffer. Corruption (bit flips, truncation) must surface
-//! as `Error::Corrupt` — never as a silently wrong KV tensor; the
-//! integration tests inject both. Loading materializes the payload into a
+//! array on LE targets, not one `put_u32` per element). Corruption (bit
+//! flips, truncation) must surface as `Error::Corrupt` — never as a
+//! silently wrong KV tensor; the integration and property tests inject
+//! both, against both versions. Loading materializes the payload into a
 //! caller-provided [`KvArena`].
 
 use std::io::{Read, Write};
@@ -33,11 +54,72 @@ use flate2::Compression;
 use crate::error::{Error, Result};
 use crate::util::crc32;
 
-use super::{KvArena, KvRecord, KvView};
+use super::{KvArena, KvGeometry, KvRecord, KvView};
 
 const MAGIC: u32 = 0x4B56_5243;
 const VERSION: u32 = 1;
+const VERSION_V2: u32 = 2;
 const FLAG_COMPRESSED: u32 = 1;
+
+/// On-disk encoding selector. `V1Raw` and `V1PayloadDeflate` are the
+/// legacy format (version word 1, payload-only optional compression);
+/// `V2Deflate` is the whole-body codec behind `spill_compression`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Codec {
+    V1Raw,
+    V1PayloadDeflate,
+    V2Deflate,
+}
+
+impl Codec {
+    /// Map the two `CacheConfig` knobs onto a codec: `spill_compression`
+    /// selects the v2 whole-body format and wins over the legacy
+    /// `compress` (v1 payload-only) knob.
+    pub fn select(spill_compression: bool, compress: bool) -> Codec {
+        if spill_compression {
+            Codec::V2Deflate
+        } else if compress {
+            Codec::V1PayloadDeflate
+        } else {
+            Codec::V1Raw
+        }
+    }
+}
+
+/// The serializable fields of a record, borrowed — so both hot `KvRecord`s
+/// (payload gathered from the arena) and quantized records (payload
+/// dequantized on the fly, no arena needed) encode through one path.
+pub struct RecordParts<'a> {
+    pub text: &'a str,
+    pub tokens: &'a [u32],
+    pub embedding: &'a [f32],
+    /// Gathered f32 payload, `elems_per_token * tokens.len()` values.
+    pub payload: Vec<f32>,
+}
+
+impl<'a> RecordParts<'a> {
+    pub fn of(rec: &'a KvRecord) -> RecordParts<'a> {
+        RecordParts {
+            text: &rec.text,
+            tokens: &rec.tokens,
+            embedding: &rec.embedding,
+            payload: rec.kv.to_contiguous(),
+        }
+    }
+
+    /// Exact byte length a raw (uncompressed v1) encoding would take —
+    /// the *logical* size the spill tier reports next to the physical
+    /// bytes actually written. Computed arithmetically; nothing is
+    /// encoded.
+    pub fn raw_encoded_len(&self) -> usize {
+        6 * 4
+            + 4 + self.text.len()
+            + 4 + self.tokens.len() * 4
+            + 4 + self.embedding.len() * 4
+            + 4 + 4 + self.payload.len() * 4
+            + 4
+    }
+}
 
 fn put_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
@@ -103,25 +185,50 @@ impl<'a> Reader<'a> {
     }
 }
 
-/// Serialize a record to bytes.
-pub fn to_bytes(rec: &KvRecord, compress: bool) -> Vec<u8> {
-    let payload = rec.kv.to_contiguous();
-    let g = rec.kv.geometry();
+fn deflate(raw: &[u8]) -> Vec<u8> {
+    let mut enc = DeflateEncoder::new(Vec::new(), Compression::fast());
+    enc.write_all(raw).expect("in-memory deflate cannot fail");
+    enc.finish().expect("in-memory deflate cannot fail")
+}
+
+/// Verify the trailing CRC and split it off, returning the covered body.
+fn checked_body(buf: &[u8]) -> Result<&[u8]> {
+    if buf.len() < 8 {
+        return Err(Error::Corrupt("file too small".into()));
+    }
+    let (body, crc_bytes) = buf.split_at(buf.len() - 4);
+    let want = u32::from_le_bytes(crc_bytes.try_into().unwrap());
+    if crc32::hash(body) != want {
+        return Err(Error::Corrupt("crc mismatch".into()));
+    }
+    Ok(body)
+}
+
+/// Serialize record parts under the chosen codec.
+pub fn encode(parts: &RecordParts<'_>, geom: &KvGeometry, codec: Codec) -> Vec<u8> {
+    match codec {
+        Codec::V1Raw => encode_v1(parts, geom, false),
+        Codec::V1PayloadDeflate => encode_v1(parts, geom, true),
+        Codec::V2Deflate => encode_v2(parts, geom),
+    }
+}
+
+/// Version-1 encoder, byte-identical to the original `to_bytes` (pinned
+/// by the frozen reference encoder in the tests below).
+fn encode_v1(parts: &RecordParts<'_>, g: &KvGeometry, compress: bool) -> Vec<u8> {
+    let payload = &parts.payload;
     let packed = compress.then(|| {
-        let mut enc = DeflateEncoder::new(Vec::new(), Compression::fast());
-        // SAFETY-free bulk path: reuse the LE writer into a temp buffer.
         let mut raw = Vec::with_capacity(payload.len() * 4);
-        put_f32_slice(&mut raw, &payload);
-        enc.write_all(&raw).expect("in-memory deflate cannot fail");
-        enc.finish().expect("in-memory deflate cannot fail")
+        put_f32_slice(&mut raw, payload);
+        deflate(&raw)
     });
     let stored_len = packed.as_ref().map_or(payload.len() * 4, |p| p.len());
     // Exact capacity: 6 header words, 3 length-prefixed arrays, the
     // payload's two length words + bytes, and the trailing crc.
     let total = 6 * 4
-        + 4 + rec.text.len()
-        + 4 + rec.tokens.len() * 4
-        + 4 + rec.embedding.len() * 4
+        + 4 + parts.text.len()
+        + 4 + parts.tokens.len() * 4
+        + 4 + parts.embedding.len() * 4
         + 4 + 4 + stored_len
         + 4;
     let mut out = Vec::with_capacity(total);
@@ -131,12 +238,12 @@ pub fn to_bytes(rec: &KvRecord, compress: bool) -> Vec<u8> {
     put_u32(&mut out, g.n_layer as u32);
     put_u32(&mut out, g.n_head as u32);
     put_u32(&mut out, g.head_dim as u32);
-    put_u32(&mut out, rec.text.len() as u32);
-    out.extend_from_slice(rec.text.as_bytes());
-    put_u32(&mut out, rec.tokens.len() as u32);
-    put_u32_slice(&mut out, &rec.tokens);
-    put_u32(&mut out, rec.embedding.len() as u32);
-    put_f32_slice(&mut out, &rec.embedding);
+    put_u32(&mut out, parts.text.len() as u32);
+    out.extend_from_slice(parts.text.as_bytes());
+    put_u32(&mut out, parts.tokens.len() as u32);
+    put_u32_slice(&mut out, parts.tokens);
+    put_u32(&mut out, parts.embedding.len() as u32);
+    put_f32_slice(&mut out, parts.embedding);
     put_u32(&mut out, payload.len() as u32);
     match packed {
         Some(p) => {
@@ -145,7 +252,7 @@ pub fn to_bytes(rec: &KvRecord, compress: bool) -> Vec<u8> {
         }
         None => {
             put_u32(&mut out, (payload.len() * 4) as u32);
-            put_f32_slice(&mut out, &payload);
+            put_f32_slice(&mut out, payload);
         }
     }
     let crc = crc32::hash(&out);
@@ -154,27 +261,50 @@ pub fn to_bytes(rec: &KvRecord, compress: bool) -> Vec<u8> {
     out
 }
 
-/// Deserialize a record from bytes, verifying the checksum and
-/// materializing the payload into `arena` (which must match the record's
-/// geometry).
-pub fn from_bytes(buf: &[u8], arena: &KvArena) -> Result<KvRecord> {
-    if buf.len() < 8 {
-        return Err(Error::Corrupt("file too small".into()));
-    }
-    let (body, crc_bytes) = buf.split_at(buf.len() - 4);
-    let want = u32::from_le_bytes(crc_bytes.try_into().unwrap());
-    if crc32::hash(body) != want {
-        return Err(Error::Corrupt("crc mismatch".into()));
-    }
-    let mut r = Reader { buf: body, pos: 0 };
-    if r.u32()? != MAGIC {
-        return Err(Error::Corrupt("bad magic".into()));
-    }
-    let version = r.u32()?;
-    if version != VERSION {
-        return Err(Error::Version(version));
-    }
-    let flags = r.u32()?;
+/// Version-2 encoder: the whole body (metadata + payload) goes through
+/// one DEFLATE stream behind a 5-word uncompressed header.
+fn encode_v2(parts: &RecordParts<'_>, g: &KvGeometry) -> Vec<u8> {
+    let payload = &parts.payload;
+    let body_raw_len = 3 * 4
+        + 4 + parts.text.len()
+        + 4 + parts.tokens.len() * 4
+        + 4 + parts.embedding.len() * 4
+        + 4 + payload.len() * 4;
+    let mut body = Vec::with_capacity(body_raw_len);
+    put_u32(&mut body, g.n_layer as u32);
+    put_u32(&mut body, g.n_head as u32);
+    put_u32(&mut body, g.head_dim as u32);
+    put_u32(&mut body, parts.text.len() as u32);
+    body.extend_from_slice(parts.text.as_bytes());
+    put_u32(&mut body, parts.tokens.len() as u32);
+    put_u32_slice(&mut body, parts.tokens);
+    put_u32(&mut body, parts.embedding.len() as u32);
+    put_f32_slice(&mut body, parts.embedding);
+    put_u32(&mut body, payload.len() as u32);
+    put_f32_slice(&mut body, payload);
+    debug_assert_eq!(body.len(), body_raw_len, "v2 body estimate drifted");
+    let stored = deflate(&body);
+    let mut out = Vec::with_capacity(5 * 4 + stored.len() + 4);
+    put_u32(&mut out, MAGIC);
+    put_u32(&mut out, VERSION_V2);
+    put_u32(&mut out, FLAG_COMPRESSED);
+    put_u32(&mut out, body.len() as u32);
+    put_u32(&mut out, stored.len() as u32);
+    out.extend_from_slice(&stored);
+    let crc = crc32::hash(&out);
+    put_u32(&mut out, crc);
+    out
+}
+
+/// Serialize a record to bytes in the legacy version-1 layout (kept for
+/// every existing caller; `compress` selects payload-only DEFLATE).
+pub fn to_bytes(rec: &KvRecord, compress: bool) -> Vec<u8> {
+    let codec = if compress { Codec::V1PayloadDeflate } else { Codec::V1Raw };
+    encode(&RecordParts::of(rec), rec.kv.geometry(), codec)
+}
+
+/// Decode the geometry triple and reject it if it does not match `arena`.
+fn read_geometry(r: &mut Reader<'_>, arena: &KvArena) -> Result<()> {
     let n_layer = r.u32()? as usize;
     let n_head = r.u32()? as usize;
     let head_dim = r.u32()? as usize;
@@ -186,6 +316,12 @@ pub fn from_bytes(buf: &[u8], arena: &KvArena) -> Result<KvRecord> {
             g.n_layer, g.n_head, g.head_dim
         )));
     }
+    Ok(())
+}
+
+/// Decode the text / tokens / embedding triplet shared by both body
+/// layouts.
+fn read_meta(r: &mut Reader<'_>) -> Result<(String, Vec<u32>, Vec<f32>)> {
     let text_len = r.u32()? as usize;
     let text = String::from_utf8(r.take(text_len)?.to_vec())
         .map_err(|_| Error::Corrupt("bad utf8 in text".into()))?;
@@ -197,6 +333,67 @@ pub fn from_bytes(buf: &[u8], arena: &KvArena) -> Result<KvRecord> {
         .collect();
     let n_emb = r.u32()? as usize;
     let embedding = get_f32s(r.take(n_emb * 4)?);
+    Ok((text, tokens, embedding))
+}
+
+/// Validate payload element count against geometry and materialize the
+/// view.
+fn finish_record(
+    arena: &KvArena,
+    text: String,
+    tokens: Vec<u32>,
+    embedding: Vec<f32>,
+    raw_len: usize,
+    raw: &[u8],
+) -> Result<KvRecord> {
+    if raw.len() != raw_len * 4 {
+        return Err(Error::Corrupt(format!(
+            "payload length {} != declared {}",
+            raw.len(),
+            raw_len * 4
+        )));
+    }
+    let n_tokens = tokens.len();
+    let g = arena.geometry();
+    if raw_len != g.elems_per_token() * n_tokens {
+        return Err(Error::Corrupt(format!(
+            "payload has {raw_len} elems, geometry implies {} for {n_tokens} tokens",
+            g.elems_per_token() * n_tokens
+        )));
+    }
+    let kv_f32 = get_f32s(raw);
+    let kv = KvView::from_contiguous(arena, &kv_f32, n_tokens)?;
+    Ok(KvRecord {
+        text,
+        tokens,
+        embedding,
+        kv,
+    })
+}
+
+/// Deserialize a record from bytes, verifying the checksum and
+/// materializing the payload into `arena` (which must match the record's
+/// geometry). Dispatches on the version word: both on-disk versions load
+/// through here, so legacy raw `.kv` files written before the v2 codec
+/// still reload.
+pub fn from_bytes(buf: &[u8], arena: &KvArena) -> Result<KvRecord> {
+    let body = checked_body(buf)?;
+    let mut r = Reader { buf: body, pos: 0 };
+    if r.u32()? != MAGIC {
+        return Err(Error::Corrupt("bad magic".into()));
+    }
+    let version = r.u32()?;
+    match version {
+        VERSION => from_bytes_v1(r, arena),
+        VERSION_V2 => from_bytes_v2(r, arena),
+        other => Err(Error::Version(other)),
+    }
+}
+
+fn from_bytes_v1(mut r: Reader<'_>, arena: &KvArena) -> Result<KvRecord> {
+    let flags = r.u32()?;
+    read_geometry(&mut r, arena)?;
+    let (text, tokens, embedding) = read_meta(&mut r)?;
     let raw_len = r.u32()? as usize;
     let stored_len = r.u32()? as usize;
     let stored = r.take(stored_len)?;
@@ -209,60 +406,105 @@ pub fn from_bytes(buf: &[u8], arena: &KvArena) -> Result<KvRecord> {
     } else {
         stored.to_vec()
     };
-    if raw.len() != raw_len * 4 {
-        return Err(Error::Corrupt(format!(
-            "payload length {} != declared {}",
-            raw.len(),
-            raw_len * 4
-        )));
-    }
-    if raw_len != g.elems_per_token() * n_tokens {
-        return Err(Error::Corrupt(format!(
-            "payload has {raw_len} elems, geometry implies {} for {n_tokens} tokens",
-            g.elems_per_token() * n_tokens
-        )));
-    }
-    let kv_f32 = get_f32s(&raw);
-    if r.pos != body.len() {
+    if r.pos != r.buf.len() {
         return Err(Error::Corrupt("trailing bytes".into()));
     }
-    let kv = KvView::from_contiguous(arena, &kv_f32, n_tokens)?;
-    Ok(KvRecord {
-        text,
-        tokens,
-        embedding,
-        kv,
-    })
+    finish_record(arena, text, tokens, embedding, raw_len, &raw)
+}
+
+fn from_bytes_v2(mut r: Reader<'_>, arena: &KvArena) -> Result<KvRecord> {
+    let flags = r.u32()?;
+    let body_raw_len = r.u32()? as usize;
+    let stored_len = r.u32()? as usize;
+    let stored = r.take(stored_len)?;
+    if r.pos != r.buf.len() {
+        return Err(Error::Corrupt("trailing bytes".into()));
+    }
+    let body = if flags & FLAG_COMPRESSED != 0 {
+        let mut dec = DeflateDecoder::new(stored);
+        let mut out = Vec::with_capacity(body_raw_len);
+        dec.read_to_end(&mut out)
+            .map_err(|e| Error::Corrupt(format!("deflate: {e}")))?;
+        out
+    } else {
+        stored.to_vec()
+    };
+    if body.len() != body_raw_len {
+        return Err(Error::Corrupt(format!(
+            "body length {} != declared {body_raw_len}",
+            body.len()
+        )));
+    }
+    let mut b = Reader { buf: &body, pos: 0 };
+    read_geometry(&mut b, arena)?;
+    let (text, tokens, embedding) = read_meta(&mut b)?;
+    let raw_len = b.u32()? as usize;
+    let raw = b.take(raw_len * 4)?.to_vec();
+    if b.pos != b.buf.len() {
+        return Err(Error::Corrupt("trailing bytes".into()));
+    }
+    finish_record(arena, text, tokens, embedding, raw_len, &raw)
 }
 
 /// Parse just the token ids out of serialized record bytes (full CRC
 /// verified, header decoded up to the token array) without materializing
 /// the payload into an arena. Spill files are self-describing, so this is
 /// how a worker filters a sibling's spilled records down to
-/// prefix-matching adoption candidates before paying for a decode.
+/// prefix-matching adoption candidates before paying for a decode. For
+/// version-2 files the DEFLATE stream is decoded incrementally and
+/// abandoned right after the token array — the payload (the bulk of the
+/// body) is never inflated.
 pub fn peek_tokens(buf: &[u8]) -> Result<Vec<u32>> {
-    if buf.len() < 8 {
-        return Err(Error::Corrupt("file too small".into()));
-    }
-    let (body, crc_bytes) = buf.split_at(buf.len() - 4);
-    let want = u32::from_le_bytes(crc_bytes.try_into().unwrap());
-    if crc32::hash(body) != want {
-        return Err(Error::Corrupt("crc mismatch".into()));
-    }
+    let body = checked_body(buf)?;
     let mut r = Reader { buf: body, pos: 0 };
     if r.u32()? != MAGIC {
         return Err(Error::Corrupt("bad magic".into()));
     }
     let version = r.u32()?;
-    if version != VERSION {
-        return Err(Error::Version(version));
+    match version {
+        VERSION => {
+            let _flags = r.u32()?;
+            let _geometry = (r.u32()?, r.u32()?, r.u32()?);
+            let text_len = r.u32()? as usize;
+            r.take(text_len)?;
+            let n_tokens = r.u32()? as usize;
+            Ok(r.take(n_tokens * 4)?
+                .chunks_exact(4)
+                .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect())
+        }
+        VERSION_V2 => {
+            let flags = r.u32()?;
+            let _body_raw_len = r.u32()?;
+            let stored_len = r.u32()? as usize;
+            let stored = r.take(stored_len)?;
+            if flags & FLAG_COMPRESSED != 0 {
+                peek_tokens_stream(DeflateDecoder::new(stored))
+            } else {
+                peek_tokens_stream(stored)
+            }
+        }
+        other => Err(Error::Version(other)),
     }
-    let _flags = r.u32()?;
-    let _geometry = (r.u32()?, r.u32()?, r.u32()?);
-    let text_len = r.u32()? as usize;
-    r.take(text_len)?;
-    let n_tokens = r.u32()? as usize;
-    Ok(r.take(n_tokens * 4)?
+}
+
+/// Read geometry + text prefix + token ids off a streaming body reader.
+fn peek_tokens_stream<R: Read>(mut src: R) -> Result<Vec<u32>> {
+    fn read_n<R: Read>(src: &mut R, n: usize) -> Result<Vec<u8>> {
+        let mut v = vec![0u8; n];
+        src.read_exact(&mut v)
+            .map_err(|e| Error::Corrupt(format!("deflate: {e}")))?;
+        Ok(v)
+    }
+    fn read_u32<R: Read>(src: &mut R) -> Result<u32> {
+        let b = read_n(src, 4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    let _geometry = read_n(&mut src, 12)?;
+    let text_len = read_u32(&mut src)? as usize;
+    read_n(&mut src, text_len)?;
+    let n_tokens = read_u32(&mut src)? as usize;
+    Ok(read_n(&mut src, n_tokens * 4)?
         .chunks_exact(4)
         .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
         .collect())
@@ -373,7 +615,7 @@ mod tests {
     #[test]
     fn size_estimate_is_exact() {
         // The encoder preallocates `total` and the debug_assert in
-        // to_bytes pins len == total; verify the estimate independently
+        // encode_v1 pins len == total; verify the estimate independently
         // here (capacity() == len() is not asserted — Vec::with_capacity
         // may legally over-allocate).
         let a = arena();
@@ -389,17 +631,29 @@ mod tests {
     }
 
     #[test]
+    fn raw_encoded_len_matches_raw_encoding() {
+        let a = arena();
+        let r = rec_in(&a);
+        let parts = RecordParts::of(&r);
+        assert_eq!(
+            parts.raw_encoded_len(),
+            to_bytes(&r, false).len(),
+            "logical-size arithmetic drifted from the raw encoder"
+        );
+    }
+
+    #[test]
     fn peek_tokens_matches_full_decode_and_rejects_corruption() {
         let a = arena();
         let r = rec_in(&a);
-        for compress in [false, true] {
-            let buf = to_bytes(&r, compress);
-            assert_eq!(peek_tokens(&buf).unwrap(), r.tokens, "compress={compress}");
+        for codec in [Codec::V1Raw, Codec::V1PayloadDeflate, Codec::V2Deflate] {
+            let buf = encode(&RecordParts::of(&r), a.geometry(), codec);
+            assert_eq!(peek_tokens(&buf).unwrap(), r.tokens, "{codec:?}");
             let mut bad = buf.clone();
             let mid = bad.len() / 2;
             bad[mid] ^= 0x10;
-            assert!(peek_tokens(&bad).is_err(), "bitflip must not peek");
-            assert!(peek_tokens(&buf[..buf.len() / 2]).is_err());
+            assert!(peek_tokens(&bad).is_err(), "bitflip must not peek ({codec:?})");
+            assert!(peek_tokens(&buf[..buf.len() / 2]).is_err(), "{codec:?}");
         }
     }
 
@@ -423,6 +677,60 @@ mod tests {
         assert!(packed.len() < plain.len(), "{} !< {}", packed.len(), plain.len());
         let r2 = from_bytes(&packed, &a).unwrap();
         assert_eq!(r2.kv.to_contiguous(), r.kv.to_contiguous());
+    }
+
+    #[test]
+    fn v2_roundtrip_and_smaller_than_raw() {
+        let a = arena();
+        let r = rec_in(&a);
+        let parts = RecordParts::of(&r);
+        let v2 = encode(&parts, a.geometry(), Codec::V2Deflate);
+        assert!(
+            v2.len() < parts.raw_encoded_len(),
+            "whole-body deflate must beat raw: {} !< {}",
+            v2.len(),
+            parts.raw_encoded_len()
+        );
+        let r2 = from_bytes(&v2, &a).unwrap();
+        assert_eq!(r2.text, r.text);
+        assert_eq!(r2.tokens, r.tokens);
+        assert_eq!(r2.embedding, r.embedding);
+        assert_eq!(r2.kv.to_contiguous(), r.kv.to_contiguous());
+    }
+
+    #[test]
+    fn v2_bitflip_and_truncation_detected() {
+        let a = arena();
+        let r = rec_in(&a);
+        let buf = encode(&RecordParts::of(&r), a.geometry(), Codec::V2Deflate);
+        for i in (0..buf.len()).step_by(buf.len() / 7 + 1) {
+            let mut bad = buf.clone();
+            bad[i] ^= 0x40;
+            match from_bytes(&bad, &a) {
+                Err(Error::Corrupt(_)) => {}
+                other => panic!("bitflip at {i} not detected: {other:?}"),
+            }
+        }
+        for cut in [1, buf.len() / 3, buf.len() - 1] {
+            match from_bytes(&buf[..cut], &a) {
+                Err(Error::Corrupt(_)) => {}
+                other => panic!("truncation at {cut} not detected: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn v2_wrong_arena_geometry_rejected() {
+        let a = arena();
+        let r = rec_in(&a);
+        let buf = encode(&RecordParts::of(&r), a.geometry(), Codec::V2Deflate);
+        let mut other_cfg = ModelConfig::nano();
+        other_cfg.n_layer = 2;
+        let other = KvArena::new(&other_cfg, 16, 8);
+        match from_bytes(&buf, &other) {
+            Err(Error::ShapeMismatch(_)) => {}
+            other => panic!("expected geometry mismatch: {other:?}"),
+        }
     }
 
     #[test]
@@ -461,13 +769,14 @@ mod tests {
         let path = dir.join("t.kv");
         let a = arena();
         let r = rec_in(&a);
-        for compress in [false, true] {
-            save(&r, &path, compress).unwrap();
+        for codec in [Codec::V1Raw, Codec::V1PayloadDeflate, Codec::V2Deflate] {
+            let buf = encode(&RecordParts::of(&r), a.geometry(), codec);
+            save_bytes(&path, &buf).unwrap();
             let full = std::fs::read(&path).unwrap();
             std::fs::write(&path, &full[..full.len() / 2]).unwrap();
             match load(&path, &a) {
                 Err(Error::Corrupt(_)) => {}
-                other => panic!("truncated load not rejected: {other:?}"),
+                other => panic!("truncated load not rejected ({codec:?}): {other:?}"),
             }
         }
         std::fs::remove_dir_all(&dir).ok();
@@ -486,6 +795,10 @@ mod tests {
         match from_bytes(&buf, &a) {
             Err(Error::Version(99)) => {}
             other => panic!("expected Version error: {other:?}"),
+        }
+        match peek_tokens(&buf) {
+            Err(Error::Version(99)) => {}
+            other => panic!("expected Version error from peek: {other:?}"),
         }
     }
 

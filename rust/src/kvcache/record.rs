@@ -1,8 +1,10 @@
 //! One cached prompt's activations.
 
 use crate::config::ModelConfig;
+use crate::error::Result;
 
-use super::arena::KvView;
+use super::arena::{KvArena, KvView, QuantKv};
+use super::persist::RecordParts;
 
 /// A cached KV entry: the paper's `C[i] = (c_i, input_ids(c_i), {K_l, V_l})`.
 ///
@@ -106,6 +108,76 @@ impl KvRecord {
     }
 }
 
+/// A cached entry whose payload lives in quantized form (see [`QuantKv`])
+/// instead of arena blocks — the resident format of the hot tier when
+/// `CacheConfig::quantized_blocks` is on. Holds zero arena blocks; a hit
+/// materializes a fresh [`KvRecord`] (dequantize + scatter), an eviction
+/// spills through [`RecordParts`] without ever touching the arena.
+#[derive(Debug)]
+pub struct QuantRecord {
+    pub text: String,
+    pub tokens: Vec<u32>,
+    pub embedding: Vec<f32>,
+    pub quant: QuantKv,
+}
+
+impl QuantRecord {
+    /// Quantize a hot record's payload (the record itself is untouched —
+    /// the caller drops it to release its blocks).
+    pub fn from_record(rec: &KvRecord) -> QuantRecord {
+        QuantRecord {
+            text: rec.text.clone(),
+            tokens: rec.tokens.clone(),
+            embedding: rec.embedding.clone(),
+            quant: QuantKv::from_view(&rec.kv),
+        }
+    }
+
+    pub fn token_len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// Logical payload bytes — what the same entry would occupy as f32
+    /// arena rows (the store's capacity comparison unit).
+    pub fn kv_bytes(&self) -> usize {
+        self.quant.logical_bytes()
+    }
+
+    /// Physical bytes actually held by the quantized payload.
+    pub fn quant_bytes(&self) -> usize {
+        self.quant.quant_bytes()
+    }
+
+    /// Quantized blocks held (the `CacheStats::quantized_blocks` unit).
+    pub fn kv_blocks(&self) -> usize {
+        self.quant.num_blocks()
+    }
+
+    /// Dequantize back into a hot record over `arena` blocks (the attach
+    /// path). `ArenaExhausted` is transient: callers shed and retry,
+    /// exactly like a spill reload.
+    pub fn materialize(&self, arena: &KvArena) -> Result<KvRecord> {
+        Ok(KvRecord {
+            text: self.text.clone(),
+            tokens: self.tokens.clone(),
+            embedding: self.embedding.clone(),
+            kv: self.quant.materialize(arena)?,
+        })
+    }
+
+    /// Serializable parts for the spill encoder — payload dequantized on
+    /// the fly, no arena involved, so a quantized entry can spill even
+    /// under total block exhaustion.
+    pub fn parts(&self) -> RecordParts<'_> {
+        RecordParts {
+            text: &self.text,
+            tokens: &self.tokens,
+            embedding: &self.embedding,
+            payload: self.quant.to_f32(),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -199,5 +271,42 @@ mod tests {
         assert_eq!(rec.kv_bytes(), 0);
         assert_eq!(rec.kv_blocks(), 0);
         assert!(rec.validate(&cfg()));
+    }
+
+    #[test]
+    fn quant_record_roundtrips_and_frees_blocks() {
+        let a = arena();
+        let g = a.geometry().clone();
+        // integer rows |v| <= 127 -> exact under power-of-two scales
+        let data: Vec<f32> = (0..g.elems_per_token() * 10)
+            .map(|i| (i % 101) as f32)
+            .collect();
+        let v = KvView::from_contiguous(&a, &data, 10).unwrap();
+        let rec = KvRecord::from_view("p", (0..10).collect(), vec![1.0], &v);
+        drop(v);
+        let q = QuantRecord::from_record(&rec);
+        let flat = rec.kv.to_contiguous();
+        drop(rec);
+        assert_eq!(a.used_blocks(), 0, "quantized record must pin no blocks");
+        assert!(q.quant_bytes() * 3 < q.kv_bytes());
+        assert_eq!(q.token_len(), 10);
+        let back = q.materialize(&a).unwrap();
+        assert!(back.validate(&cfg()));
+        assert_eq!(back.text, "p");
+        assert_eq!(back.tokens, (0..10).collect::<Vec<u32>>());
+        assert_eq!(back.kv.to_contiguous(), flat);
+    }
+
+    #[test]
+    fn quant_record_parts_encode_without_arena() {
+        let a = arena();
+        let v = view_of(&a, 6);
+        let rec = KvRecord::from_view("doc", (0..6).collect(), vec![0.5], &v);
+        let q = QuantRecord::from_record(&rec);
+        let parts = q.parts();
+        assert_eq!(parts.text, "doc");
+        assert_eq!(parts.tokens.len(), 6);
+        assert_eq!(parts.payload.len(), a.geometry().elems_per_token() * 6);
+        assert!(parts.raw_encoded_len() > 0);
     }
 }

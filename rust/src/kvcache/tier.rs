@@ -17,13 +17,20 @@
 //! worker can reload any record).
 //!
 //! The tier is budgeted by `CacheConfig::max_spill_bytes` over the
-//! *serialized* (on-disk) sizes and evicts LRU *within the tier* when the
-//! budget would overflow; those drops are terminal (the record is gone)
-//! and are surfaced through [`SpillTier::take_dropped`] so the owner can
-//! unindex them eagerly. Corrupt or truncated spill files surface as
-//! [`Error::Corrupt`](crate::error::Error) from `persist` — the tier
-//! never hands garbage KV to the arena; the caller drops the entry
-//! ([`SpillTier::drop_entry`]) and treats the lookup as a miss.
+//! *physical* serialized (on-disk) sizes and evicts LRU *within the tier*
+//! when the budget would overflow; those drops are terminal (the record
+//! is gone) and are surfaced through [`SpillTier::take_dropped`] so the
+//! owner can unindex them eagerly. Which bytes land on disk is the
+//! [`persist::Codec`]'s choice — `V1Raw` / `V1PayloadDeflate` are the
+//! legacy format, `V2Deflate` (the `spill_compression` knob) compresses
+//! the whole record body so the same physical budget holds proportionally
+//! more records. The tier tracks the *logical* (raw-encoding) bytes
+//! alongside ([`SpillTier::cold_bytes_logical`]), so the capacity
+//! multiplier is observable as `logical / physical`. Corrupt or truncated
+//! spill files surface as [`Error::Corrupt`](crate::error::Error) from
+//! `persist` — the tier never hands garbage KV to the arena; the caller
+//! drops the entry ([`SpillTier::drop_entry`]) and treats the lookup as a
+//! miss.
 //!
 //! A tier owns its directory only when it auto-created one (no
 //! `spill_dir` configured): that directory is removed on drop. A
@@ -36,7 +43,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use crate::error::{Error, Result};
 use crate::faults::{FaultHandle, FaultSite};
 
-use super::{persist, KvArena, KvRecord};
+use super::persist::{self, Codec, RecordParts};
+use super::{KvArena, KvGeometry, KvRecord};
 
 /// Does a file stem (e.g. `w0_17`) belong to namespace `ns`? Tier files
 /// are exactly `{ns}{id}` with a non-empty all-digit id, so `w0_17` is in
@@ -52,6 +60,9 @@ fn stem_in_namespace(ns: &str, stem: &str) -> bool {
 struct ColdEntry {
     /// Serialized size on disk (what the tier budget accounts).
     bytes: usize,
+    /// Bytes a raw (uncompressed v1) encoding of the same record would
+    /// take — the logical size `cold_bytes_logical` reports.
+    logical: usize,
     /// Token positions of the record — lets a reload pre-size its arena
     /// demand without touching the file.
     tokens: usize,
@@ -74,10 +85,11 @@ pub struct SpillTier {
     /// Budget over serialized bytes; > 0 (a zero budget disables the tier
     /// at construction in the store, so it never reaches here).
     max_bytes: usize,
-    compress: bool,
+    codec: Codec,
     entries: HashMap<u64, ColdEntry>,
     clock: u64,
     cold_bytes: usize,
+    cold_bytes_logical: usize,
     /// Entries destroyed by the tier's own LRU (budget pressure), queued
     /// for the owner to unindex.
     dropped: Vec<u64>,
@@ -130,14 +142,26 @@ impl SpillTier {
             namespace,
             owns_dir: false,
             max_bytes,
-            compress,
+            codec: Codec::select(false, compress),
             entries: HashMap::new(),
             clock: 0,
             cold_bytes: 0,
+            cold_bytes_logical: 0,
             dropped: Vec::new(),
             drops: 0,
             faults: FaultHandle::off(),
         })
+    }
+
+    /// Switch the on-disk codec (new spills only; existing files keep
+    /// whatever version they were written with — the decoder dispatches
+    /// on the per-file version word).
+    pub fn set_codec(&mut self, codec: Codec) {
+        self.codec = codec;
+    }
+
+    pub fn codec(&self) -> Codec {
+        self.codec
     }
 
     /// Attach a fault plan (the `SpillTier` failure-domain seam).
@@ -200,9 +224,17 @@ impl SpillTier {
         self.entries.is_empty()
     }
 
-    /// Serialized bytes currently on disk.
+    /// Physical serialized bytes currently on disk (what `max_spill_bytes`
+    /// budgets).
     pub fn cold_bytes(&self) -> usize {
         self.cold_bytes
+    }
+
+    /// Logical bytes of the same entries — what a raw (uncompressed v1)
+    /// encoding would occupy. `logical / physical` is the cold tier's
+    /// capacity multiplier; equal when the codec is `V1Raw`.
+    pub fn cold_bytes_logical(&self) -> usize {
+        self.cold_bytes_logical
     }
 
     /// Entries the tier's own LRU has destroyed since construction.
@@ -240,6 +272,7 @@ impl SpillTier {
         match self.entries.remove(&id) {
             Some(e) => {
                 self.cold_bytes -= e.bytes;
+                self.cold_bytes_logical -= e.logical;
                 let _ = std::fs::remove_file(self.path_of(id));
                 true
             }
@@ -270,12 +303,25 @@ impl SpillTier {
     /// alone exceeds the tier budget or the write fails; the caller then
     /// falls back to destroying the record (the pre-tier behavior).
     pub fn spill(&mut self, id: u64, rec: &KvRecord) -> Result<usize> {
+        self.spill_parts(id, &RecordParts::of(rec), rec.kv.geometry())
+    }
+
+    /// [`spill`](Self::spill) over pre-gathered record parts — the shared
+    /// entry point for hot records (payload gathered from the arena) and
+    /// quantized records (payload dequantized on the fly, no arena
+    /// needed).
+    pub fn spill_parts(
+        &mut self,
+        id: u64,
+        parts: &RecordParts<'_>,
+        geom: &KvGeometry,
+    ) -> Result<usize> {
         if self.faults.roll(FaultSite::SpillWrite) {
             return Err(Error::Io(std::io::Error::other(
                 "injected spill write fault",
             )));
         }
-        let mut buf = persist::to_bytes(rec, self.compress);
+        let mut buf = persist::encode(parts, geom, self.codec);
         if self.faults.roll(FaultSite::SpillTorn) {
             // A torn write persists a prefix of the serialized bytes. The
             // truncation happens BEFORE accounting, so cold_bytes still
@@ -300,17 +346,21 @@ impl SpillTier {
         // Re-spilling an id replaces its file; retire the old accounting.
         if let Some(old) = self.entries.remove(&id) {
             self.cold_bytes -= old.bytes;
+            self.cold_bytes_logical -= old.logical;
         }
         self.clock += 1;
+        let logical = parts.raw_encoded_len();
         self.entries.insert(
             id,
             ColdEntry {
                 bytes: buf.len(),
-                tokens: rec.token_len(),
+                logical,
+                tokens: parts.tokens.len(),
                 spilled_at: self.clock,
             },
         );
         self.cold_bytes += buf.len();
+        self.cold_bytes_logical += logical;
         Ok(buf.len())
     }
 
@@ -609,6 +659,63 @@ mod tests {
         drop(t0);
         drop(t1);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn v2_codec_accounts_logical_above_physical_and_reloads() {
+        let a = arena();
+        let mut t = SpillTier::at_tempdir(1 << 20, false).unwrap();
+        t.set_codec(Codec::V2Deflate);
+        let r = rec_in(&a, 12, 4);
+        let before = r.kv.to_contiguous();
+        let physical = t.spill(1, &r).unwrap();
+        let logical = persist::to_bytes(&r, false).len();
+        assert_eq!(t.cold_bytes(), physical);
+        assert_eq!(t.cold_bytes_logical(), logical);
+        assert!(
+            physical < logical,
+            "whole-body deflate must shrink the file: {physical} !< {logical}"
+        );
+        let disk = std::fs::metadata(t.dir().join("1.kv")).unwrap().len() as usize;
+        assert_eq!(disk, physical, "budget must track the *physical* file size");
+        let back = t.load(1, &a).unwrap();
+        assert_eq!(back.kv.to_contiguous(), before);
+        assert_eq!(t.cold_bytes(), 0);
+        assert_eq!(t.cold_bytes_logical(), 0);
+    }
+
+    #[test]
+    fn v2_corrupt_file_degrades_to_typed_corrupt() {
+        let a = arena();
+        let mut t = SpillTier::at_tempdir(1 << 20, false).unwrap();
+        t.set_codec(Codec::V2Deflate);
+        t.spill(5, &rec_in(&a, 6, 9)).unwrap();
+        let path = t.dir().join("5.kv");
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x20;
+        std::fs::write(&path, &bytes).unwrap();
+        match t.load(5, &a) {
+            Err(Error::Corrupt(_)) => {}
+            other => panic!("expected Corrupt, got {other:?}"),
+        }
+        assert!(t.contains(5), "failed load leaves the entry for the caller");
+        t.drop_entry(5);
+    }
+
+    #[test]
+    fn legacy_files_reload_through_a_v2_tier() {
+        // codec switches only affect NEW spills — a file written raw is
+        // still loadable after the tier flips to the v2 codec, because the
+        // decoder dispatches on the per-file version word
+        let a = arena();
+        let mut t = SpillTier::at_tempdir(1 << 20, false).unwrap();
+        let r = rec_in(&a, 8, 7);
+        let before = r.kv.to_contiguous();
+        t.spill(3, &r).unwrap(); // raw v1
+        t.set_codec(Codec::V2Deflate);
+        let back = t.load(3, &a).unwrap();
+        assert_eq!(back.kv.to_contiguous(), before);
     }
 
     #[test]

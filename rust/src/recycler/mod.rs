@@ -309,8 +309,8 @@ impl<M: ForwardModel> Recycler<M> {
             .filter(|id| !self.segs_of_rec.contains_key(id))
             .collect();
         for id in ids {
-            if let Some(rec) = self.store.peek(id) {
-                self.index_segments_of(id, &rec);
+            if let Some(tokens) = self.tokens_of.get(&id).cloned() {
+                self.index_segments_of(id, &tokens);
             }
         }
     }
@@ -318,14 +318,18 @@ impl<M: ForwardModel> Recycler<M> {
     /// Index one record's fixed-stride segments into the segment tier
     /// (no-op while the tier is disabled). Each span is decoded and
     /// embedded independently — the semantic keys a tier-2 lookup
-    /// matches query windows against.
-    fn index_segments_of(&mut self, id: u64, rec: &KvRecord) {
+    /// matches query windows against. Works straight off the token list
+    /// (the same spans as [`KvRecord::segment_spans`]), never the
+    /// record — so quantized or spilled residents index without
+    /// materializing their payload.
+    fn index_segments_of(&mut self, id: u64, tokens: &[u32]) {
         if !self.segment_enabled() {
             return;
         }
         let stride = self.store.config().segment_tokens;
-        for (a, b) in rec.segment_spans(stride) {
-            let text = self.tokenizer.decode(&rec.tokens[a..b]);
+        for i in 0..tokens.len() / stride {
+            let (a, b) = (i * stride, (i + 1) * stride);
+            let text = self.tokenizer.decode(&tokens[a..b]);
             let emb = self.embedder.embed(&text);
             let key = self.next_seg;
             self.next_seg += 1;
@@ -434,9 +438,7 @@ impl<M: ForwardModel> Recycler<M> {
         self.sync_cold_drops();
         self.index.add(id, &emb);
         self.radix.insert(&ids, id);
-        if let Some(rec) = self.store.peek(id) {
-            self.index_segments_of(id, &rec);
-        }
+        self.index_segments_of(id, &ids);
         self.tokens_of.insert(id, ids);
         id
     }
@@ -513,7 +515,7 @@ impl<M: ForwardModel> Recycler<M> {
         };
         self.index.add(id, &rec.embedding);
         self.radix.insert(&rec.tokens, id);
-        self.index_segments_of(id, &rec);
+        self.index_segments_of(id, &rec.tokens);
         self.tokens_of.insert(id, rec.tokens.clone());
         let depth = rec.tokens.len();
         let sim = cosine(&rec.embedding, emb) as f64;

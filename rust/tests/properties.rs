@@ -10,6 +10,7 @@ use recycle_serve::bench::{multi_tenant_trace, TraceSpec};
 use recycle_serve::config::{CacheConfig, EvictionPolicy, ModelConfig, RoutingPolicy, ServerConfig};
 use recycle_serve::coordinator::{admission_prompt, Coordinator, SchedEvent, SessionManager};
 use recycle_serve::engine::{plan_chunks, DecodeStream, Engine};
+use recycle_serve::error::Error;
 use recycle_serve::faults::{FaultHandle, FaultPlan, FaultSite};
 use recycle_serve::testutil::trace::{run_script, shrink_script, Arrival, Script, TraceRun};
 use recycle_serve::index::{FlatIndex, NgramEmbedder};
@@ -309,6 +310,141 @@ fn prop_persist_rejects_random_corruption() {
     });
 }
 
+#[test]
+fn prop_persist_both_versions_roundtrip_and_reject_corruption() {
+    let cfg = ModelConfig::nano();
+    check("persist two codecs", 60, |rng| {
+        let arena = KvArena::new(&cfg, 16, 64);
+        let mut rec = rec_of(&arena, rng.range(0, 30), 3);
+        rec.text = text(rng, 40);
+        rec.embedding = (0..rng.range(1, 12)).map(|_| rng.f64() as f32).collect();
+        let parts = persist::RecordParts::of(&rec);
+        let geom = rec.kv.geometry();
+        // the v1-raw encoding is bit-identical to the legacy serializer,
+        // and its length is what the tier's logical meter charges
+        let v1 = persist::encode(&parts, geom, persist::Codec::V1Raw);
+        prop_assert!(
+            v1 == persist::to_bytes(&rec, false),
+            "v1 encoding drifted from the legacy serializer"
+        );
+        prop_assert!(
+            parts.raw_encoded_len() == v1.len(),
+            "logical length {} != raw encoding {}",
+            parts.raw_encoded_len(),
+            v1.len()
+        );
+        // every codec round-trips to the same record
+        for codec in [
+            persist::Codec::V1Raw,
+            persist::Codec::V1PayloadDeflate,
+            persist::Codec::V2Deflate,
+        ] {
+            let buf = persist::encode(&parts, geom, codec);
+            let back =
+                persist::from_bytes(&buf, &arena).map_err(|e| format!("{codec:?}: {e}"))?;
+            prop_assert!(back.text == rec.text, "{codec:?}: text");
+            prop_assert!(back.tokens == rec.tokens, "{codec:?}: tokens");
+            prop_assert!(back.embedding == rec.embedding, "{codec:?}: embedding");
+            prop_assert!(
+                back.kv.to_contiguous() == rec.kv.to_contiguous(),
+                "{codec:?}: payload"
+            );
+        }
+        // v2: any truncation or single bitflip must surface as the typed
+        // Corrupt error — the clean-miss contract, never wrong data
+        let v2 = persist::encode(&parts, geom, persist::Codec::V2Deflate);
+        let cut = rng.below(v2.len());
+        match persist::from_bytes(&v2[..cut], &arena) {
+            Err(Error::Corrupt(_)) => {}
+            Err(e) => {
+                prop_assert!(false, "truncation at {cut} wrong error kind: {e}");
+            }
+            Ok(_) => {
+                prop_assert!(false, "truncation at {cut} accepted");
+            }
+        }
+        let mut flipped = v2.clone();
+        let i = rng.below(flipped.len());
+        flipped[i] ^= 1u8 << rng.below(8);
+        match persist::from_bytes(&flipped, &arena) {
+            Err(Error::Corrupt(_)) => {}
+            Err(e) => {
+                prop_assert!(false, "bitflip at {i} wrong error kind: {e}");
+            }
+            Ok(_) => {
+                prop_assert!(false, "bitflip at {i} accepted");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quantized_store_exact_for_small_integer_payloads() {
+    // Integer-valued payloads with |v| <= 127 are exactly representable
+    // by the 8-bit block format (power-of-two scale 1.0), so a quantized
+    // store must hand back bit-identical KV — while its residents pin
+    // zero arena blocks and every materialized handle returns its blocks
+    // on drop.
+    let cfg = ModelConfig::nano();
+    check("quantized store exactness", 40, |rng| {
+        let arena = KvArena::new(&cfg, 16, 256);
+        let mut store = KvStore::new(CacheConfig {
+            max_entries: 0,
+            max_bytes: 0,
+            quantized_blocks: true,
+            ..Default::default()
+        });
+        let baseline_free = arena.free_blocks();
+        let g = arena.geometry().clone();
+        let mut originals = Vec::new();
+        for tag in 0..rng.range(1, 6) {
+            let len = rng.range(1, 30);
+            let mut data = vec![0f32; g.elems_per_token() * len];
+            for v in data.iter_mut() {
+                if rng.chance(0.2) {
+                    *v = (rng.below(255) as i64 - 127) as f32;
+                }
+            }
+            let rec = KvRecord {
+                text: format!("q{tag}"),
+                tokens: (0..len as u32).collect(),
+                embedding: vec![1.0],
+                kv: KvView::from_contiguous(&arena, &data, len).unwrap(),
+            };
+            let (id, _) = store.insert(rec);
+            originals.push((id, data, len));
+        }
+        prop_assert!(
+            store.physical_blocks() == 0,
+            "quantized residents pinned {} arena blocks",
+            store.physical_blocks()
+        );
+        prop_assert!(
+            arena.free_blocks() == baseline_free,
+            "arena not conserved after inserts: {} != {baseline_free}",
+            arena.free_blocks()
+        );
+        for (id, data, len) in &originals {
+            let rec = store
+                .hit(*id)
+                .ok_or_else(|| format!("quantized entry {id} must hit"))?;
+            prop_assert!(rec.kv.len() == *len, "materialized length");
+            prop_assert!(
+                rec.kv.to_contiguous() == *data,
+                "dequantize-on-attach must be exact for small integers"
+            );
+        }
+        // every materialized handle has been dropped again
+        prop_assert!(
+            arena.free_blocks() == baseline_free,
+            "materialized handles leaked arena blocks: {} != {baseline_free}",
+            arena.free_blocks()
+        );
+        Ok(())
+    });
+}
+
 // ---------- block pool ----------
 
 #[test]
@@ -523,6 +659,9 @@ fn prop_tiered_store_three_state_conservation_and_eviction_yield() {
             max_bytes: 0,
             eviction: *rng.choice(&EvictionPolicy::ALL),
             compress: rng.chance(0.5),
+            // physical cold_bytes == summed file sizes must hold under
+            // BOTH on-disk codecs (v2 just makes the files smaller)
+            spill_compression: rng.chance(0.5),
             max_spill_bytes: if small_tier { 200_000 } else { 64 << 20 },
             spill_dir: Some(tmp.path_string()),
             ..Default::default()
