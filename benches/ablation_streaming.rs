@@ -1,0 +1,556 @@
+//! A10 — async streaming front ablation: client-visible TTFT under
+//! overload, typed load shedding, and weighted per-tenant fairness.
+//!
+//! Two phases over the real nonblocking TCP front (readiness loop +
+//! WDRR QoS admission), using the live-tunable mock cost model
+//! (`MockModel::with_shared_delay`): the recycling cache is populated
+//! in a free warmup window, then the per-token price is switched on so
+//! the measured window isolates queueing + decode from prompt encode.
+//!
+//! 1. **Streaming TTFT under overload** — the same warmed 4-tenant
+//!    trace is offered at ~2x the service rate to a streaming front and
+//!    to a blocking (aggregate) front, on fresh identical stacks with
+//!    unit admission queues. Time-to-first-token is client-measured:
+//!    the first `token` frame (streaming) vs the single aggregate reply
+//!    (blocking). Streaming must at least halve p99 TTFT, the bounded
+//!    queues must shed with a typed `overloaded` instead of building an
+//!    unbounded wait, and the front's per-tenant ledger must agree with
+//!    the client-side tallies (all asserted).
+//!
+//! 2. **Weighted fairness** — gold/silver/bronze tenants (weights
+//!    4:2:1) flood one stack simultaneously with equal offered work and
+//!    every request completes; fairness is judged on who finished
+//!    early. Among the first half of completions (client completion
+//!    order), each tenant's token share must reach its weight share
+//!    minus a 35% tolerance (asserted). That is the WDRR pass
+//!    structure, not luck: `qos_quantum_tokens == max_new` grants whole
+//!    requests in exact weight proportion each pass.
+//!
+//! ```bash
+//! cargo bench --bench ablation_streaming            # full
+//! cargo bench --bench ablation_streaming -- --quick # smoke
+//! ```
+
+mod common;
+
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use recycle_serve::bench::{multi_tenant_trace, TraceSpec};
+use recycle_serve::config::{CacheConfig, ModelConfig, ServerConfig};
+use recycle_serve::coordinator::Coordinator;
+use recycle_serve::engine::Engine;
+use recycle_serve::error::Error;
+use recycle_serve::index::NgramEmbedder;
+use recycle_serve::kvcache::KvArena;
+use recycle_serve::recycler::{RecyclePolicy, Recycler};
+use recycle_serve::server::{Server, TcpClient};
+use recycle_serve::testutil::MockModel;
+use recycle_serve::tokenizer::Tokenizer;
+use recycle_serve::util::json::Value;
+use recycle_serve::util::timing::Stopwatch;
+
+/// Measured-window per-token cost (phase 1): decode dominates, so a
+/// blocked aggregate reply costs ~`TTFT_MAX_NEW * DELAY` after dequeue.
+const DELAY: Duration = Duration::from_millis(2);
+/// Decode length of every measured phase-1 request (prompt + decode
+/// stays under the nano model's 256-token window with margin).
+const TTFT_MAX_NEW: usize = 80;
+/// Warmup decode length (cache population, priced at zero).
+const WARM_MAX_NEW: usize = 8;
+/// Offered inter-arrival gap: 16 batch lanes complete one 80-token
+/// decode every `80 * 2ms / 16 = 10ms`, so 5ms offers ~2x overload.
+const PACE: Duration = Duration::from_millis(5);
+
+/// Phase-2 decode length; equals `qos_quantum_tokens` so one WDRR pass
+/// grants whole requests in exact weight proportion.
+const FAIR_MAX_NEW: usize = 16;
+/// Phase-2 per-token cost: cheap enough to drain the full flood fast,
+/// pricey enough that completion order tracks grant order.
+const FAIR_DELAY: Duration = Duration::from_micros(500);
+const WEIGHTS: [(&str, usize); 3] = [("gold", 4), ("silver", 2), ("bronze", 1)];
+/// First-half token share must reach `weight share * (1 - FAIR_EPS)`.
+const FAIR_EPS: f64 = 0.35;
+
+/// A served stack whose model re-reads its per-token cost from a shared
+/// knob on every forward — phases retune the price without rebuilding.
+struct Stack {
+    server: Server,
+    coordinator: Arc<Coordinator>,
+    delay: Arc<AtomicU64>,
+}
+
+fn stack(cfg: ServerConfig, arena_blocks: usize) -> Stack {
+    let delay = Arc::new(AtomicU64::new(0));
+    let knob = Arc::clone(&delay);
+    let coordinator = Arc::new(Coordinator::spawn(
+        move |_w| {
+            let model_cfg = ModelConfig::nano();
+            let arena = KvArena::new(&model_cfg, 16, arena_blocks);
+            let model = MockModel::with_shared_delay(model_cfg, knob.clone());
+            Recycler::new(
+                Engine::with_arena(model, arena),
+                Arc::new(Tokenizer::new(vec![])),
+                Box::new(NgramEmbedder::new(64)),
+                CacheConfig {
+                    max_entries: 256,
+                    ..Default::default()
+                },
+                RecyclePolicy::Radix,
+            )
+        },
+        cfg,
+    ));
+    let server = Server::start(Arc::clone(&coordinator), "127.0.0.1:0").expect("server start");
+    Stack {
+        server,
+        coordinator,
+        delay,
+    }
+}
+
+impl Stack {
+    fn set_delay(&self, d: Duration) {
+        self.delay.store(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+    fn addr(&self) -> SocketAddr {
+        self.server.addr()
+    }
+    fn stop(self) {
+        self.server.stop();
+        if let Ok(c) = Arc::try_unwrap(self.coordinator) {
+            c.shutdown();
+        }
+    }
+}
+
+/// One client-side observation (a dedicated connection per request).
+#[derive(Clone)]
+struct Obs {
+    tenant: String,
+    /// "done", a typed error kind ("overloaded", ...), or "transport".
+    kind: String,
+    /// Client-visible TTFT: first `token` frame (streaming) or the
+    /// whole aggregate reply (blocking — its first token IS the reply).
+    ttft_ms: f64,
+    tokens: usize,
+    done_at: Instant,
+}
+
+fn err_kind(v: &Value) -> String {
+    v.get("error_kind")
+        .and_then(Value::as_str)
+        .unwrap_or("error")
+        .to_string()
+}
+
+fn fire(addr: SocketAddr, prompt: &str, max_new: usize, tenant: &str, streaming: bool) -> Obs {
+    let sent = Instant::now();
+    let mut kind = "transport".to_string();
+    let mut ttft_ms = f64::NAN;
+    let mut tokens = 0usize;
+    if let Ok(mut client) = TcpClient::connect(addr) {
+        if streaming {
+            if let Ok(rep) = client.generate_streaming(prompt, max_new, None, Some(tenant)) {
+                if rep.is_ok() {
+                    kind = "done".into();
+                    tokens = rep.tokens.len();
+                    if let Some(t) = rep.ttft {
+                        ttft_ms = t.as_secs_f64() * 1e3;
+                    }
+                } else {
+                    kind = err_kind(&rep.done);
+                }
+            }
+        } else if let Ok(v) = client.request_opts(prompt, max_new, None, Some(tenant)) {
+            if v.get("ok").and_then(Value::as_bool) == Some(true) {
+                kind = "done".into();
+                tokens = v.get("new_tokens").and_then(Value::as_usize).unwrap_or(0);
+                ttft_ms = sent.elapsed().as_secs_f64() * 1e3;
+            } else {
+                kind = err_kind(&v);
+            }
+        }
+    }
+    Obs {
+        tenant: tenant.to_string(),
+        kind,
+        ttft_ms,
+        tokens,
+        done_at: Instant::now(),
+    }
+}
+
+/// Populate the recycling cache with every prompt at zero per-token
+/// cost, via the coordinator (bypassing the QoS front keeps the tenant
+/// ledger clean for the measured window). The stack's unit admission
+/// queue sheds eagerly, so warmup retries until everything lands.
+fn warm_cache(c: &Coordinator, prompts: &[(String, String)]) {
+    let mut pending = Vec::new();
+    for (_, p) in prompts {
+        loop {
+            match c.submit(p, WARM_MAX_NEW, None) {
+                Ok(rx) => {
+                    pending.push(rx);
+                    break;
+                }
+                Err(Error::Overloaded { .. }) => thread::sleep(Duration::from_micros(200)),
+                Err(e) => panic!("warmup submit: {e}"),
+            }
+        }
+    }
+    for rx in pending {
+        rx.recv().expect("warmup reply").ok().expect("warmup ok");
+    }
+}
+
+/// Nearest-rank percentile over an already-sorted sample.
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = ((sorted.len() as f64 * p).ceil() as usize).clamp(1, sorted.len()) - 1;
+    sorted[idx]
+}
+
+/// Sum (completed, shed) over the front's per-tenant stats counters.
+fn front_totals(reply: &Value) -> (usize, usize) {
+    let mut completed = 0;
+    let mut shed = 0;
+    if let Some(Value::Obj(rows)) = reply.get("front").and_then(|f| f.get("tenants")) {
+        for (_, t) in rows {
+            completed += t.get("completed").and_then(Value::as_usize).unwrap_or(0);
+            shed += t.get("shed").and_then(Value::as_usize).unwrap_or(0);
+        }
+    }
+    (completed, shed)
+}
+
+struct ArmReport {
+    phase: &'static str,
+    arm: String,
+    weight: usize,
+    offered: usize,
+    done: usize,
+    shed: usize,
+    deadline: usize,
+    other: usize,
+    /// Phase 1: total tokens delivered. Phase 2: tokens delivered within
+    /// the first half of completions (the fairness window).
+    tokens: usize,
+    token_share: f64,
+    /// Sorted client-visible TTFTs (ms) of completed requests.
+    ttft: Vec<f64>,
+    wall_s: f64,
+}
+
+impl ArmReport {
+    fn p50(&self) -> f64 {
+        percentile(&self.ttft, 0.50)
+    }
+    fn p99(&self) -> f64 {
+        percentile(&self.ttft, 0.99)
+    }
+    fn row(&self) -> Vec<String> {
+        vec![
+            self.phase.to_string(),
+            self.arm.clone(),
+            self.offered.to_string(),
+            self.done.to_string(),
+            self.shed.to_string(),
+            self.deadline.to_string(),
+            self.tokens.to_string(),
+            format!("{:.3}", self.p50()),
+            format!("{:.3}", self.p99()),
+            format!("{:.4}", self.token_share),
+            self.weight.to_string(),
+            format!("{:.4}", self.wall_s),
+        ]
+    }
+}
+
+fn summarize(
+    phase: &'static str,
+    arm: String,
+    weight: usize,
+    obs: &[Obs],
+    wall_s: f64,
+) -> ArmReport {
+    let mut ttft: Vec<f64> = obs
+        .iter()
+        .filter(|o| o.kind == "done" && o.ttft_ms.is_finite())
+        .map(|o| o.ttft_ms)
+        .collect();
+    ttft.sort_by(|a, b| a.partial_cmp(b).expect("finite ttft"));
+    let count = |k: &str| obs.iter().filter(|o| o.kind == k).count();
+    let (done, shed, deadline) =
+        (count("done"), count("overloaded"), count("deadline_exceeded"));
+    ArmReport {
+        phase,
+        arm,
+        weight,
+        offered: obs.len(),
+        done,
+        shed,
+        deadline,
+        other: obs.len() - done - shed - deadline,
+        tokens: obs.iter().map(|o| o.tokens).sum(),
+        token_share: 0.0,
+        ttft,
+        wall_s,
+    }
+}
+
+/// The measured phase-1 workload: the seeded multi-tenant trace as
+/// (tenant label, prompt) pairs. Prompts repeat the warmup exactly, so
+/// measured TTFT isolates queueing + decode from prompt encode.
+fn ttft_prompts(quick: bool) -> Vec<(String, String)> {
+    multi_tenant_trace(TraceSpec {
+        tenants: 4,
+        requests: if quick { 48 } else { 96 },
+        mean_burst: 3,
+        session_reuse: 0.0,
+        min_words: 2,
+        max_words: 6,
+        max_new_tokens: TTFT_MAX_NEW,
+        seed: 0x57EA,
+    })
+    .into_iter()
+    .map(|r| (format!("t{}", r.tenant), r.prompt))
+    .collect()
+}
+
+/// Phase 1 arm: warm every prompt at zero cost, switch the price on,
+/// then offer the trace at ~2x the service rate, one thread and one
+/// connection per request (a stalled reply never delays the next
+/// arrival). Checks the front's per-tenant ledger against the
+/// client-side tallies before tearing the stack down.
+fn run_ttft(streaming: bool, prompts: &[(String, String)]) -> ArmReport {
+    let s = stack(
+        ServerConfig {
+            queue_capacity: 1,
+            tenant_queue_capacity: 1,
+            max_batch: 16,
+            max_prefilling_slots: 16,
+            ..Default::default()
+        },
+        4096,
+    );
+    warm_cache(&s.coordinator, prompts);
+    s.set_delay(DELAY);
+
+    let sw = Stopwatch::start();
+    let (tx, rx) = mpsc::channel::<Obs>();
+    let mut handles = Vec::new();
+    let start = Instant::now();
+    for (i, (tenant, prompt)) in prompts.iter().enumerate() {
+        let target = start + PACE * i as u32;
+        let now = Instant::now();
+        if target > now {
+            thread::sleep(target - now);
+        }
+        let (tx, addr) = (tx.clone(), s.addr());
+        let (tenant, prompt) = (tenant.clone(), prompt.clone());
+        handles.push(thread::spawn(move || {
+            let _ = tx.send(fire(addr, &prompt, TTFT_MAX_NEW, &tenant, streaming));
+        }));
+    }
+    drop(tx);
+    let obs: Vec<Obs> = rx.into_iter().collect();
+    for h in handles {
+        let _ = h.join();
+    }
+    let wall = sw.elapsed_secs();
+
+    let mut probe = TcpClient::connect(s.addr()).expect("stats probe");
+    let ledger = probe.stats().expect("front stats");
+    drop(probe);
+    s.stop();
+
+    let arm = if streaming { "streaming" } else { "blocking" };
+    let rep = summarize("ttft", arm.to_string(), 0, &obs, wall);
+    let (completed, shed) = front_totals(&ledger);
+    assert_eq!(
+        completed, rep.done,
+        "{arm}: front per-tenant completed must match client-side done"
+    );
+    assert_eq!(
+        shed, rep.shed,
+        "{arm}: front per-tenant shed must match client-observed overloaded"
+    );
+    rep
+}
+
+/// Phase 2: equal offered work per weighted tenant, flooded at once
+/// over one stack; every request completes, and the early completions
+/// must split in weight proportion.
+fn run_fairness(quick: bool) -> Vec<ArmReport> {
+    let per_tenant = if quick { 20 } else { 32 };
+    let s = stack(
+        ServerConfig {
+            queue_capacity: 1,
+            max_batch: 2,
+            tenant_queue_capacity: per_tenant + 2,
+            qos_quantum_tokens: FAIR_MAX_NEW,
+            tenant_weights: WEIGHTS.iter().map(|&(n, w)| (n.to_string(), w)).collect(),
+            ..Default::default()
+        },
+        1024,
+    );
+    s.set_delay(FAIR_DELAY);
+
+    let sw = Stopwatch::start();
+    let (tx, rx) = mpsc::channel::<Obs>();
+    let mut handles = Vec::new();
+    for i in 0..per_tenant {
+        for (name, _) in WEIGHTS {
+            let (tx, addr) = (tx.clone(), s.addr());
+            let prompt = format!("{name} fairness probe {i:03}");
+            handles.push(thread::spawn(move || {
+                let _ = tx.send(fire(addr, &prompt, FAIR_MAX_NEW, name, true));
+            }));
+        }
+    }
+    drop(tx);
+    let mut obs: Vec<Obs> = rx.into_iter().collect();
+    for h in handles {
+        let _ = h.join();
+    }
+    let wall = sw.elapsed_secs();
+    s.stop();
+
+    // Everything was served; fairness is judged on WHO finished early —
+    // the first half of completions in client-observed completion order.
+    obs.sort_by_key(|o| o.done_at);
+    let half = &obs[..obs.len() / 2];
+    let half_total: usize = half.iter().map(|o| o.tokens).sum();
+    WEIGHTS
+        .iter()
+        .map(|&(name, w)| {
+            let mine: Vec<Obs> = obs.iter().filter(|o| o.tenant == name).cloned().collect();
+            let half_tokens: usize = half
+                .iter()
+                .filter(|o| o.tenant == name)
+                .map(|o| o.tokens)
+                .sum();
+            let mut rep = summarize("fairness", name.to_string(), w, &mine, wall);
+            rep.tokens = half_tokens;
+            rep.token_share = half_tokens as f64 / half_total.max(1) as f64;
+            rep
+        })
+        .collect()
+}
+
+fn main() {
+    common::banner(
+        "ablation_streaming",
+        "A10 streaming front: TTFT under overload, typed shedding, weighted fairness",
+    );
+    let quick = common::quick();
+    let prompts = ttft_prompts(quick);
+
+    let mut arms = vec![run_ttft(true, &prompts), run_ttft(false, &prompts)];
+    arms.extend(run_fairness(quick));
+
+    println!(
+        "{:<9} {:<10} {:>7} {:>5} {:>5} {:>9} {:>7} {:>12} {:>12} {:>11} {:>6} {:>7}",
+        "phase", "arm", "offered", "done", "shed", "deadline", "tokens", "ttft_p50_ms",
+        "ttft_p99_ms", "token_share", "weight", "wall_s"
+    );
+    for r in &arms {
+        println!(
+            "{:<9} {:<10} {:>7} {:>5} {:>5} {:>9} {:>7} {:>12.2} {:>12.2} {:>11.4} {:>6} {:>7.3}",
+            r.phase,
+            r.arm,
+            r.offered,
+            r.done,
+            r.shed,
+            r.deadline,
+            r.tokens,
+            r.p50(),
+            r.p99(),
+            r.token_share,
+            r.weight,
+            r.wall_s
+        );
+    }
+    let out = common::results_dir().join("ablation_streaming.csv");
+    recycle_serve::util::csv::write_file(
+        &out,
+        &[
+            "phase", "arm", "offered", "done", "shed", "deadline_exceeded", "tokens",
+            "ttft_p50_ms", "ttft_p99_ms", "token_share", "weight", "wall_s",
+        ],
+        &arms.iter().map(|r| r.row()).collect::<Vec<_>>(),
+    )
+    .expect("write csv");
+    println!("\nwrote {}", out.display());
+
+    // --- assertion 1: overload ends in typed outcomes, never hangs ---
+    // arms[0] and arms[1] are the phase-1 streaming and blocking runs
+    let (stream, block) = (&arms[0], &arms[1]);
+    for r in [stream, block] {
+        assert_eq!(
+            r.done + r.shed + r.deadline,
+            r.offered,
+            "{}: every request must end done/overloaded/deadline (other={})",
+            r.arm,
+            r.other
+        );
+        assert!(r.done >= 8, "{}: too few completions to compare TTFT ({})", r.arm, r.done);
+        assert!(
+            r.shed >= 1,
+            "{}: 2x overload against unit queues must shed at least once",
+            r.arm
+        );
+    }
+
+    // --- assertion 2: streaming at least halves client-visible p99 TTFT ---
+    println!(
+        "\nttft: streaming p99 {:.1}ms vs blocking p99 {:.1}ms ({:.2}x)",
+        stream.p99(),
+        block.p99(),
+        block.p99() / stream.p99()
+    );
+    assert!(
+        stream.p99() * 2.0 <= block.p99(),
+        "streaming must at least halve p99 TTFT under overload: {:.1}ms !<= {:.1}ms / 2",
+        stream.p99(),
+        block.p99()
+    );
+
+    // --- assertion 3: early completions split in weight proportion ---
+    let wsum: usize = WEIGHTS.iter().map(|&(_, w)| w).sum();
+    let fair: Vec<&ArmReport> = arms.iter().filter(|r| r.phase == "fairness").collect();
+    for r in &fair {
+        assert_eq!(
+            r.done, r.offered,
+            "fairness/{}: every request must complete (shed={} other={})",
+            r.arm, r.shed, r.other
+        );
+        let floor = (r.weight as f64 / wsum as f64) * (1.0 - FAIR_EPS);
+        println!(
+            "fairness: {} first-half token share {:.3} (weighted floor {:.3})",
+            r.arm, r.token_share, floor
+        );
+        assert!(
+            r.token_share >= floor,
+            "{} got {:.3} of the early tokens, below its weighted floor {:.3}",
+            r.arm,
+            r.token_share,
+            floor
+        );
+    }
+    // fairness rows follow WEIGHTS order: gold, silver, bronze
+    let (gold, bronze) = (fair[0], fair[2]);
+    assert!(
+        gold.tokens > bronze.tokens,
+        "weight 4 must land more early tokens than weight 1: {} !> {}",
+        gold.tokens,
+        bronze.tokens
+    );
+    println!("fairness: weighted early-token shares hold under WDRR admission");
+}

@@ -3,7 +3,8 @@
 //! Loads the trained nano model through the full production stack —
 //! PJRT runtime → engine → recycler → coordinator → TCP server — then
 //! drives a batched request stream over real sockets and reports
-//! latency/throughput with recycling on vs off.
+//! latency/throughput with recycling on vs off, plus per-tenant
+//! first-token latency over the streaming front.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example serving_demo
@@ -123,6 +124,33 @@ fn main() -> Result<()> {
     // Aggregate + per-worker breakdown over the wire (`{"cmd":"stats"}`),
     // fetched before stop() like any other client request.
     let cluster = TcpClient::connect(s_on.addr())?.stats()?;
+
+    // --- streamed TTFT per tenant (the streaming front) ---
+    // Two tenants replay the test prompts as streaming requests against
+    // the warmed stack; the client-visible first-token latency is what
+    // streaming buys an interactive caller versus waiting for the full
+    // reply, and the tenant label exercises the per-tenant QoS ledger.
+    let demo_prompts = paper_test_prompts(&data);
+    let mut ttft_report: Vec<(&str, f64, f64, usize)> = Vec::new();
+    for tenant in ["gold", "bronze"] {
+        let mut client = TcpClient::connect(s_on.addr())?;
+        let mut ttft_ms = Samples::new();
+        let mut full_ms = Samples::new();
+        let mut streamed = 0usize;
+        for p in &demo_prompts {
+            let sw = Stopwatch::start();
+            let rep = client.generate_streaming(p, max_new, None, Some(tenant))?;
+            full_ms.push(sw.elapsed_secs() * 1e3);
+            if !rep.is_ok() {
+                return Err(format!("stream failed: {}", rep.done.to_json()).into());
+            }
+            if let Some(t) = rep.ttft {
+                ttft_ms.push(t.as_secs_f64() * 1e3);
+            }
+            streamed += rep.tokens.len();
+        }
+        ttft_report.push((tenant, ttft_ms.mean(), full_ms.mean(), streamed));
+    }
     s_on.stop();
 
     // --- report ---
@@ -192,6 +220,15 @@ fn main() -> Result<()> {
         n,
         100.0 * hits as f64 / n as f64
     );
+    println!(
+        "\nstreamed TTFT per tenant ({} prompts each, recycling ON):",
+        demo_prompts.len()
+    );
+    for (tenant, ttft, full, tokens) in &ttft_report {
+        println!(
+            "  {tenant:<8} mean TTFT {ttft:>7.1}ms   full reply {full:>7.1}ms   ({tokens} tokens)"
+        );
+    }
     println!("\ncluster stats (the `{{\"cmd\":\"stats\"}}` wire reply, recycling ON):");
     println!("{}", cluster.to_json());
     // degraded-mode health: a misconfigured spill_dir silently costs hit

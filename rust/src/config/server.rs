@@ -113,6 +113,28 @@ pub struct ServerConfig {
     /// forces exact-only serving cluster-wide regardless of how each
     /// worker's cache was built.
     pub segment_fidelity_budget: Option<f64>,
+    /// Per-tenant bounded queue depth in the streaming front's QoS layer;
+    /// a tenant whose queue is full gets an immediate typed `Overloaded`
+    /// event instead of unbounded buffering.
+    pub tenant_queue_capacity: usize,
+    /// Weighted deficit round-robin quantum, in generation tokens: each
+    /// pass credits a tenant `quantum * weight` tokens of deficit and
+    /// dispatches requests while the deficit covers their `max_new_tokens`
+    /// cost. Larger values trade fairness granularity for batching.
+    pub qos_quantum_tokens: usize,
+    /// Weight for tenants not listed in `tenant_weights` (and for the
+    /// anonymous tenant).
+    pub qos_default_weight: usize,
+    /// Per-tenant WDRR weights: a tenant with weight 2 gets twice the
+    /// fair-share goodput of a weight-1 tenant under contention.
+    pub tenant_weights: Vec<(String, usize)>,
+    /// Overload-shedding gate on the live scheduler queue-wait signal: when
+    /// > 0 and the recent average queue wait (from successive
+    /// `CoordinatorStats::scheduler` snapshots) exceeds this, the QoS pump
+    /// sheds new arrivals with a typed `Overloaded` event instead of
+    /// queueing them. 0 (default) disables the wait-based gate; shedding
+    /// then happens only on full tenant queues / downstream backpressure.
+    pub qos_shed_wait_ms: u64,
 }
 
 impl Default for ServerConfig {
@@ -133,6 +155,11 @@ impl Default for ServerConfig {
             num_workers: 1,
             routing: RoutingPolicy::PrefixAffinity,
             segment_fidelity_budget: None,
+            tenant_queue_capacity: 64,
+            qos_quantum_tokens: 8,
+            qos_default_weight: 1,
+            tenant_weights: Vec::new(),
+            qos_shed_wait_ms: 0,
         }
     }
 }
@@ -210,6 +237,35 @@ impl ServerConfig {
                 Error::Config("segment_fidelity_budget must be a number".into())
             })?);
         }
+        if let Some(n) = usize_field("tenant_queue_capacity")? {
+            c.tenant_queue_capacity = n;
+        }
+        if let Some(n) = usize_field("qos_quantum_tokens")? {
+            c.qos_quantum_tokens = n;
+        }
+        if let Some(n) = usize_field("qos_default_weight")? {
+            c.qos_default_weight = n;
+        }
+        if let Some(n) = usize_field("qos_shed_wait_ms")? {
+            c.qos_shed_wait_ms = n as u64;
+        }
+        if let Some(x) = v.get("tenant_weights") {
+            let Value::Obj(entries) = x else {
+                return Err(Error::Config(
+                    "tenant_weights must be an object of tenant -> weight".into(),
+                ));
+            };
+            c.tenant_weights = entries
+                .iter()
+                .map(|(k, w)| {
+                    w.as_usize()
+                        .map(|w| (k.clone(), w))
+                        .ok_or_else(|| {
+                            Error::Config(format!("tenant_weights[{k}] must be a number"))
+                        })
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
         c.validate()?;
         Ok(c)
     }
@@ -253,6 +309,24 @@ impl ServerConfig {
                 // infidelity is 1 - text similarity, which lives in [0, 1]
                 return Err(Error::Config(format!(
                     "segment_fidelity_budget must be in [0, 1], got {b}"
+                )));
+            }
+        }
+        if self.tenant_queue_capacity == 0 {
+            // a zero-depth tenant queue would shed every streamed request
+            return Err(Error::Config("tenant_queue_capacity must be >= 1".into()));
+        }
+        if self.qos_quantum_tokens == 0 || self.qos_default_weight == 0 {
+            // a zero quantum or weight would never accumulate deficit, so
+            // the WDRR pump could never dispatch that tenant's requests
+            return Err(Error::Config(
+                "qos_quantum_tokens/qos_default_weight must be >= 1".into(),
+            ));
+        }
+        for (tenant, w) in &self.tenant_weights {
+            if *w == 0 {
+                return Err(Error::Config(format!(
+                    "tenant_weights[{tenant}] must be >= 1 (zero would starve the tenant)"
                 )));
             }
         }
@@ -402,6 +476,49 @@ mod tests {
         ] {
             let v = json::parse(bad).unwrap();
             assert!(ServerConfig::from_json(&v).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn parses_qos_knobs() {
+        let v = json::parse(
+            r#"{"tenant_queue_capacity": 8, "qos_quantum_tokens": 16,
+                "qos_default_weight": 2, "qos_shed_wait_ms": 250,
+                "tenant_weights": {"gold": 4, "free": 1}}"#,
+        )
+        .unwrap();
+        let c = ServerConfig::from_json(&v).unwrap();
+        assert_eq!(c.tenant_queue_capacity, 8);
+        assert_eq!(c.qos_quantum_tokens, 16);
+        assert_eq!(c.qos_default_weight, 2);
+        assert_eq!(c.qos_shed_wait_ms, 250);
+        assert_eq!(
+            c.tenant_weights,
+            vec![("gold".to_string(), 4), ("free".to_string(), 1)]
+        );
+        // defaults: fair single-weight tenants, wait-based shedding off
+        let d = ServerConfig::default();
+        assert_eq!(d.tenant_queue_capacity, 64);
+        assert_eq!(d.qos_quantum_tokens, 8);
+        assert_eq!(d.qos_default_weight, 1);
+        assert!(d.tenant_weights.is_empty());
+        assert_eq!(d.qos_shed_wait_ms, 0);
+    }
+
+    #[test]
+    fn rejects_invalid_qos_knobs() {
+        for bad in [
+            r#"{"tenant_queue_capacity": 0}"#,
+            r#"{"qos_quantum_tokens": 0}"#,
+            r#"{"qos_default_weight": 0}"#,
+            r#"{"qos_shed_wait_ms": "soon"}"#,
+            r#"{"tenant_weights": {"gold": 0}}"#,
+            r#"{"tenant_weights": {"gold": "heavy"}}"#,
+            r#"{"tenant_weights": [1, 2]}"#,
+        ] {
+            let v = json::parse(bad).unwrap();
+            let e = ServerConfig::from_json(&v).expect_err(bad);
+            assert!(matches!(e, Error::Config(_)), "{bad}: {e}");
         }
     }
 

@@ -94,8 +94,8 @@ mod session;
 
 pub use batcher::{drain_batch, drain_ready};
 pub use queue::{QueueError, RequestQueue};
-pub use request::{Request, Response};
-pub use router::{ClusterStats, Coordinator, WorkerStats};
+pub use request::{Request, Response, StreamEvent};
+pub use router::{ClusterStats, Coordinator, SubmitOptions, WorkerStats};
 pub use service::{
     admission_prompt, CoordinatorStats, DeferReason, SchedEvent, Scheduler, TickReport,
 };

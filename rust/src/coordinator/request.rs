@@ -16,10 +16,41 @@ pub struct Request {
     pub reply: mpsc::Sender<Response>,
     /// When the request entered the queue (queue-wait metrics).
     pub queued_at: Instant,
+    /// Tenant id for per-tenant QoS accounting (None = anonymous).
+    pub tenant: Option<String>,
+    /// Optional streaming channel: when set, the scheduler mirrors every
+    /// decoded token as a [`StreamEvent::Token`] the tick it is produced
+    /// and the terminal reply as [`StreamEvent::End`]. The aggregate
+    /// `reply` channel fires regardless, so streaming consumers may drop
+    /// either side.
+    pub stream: Option<mpsc::Sender<StreamEvent>>,
+}
+
+/// Per-token streaming events mirrored out of the scheduler tick loop.
+///
+/// Ordering contract: zero or more `Token`s (with strictly increasing
+/// `index` per attempt), then exactly one `End`. A transient retry
+/// restarts generation, so the `index` sequence may reset to 0 mid-stream;
+/// consumers MUST treat `index` as authoritative and truncate their
+/// buffer on regression. Fault-free streams never regress.
+#[derive(Debug, Clone)]
+pub enum StreamEvent {
+    Token {
+        /// Position in the generated sequence (0-based).
+        index: usize,
+        /// The token id.
+        id: u32,
+        /// Incremental text for this token: decoded bytes held back at a
+        /// UTF-8 boundary by [`crate::tokenizer::StreamDecoder`], so the
+        /// concatenation over a stream is valid UTF-8.
+        text: String,
+    },
+    /// Terminal event: same payload as the aggregate reply.
+    End(Response),
 }
 
 /// What the worker sends back.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub enum Response {
     Ok(Box<Outcome>),
     /// Failure reply: human-readable message plus the stable

@@ -52,8 +52,22 @@ use crate::util::json::{self, Value};
 use crate::util::sync::lock_recover;
 
 use super::queue::QueueError;
-use super::request::{Request, Response};
+use super::request::{Request, Response, StreamEvent};
 use super::service::{CoordinatorStats, Worker};
+
+/// Submission extras beyond the prompt/budget/session triple: the QoS
+/// tenant label and the optional per-token streaming channel. `submit`
+/// passes the default (anonymous, aggregate-only); the streaming front
+/// uses [`Coordinator::submit_with`] directly.
+#[derive(Default)]
+pub struct SubmitOptions {
+    /// Tenant id for per-tenant QoS accounting (None = anonymous).
+    pub tenant: Option<String>,
+    /// When set, the owning worker's scheduler mirrors each decoded token
+    /// as a [`StreamEvent::Token`] the tick it is produced, then exactly
+    /// one [`StreamEvent::End`]. The aggregate reply still fires.
+    pub stream: Option<mpsc::Sender<StreamEvent>>,
+}
 
 /// Leading bytes hashed into the prefix-family fingerprint. The byte-
 /// level tokenizer makes bytes ≈ tokens, so 32 bytes ≈ two arena blocks
@@ -201,6 +215,19 @@ impl Coordinator {
         max_new_tokens: usize,
         session: Option<String>,
     ) -> Result<mpsc::Receiver<Response>> {
+        self.submit_with(prompt, max_new_tokens, session, SubmitOptions::default())
+    }
+
+    /// [`Coordinator::submit`] with QoS/streaming extras (see
+    /// [`SubmitOptions`]). Placement, overload fallback, and shedding are
+    /// identical — streaming and tenancy never change where a request runs.
+    pub fn submit_with(
+        &self,
+        prompt: &str,
+        max_new_tokens: usize,
+        session: Option<String>,
+        opts: SubmitOptions,
+    ) -> Result<mpsc::Receiver<Response>> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let widx = self.route(prompt, session.as_deref());
         let mk_req = |tx: mpsc::Sender<Response>| Request {
@@ -210,6 +237,8 @@ impl Coordinator {
             session: session.clone(),
             reply: tx,
             queued_at: Instant::now(),
+            tenant: opts.tenant.clone(),
+            stream: opts.stream.clone(),
         };
         let (tx, rx) = mpsc::channel();
         match self.workers[widx].try_push(mk_req(tx)) {

@@ -79,11 +79,12 @@ use crate::error::{Error, Result};
 use crate::kvcache::CacheStats;
 use crate::metrics::{Counters, SchedulerStats};
 use crate::recycler::{Outcome, Recycler, ServeMeta};
+use crate::tokenizer::StreamDecoder;
 use crate::util::sync::lock_recover;
 
 use super::batcher::{drain_batch, drain_ready};
 use super::queue::{QueueError, RequestQueue};
-use super::request::{Request, Response};
+use super::request::{Request, Response, StreamEvent};
 use super::session::{truncate_to_window, SessionManager};
 
 /// Aggregate coordinator statistics.
@@ -285,6 +286,13 @@ struct Slot {
     /// decode phases skip the slot; it keeps its blocks and reservations,
     /// so a retried step resumes exactly where the failed one left off.
     cooldown: usize,
+    /// Generated tokens already mirrored to `req.stream` (the emission
+    /// sweep sends `generated()[streamed..]` each tick). Retries are
+    /// token-exact — the stream keeps its generated prefix — so this
+    /// index never regresses.
+    streamed: usize,
+    /// Per-slot incremental UTF-8 decoder for streamed token text.
+    decoder: StreamDecoder,
 }
 
 impl Slot {
@@ -336,6 +344,24 @@ pub struct TickReport {
 /// The replies one tick produced: each response paired with its request's
 /// reply channel, in completion order.
 pub type TickReplies = Vec<(mpsc::Sender<Response>, Response)>;
+
+/// Queue a request's terminal reply: mirror it as [`StreamEvent::End`] on
+/// the streaming channel (if any) immediately — token events were sent the
+/// tick they decoded, so End is always last — and push the aggregate reply
+/// into the outbox for the driver's publish-then-reply delivery. Every
+/// terminal path goes through here, so a streaming consumer sees exactly
+/// one End per request no matter where it failed.
+fn send_terminal(
+    outbox: &mut TickReplies,
+    reply: mpsc::Sender<Response>,
+    stream: Option<mpsc::Sender<StreamEvent>>,
+    resp: Response,
+) {
+    if let Some(tx) = stream {
+        let _ = tx.send(StreamEvent::End(resp.clone()));
+    }
+    outbox.push((reply, resp));
+}
 
 /// One scheduler-tick event, as recorded by [`Scheduler::tick`]. The
 /// deterministic trace harness ([`crate::testutil::trace`]) collects these
@@ -436,6 +462,8 @@ fn admit_one<M: ForwardModel>(
             ttft_noted: false,
             attempt: 0,
             cooldown: 0,
+            streamed: 0,
+            decoder: StreamDecoder::new(),
         })),
         Err(e) => Admit::Fail(req, e),
     }
@@ -773,7 +801,7 @@ impl<M: ForwardModel> Scheduler<M> {
             id: req.id,
             waited_ms,
         });
-        self.outbox.push((req.reply, Response::err(&e)));
+        send_terminal(&mut self.outbox, req.reply, req.stream, Response::err(&e));
     }
 
     /// Decide what a failed step means for slot `i`: a transient error
@@ -922,7 +950,7 @@ impl<M: ForwardModel> Scheduler<M> {
                         id: req.id,
                         msg: e.to_string(),
                     });
-                    self.outbox.push((req.reply, Response::err(&e)));
+                    send_terminal(&mut self.outbox, req.reply, req.stream, Response::err(&e));
                 }
             }
         }
@@ -1011,7 +1039,12 @@ impl<M: ForwardModel> Scheduler<M> {
                                     id,
                                     msg: e.to_string(),
                                 });
-                                self.outbox.push((slot.req.reply, Response::err(&e)));
+                                send_terminal(
+                                    &mut self.outbox,
+                                    slot.req.reply,
+                                    slot.req.stream,
+                                    Response::err(&e),
+                                );
                                 continue; // i not advanced: swap_remove
                             }
                         }
@@ -1036,7 +1069,12 @@ impl<M: ForwardModel> Scheduler<M> {
                             id,
                             msg: e.to_string(),
                         });
-                        self.outbox.push((slot.req.reply, Response::err(&e)));
+                        send_terminal(
+                            &mut self.outbox,
+                            slot.req.reply,
+                            slot.req.stream,
+                            Response::err(&e),
+                        );
                         // i not advanced: swap_remove moved a new slot here
                     }
                 }
@@ -1127,7 +1165,12 @@ impl<M: ForwardModel> Scheduler<M> {
                                     id,
                                     msg: e.to_string(),
                                 });
-                                self.outbox.push((r.req.reply, Response::err(&e)));
+                                send_terminal(
+                                    &mut self.outbox,
+                                    r.req.reply,
+                                    r.req.stream,
+                                    Response::err(&e),
+                                );
                                 // i not advanced: swap_remove moved a new
                                 // slot here; dropping `r` released blocks
                             }
@@ -1136,19 +1179,39 @@ impl<M: ForwardModel> Scheduler<M> {
                 }
             }
         }
-        // Time-to-first-token: note streams that just emitted token #1
-        // (measured from submission — queue wait plus however many prefill
-        // ticks admission took).
+        // Time-to-first-token accounting and the streaming emission sweep:
+        // every token a stream's decode produced this tick (at most one per
+        // slot) is mirrored to the request's stream channel the moment it
+        // exists — before finish_phase runs, so token events always precede
+        // the End event of the same tick. TTFT is measured from submission
+        // (queue wait plus however many prefill ticks admission took).
+        let tokenizer = self.recycler.tokenizer();
         for slot in &mut self.running {
-            if slot.ttft_noted {
+            let SlotState::Decoding(d) = &slot.state else {
                 continue;
+            };
+            let gen = d.generated();
+            if !slot.ttft_noted && !gen.is_empty() {
+                slot.ttft_noted = true;
+                self.stats
+                    .note_first_token(slot.req.queued_at.elapsed().as_millis() as u64);
+                events.push(SchedEvent::FirstToken { id: slot.req.id });
             }
-            if let SlotState::Decoding(d) = &slot.state {
-                if !d.generated().is_empty() {
-                    slot.ttft_noted = true;
-                    self.stats
-                        .note_first_token(slot.req.queued_at.elapsed().as_millis() as u64);
-                    events.push(SchedEvent::FirstToken { id: slot.req.id });
+            if let Some(tx) = &slot.req.stream {
+                let finished = d.is_finished();
+                while slot.streamed < gen.len() {
+                    let index = slot.streamed;
+                    let id = gen[index];
+                    let mut text = slot.decoder.push(&tokenizer, id);
+                    slot.streamed += 1;
+                    // A finished stream flushes its held-back incomplete
+                    // UTF-8 tail into the final token (lossy, exactly as
+                    // whole-sequence decode replaces it), so
+                    // concat(token.text) == done.output holds byte-exact.
+                    if finished && slot.streamed == gen.len() {
+                        text.push_str(&slot.decoder.flush_lossy());
+                    }
+                    let _ = tx.send(StreamEvent::Token { index, id, text });
                 }
             }
         }
@@ -1187,8 +1250,12 @@ impl<M: ForwardModel> Scheduler<M> {
                 self.sessions
                     .commit(sid, &slot.req.prompt, full_text, full_ids, &outcome.text);
             }
-            self.outbox
-                .push((slot.req.reply, Response::Ok(Box::new(outcome))));
+            send_terminal(
+                &mut self.outbox,
+                slot.req.reply,
+                slot.req.stream,
+                Response::Ok(Box::new(outcome)),
+            );
         }
     }
 }
@@ -1665,6 +1732,8 @@ mod tests {
             session: None,
             reply: tx,
             queued_at: Instant::now(),
+            tenant: None,
+            stream: None,
         };
         assert_eq!(w.try_push(req).err(), Some(QueueError::Closed));
     }

@@ -13,10 +13,13 @@
 //! | `ForwardModel` (mock backend)       | [`FaultSite::ModelTransient`], [`FaultSite::ModelPermanent`], [`FaultSite::ModelSlow`] |
 //! | `SpillTier` (disk cold tier)        | [`FaultSite::SpillWrite`], [`FaultSite::SpillRead`], [`FaultSite::SpillTorn`], [`FaultSite::SpillSlow`] |
 //! | `KvArena` (paged block allocator)   | [`FaultSite::ArenaSpike`] |
+//! | streaming front (`server/stream.rs`)| [`FaultSite::ClientStall`], [`FaultSite::TornClientWrite`] |
 //!
-//! (The fourth failure domain — the TCP front — is exercised from the
-//! *outside* by misbehaving-client integration tests; a client that
-//! disconnects mid-line needs no in-process seam.)
+//! The network front's sites model *misbehaving clients* from inside the
+//! event loop — a socket that stops being readable mid-request and a
+//! flush that lands only a prefix of its bytes — complementing the raw-
+//! socket integration tests that misbehave from the outside (a client
+//! that disconnects mid-line needs no in-process seam).
 //!
 //! The seams are compiled in unconditionally but **inert by default**:
 //! an uninstalled handle ([`FaultHandle::off`]) is a `None` and every
@@ -53,10 +56,18 @@ pub enum FaultSite {
     /// An arena block allocation reports exhaustion despite free blocks —
     /// a refcount-pressure spike the shed/retry paths must absorb.
     ArenaSpike,
+    /// The streaming front skips one read pass on a connection — a client
+    /// that stalls mid-request. The event loop must keep every other
+    /// connection live and pick the stalled one up next pass.
+    ClientStall,
+    /// A flush writes only a prefix of the connection's buffered frames —
+    /// a torn client write. The unwritten tail must stay buffered so
+    /// framing is delayed, never corrupted.
+    TornClientWrite,
 }
 
 impl FaultSite {
-    pub const ALL: [FaultSite; 8] = [
+    pub const ALL: [FaultSite; 10] = [
         FaultSite::ModelTransient,
         FaultSite::ModelPermanent,
         FaultSite::ModelSlow,
@@ -65,6 +76,8 @@ impl FaultSite {
         FaultSite::SpillTorn,
         FaultSite::SpillSlow,
         FaultSite::ArenaSpike,
+        FaultSite::ClientStall,
+        FaultSite::TornClientWrite,
     ];
 }
 

@@ -184,6 +184,64 @@ impl Counters {
     }
 }
 
+/// Per-tenant serving counters kept by the streaming front's QoS layer
+/// (keyed by the request's tenant id; the anonymous tenant gets a row
+/// too). TTFT here is *client-visible* — clocked from request arrival at
+/// the front to the first token frame hitting the connection's write
+/// buffer — unlike `SchedulerStats::ttft_ms_*`, which clocks from queue
+/// submission to the scheduler's first decode.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TenantCounters {
+    /// Requests admitted into the tenant's QoS queue.
+    pub accepted: u64,
+    /// Requests shed with a typed `Overloaded` event (full tenant queue,
+    /// downstream backpressure past the deadline, or the wait-based gate).
+    pub shed: u64,
+    /// Requests that finished with a `done` event.
+    pub completed: u64,
+    /// Requests that finished with an `error` event.
+    pub failed: u64,
+    /// Token frames delivered to this tenant's connections.
+    pub tokens_streamed: u64,
+    /// Requests that have produced their first token frame.
+    pub first_tokens: u64,
+    /// Total client-visible TTFT over those requests, milliseconds.
+    pub ttft_ms_total: u64,
+    /// Worst single client-visible TTFT, milliseconds.
+    pub ttft_ms_max: u64,
+}
+
+impl TenantCounters {
+    /// Record a request's first token frame, `ttft_ms` after arrival.
+    pub fn note_first_token(&mut self, ttft_ms: u64) {
+        self.first_tokens += 1;
+        self.ttft_ms_total += ttft_ms;
+        self.ttft_ms_max = self.ttft_ms_max.max(ttft_ms);
+    }
+
+    /// Mean client-visible TTFT over requests that emitted a token, ms.
+    pub fn avg_ttft_ms(&self) -> f64 {
+        if self.first_tokens == 0 {
+            0.0
+        } else {
+            self.ttft_ms_total as f64 / self.first_tokens as f64
+        }
+    }
+
+    /// Fold another front's counters for the same tenant into this one
+    /// (totals add, the per-event maximum takes the max).
+    pub fn merge(&mut self, o: &TenantCounters) {
+        self.accepted += o.accepted;
+        self.shed += o.shed;
+        self.completed += o.completed;
+        self.failed += o.failed;
+        self.tokens_streamed += o.tokens_streamed;
+        self.first_tokens += o.first_tokens;
+        self.ttft_ms_total += o.ttft_ms_total;
+        self.ttft_ms_max = self.ttft_ms_max.max(o.ttft_ms_max);
+    }
+}
+
 /// Continuous-batching scheduler counters, surfaced through
 /// `CoordinatorStats`. Occupancy is tracked as (steps, slot-steps) so the
 /// average falls out without per-step history.
@@ -415,6 +473,32 @@ mod tests {
         assert_eq!(s.first_tokens, 2);
         assert_eq!(s.ttft_ms_max, 40);
         assert!((s.avg_ttft_ms() - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tenant_counters_ttft_and_merge() {
+        let mut a = TenantCounters::default();
+        assert_eq!(a.avg_ttft_ms(), 0.0);
+        a.accepted = 3;
+        a.note_first_token(10);
+        a.note_first_token(30);
+        assert_eq!(a.first_tokens, 2);
+        assert_eq!(a.ttft_ms_max, 30);
+        assert!((a.avg_ttft_ms() - 20.0).abs() < 1e-9);
+        let mut b = TenantCounters {
+            accepted: 1,
+            shed: 2,
+            tokens_streamed: 7,
+            ..Default::default()
+        };
+        b.note_first_token(50);
+        a.merge(&b);
+        assert_eq!(a.accepted, 4);
+        assert_eq!(a.shed, 2);
+        assert_eq!(a.tokens_streamed, 7);
+        assert_eq!(a.first_tokens, 3);
+        assert_eq!(a.ttft_ms_max, 50, "merge takes the max of maxima");
+        assert!((a.avg_ttft_ms() - 30.0).abs() < 1e-9);
     }
 
     #[test]

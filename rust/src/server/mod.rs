@@ -1,10 +1,70 @@
-//! Network front-end: a line-delimited JSON protocol over TCP.
+//! Network front: a nonblocking, event-driven TCP server streaming
+//! tokens as they are generated, with per-tenant QoS admission.
 //!
-//! Request:  `{"prompt": "...", "max_new_tokens": 32, "session": "id?"}`
-//! Response: `{"ok": true, "output": "...", "latency_s": 0.01,
-//!             "reuse_depth": 7, "cache_hit": true, "prompt_tokens": 12}`
-//! or        `{"ok": false, "error": "..."}`
+//! # Wire protocol
+//!
+//! Newline-delimited JSON in both directions, one value per line.
+//! Requests:
+//!
+//! ```text
+//! {"prompt": "...", "max_new_tokens": N}            aggregate request
+//!   optional fields:
+//!     "session": "id"      multi-turn context carry-over
+//!     "tenant":  "id"      QoS accounting/fairness label (default "anon")
+//!     "stream":  true      per-token streaming reply mode
+//!     "rid":     <any>     client request id, echoed on every frame
+//! {"cmd": "stats"}                                  control plane
+//! ```
+//!
+//! # Reply modes
+//!
+//! **Aggregate** (no `"stream"`): exactly one reply line per request,
+//! in per-connection request order (pipelining-safe):
+//!
+//! ```text
+//! {"ok":true,"output":...,"latency_s":...,"reuse_depth":...,
+//!  "cache_hit":...,"prompt_tokens":...,"new_tokens":...}
+//! {"ok":false,"error":msg,"error_kind":kind}
+//! ```
+//!
+//! **Streaming** (`"stream": true`): zero or more `token` frames the
+//! moment the owning worker's tick emits each token, then exactly one
+//! terminal frame. Streams may interleave with other replies on the
+//! same connection — the echoed `rid` is the demultiplexing key:
+//!
+//! ```text
+//! {"event":"token","rid":...,"index":N,"id":T,"text":S}
+//! {"event":"done","rid":...,"ok":true, <aggregate success fields>}
+//! {"event":"error","rid":...,"ok":false,"error":msg,"error_kind":kind}
+//! ```
+//!
+//! Event taxonomy: `token` indices are 0-based and strictly increasing
+//! within an attempt; a transient retry may replay from an earlier
+//! index, and consumers MUST truncate on regression (fault-free streams
+//! never regress). `done` carries the same payload as the aggregate
+//! success reply, so `concat(token.text) == done.output` and
+//! `count(token) == done.new_tokens` — the streaming-identity property.
+//! `error` is terminal and carries the stable `error_kind` taxonomy
+//! label ([`crate::error::Error::kind`]); mid-stream failures
+//! (`overloaded`, `deadline_exceeded`, ...) arrive as `error` frames on
+//! the live stream, never as silent disconnects.
+//!
+//! # QoS knobs (`ServerConfig`)
+//!
+//! | knob                    | role |
+//! |-------------------------|------|
+//! | `tenant_queue_capacity` | per-tenant front-queue bound; full ⇒ typed `overloaded` |
+//! | `qos_quantum_tokens`    | WDRR quantum: tokens credited per scheduling visit |
+//! | `qos_default_weight`    | weight for unlisted tenants (and `"anon"`) |
+//! | `tenant_weights`        | per-tenant weight map — goodput shares converge to weight/Σweights |
+//! | `qos_shed_wait_ms`      | live queue-wait shed gate (0 = disabled) |
+//!
+//! See [`stream`] for the event-loop architecture and [`tcp`] for the
+//! pure line semantics and the blocking client.
 
-mod tcp;
+pub mod qos;
+pub mod stream;
+pub mod tcp;
 
-pub use tcp::{Server, TcpClient};
+pub use stream::{Server, ANON_TENANT};
+pub use tcp::{serve_line, StreamedReply, TcpClient};

@@ -1,0 +1,406 @@
+//! Per-tenant QoS for the streaming front: weighted deficit round-robin
+//! admission over bounded per-tenant queues, plus a queue-wait-driven
+//! overload gate.
+//!
+//! The front parses requests off sockets faster than workers drain them;
+//! without an admission layer one chatty tenant's burst would occupy the
+//! whole downstream queue and starve everyone else. [`TenantQueues`]
+//! holds each tenant's backlog separately (bounded by
+//! `ServerConfig::tenant_queue_capacity` — a full queue sheds with a
+//! typed `Overloaded`, never silently) and releases work by **weighted
+//! deficit round-robin** in *token* units: a visit credits a tenant
+//! `quantum × weight` tokens of deficit, and popping a request debits
+//! its decode budget (`max_new_tokens`). Over any backlogged interval
+//! each tenant's admitted token share converges to `weight / Σweights` —
+//! the fairness bound the streaming ablation bench asserts.
+//!
+//! [`OverloadMonitor`] is the shed gate: it differences successive
+//! `SchedulerStats` snapshots (`queue_wait_ms_total` / `admitted`) into
+//! a recent-average worker queue wait, and trips when that exceeds
+//! `ServerConfig::qos_shed_wait_ms` (0 disables the gate). While
+//! tripped, the front rejects *new* arrivals with `Overloaded` instead
+//! of queuing them into an ever-growing latency tail; already-queued
+//! requests keep draining.
+//!
+//! Both pieces are pure data structures (no sockets, no threads) so the
+//! fairness math is unit-tested here, independent of the event loop.
+
+use std::collections::{BTreeMap, VecDeque};
+
+/// One tenant's backlog plus its running DRR deficit (in tokens).
+struct TenantQueue<T> {
+    deficit: usize,
+    items: VecDeque<(usize, T)>, // (cost in tokens, item)
+}
+
+/// Bounded per-tenant queues drained by weighted deficit round-robin.
+///
+/// `T` is the queued request; the container never inspects it, so the
+/// event loop can queue whatever bookkeeping it needs. Costs are
+/// attached at push time and must be repeated verbatim on
+/// [`TenantQueues::unpop`] so deficit accounting stays exact.
+pub struct TenantQueues<T> {
+    capacity: usize,
+    quantum: usize,
+    default_weight: usize,
+    weights: BTreeMap<String, usize>,
+    queues: BTreeMap<String, TenantQueue<T>>,
+    /// Round-robin order (first-appearance order) and the DRR cursor.
+    order: Vec<String>,
+    cursor: usize,
+    len: usize,
+}
+
+impl<T> TenantQueues<T> {
+    pub fn new(
+        capacity: usize,
+        quantum: usize,
+        default_weight: usize,
+        weights: &[(String, usize)],
+    ) -> Self {
+        TenantQueues {
+            capacity: capacity.max(1),
+            quantum: quantum.max(1),
+            default_weight: default_weight.max(1),
+            weights: weights.iter().cloned().collect(),
+            queues: BTreeMap::new(),
+            order: Vec::new(),
+            cursor: 0,
+            len: 0,
+        }
+    }
+
+    /// The configured weight for `tenant` (default for unlisted tenants).
+    pub fn weight_of(&self, tenant: &str) -> usize {
+        self.weights
+            .get(tenant)
+            .copied()
+            .unwrap_or(self.default_weight)
+    }
+
+    /// Total queued requests across all tenants.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Per-tenant queue bound (the shed threshold).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Queued requests for one tenant.
+    pub fn depth(&self, tenant: &str) -> usize {
+        self.queues.get(tenant).map_or(0, |q| q.items.len())
+    }
+
+    /// Enqueue at `cost` tokens; `Err(item)` when the tenant's queue is
+    /// full (the caller sheds with a typed `Overloaded`).
+    pub fn push(&mut self, tenant: &str, cost: usize, item: T) -> Result<(), T> {
+        let q = match self.queues.get_mut(tenant) {
+            Some(q) => q,
+            None => {
+                self.order.push(tenant.to_string());
+                self.queues
+                    .entry(tenant.to_string())
+                    .or_insert_with(|| TenantQueue {
+                        deficit: 0,
+                        items: VecDeque::new(),
+                    })
+            }
+        };
+        if q.items.len() >= self.capacity {
+            return Err(item);
+        }
+        q.items.push_back((cost, item));
+        self.len += 1;
+        Ok(())
+    }
+
+    /// Requeue a popped item at the *front* of its tenant's queue,
+    /// restoring the deficit the pop debited. Used when the downstream
+    /// worker queue rejects: the request was already admitted here, so
+    /// it bypasses the capacity bound and keeps its drain position.
+    pub fn unpop(&mut self, tenant: &str, cost: usize, item: T) {
+        let q = match self.queues.get_mut(tenant) {
+            Some(q) => q,
+            None => {
+                self.order.push(tenant.to_string());
+                self.queues
+                    .entry(tenant.to_string())
+                    .or_insert_with(|| TenantQueue {
+                        deficit: 0,
+                        items: VecDeque::new(),
+                    })
+            }
+        };
+        q.deficit = q.deficit.saturating_add(cost);
+        q.items.push_front((cost, item));
+        self.len += 1;
+    }
+
+    /// The next request under weighted deficit round-robin, with its
+    /// tenant key. Visiting a backlogged tenant whose deficit can't
+    /// cover its head-of-line cost credits `quantum × weight` and moves
+    /// on; service therefore interleaves tenants at token granularity
+    /// proportional to weight. A tenant's deficit resets when its queue
+    /// drains (classic DRR — idle tenants bank no credit).
+    pub fn pop(&mut self) -> Option<(String, T)> {
+        if self.len == 0 {
+            return None;
+        }
+        loop {
+            if self.cursor >= self.order.len() {
+                self.cursor = 0;
+            }
+            let name = self.order[self.cursor].clone();
+            let weight = self.weight_of(&name);
+            let q = self.queues.get_mut(&name).expect("ordered tenant exists");
+            let Some(&(cost, _)) = q.items.front() else {
+                q.deficit = 0;
+                self.cursor += 1;
+                continue;
+            };
+            if q.deficit >= cost {
+                q.deficit -= cost;
+                let (_, item) = q.items.pop_front().expect("non-empty front");
+                if q.items.is_empty() {
+                    q.deficit = 0;
+                    self.cursor += 1;
+                }
+                self.len -= 1;
+                return Some((name, item));
+            }
+            q.deficit = q.deficit.saturating_add(self.quantum * weight);
+            self.cursor += 1;
+        }
+    }
+
+    /// Drain queued items matching `expired`, front-first per tenant
+    /// (arrival times are monotone within a tenant's FIFO, so expiry is
+    /// always a prefix). Returns the expired items with their tenants.
+    pub fn expire<F: FnMut(&T) -> bool>(&mut self, mut expired: F) -> Vec<(String, T)> {
+        let mut out = Vec::new();
+        for (name, q) in self.queues.iter_mut() {
+            while q.items.front().is_some_and(|(_, it)| expired(it)) {
+                let (_, item) = q.items.pop_front().expect("non-empty front");
+                self.len -= 1;
+                out.push((name.clone(), item));
+            }
+        }
+        out
+    }
+
+    /// Does any queued item match `f`? (Connection-reap bookkeeping.)
+    pub fn any<F: Fn(&T) -> bool>(&self, f: F) -> bool {
+        self.queues
+            .values()
+            .any(|q| q.items.iter().any(|(_, it)| f(it)))
+    }
+}
+
+/// Queue-wait-driven overload gate over successive scheduler snapshots.
+///
+/// The front can't see worker queue wait directly — only the cumulative
+/// `queue_wait_ms_total` / `admitted` counters in `SchedulerStats`.
+/// Differencing consecutive snapshots yields the average wait of the
+/// *recently* admitted requests, which is the live overload signal: it
+/// climbs as soon as queues back up and falls as they drain, where the
+/// all-time average would lag both ways.
+#[derive(Debug)]
+pub struct OverloadMonitor {
+    shed_wait_ms: u64,
+    last_total: u64,
+    last_admitted: u64,
+    overloaded: bool,
+}
+
+impl OverloadMonitor {
+    /// `shed_wait_ms = 0` disables the gate (never overloaded).
+    pub fn new(shed_wait_ms: u64) -> Self {
+        OverloadMonitor {
+            shed_wait_ms,
+            last_total: 0,
+            last_admitted: 0,
+            overloaded: false,
+        }
+    }
+
+    /// Feed a snapshot of the cumulative counters; returns the updated
+    /// gate state. Snapshots with no new admissions keep the previous
+    /// verdict (no information either way).
+    pub fn observe(&mut self, queue_wait_ms_total: u64, admitted: u64) -> bool {
+        if self.shed_wait_ms == 0 {
+            return false;
+        }
+        let dw = queue_wait_ms_total.saturating_sub(self.last_total);
+        let dn = admitted.saturating_sub(self.last_admitted);
+        if dn > 0 {
+            self.overloaded = dw / dn >= self.shed_wait_ms;
+            self.last_total = queue_wait_ms_total;
+            self.last_admitted = admitted;
+        }
+        self.overloaded
+    }
+
+    /// The gate's current verdict (last `observe` outcome).
+    pub fn is_overloaded(&self) -> bool {
+        self.shed_wait_ms > 0 && self.overloaded
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drain `pops` items, summing each popped item as its token cost
+    /// (the tests push the cost as the item so shares are observable).
+    fn drain_tokens(q: &mut TenantQueues<usize>, pops: usize) -> BTreeMap<String, usize> {
+        let mut served: BTreeMap<String, usize> = BTreeMap::new();
+        for _ in 0..pops {
+            let Some((tenant, cost)) = q.pop() else { break };
+            *served.entry(tenant).or_insert(0) += cost;
+        }
+        served
+    }
+
+    #[test]
+    fn equal_weights_share_tokens_equally() {
+        let mut q = TenantQueues::new(1000, 8, 1, &[]);
+        for _ in 0..100 {
+            q.push("a", 8, 8).unwrap();
+            q.push("b", 8, 8).unwrap();
+        }
+        let served = drain_tokens(&mut q, 100);
+        let (a, b) = (served["a"], served["b"]);
+        assert!(
+            (a as i64 - b as i64).unsigned_abs() <= 8,
+            "equal weights must serve equal token shares: a={a} b={b}"
+        );
+    }
+
+    #[test]
+    fn weighted_tenants_get_proportional_shares() {
+        // b at weight 2 must drain ~2x a's tokens over any backlogged
+        // window, independent of arrival interleaving
+        let weights = vec![("b".to_string(), 2usize)];
+        let mut q = TenantQueues::new(1000, 4, 1, &weights);
+        for _ in 0..200 {
+            q.push("a", 4, 4).unwrap();
+            q.push("b", 4, 4).unwrap();
+        }
+        let served = drain_tokens(&mut q, 150);
+        let (a, b) = (served["a"] as f64, served["b"] as f64);
+        let ratio = b / a;
+        assert!(
+            (1.7..=2.3).contains(&ratio),
+            "weight 2:1 must serve ~2:1 tokens, got {b}:{a} ({ratio:.2})"
+        );
+    }
+
+    #[test]
+    fn unequal_costs_still_split_by_tokens_not_requests() {
+        // a sends 16-token requests, b sends 4-token requests at equal
+        // weight: b must pop ~4x as many REQUESTS (same token share)
+        let mut q = TenantQueues::new(1000, 8, 1, &[]);
+        for _ in 0..100 {
+            q.push("a", 16, 16).unwrap();
+        }
+        for _ in 0..400 {
+            q.push("b", 4, 4).unwrap();
+        }
+        let mut reqs: BTreeMap<String, usize> = BTreeMap::new();
+        let mut toks: BTreeMap<String, usize> = BTreeMap::new();
+        for _ in 0..200 {
+            let (tenant, cost) = q.pop().unwrap();
+            *reqs.entry(tenant.clone()).or_insert(0) += 1;
+            *toks.entry(tenant).or_insert(0) += cost;
+        }
+        let ratio = toks["a"] as f64 / toks["b"] as f64;
+        assert!(
+            (0.75..=1.35).contains(&ratio),
+            "token shares must stay near equal despite 4x cost skew: {toks:?}"
+        );
+        assert!(
+            reqs["b"] > reqs["a"] * 3,
+            "cheap requests must pop more often: {reqs:?}"
+        );
+    }
+
+    #[test]
+    fn full_tenant_queue_sheds_without_touching_others() {
+        let mut q = TenantQueues::new(2, 8, 1, &[]);
+        q.push("a", 1, 0).unwrap();
+        q.push("a", 1, 1).unwrap();
+        assert_eq!(q.push("a", 1, 2), Err(2), "third push must shed");
+        // an unrelated tenant is unaffected by a's full queue
+        q.push("b", 1, 0).unwrap();
+        assert_eq!(q.depth("a"), 2);
+        assert_eq!(q.depth("b"), 1);
+        assert_eq!(q.len(), 3);
+    }
+
+    #[test]
+    fn unpop_restores_drain_position_and_deficit() {
+        let mut q = TenantQueues::new(10, 8, 1, &[]);
+        q.push("a", 8, 1).unwrap();
+        q.push("a", 8, 2).unwrap();
+        let (t, item) = q.pop().unwrap();
+        assert_eq!((t.as_str(), item), ("a", 1));
+        q.unpop("a", 8, item);
+        // the requeued item pops first again — position preserved
+        assert_eq!(q.pop().unwrap().1, 1);
+        assert_eq!(q.pop().unwrap().1, 2);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn expire_drains_matching_prefix_per_tenant() {
+        let mut q = TenantQueues::new(10, 8, 1, &[]);
+        q.push("a", 1, 10).unwrap(); // "old"
+        q.push("a", 1, 99).unwrap(); // "fresh"
+        q.push("b", 1, 11).unwrap(); // "old"
+        let dead = q.expire(|it| *it < 50);
+        let mut tenants: Vec<&str> = dead.iter().map(|(t, _)| t.as_str()).collect();
+        tenants.sort_unstable();
+        assert_eq!(tenants, vec!["a", "b"]);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop().unwrap().1, 99);
+    }
+
+    #[test]
+    fn empty_pop_returns_none_and_any_scans_items() {
+        let mut q: TenantQueues<usize> = TenantQueues::new(4, 8, 1, &[]);
+        assert!(q.pop().is_none());
+        assert!(q.is_empty());
+        q.push("a", 1, 7).unwrap();
+        assert!(q.any(|it| *it == 7));
+        assert!(!q.any(|it| *it == 8));
+    }
+
+    #[test]
+    fn monitor_disabled_at_zero_threshold() {
+        let mut m = OverloadMonitor::new(0);
+        assert!(!m.observe(1_000_000, 1));
+        assert!(!m.is_overloaded());
+    }
+
+    #[test]
+    fn monitor_trips_on_recent_wait_and_recovers() {
+        let mut m = OverloadMonitor::new(100);
+        // 10 admissions, 50ms average wait: healthy
+        assert!(!m.observe(500, 10));
+        // next 10 admissions waited 300ms each: tripped
+        assert!(m.observe(500 + 3000, 20));
+        assert!(m.is_overloaded());
+        // the NEXT window drains fast (10ms each): recovers, even though
+        // the all-time average is still high
+        assert!(!m.observe(3500 + 100, 30));
+        assert!(!m.is_overloaded());
+        // no new admissions: verdict unchanged
+        assert!(!m.observe(3600, 30));
+    }
+}

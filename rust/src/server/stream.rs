@@ -1,0 +1,847 @@
+//! The nonblocking streaming network front: one event-loop thread over
+//! `std::net` readiness polling (no async runtime — tokio/mio are not in
+//! the offline vendor set, and one loop thread is the right size for a
+//! single-host worker fleet).
+//!
+//! # Event loop
+//!
+//! Every pass over the loop does, in order:
+//!
+//! 1. **accept** — drain the nonblocking listener into connection slots
+//!    (slot indices are recycled behind a generation counter, so a late
+//!    frame for a closed connection can never reach its slot's new owner);
+//! 2. **read** — nonblocking reads per connection into a byte buffer;
+//!    complete `\n`-terminated lines are parsed and admitted
+//!    ([`FaultSite::ClientStall`] skips one connection's read pass —
+//!    a stalled client must never stall the loop);
+//! 3. **pump** — release front-queued requests into the coordinator by
+//!    weighted deficit round-robin ([`super::qos::TenantQueues`]); a
+//!    downstream `Overloaded` requeues at the front and ends the pass
+//!    (backpressure, not a hot retry loop);
+//! 4. **poll** — `try_recv` every in-flight request's channels, turning
+//!    [`StreamEvent`]s into wire frames the same pass the worker tick
+//!    emitted them (this is what makes TTFT client-visible: first token
+//!    frame hits the write buffer one loop pass after the model produced
+//!    the token, not after the whole reply);
+//! 5. **flush** — write each connection's buffered frames; partial
+//!    writes (`WouldBlock` or [`FaultSite::TornClientWrite`]) keep the
+//!    unwritten tail buffered, so framing is delayed, never torn;
+//! 6. **reap** — drop dead connections and half-closed ones that have
+//!    drained; release is visible to tests as arena conservation.
+//!
+//! With no activity the loop sleeps 1ms, which also bounds
+//! [`Server::stop`] latency: the shutdown flag is checked every pass, so
+//! stop completes in single-digit milliseconds with clients still
+//! connected — no 50ms read-timeout poll to ride out.
+//!
+//! # Admission / QoS
+//!
+//! Requests carry an optional `"tenant"` label. Each tenant gets a
+//! bounded front queue (`tenant_queue_capacity`; full ⇒ typed
+//! `overloaded` reply) drained in token-weighted round-robin
+//! (`qos_quantum_tokens` × per-tenant weight from `tenant_weights` /
+//! `qos_default_weight`), so a flooding tenant saturates its own queue
+//! while everyone else's goodput tracks their fair share. Two further
+//! gates: requests queued at the front longer than `request_timeout_ms`
+//! die with a typed `deadline_exceeded`, and when the live per-worker
+//! queue wait (differenced from `CoordinatorStats::scheduler` snapshots)
+//! exceeds `qos_shed_wait_ms`, new arrivals shed immediately with
+//! `overloaded` instead of joining the latency tail.
+//!
+//! See [`super`] (the module docs) for the wire-level frame grammar.
+
+use std::collections::BTreeMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::ServerConfig;
+use crate::coordinator::{Coordinator, Response, StreamEvent, SubmitOptions};
+use crate::error::{Error, Result};
+use crate::faults::{FaultHandle, FaultSite};
+use crate::metrics::TenantCounters;
+use crate::util::json::{self, Value};
+
+use super::qos::{OverloadMonitor, TenantQueues};
+use super::tcp::{error_reply, response_reply};
+
+/// Idle sleep between loop passes; also the shutdown-latency bound.
+const IDLE_TICK: Duration = Duration::from_millis(1);
+
+/// How often the overload monitor re-snapshots scheduler stats.
+const MONITOR_PERIOD: Duration = Duration::from_millis(10);
+
+/// Tenant key used for requests without a `"tenant"` field.
+pub const ANON_TENANT: &str = "anon";
+
+/// Running server handle over the event-loop thread.
+pub struct Server {
+    addr: SocketAddr,
+    thread: Option<JoinHandle<()>>,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl Server {
+    /// Bind and start serving on `listen` ("host:port"; port 0 picks a
+    /// free port — the bound address is available via [`Server::addr`]).
+    pub fn start(coordinator: Arc<Coordinator>, listen: &str) -> Result<Server> {
+        Server::start_with_faults(coordinator, listen, FaultHandle::off())
+    }
+
+    /// [`Server::start`] with a fault handle armed at the front's client
+    /// seams ([`FaultSite::ClientStall`], [`FaultSite::TornClientWrite`])
+    /// — the chaos suites drive the event loop through this.
+    pub fn start_with_faults(
+        coordinator: Arc<Coordinator>,
+        listen: &str,
+        faults: FaultHandle,
+    ) -> Result<Server> {
+        let listener = TcpListener::bind(listen)?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&shutdown);
+        let thread = std::thread::Builder::new()
+            .name("recycle-server-front".into())
+            .spawn(move || event_loop(listener, coordinator, faults, flag))
+            .expect("spawn server event loop");
+        Ok(Server {
+            addr,
+            thread: Some(thread),
+            shutdown,
+        })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Signal the event loop and join it. Readiness-driven: the loop
+    /// observes the flag within one pass (≤ [`IDLE_TICK`] plus work in
+    /// flight), closes the listener and every connection, and exits —
+    /// no per-connection read timeouts to ride out.
+    pub fn stop(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+/// Stable reference to a connection slot: the generation guard makes
+/// frames addressed to a closed connection drop instead of reaching the
+/// slot's next occupant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct ConnId {
+    slot: usize,
+    gen: u64,
+}
+
+/// One client connection's loop-local state.
+struct Conn {
+    stream: TcpStream,
+    /// Bytes read but not yet framed into a complete line.
+    rbuf: Vec<u8>,
+    /// Frames serialized but not yet written to the socket.
+    wbuf: Vec<u8>,
+    /// Aggregate-reply FIFO tickets: replies are written in request
+    /// order per connection (the blocking protocol's contract), so a
+    /// fast request completing behind a slow one parks in `agg_done`.
+    agg_issued: u64,
+    agg_next: u64,
+    agg_done: BTreeMap<u64, Value>,
+    /// Read side closed (EOF / half-close): keep flushing until every
+    /// in-flight reply for this connection has drained, then reap.
+    eof: bool,
+    /// Socket error: reap immediately, dropping buffered output.
+    dead: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Self {
+        Conn {
+            stream,
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            agg_issued: 0,
+            agg_next: 0,
+            agg_done: BTreeMap::new(),
+            eof: false,
+            dead: false,
+        }
+    }
+}
+
+/// A parsed request waiting in the per-tenant front queues.
+struct Pending {
+    conn: ConnId,
+    /// Client-chosen request id, echoed verbatim on every frame.
+    rid: Option<Value>,
+    /// Streaming (`"stream": true`) or aggregate reply mode.
+    streaming: bool,
+    /// FIFO ticket for aggregate replies (unused when streaming).
+    agg_seq: u64,
+    tenant: Option<String>,
+    prompt: String,
+    max_new: usize,
+    session: Option<String>,
+    /// WDRR token cost debited at pop; repeated on requeue.
+    cost: usize,
+    /// Front arrival time: the deadline clock and the TTFT origin.
+    queued: Instant,
+}
+
+/// A request submitted to the coordinator, awaiting events/reply.
+struct Inflight {
+    conn: ConnId,
+    rid: Option<Value>,
+    streaming: bool,
+    agg_seq: u64,
+    tenant: String,
+    reply_rx: mpsc::Receiver<Response>,
+    event_rx: Option<mpsc::Receiver<StreamEvent>>,
+    queued: Instant,
+    /// Next expected token index; frames below it are replays after a
+    /// defensive truncation and are dropped (fault-free streams are
+    /// strictly increasing — see [`StreamEvent`]).
+    next_index: usize,
+    got_first: bool,
+    done: bool,
+}
+
+/// A frame ready for delivery, tagged with its write discipline.
+enum Delivery {
+    /// Streaming frame: appended to the write buffer immediately.
+    Frame(Value),
+    /// Aggregate reply: enters the per-connection FIFO at its ticket.
+    Agg(u64, Value),
+}
+
+/// Loop-local server state (single-threaded: no locks anywhere).
+struct Front {
+    coordinator: Arc<Coordinator>,
+    faults: FaultHandle,
+    cfg: ServerConfig,
+    conns: Vec<Option<Conn>>,
+    gens: Vec<u64>,
+    qos: TenantQueues<Pending>,
+    monitor: OverloadMonitor,
+    inflight: Vec<Inflight>,
+    tenants: BTreeMap<String, TenantCounters>,
+}
+
+/// Bump a tenant's counters (free function so it can run while a field
+/// of `Front` is mutably borrowed — disjoint-field discipline).
+fn tally<F: FnOnce(&mut TenantCounters)>(
+    tenants: &mut BTreeMap<String, TenantCounters>,
+    tenant: &str,
+    f: F,
+) {
+    f(tenants.entry(tenant.to_string()).or_default());
+}
+
+fn token_frame(rid: &Option<Value>, index: usize, id: u32, text: &str) -> Value {
+    let mut fields = vec![("event", json::s("token"))];
+    if let Some(r) = rid {
+        fields.push(("rid", r.clone()));
+    }
+    fields.push(("index", json::n(index as f64)));
+    fields.push(("id", json::n(id as f64)));
+    fields.push(("text", json::s(text)));
+    json::obj(fields)
+}
+
+/// Terminal frame for a stream: `done` (success payload identical to
+/// the aggregate reply) or `error` (message + taxonomy kind).
+fn terminal_frame(rid: &Option<Value>, resp: &Response) -> Value {
+    let mut fields = match resp {
+        Response::Ok(_) => vec![("event", json::s("done"))],
+        Response::Err { .. } => vec![("event", json::s("error"))],
+    };
+    if let Some(r) = rid {
+        fields.push(("rid", r.clone()));
+    }
+    match resp {
+        Response::Ok(o) => {
+            fields.push(("ok", json::b(true)));
+            fields.push(("output", json::s(&o.text)));
+            fields.push(("latency_s", json::n(o.latency_s)));
+            fields.push(("reuse_depth", json::n(o.reuse_depth as f64)));
+            fields.push(("cache_hit", json::b(o.cache_hit)));
+            fields.push(("prompt_tokens", json::n(o.prompt_tokens as f64)));
+            fields.push(("new_tokens", json::n(o.ids.len() as f64)));
+        }
+        Response::Err { msg, kind } => {
+            fields.push(("ok", json::b(false)));
+            fields.push(("error", json::s(msg)));
+            fields.push(("error_kind", json::s(kind)));
+        }
+    }
+    json::obj(fields)
+}
+
+fn error_event(rid: &Option<Value>, e: &Error) -> Value {
+    terminal_frame(rid, &Response::err(e))
+}
+
+fn event_loop(
+    listener: TcpListener,
+    coordinator: Arc<Coordinator>,
+    faults: FaultHandle,
+    shutdown: Arc<AtomicBool>,
+) {
+    let cfg = coordinator.config().clone();
+    let mut front = Front {
+        qos: TenantQueues::new(
+            cfg.tenant_queue_capacity,
+            cfg.qos_quantum_tokens,
+            cfg.qos_default_weight,
+            &cfg.tenant_weights,
+        ),
+        monitor: OverloadMonitor::new(cfg.qos_shed_wait_ms),
+        coordinator,
+        faults,
+        cfg,
+        conns: Vec::new(),
+        gens: Vec::new(),
+        inflight: Vec::new(),
+        tenants: BTreeMap::new(),
+    };
+    let mut last_snapshot = Instant::now() - MONITOR_PERIOD;
+    loop {
+        if shutdown.load(Ordering::Relaxed) {
+            break; // listener + conns drop here: ports and fds released
+        }
+        let mut activity = false;
+        activity |= front.accept_pass(&listener);
+        activity |= front.read_pass();
+        if last_snapshot.elapsed() >= MONITOR_PERIOD {
+            last_snapshot = Instant::now();
+            let s = front.coordinator.stats().scheduler;
+            front.monitor.observe(s.queue_wait_ms_total, s.admitted);
+        }
+        activity |= front.pump();
+        activity |= front.poll_inflight();
+        activity |= front.flush_pass();
+        front.reap();
+        if !activity {
+            std::thread::sleep(IDLE_TICK);
+        }
+    }
+}
+
+impl Front {
+    // --- connection plumbing ------------------------------------------------
+
+    fn conn_mut(&mut self, cid: ConnId) -> Option<&mut Conn> {
+        if self.gens.get(cid.slot) != Some(&cid.gen) {
+            return None;
+        }
+        self.conns.get_mut(cid.slot).and_then(|c| c.as_mut())
+    }
+
+    /// Append a serialized frame to a connection's write buffer.
+    fn write_frame(&mut self, cid: ConnId, v: Value) {
+        if let Some(conn) = self.conn_mut(cid) {
+            conn.wbuf.extend_from_slice((v.to_json() + "\n").as_bytes());
+        }
+    }
+
+    /// Allocate the next aggregate FIFO ticket for a connection.
+    fn next_agg_seq(&mut self, cid: ConnId) -> u64 {
+        match self.conn_mut(cid) {
+            Some(conn) => {
+                let seq = conn.agg_issued;
+                conn.agg_issued += 1;
+                seq
+            }
+            None => 0,
+        }
+    }
+
+    /// Complete an aggregate request: park the reply at its ticket and
+    /// release the in-order prefix into the write buffer.
+    fn complete_aggregate(&mut self, cid: ConnId, seq: u64, v: Value) {
+        if let Some(conn) = self.conn_mut(cid) {
+            conn.agg_done.insert(seq, v);
+            while let Some(ready) = conn.agg_done.remove(&conn.agg_next) {
+                conn.wbuf
+                    .extend_from_slice((ready.to_json() + "\n").as_bytes());
+                conn.agg_next += 1;
+            }
+        }
+    }
+
+    /// Reply to a request that never entered the queues (parse errors,
+    /// control commands): allocate a ticket and complete it at once, so
+    /// even immediate replies respect per-connection FIFO order.
+    fn finish_aggregate_now(&mut self, cid: ConnId, v: Value) {
+        let seq = self.next_agg_seq(cid);
+        self.complete_aggregate(cid, seq, v);
+    }
+
+    /// Typed failure for a parsed-but-unserved request, routed per its
+    /// reply mode (stream error event vs aggregate error object).
+    fn deliver_error(&mut self, p: &Pending, e: &Error) {
+        if p.streaming {
+            let frame = error_event(&p.rid, e);
+            self.write_frame(p.conn, frame);
+        } else {
+            self.complete_aggregate(p.conn, p.agg_seq, error_reply(e));
+        }
+    }
+
+    // --- loop passes --------------------------------------------------------
+
+    fn accept_pass(&mut self, listener: &TcpListener) -> bool {
+        let mut activity = false;
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let _ = stream.set_nonblocking(true);
+                    let _ = stream.set_nodelay(true);
+                    let conn = Conn::new(stream);
+                    match self.conns.iter().position(|c| c.is_none()) {
+                        Some(slot) => self.conns[slot] = Some(conn),
+                        None => {
+                            self.conns.push(Some(conn));
+                            self.gens.push(0);
+                        }
+                    }
+                    activity = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(_) => break,
+            }
+        }
+        activity
+    }
+
+    fn read_pass(&mut self) -> bool {
+        let mut activity = false;
+        let mut lines: Vec<(ConnId, Vec<u8>)> = Vec::new();
+        for slot in 0..self.conns.len() {
+            let gen = self.gens[slot];
+            let Some(conn) = self.conns[slot].as_mut() else {
+                continue;
+            };
+            if conn.eof || conn.dead {
+                continue;
+            }
+            // a stalled client: skip this connection's read pass only —
+            // every other connection proceeds (the isolation property)
+            if self.faults.roll(FaultSite::ClientStall) {
+                continue;
+            }
+            let mut buf = [0u8; 4096];
+            loop {
+                match conn.stream.read(&mut buf) {
+                    Ok(0) => {
+                        conn.eof = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        conn.rbuf.extend_from_slice(&buf[..n]);
+                        activity = true;
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        conn.dead = true;
+                        break;
+                    }
+                }
+            }
+            if conn.dead {
+                continue;
+            }
+            while let Some(pos) = conn.rbuf.iter().position(|&b| b == b'\n') {
+                let line: Vec<u8> = conn.rbuf.drain(..=pos).collect();
+                lines.push((ConnId { slot, gen }, line));
+            }
+            // EOF with an unterminated final line: serve it (the client
+            // may legitimately half-close after its last request)
+            if conn.eof && !conn.rbuf.is_empty() {
+                let line = std::mem::take(&mut conn.rbuf);
+                lines.push((ConnId { slot, gen }, line));
+            }
+        }
+        for (cid, raw) in lines {
+            self.handle_line(cid, &raw);
+            activity = true;
+        }
+        activity
+    }
+
+    /// Parse one request line and admit it (or reply immediately).
+    fn handle_line(&mut self, cid: ConnId, raw: &[u8]) {
+        let text = match std::str::from_utf8(raw) {
+            Ok(t) => t,
+            Err(_) => {
+                let e = Error::Json("request line is not valid UTF-8".into());
+                self.finish_aggregate_now(cid, error_reply(&e));
+                return;
+            }
+        };
+        if text.trim().is_empty() {
+            return;
+        }
+        let req = match json::parse(text) {
+            Ok(v) => v,
+            Err(e) => {
+                self.finish_aggregate_now(cid, error_reply(&e));
+                return;
+            }
+        };
+        if let Some(cmd) = req.get("cmd").and_then(|v| v.as_str()) {
+            let reply = match cmd {
+                "stats" => self.stats_reply(),
+                _ => error_reply(&Error::Json(format!("unknown cmd '{cmd}'"))),
+            };
+            self.finish_aggregate_now(cid, reply);
+            return;
+        }
+        let streaming = req.get("stream").and_then(|v| v.as_bool()).unwrap_or(false);
+        let rid = req.get("rid").cloned();
+        let tenant = req
+            .get("tenant")
+            .and_then(|v| v.as_str())
+            .map(|s| s.to_string());
+        let prompt = match req.req_str("prompt") {
+            Ok(p) => p.to_string(),
+            Err(e) => {
+                if streaming {
+                    let frame = error_event(&rid, &e);
+                    self.write_frame(cid, frame);
+                } else {
+                    self.finish_aggregate_now(cid, error_reply(&e));
+                }
+                return;
+            }
+        };
+        let max_new = req
+            .get("max_new_tokens")
+            .and_then(|v| v.as_usize())
+            .unwrap_or(0);
+        let session = req
+            .get("session")
+            .and_then(|v| v.as_str())
+            .map(|s| s.to_string());
+        let tkey = tenant.clone().unwrap_or_else(|| ANON_TENANT.to_string());
+        // WDRR debits decode budget; 0 means "server default" downstream
+        let cost = if max_new == 0 {
+            self.cfg.default_max_new_tokens.max(1)
+        } else {
+            max_new
+        };
+        let p = Pending {
+            conn: cid,
+            rid,
+            streaming,
+            agg_seq: if streaming { 0 } else { self.next_agg_seq(cid) },
+            tenant,
+            prompt,
+            max_new,
+            session,
+            cost,
+            queued: Instant::now(),
+        };
+        // overload gate: live worker queue wait over the shed threshold
+        // fails fast instead of queuing into the latency tail
+        if self.monitor.is_overloaded() {
+            let e = Error::Overloaded {
+                depth: self.qos.len(),
+                capacity: self.qos.capacity(),
+            };
+            tally(&mut self.tenants, &tkey, |c| c.shed += 1);
+            self.deliver_error(&p, &e);
+            return;
+        }
+        match self.qos.push(&tkey, cost, p) {
+            Ok(()) => tally(&mut self.tenants, &tkey, |c| c.accepted += 1),
+            Err(p) => {
+                let e = Error::Overloaded {
+                    depth: self.qos.depth(&tkey),
+                    capacity: self.qos.capacity(),
+                };
+                tally(&mut self.tenants, &tkey, |c| c.shed += 1);
+                self.deliver_error(&p, &e);
+            }
+        }
+    }
+
+    /// Release front-queued requests into the coordinator by WDRR until
+    /// the queues drain or the downstream sheds.
+    fn pump(&mut self) -> bool {
+        let mut activity = false;
+        // front-queue deadline: a request that has already waited out its
+        // serving budget here dies typed, without spending a worker slot
+        let budget = Duration::from_millis(self.cfg.request_timeout_ms);
+        let expired = self.qos.expire(|p| p.queued.elapsed() >= budget);
+        for (tkey, p) in expired {
+            let e = Error::DeadlineExceeded {
+                waited_ms: p.queued.elapsed().as_millis() as u64,
+                budget_ms: self.cfg.request_timeout_ms,
+            };
+            tally(&mut self.tenants, &tkey, |c| c.failed += 1);
+            self.deliver_error(&p, &e);
+            activity = true;
+        }
+        loop {
+            let Some((tkey, p)) = self.qos.pop() else { break };
+            let (event_tx, event_rx) = mpsc::channel();
+            let opts = SubmitOptions {
+                tenant: p.tenant.clone(),
+                stream: if p.streaming { Some(event_tx) } else { None },
+            };
+            match self
+                .coordinator
+                .submit_with(&p.prompt, p.max_new, p.session.clone(), opts)
+            {
+                Ok(reply_rx) => {
+                    self.inflight.push(Inflight {
+                        conn: p.conn,
+                        rid: p.rid,
+                        streaming: p.streaming,
+                        agg_seq: p.agg_seq,
+                        tenant: tkey,
+                        reply_rx,
+                        event_rx: if p.streaming { Some(event_rx) } else { None },
+                        queued: p.queued,
+                        next_index: 0,
+                        got_first: false,
+                        done: false,
+                    });
+                    activity = true;
+                }
+                Err(Error::Overloaded { .. }) => {
+                    // downstream worker queues are full: keep the request
+                    // at the front of its tenant's queue and stop pumping
+                    // this pass — backpressure instead of a retry spin
+                    let cost = p.cost;
+                    self.qos.unpop(&tkey, cost, p);
+                    break;
+                }
+                Err(e) => {
+                    tally(&mut self.tenants, &tkey, |c| c.failed += 1);
+                    self.deliver_error(&p, &e);
+                    activity = true;
+                }
+            }
+        }
+        activity
+    }
+
+    /// Drain every in-flight request's channels into wire frames.
+    fn poll_inflight(&mut self) -> bool {
+        let mut activity = false;
+        let mut out: Vec<(ConnId, Delivery)> = Vec::new();
+        for fl in &mut self.inflight {
+            if fl.streaming {
+                let rx = fl.event_rx.as_ref().expect("streaming inflight has rx");
+                loop {
+                    match rx.try_recv() {
+                        Ok(StreamEvent::Token { index, id, text }) => {
+                            if index < fl.next_index {
+                                continue; // replay below the high-water mark
+                            }
+                            fl.next_index = index + 1;
+                            if !fl.got_first {
+                                fl.got_first = true;
+                                let ttft = fl.queued.elapsed().as_millis() as u64;
+                                tally(&mut self.tenants, &fl.tenant, |c| {
+                                    c.note_first_token(ttft)
+                                });
+                            }
+                            tally(&mut self.tenants, &fl.tenant, |c| {
+                                c.tokens_streamed += 1
+                            });
+                            out.push((
+                                fl.conn,
+                                Delivery::Frame(token_frame(&fl.rid, index, id, &text)),
+                            ));
+                            activity = true;
+                        }
+                        Ok(StreamEvent::End(resp)) => {
+                            match &resp {
+                                Response::Ok(_) => {
+                                    tally(&mut self.tenants, &fl.tenant, |c| c.completed += 1)
+                                }
+                                Response::Err { .. } => {
+                                    tally(&mut self.tenants, &fl.tenant, |c| c.failed += 1)
+                                }
+                            }
+                            out.push((
+                                fl.conn,
+                                Delivery::Frame(terminal_frame(&fl.rid, &resp)),
+                            ));
+                            fl.done = true;
+                            activity = true;
+                            break;
+                        }
+                        Err(mpsc::TryRecvError::Empty) => break,
+                        Err(mpsc::TryRecvError::Disconnected) => {
+                            // worker died without a terminal event: the
+                            // stream still ends with exactly one terminal
+                            tally(&mut self.tenants, &fl.tenant, |c| c.failed += 1);
+                            out.push((
+                                fl.conn,
+                                Delivery::Frame(error_event(&fl.rid, &Error::ShutDown)),
+                            ));
+                            fl.done = true;
+                            activity = true;
+                            break;
+                        }
+                    }
+                }
+            } else {
+                match fl.reply_rx.try_recv() {
+                    Ok(resp) => {
+                        match &resp {
+                            Response::Ok(_) => {
+                                tally(&mut self.tenants, &fl.tenant, |c| c.completed += 1)
+                            }
+                            Response::Err { .. } => {
+                                tally(&mut self.tenants, &fl.tenant, |c| c.failed += 1)
+                            }
+                        }
+                        out.push((fl.conn, Delivery::Agg(fl.agg_seq, response_reply(&resp))));
+                        fl.done = true;
+                        activity = true;
+                    }
+                    Err(mpsc::TryRecvError::Empty) => {}
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        tally(&mut self.tenants, &fl.tenant, |c| c.failed += 1);
+                        out.push((
+                            fl.conn,
+                            Delivery::Agg(fl.agg_seq, error_reply(&Error::ShutDown)),
+                        ));
+                        fl.done = true;
+                        activity = true;
+                    }
+                }
+            }
+        }
+        self.inflight.retain(|f| !f.done);
+        for (cid, delivery) in out {
+            match delivery {
+                Delivery::Frame(v) => self.write_frame(cid, v),
+                Delivery::Agg(seq, v) => self.complete_aggregate(cid, seq, v),
+            }
+        }
+        activity
+    }
+
+    fn flush_pass(&mut self) -> bool {
+        let mut activity = false;
+        for conn in self.conns.iter_mut().flatten() {
+            if conn.dead || conn.wbuf.is_empty() {
+                continue;
+            }
+            // a torn write lands only a prefix; the tail STAYS BUFFERED,
+            // so frames are delayed, never corrupted mid-line
+            let budget = if self.faults.roll(FaultSite::TornClientWrite) {
+                (conn.wbuf.len() / 2).max(1)
+            } else {
+                conn.wbuf.len()
+            };
+            match conn.stream.write(&conn.wbuf[..budget]) {
+                Ok(0) => conn.dead = true,
+                Ok(n) => {
+                    conn.wbuf.drain(..n);
+                    activity = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {}
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => conn.dead = true,
+            }
+        }
+        activity
+    }
+
+    /// Close dead connections immediately and half-closed ones once all
+    /// their replies have drained. Slot generations bump on close.
+    fn reap(&mut self) {
+        for slot in 0..self.conns.len() {
+            let remove = match self.conns[slot].as_ref() {
+                None => false,
+                Some(conn) => {
+                    let gen = self.gens[slot];
+                    conn.dead
+                        || (conn.eof
+                            && conn.wbuf.is_empty()
+                            && conn.agg_done.is_empty()
+                            && !self
+                                .inflight
+                                .iter()
+                                .any(|f| f.conn.slot == slot && f.conn.gen == gen)
+                            && !self
+                                .qos
+                                .any(|p| p.conn.slot == slot && p.conn.gen == gen))
+                }
+            };
+            if remove {
+                self.conns[slot] = None;
+                self.gens[slot] += 1;
+            }
+        }
+    }
+
+    // --- control plane ------------------------------------------------------
+
+    /// The `{"cmd":"stats"}` payload: cluster breakdown plus the front's
+    /// per-tenant QoS counters (client-visible TTFT lives here — it is
+    /// measured from front arrival to first token frame, a superset of
+    /// the scheduler's queue-relative TTFT).
+    fn stats_reply(&self) -> Value {
+        let tenant_rows: Vec<(String, Value)> = self
+            .tenants
+            .iter()
+            .map(|(name, c)| {
+                (
+                    name.clone(),
+                    json::obj(vec![
+                        ("accepted", json::n(c.accepted as f64)),
+                        ("shed", json::n(c.shed as f64)),
+                        ("completed", json::n(c.completed as f64)),
+                        ("failed", json::n(c.failed as f64)),
+                        ("tokens_streamed", json::n(c.tokens_streamed as f64)),
+                        ("first_tokens", json::n(c.first_tokens as f64)),
+                        ("avg_ttft_ms", json::n(c.avg_ttft_ms())),
+                        ("max_ttft_ms", json::n(c.ttft_ms_max as f64)),
+                        ("weight", json::n(self.qos.weight_of(name) as f64)),
+                    ]),
+                )
+            })
+            .collect();
+        json::obj(vec![
+            ("ok", json::b(true)),
+            ("stats", self.coordinator.cluster_stats().to_json()),
+            (
+                "front",
+                json::obj(vec![
+                    ("queued", json::n(self.qos.len() as f64)),
+                    ("inflight", json::n(self.inflight.len() as f64)),
+                    (
+                        "overloaded",
+                        json::b(self.monitor.is_overloaded()),
+                    ),
+                    ("tenants", Value::Obj(tenant_rows)),
+                ]),
+            ),
+        ])
+    }
+}

@@ -1,186 +1,29 @@
-//! Blocking TCP server over the coordinator (one thread per connection —
-//! appropriate for the single-stream serving substrate; the coordinator
-//! queue is the real concurrency point).
+//! Line-protocol glue and the blocking test/example client.
+//!
+//! The server side lives in [`super::stream`] (the nonblocking event
+//! loop); this module keeps the *pure* request-line semantics
+//! ([`serve_line`] — unit-testable without sockets, and the reference
+//! for what an aggregate reply contains) and [`TcpClient`], a minimal
+//! blocking client speaking both reply modes:
+//!
+//! * [`TcpClient::request`] — aggregate: one line out, one reply line in
+//!   (the pre-streaming protocol, unchanged on the wire);
+//! * [`TcpClient::generate_streaming`] — streaming: sends
+//!   `"stream": true`, then consumes `token` frames until the terminal
+//!   `done`/`error` frame, recording client-visible TTFT (first token
+//!   frame arrival) along the way.
 
 use std::io::{BufRead, BufReader, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
-use std::thread::JoinHandle;
-use std::time::Duration;
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
 
 use crate::coordinator::{Coordinator, Response};
 use crate::error::{Error, Result};
 use crate::util::json::{self, Value};
-use crate::util::sync::lock_recover;
-
-/// How long a connection thread blocks in a read before re-checking the
-/// shutdown flag. Bounds [`Server::stop`]'s join latency on idle
-/// connections; partial request lines accumulate across timeouts, so
-/// framing is unaffected.
-const CONN_POLL: Duration = Duration::from_millis(50);
-
-/// Running TCP server handle.
-pub struct Server {
-    addr: SocketAddr,
-    accept_thread: Option<JoinHandle<()>>,
-    /// Live connection threads. The accept loop registers each spawn and
-    /// reaps finished handles in passing; [`Server::stop`] joins the
-    /// remainder, so shutdown leaks no threads even with clients still
-    /// connected (their reads time out on `CONN_POLL` and observe the
-    /// flag). A plain detach-on-spawn would leak every open connection's
-    /// thread past `stop()` — the registry makes teardown total.
-    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
-    shutdown: Arc<AtomicBool>,
-}
-
-impl Server {
-    /// Bind and start serving on `listen` ("host:port"; port 0 picks a free
-    /// port — the bound address is available via [`Server::addr`]).
-    pub fn start(coordinator: Arc<Coordinator>, listen: &str) -> Result<Server> {
-        let listener = TcpListener::bind(listen)?;
-        let addr = listener.local_addr()?;
-        listener.set_nonblocking(true)?;
-        let shutdown = Arc::new(AtomicBool::new(false));
-        let conns = Arc::new(Mutex::new(Vec::new()));
-        let flag = Arc::clone(&shutdown);
-        let registry = Arc::clone(&conns);
-        let accept_thread = std::thread::Builder::new()
-            .name("recycle-server-accept".into())
-            .spawn(move || {
-                loop {
-                    if flag.load(Ordering::Relaxed) {
-                        break;
-                    }
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            let c = Arc::clone(&coordinator);
-                            let f = Arc::clone(&flag);
-                            // Joining here would head-of-line-block the
-                            // accept loop on connected clients, so the
-                            // handle goes into the registry instead and
-                            // stop() joins it; finished handles are
-                            // reaped in passing to keep the registry
-                            // bounded by *live* connections.
-                            let h = std::thread::Builder::new()
-                                .name("recycle-server-conn".into())
-                                .spawn(move || handle_conn(stream, c, f))
-                                .expect("spawn conn thread");
-                            // poison-recovering lock: a connection thread
-                            // that panicked must not kill the accept loop
-                            // (and with it every future connection)
-                            let mut reg = lock_recover(&registry);
-                            reg.retain(|h: &JoinHandle<()>| !h.is_finished());
-                            reg.push(h);
-                        }
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(Duration::from_millis(5));
-                        }
-                        Err(_) => break,
-                    }
-                }
-            })
-            .expect("spawn accept thread");
-        Ok(Server {
-            addr,
-            accept_thread: Some(accept_thread),
-            conns,
-            shutdown,
-        })
-    }
-
-    pub fn addr(&self) -> SocketAddr {
-        self.addr
-    }
-
-    /// Stop accepting, then join the accept thread AND every connection
-    /// thread: when this returns, the server owns no running threads.
-    pub fn stop(mut self) {
-        self.stop_and_join();
-    }
-
-    fn stop_and_join(&mut self) {
-        self.shutdown.store(true, Ordering::Relaxed);
-        if let Some(t) = self.accept_thread.take() {
-            let _ = t.join();
-        }
-        // poison recovery keeps stop() total even after a connection
-        // thread panicked while registering
-        let handles: Vec<JoinHandle<()>> =
-            std::mem::take(&mut *lock_recover(&self.conns));
-        for h in handles {
-            let _ = h.join();
-        }
-    }
-}
-
-impl Drop for Server {
-    fn drop(&mut self) {
-        self.stop_and_join();
-    }
-}
-
-fn handle_conn(stream: TcpStream, coordinator: Arc<Coordinator>, shutdown: Arc<AtomicBool>) {
-    let peer = stream.peer_addr().ok();
-    // Bounded reads so the thread can observe shutdown between requests;
-    // failing to set the timeout degrades to blocking reads (the thread
-    // then exits on client disconnect, as before the registry existed).
-    let _ = stream.set_read_timeout(Some(CONN_POLL));
-    let mut writer = match stream.try_clone() {
-        Ok(w) => w,
-        Err(_) => return,
-    };
-    let mut reader = BufReader::new(stream);
-    // Byte-level framing (not `lines()`): a misbehaving client sending
-    // invalid UTF-8 gets a typed error reply and the connection KEEPS
-    // serving — only EOF or a real socket error closes it. (`lines()`
-    // folds invalid UTF-8 into `Err` and silently dropped the stream.)
-    let mut buf: Vec<u8> = Vec::new();
-    'serve: loop {
-        buf.clear();
-        // Accumulate one full line; a read timeout only re-checks the
-        // shutdown flag (bytes already read stay in `buf` — a slow
-        // client's partial request is never dropped).
-        loop {
-            match reader.read_until(b'\n', &mut buf) {
-                Ok(0) => break 'serve, // EOF
-                Ok(_) if buf.ends_with(b"\n") => break,
-                // EOF with an unterminated final line: serve it; the
-                // next read returns Ok(0) and closes the connection.
-                Ok(_) => break,
-                Err(e)
-                    if e.kind() == std::io::ErrorKind::WouldBlock
-                        || e.kind() == std::io::ErrorKind::TimedOut =>
-                {
-                    if shutdown.load(Ordering::Relaxed) {
-                        break 'serve;
-                    }
-                }
-                Err(_) => break 'serve, // socket error
-            }
-        }
-        let reply = match std::str::from_utf8(&buf) {
-            Ok(text) => {
-                if text.trim().is_empty() {
-                    continue;
-                }
-                serve_line(text, &coordinator)
-            }
-            Err(_) => error_reply(&Error::Json("request line is not valid UTF-8".into())),
-        };
-        if writer
-            .write_all((reply.to_json() + "\n").as_bytes())
-            .is_err()
-        {
-            break;
-        }
-    }
-    log::debug!("connection closed: {peer:?}");
-}
 
 /// The wire-format failure reply: message plus the stable
 /// machine-readable `error_kind` label from the failure taxonomy.
-fn error_reply(e: &Error) -> Value {
+pub(crate) fn error_reply(e: &Error) -> Value {
     json::obj(vec![
         ("ok", json::b(false)),
         ("error", json::s(&e.to_string())),
@@ -188,7 +31,31 @@ fn error_reply(e: &Error) -> Value {
     ])
 }
 
-/// One request line -> one response value (pure; unit-testable).
+/// A worker [`Response`] as an aggregate wire reply. A scheduler-side
+/// failure (deadline, retry exhaustion, ...) keeps its typed kind all
+/// the way to the wire instead of collapsing into "rejected".
+pub(crate) fn response_reply(resp: &Response) -> Value {
+    match resp {
+        Response::Ok(outcome) => json::obj(vec![
+            ("ok", json::b(true)),
+            ("output", json::s(&outcome.text)),
+            ("latency_s", json::n(outcome.latency_s)),
+            ("reuse_depth", json::n(outcome.reuse_depth as f64)),
+            ("cache_hit", json::b(outcome.cache_hit)),
+            ("prompt_tokens", json::n(outcome.prompt_tokens as f64)),
+            ("new_tokens", json::n(outcome.ids.len() as f64)),
+        ]),
+        Response::Err { msg, kind } => json::obj(vec![
+            ("ok", json::b(false)),
+            ("error", json::s(msg)),
+            ("error_kind", json::s(kind)),
+        ]),
+    }
+}
+
+/// One request line -> one response value (pure; unit-testable). This is
+/// the *blocking* aggregate semantics — the event loop implements the
+/// same mapping nonblockingly, plus streaming and QoS admission.
 pub fn serve_line(line: &str, coordinator: &Coordinator) -> Value {
     match serve_line_inner(line, coordinator) {
         Ok(v) => v,
@@ -218,24 +85,42 @@ fn serve_line_inner(line: &str, coordinator: &Coordinator) -> Result<Value> {
         .get("session")
         .and_then(|v| v.as_str())
         .map(|s| s.to_string());
-    // `serve` hands back the worker's raw reply, so a scheduler-side
-    // failure (deadline, retry exhaustion, ...) keeps its typed kind all
-    // the way to the wire instead of collapsing into "rejected".
-    match coordinator.serve(prompt, max_new, session)? {
-        Response::Ok(outcome) => Ok(json::obj(vec![
-            ("ok", json::b(true)),
-            ("output", json::s(&outcome.text)),
-            ("latency_s", json::n(outcome.latency_s)),
-            ("reuse_depth", json::n(outcome.reuse_depth as f64)),
-            ("cache_hit", json::b(outcome.cache_hit)),
-            ("prompt_tokens", json::n(outcome.prompt_tokens as f64)),
-            ("new_tokens", json::n(outcome.ids.len() as f64)),
-        ])),
-        Response::Err { msg, kind } => Ok(json::obj(vec![
-            ("ok", json::b(false)),
-            ("error", json::s(&msg)),
-            ("error_kind", json::s(kind)),
-        ])),
+    let resp = coordinator.serve(prompt, max_new, session)?;
+    Ok(response_reply(&resp))
+}
+
+/// One consumed token stream: the per-token frames in arrival order plus
+/// the terminal frame and the client-side first-token latency.
+#[derive(Debug)]
+pub struct StreamedReply {
+    /// `(token id, incremental text)` per `token` frame, index-ordered.
+    /// On an index regression mid-stream (a transient retry replaying the
+    /// prefix) the client truncates back — the surviving sequence is
+    /// exactly what the terminal reply aggregates.
+    pub tokens: Vec<(u32, String)>,
+    /// The terminal frame: `event == "done"` with the aggregate payload,
+    /// or `event == "error"` with `error` / `error_kind`.
+    pub done: Value,
+    /// Wall time from request write to the first `token` frame (None for
+    /// zero-token streams, e.g. errors before the first token).
+    pub ttft: Option<Duration>,
+}
+
+impl StreamedReply {
+    /// Did the stream end in a successful `done` frame?
+    pub fn is_ok(&self) -> bool {
+        self.done.get("ok").and_then(|v| v.as_bool()) == Some(true)
+    }
+
+    /// The streamed token texts concatenated (valid UTF-8 by the
+    /// incremental decoder's hold-back contract).
+    pub fn text(&self) -> String {
+        self.tokens.iter().map(|(_, t)| t.as_str()).collect()
+    }
+
+    /// The streamed token ids in order.
+    pub fn ids(&self) -> Vec<u32> {
+        self.tokens.iter().map(|(id, _)| *id).collect()
     }
 }
 
@@ -255,26 +140,89 @@ impl TcpClient {
         })
     }
 
-    /// Send one request, wait for one response.
+    /// Send one aggregate request, wait for its one reply line.
     pub fn request(
         &mut self,
         prompt: &str,
         max_new_tokens: usize,
         session: Option<&str>,
     ) -> Result<Value> {
-        let mut fields = vec![
-            ("prompt", json::s(prompt)),
-            ("max_new_tokens", json::n(max_new_tokens as f64)),
-        ];
-        if let Some(s) = session {
-            fields.push(("session", json::s(s)));
-        }
-        let line = json::obj(fields).to_json() + "\n";
+        self.request_opts(prompt, max_new_tokens, session, None)
+    }
+
+    /// [`TcpClient::request`] with a tenant label for QoS accounting.
+    pub fn request_opts(
+        &mut self,
+        prompt: &str,
+        max_new_tokens: usize,
+        session: Option<&str>,
+        tenant: Option<&str>,
+    ) -> Result<Value> {
+        let line = request_line(prompt, max_new_tokens, session, tenant, false);
         self.roundtrip(&line)
     }
 
-    /// Fetch the server's aggregate + per-worker stats breakdown
-    /// (`{"cmd":"stats"}`).
+    /// Streaming request: consumes `token` frames as the server emits
+    /// them and returns once the terminal `done`/`error` frame arrives.
+    /// `ttft` is the client-visible first-token latency — the quantity
+    /// the streaming ablation compares against the blocking front.
+    pub fn generate_streaming(
+        &mut self,
+        prompt: &str,
+        max_new_tokens: usize,
+        session: Option<&str>,
+        tenant: Option<&str>,
+    ) -> Result<StreamedReply> {
+        let line = request_line(prompt, max_new_tokens, session, tenant, true);
+        self.writer.write_all(line.as_bytes())?;
+        let sent = Instant::now();
+        let mut tokens: Vec<(u32, String)> = Vec::new();
+        let mut ttft = None;
+        loop {
+            let mut reply = String::new();
+            self.reader.read_line(&mut reply)?;
+            if reply.is_empty() {
+                return Err(Error::ShutDown);
+            }
+            let v = json::parse(&reply)?;
+            match v.get("event").and_then(|e| e.as_str()) {
+                Some("token") => {
+                    if ttft.is_none() {
+                        ttft = Some(sent.elapsed());
+                    }
+                    let index = v
+                        .get("index")
+                        .and_then(|x| x.as_usize())
+                        .unwrap_or(tokens.len());
+                    let id = v.get("id").and_then(|x| x.as_i64()).unwrap_or(0) as u32;
+                    let text = v
+                        .get("text")
+                        .and_then(|x| x.as_str())
+                        .unwrap_or_default()
+                        .to_string();
+                    // defensive truncate-on-regression (see StreamedReply)
+                    tokens.truncate(index);
+                    tokens.push((id, text));
+                }
+                Some("done") | Some("error") => {
+                    return Ok(StreamedReply {
+                        tokens,
+                        done: v,
+                        ttft,
+                    })
+                }
+                _ => {
+                    return Err(Error::Json(format!(
+                        "unexpected frame in stream: {}",
+                        reply.trim()
+                    )))
+                }
+            }
+        }
+    }
+
+    /// Fetch the server's aggregate + per-worker stats breakdown plus
+    /// the front's per-tenant QoS counters (`{"cmd":"stats"}`).
     pub fn stats(&mut self) -> Result<Value> {
         let line = json::obj(vec![("cmd", json::s("stats"))]).to_json() + "\n";
         self.roundtrip(&line)
@@ -289,4 +237,27 @@ impl TcpClient {
         }
         json::parse(&reply)
     }
+}
+
+fn request_line(
+    prompt: &str,
+    max_new_tokens: usize,
+    session: Option<&str>,
+    tenant: Option<&str>,
+    stream: bool,
+) -> String {
+    let mut fields = vec![
+        ("prompt", json::s(prompt)),
+        ("max_new_tokens", json::n(max_new_tokens as f64)),
+    ];
+    if let Some(s) = session {
+        fields.push(("session", json::s(s)));
+    }
+    if let Some(t) = tenant {
+        fields.push(("tenant", json::s(t)));
+    }
+    if stream {
+        fields.push(("stream", json::b(true)));
+    }
+    json::obj(fields).to_json() + "\n"
 }

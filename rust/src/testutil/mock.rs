@@ -9,7 +9,8 @@
 //! [`KvView`] row accessors, exercising the same COW/sharing machinery the
 //! production gather/scatter path uses.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
 use crate::config::ModelConfig;
@@ -22,6 +23,11 @@ pub struct MockModel {
     cfg: ModelConfig,
     /// Simulated per-token encode cost (for cost-model benches).
     pub delay_per_token: Duration,
+    /// Live-tunable override of `delay_per_token` in nanoseconds, shared
+    /// with whoever installed it: phase-structured benches reprice the
+    /// cost model mid-run (e.g. a free cache-population warmup, then a
+    /// priced measured window) without rebuilding the serving stack.
+    shared_delay_ns: Option<Arc<AtomicU64>>,
     /// Fail the Nth forward call (failure injection).
     fail_on_call: Option<usize>,
     /// Plan-driven fault seam (inert unless a `FaultPlan` is installed).
@@ -34,6 +40,7 @@ impl MockModel {
         MockModel {
             cfg,
             delay_per_token: Duration::ZERO,
+            shared_delay_ns: None,
             fail_on_call: None,
             faults: FaultHandle::off(),
             calls: AtomicUsize::new(0),
@@ -44,6 +51,24 @@ impl MockModel {
         MockModel {
             delay_per_token: per_token,
             ..Self::new(cfg)
+        }
+    }
+
+    /// A mock whose per-token cost is re-read from `ns` (nanoseconds; 0 =
+    /// free) at every forward call, so the owner of the atomic can retune
+    /// the cost model while the model is serving.
+    pub fn with_shared_delay(cfg: ModelConfig, ns: Arc<AtomicU64>) -> Self {
+        MockModel {
+            shared_delay_ns: Some(ns),
+            ..Self::new(cfg)
+        }
+    }
+
+    /// The effective per-token cost right now (shared knob wins).
+    fn per_token_cost(&self) -> Duration {
+        match &self.shared_delay_ns {
+            Some(ns) => Duration::from_nanos(ns.load(Ordering::Relaxed)),
+            None => self.delay_per_token,
         }
     }
 
@@ -114,8 +139,11 @@ impl MockModel {
         if cur_len > kv.len() {
             return Err(Error::ShapeMismatch("kv view shorter than cur_len".into()));
         }
-        if with_delay && !self.delay_per_token.is_zero() {
-            std::thread::sleep(self.delay_per_token * valid_len as u32);
+        if with_delay {
+            let d = self.per_token_cost();
+            if !d.is_zero() {
+                std::thread::sleep(d * valid_len as u32);
+            }
         }
         // Write markers for the new valid tokens (COW-aware row writes).
         for (i, &t) in tokens[..valid_len].iter().enumerate() {
@@ -162,9 +190,10 @@ impl ForwardModel for MockModel {
     /// (`benches/ablation_batching.rs`); the token/KV semantics are
     /// identical to looping `forward_chunk`.
     fn forward_batch(&self, items: &mut [BatchItem<'_>]) -> Result<Vec<Vec<f32>>> {
-        if !self.delay_per_token.is_zero() {
+        let d = self.per_token_cost();
+        if !d.is_zero() {
             if let Some(mx) = items.iter().map(|it| it.valid_len).max() {
-                std::thread::sleep(self.delay_per_token * mx as u32);
+                std::thread::sleep(d * mx as u32);
             }
         }
         items
@@ -205,6 +234,26 @@ mod tests {
         for p in 0..9 {
             assert_eq!(kv1.row(0, 0, 0, p), kv2.row(0, 0, 0, p), "pos {p}");
         }
+    }
+
+    #[test]
+    fn shared_delay_is_retunable_mid_stream() {
+        let knob = Arc::new(AtomicU64::new(Duration::from_millis(25).as_nanos() as u64));
+        let m = MockModel::with_shared_delay(ModelConfig::nano(), knob.clone());
+        let mut kv = arena(&m).new_view();
+        let t0 = std::time::Instant::now();
+        m.forward_chunk(&[1], 1, &mut kv, 0).unwrap();
+        assert!(
+            t0.elapsed() >= Duration::from_millis(25),
+            "a priced forward must sleep the shared cost"
+        );
+        knob.store(0, Ordering::Relaxed);
+        let t1 = std::time::Instant::now();
+        m.forward_chunk(&[2], 1, &mut kv, 1).unwrap();
+        assert!(
+            t1.elapsed() < Duration::from_millis(20),
+            "after repricing to 0 the old cost must not be slept"
+        );
     }
 
     #[test]

@@ -24,7 +24,7 @@ use std::sync::mpsc;
 use std::time::Instant;
 
 use crate::config::ServerConfig;
-use crate::coordinator::{Request, Response, SchedEvent, Scheduler};
+use crate::coordinator::{Request, Response, SchedEvent, Scheduler, StreamEvent};
 use crate::metrics::SchedulerStats;
 use crate::recycler::Recycler;
 use crate::testutil::MockModel;
@@ -56,6 +56,11 @@ pub struct TraceRun {
     pub ticks: usize,
     /// Scheduler counters at the end of the run.
     pub stats: SchedulerStats,
+    /// Per-arrival streamed events (index == script index): every request
+    /// runs with a stream channel attached, so the streaming-identity
+    /// property can compare tokens-as-emitted against the aggregate reply
+    /// for ANY script, faulty or not.
+    pub streams: Vec<Vec<StreamEvent>>,
 }
 
 impl TraceRun {
@@ -95,6 +100,8 @@ where
     let mut outputs: Vec<Option<std::result::Result<Vec<u32>, String>>> =
         vec![None; script.arrivals.len()];
     let mut pending_rx: Vec<(usize, mpsc::Receiver<Response>)> = Vec::new();
+    let mut stream_rx: Vec<Option<mpsc::Receiver<StreamEvent>>> =
+        (0..script.arrivals.len()).map(|_| None).collect();
     let last_arrival = script
         .arrivals
         .iter()
@@ -111,6 +118,8 @@ where
             .map(|(i, a)| {
                 let (tx, rx) = mpsc::channel();
                 pending_rx.push((i, rx));
+                let (stx, srx) = mpsc::channel();
+                stream_rx[i] = Some(srx);
                 Request {
                     id: i as u64 + 1,
                     prompt: a.prompt.clone(),
@@ -118,6 +127,8 @@ where
                     session: a.session.clone(),
                     reply: tx,
                     queued_at: Instant::now(),
+                    tenant: None,
+                    stream: Some(stx),
                 }
             })
             .collect();
@@ -160,11 +171,18 @@ where
         .into_iter()
         .map(|o| o.unwrap_or_else(|| Err("request never completed".into())))
         .collect();
+    // drain the streamed mirror of each request (senders are gone once the
+    // scheduler is idle, so try_iter sees the complete event sequence)
+    let streams = stream_rx
+        .into_iter()
+        .map(|rx| rx.map(|rx| rx.try_iter().collect()).unwrap_or_default())
+        .collect();
     Ok(TraceRun {
         events,
         outputs,
         ticks: tick + 1,
         stats: sched.stats(),
+        streams,
     })
 }
 
@@ -274,6 +292,23 @@ mod tests {
             .first_tick_where(|e| matches!(e, SchedEvent::Admitted { id: 2 }))
             .expect("request 2 admitted");
         assert!(adm2 >= 2, "arrival at tick 2 admitted at {adm2}");
+        // the streamed mirror: per-token events then exactly one End,
+        // token-identical to the aggregate reply
+        assert_eq!(run.streams.len(), 2);
+        for (i, stream) in run.streams.iter().enumerate() {
+            let ids: Vec<u32> = stream
+                .iter()
+                .filter_map(|e| match e {
+                    StreamEvent::Token { id, .. } => Some(*id),
+                    StreamEvent::End(_) => None,
+                })
+                .collect();
+            assert_eq!(&ids, run.outputs[i].as_ref().unwrap(), "stream {i}");
+            assert!(
+                matches!(stream.last(), Some(StreamEvent::End(Response::Ok(_)))),
+                "stream {i} must end with a successful End event"
+            );
+        }
     }
 
     #[test]

@@ -158,9 +158,10 @@ impl Tokenizer {
             .collect()
     }
 
-    /// Decode ids back to text (specials are dropped; invalid UTF-8 is
-    /// replaced, mirroring Python's errors="replace").
-    pub fn decode(&self, ids: &[u32]) -> String {
+    /// Decode ids to raw bytes (specials and unknown ids are dropped).
+    /// Token boundaries need not align with UTF-8 boundaries — this is
+    /// the lossless form that [`StreamDecoder`] re-segments incrementally.
+    pub fn decode_bytes(&self, ids: &[u32]) -> Vec<u8> {
         let mut bytes = Vec::new();
         for &id in ids {
             let Some(tok) = self.id_to_token.get(id as usize) else {
@@ -175,12 +176,93 @@ impl Tokenizer {
                 }
             }
         }
-        String::from_utf8_lossy(&bytes).into_owned()
+        bytes
+    }
+
+    /// Decode ids back to text (specials are dropped; invalid UTF-8 is
+    /// replaced, mirroring Python's errors="replace").
+    pub fn decode(&self, ids: &[u32]) -> String {
+        String::from_utf8_lossy(&self.decode_bytes(ids)).into_owned()
     }
 
     /// Token string for an id (debugging / cache explorer).
     pub fn token(&self, id: u32) -> Option<&str> {
         self.id_to_token.get(id as usize).map(|s| s.as_str())
+    }
+}
+
+/// Incremental per-token decoder for streaming delivery.
+///
+/// Byte-level BPE token boundaries do not respect UTF-8 boundaries: a
+/// multi-byte character can be split across two tokens, so decoding each
+/// token independently with `decode` would emit U+FFFD for both halves.
+/// `StreamDecoder` holds back a trailing *incomplete* UTF-8 sequence
+/// until the bytes that finish it arrive, emitting only whole characters.
+/// Genuinely invalid bytes (a sequence no continuation could repair) are
+/// replaced with U+FFFD exactly as the whole-sequence decode would.
+///
+/// The concatenation of `push` outputs equals `decode(ids)` up to a
+/// possibly held-back incomplete trailing sequence (which whole-sequence
+/// decode lossy-replaces; a stream keeps waiting for it instead).
+#[derive(Debug, Default)]
+pub struct StreamDecoder {
+    hold: Vec<u8>,
+}
+
+impl StreamDecoder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Feed one token id; returns the text completed by it (possibly "").
+    pub fn push(&mut self, tok: &Tokenizer, id: u32) -> String {
+        self.hold.extend_from_slice(&tok.decode_bytes(&[id]));
+        let mut out = String::new();
+        loop {
+            match std::str::from_utf8(&self.hold) {
+                Ok(s) => {
+                    out.push_str(s);
+                    self.hold.clear();
+                    return out;
+                }
+                Err(e) => {
+                    let valid = e.valid_up_to();
+                    out.push_str(std::str::from_utf8(&self.hold[..valid]).unwrap());
+                    match e.error_len() {
+                        // Incomplete trailing sequence: hold it for the
+                        // next token's bytes.
+                        None => {
+                            self.hold.drain(..valid);
+                            return out;
+                        }
+                        // Irreparably invalid: replace and keep scanning.
+                        Some(bad) => {
+                            out.push('\u{FFFD}');
+                            self.hold.drain(..valid + bad);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Bytes currently held back waiting for a UTF-8 continuation.
+    pub fn pending(&self) -> usize {
+        self.hold.len()
+    }
+
+    /// End-of-stream flush: no continuation is coming, so held-back bytes
+    /// are lossy-replaced exactly as whole-sequence `decode` would. With
+    /// this appended to the final `push`, the concatenation of a stream's
+    /// outputs equals `decode(ids)` *exactly* — the streaming-identity
+    /// law the network front promises.
+    pub fn flush_lossy(&mut self) -> String {
+        if self.hold.is_empty() {
+            return String::new();
+        }
+        let out = String::from_utf8_lossy(&self.hold).into_owned();
+        self.hold.clear();
+        out
     }
 }
 
@@ -245,6 +327,45 @@ mod tests {
         assert!(Tokenizer::from_json(j).is_err());
         assert!(Tokenizer::from_json("{").is_err());
         assert!(Tokenizer::from_json(r#"{"merges": [["a"]]}"#).is_err());
+    }
+
+    #[test]
+    fn stream_decoder_matches_whole_sequence_decode() {
+        let t = toy();
+        for s in ["hello world", "café → あ", "a\nb", "  x  ", "日本語テスト"] {
+            let ids = t.encode(s);
+            let mut d = StreamDecoder::new();
+            let streamed: String = ids.iter().map(|&id| d.push(&t, id)).collect();
+            assert_eq!(streamed, s, "{s:?}");
+            assert_eq!(d.pending(), 0, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn stream_decoder_holds_split_multibyte_char() {
+        let t = toy();
+        // "あ" is 3 UTF-8 bytes; with no merges each byte is its own token.
+        let ids = t.encode("あ");
+        assert_eq!(ids.len(), 3);
+        let mut d = StreamDecoder::new();
+        assert_eq!(d.push(&t, ids[0]), "");
+        assert_eq!(d.pending(), 1);
+        assert_eq!(d.push(&t, ids[1]), "");
+        assert_eq!(d.push(&t, ids[2]), "あ");
+        assert_eq!(d.pending(), 0);
+    }
+
+    #[test]
+    fn stream_decoder_replaces_invalid_bytes() {
+        let t = toy();
+        let mut d = StreamDecoder::new();
+        // A lone continuation byte can never become valid UTF-8.
+        assert_eq!(d.push(&t, 1 + 0x80), "\u{FFFD}");
+        // An incomplete lead byte is held — until a non-continuation
+        // proves it irreparable.
+        assert_eq!(d.push(&t, 1 + 0xE3), "");
+        assert_eq!(d.push(&t, 1 + b'a' as u32), "\u{FFFD}a");
+        assert_eq!(d.pending(), 0);
     }
 
     #[test]

@@ -9,7 +9,7 @@
 mod bpe;
 mod bytes;
 
-pub use bpe::Tokenizer;
+pub use bpe::{StreamDecoder, Tokenizer};
 pub use bytes::{byte_to_unicode, unicode_to_byte};
 
 /// Pre-tokenize text into BPE word pieces.

@@ -409,10 +409,12 @@ fn four_worker_cluster_serves_over_tcp() {
 
 #[test]
 fn stop_joins_idle_connection_threads() {
-    // Regression: stop() used to join only the accept thread, leaking one
-    // detached thread per still-connected client. With the connection
-    // registry + bounded reads, stop() must return promptly even while a
-    // client holds its connection open and idle.
+    // Regression, twice over: stop() once joined only the accept thread
+    // (leaking a detached thread per connected client), then rode out a
+    // 50ms per-connection read-timeout poll. The readiness-driven event
+    // loop checks the shutdown flag every pass (1ms idle tick), so stop()
+    // must return in single-digit milliseconds with a client still
+    // connected and idle — asserted strictly under the old 50ms poll.
     let (_c, server) = spawn_stack();
     let idle = std::net::TcpStream::connect(server.addr()).unwrap();
     // give the accept loop a beat to register the connection
@@ -420,8 +422,9 @@ fn stop_joins_idle_connection_threads() {
     let t0 = std::time::Instant::now();
     server.stop(); // would block forever on a leaked blocking read
     assert!(
-        t0.elapsed() < std::time::Duration::from_secs(5),
-        "stop() stalled on an idle connection"
+        t0.elapsed() < std::time::Duration::from_millis(50),
+        "stop() took {:?}: the shutdown path is polling, not readiness-driven",
+        t0.elapsed()
     );
     drop(idle);
 }

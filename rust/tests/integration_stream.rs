@@ -1,0 +1,771 @@
+//! Protocol conformance for the streaming network front: frame grammar,
+//! per-connection interleaving, typed mid-stream failures, half-close /
+//! disconnect resource release, per-tenant QoS counters and shedding —
+//! all over real sockets against the nonblocking event loop, plus a
+//! socket-chaos property (`ClientStall` / `TornClientWrite`) asserting
+//! the stream contract survives adversarial client I/O.
+//!
+//! Resource-release assertions poll the wire-visible stats (arena used
+//! blocks, front queue depth, inflight count) with a deadline rather
+//! than asserting one snapshot: workers publish stats at tick
+//! granularity, so a terminal frame — sent mid-tick — can race a stale
+//! snapshot by design. Stacks under conservation asserts run with
+//! `populate_cache: false` so completed requests hold no cache blocks.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use recycle_serve::config::{ModelConfig, ServerConfig};
+use recycle_serve::coordinator::Coordinator;
+use recycle_serve::engine::Engine;
+use recycle_serve::faults::{FaultHandle, FaultPlan, FaultSite};
+use recycle_serve::index::NgramEmbedder;
+use recycle_serve::prop_assert;
+use recycle_serve::recycler::{RecyclePolicy, Recycler};
+use recycle_serve::server::{Server, TcpClient};
+use recycle_serve::testutil::prop::{check, text};
+use recycle_serve::testutil::MockModel;
+use recycle_serve::tokenizer::Tokenizer;
+use recycle_serve::util::json::{self, Value};
+
+/// Worker count for the shared stack (CI reruns the suite at
+/// `RECYCLE_NUM_WORKERS=4` to cover the sharded router path).
+fn num_workers_from_env() -> usize {
+    std::env::var("RECYCLE_NUM_WORKERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1)
+}
+
+/// Mock-backed stack with an optional per-token decode delay (to keep
+/// streams open long enough to interact with mid-flight) and a fault
+/// handle armed at the front's client seams.
+fn spawn_stack_opts(
+    cfg: ServerConfig,
+    per_token: Option<Duration>,
+    faults: FaultHandle,
+) -> (Arc<Coordinator>, Server) {
+    let coordinator = Arc::new(Coordinator::spawn(
+        move |_worker| {
+            let model = match per_token {
+                Some(d) => MockModel::with_delay(ModelConfig::nano(), d),
+                None => MockModel::new(ModelConfig::nano()),
+            };
+            Recycler::new(
+                Engine::new(model),
+                Arc::new(Tokenizer::new(vec![])),
+                Box::new(NgramEmbedder::new(64)),
+                Default::default(),
+                RecyclePolicy::Strict,
+            )
+        },
+        cfg,
+    ));
+    let server =
+        Server::start_with_faults(Arc::clone(&coordinator), "127.0.0.1:0", faults).unwrap();
+    (coordinator, server)
+}
+
+fn spawn_stack_with(cfg: ServerConfig) -> (Arc<Coordinator>, Server) {
+    spawn_stack_opts(cfg, None, FaultHandle::off())
+}
+
+/// Default stack for conservation-asserting tests: cache admission off,
+/// so arena blocks drain to zero once every request has completed.
+fn drainable_cfg() -> ServerConfig {
+    ServerConfig {
+        num_workers: num_workers_from_env(),
+        populate_cache: false,
+        ..Default::default()
+    }
+}
+
+/// One streaming request line with an explicit client request id.
+fn stream_line(rid: usize, prompt: &str, max_new: usize, tenant: Option<&str>) -> String {
+    let mut fields = vec![
+        ("prompt", json::s(prompt)),
+        ("max_new_tokens", json::n(max_new as f64)),
+        ("stream", json::b(true)),
+        ("rid", json::n(rid as f64)),
+    ];
+    if let Some(t) = tenant {
+        fields.push(("tenant", json::s(t)));
+    }
+    json::obj(fields).to_json() + "\n"
+}
+
+/// Raw-socket frame reader with its OWN `\n` framing over a byte buffer.
+/// `BufReader::read_line` under a read timeout can drop a partial line
+/// on the timeout error path — exactly the corruption this suite exists
+/// to catch — so the test client never uses it.
+struct FrameReader {
+    stream: TcpStream,
+    buf: Vec<u8>,
+    eof: bool,
+}
+
+impl FrameReader {
+    fn new(stream: TcpStream) -> Self {
+        stream
+            .set_read_timeout(Some(Duration::from_millis(20)))
+            .unwrap();
+        FrameReader {
+            stream,
+            buf: Vec::new(),
+            eof: false,
+        }
+    }
+
+    /// Next complete frame, or `None` on EOF-with-empty-buffer or
+    /// deadline expiry. Timeout reads retry; framing never tears.
+    fn next_frame(&mut self, deadline: Instant) -> Option<Value> {
+        loop {
+            if let Some(pos) = self.buf.iter().position(|&b| b == b'\n') {
+                let line: Vec<u8> = self.buf.drain(..=pos).collect();
+                let text = String::from_utf8(line).expect("server frames are UTF-8");
+                return Some(json::parse(text.trim()).expect("server frames are JSON"));
+            }
+            if self.eof || Instant::now() >= deadline {
+                return None;
+            }
+            let mut chunk = [0u8; 4096];
+            match self.stream.read(&mut chunk) {
+                Ok(0) => self.eof = true,
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted
+                    ) => {}
+                Err(_) => self.eof = true,
+            }
+        }
+    }
+
+    /// Read frames until `n` terminal frames (`done` / `error`, or
+    /// event-less aggregate replies) have arrived.
+    fn collect_until_terminals(&mut self, n: usize, deadline: Instant) -> Vec<Value> {
+        let mut frames = Vec::new();
+        let mut terminals = 0;
+        while terminals < n {
+            let Some(v) = self.next_frame(deadline) else {
+                panic!(
+                    "stream ended after {terminals}/{n} terminals ({} frames): {:?}",
+                    frames.len(),
+                    frames.iter().map(|f| f.to_json()).collect::<Vec<_>>()
+                );
+            };
+            if is_terminal(&v) {
+                terminals += 1;
+            }
+            frames.push(v);
+        }
+        frames
+    }
+}
+
+/// Terminal = stream `done`/`error` frame or an aggregate reply line
+/// (which has no `event` field at all).
+fn is_terminal(v: &Value) -> bool {
+    match v.get("event").and_then(|e| e.as_str()) {
+        Some("token") => false,
+        Some(_) => true,
+        None => true,
+    }
+}
+
+fn rid_of(v: &Value) -> Option<usize> {
+    v.get("rid").and_then(|r| r.as_usize())
+}
+
+fn event_of(v: &Value) -> &str {
+    v.get("event").and_then(|e| e.as_str()).unwrap_or("")
+}
+
+fn kind_of(v: &Value) -> &str {
+    v.get("error_kind").and_then(|k| k.as_str()).unwrap_or("")
+}
+
+/// The streamed view of one rid: token frames in arrival order plus the
+/// terminal frame, checked for the per-stream frame grammar (indices
+/// strictly increasing, exactly one terminal, terminal last).
+struct StreamView {
+    tokens: Vec<(usize, u32, String)>,
+    terminal: Value,
+}
+
+/// Fallible so the chaos property reports violations through the prop
+/// harness (which prints the failing seed); plain tests `.unwrap()`.
+fn demux(frames: &[Value], rid: usize) -> Result<StreamView, String> {
+    let mut tokens: Vec<(usize, u32, String)> = Vec::new();
+    let mut terminal: Option<Value> = None;
+    for f in frames.iter().filter(|f| rid_of(f) == Some(rid)) {
+        match event_of(f) {
+            "token" => {
+                if terminal.is_some() {
+                    return Err(format!(
+                        "rid {rid}: token frame after the terminal: {}",
+                        f.to_json()
+                    ));
+                }
+                let index = f
+                    .get("index")
+                    .and_then(|v| v.as_usize())
+                    .ok_or_else(|| format!("rid {rid}: token frame without index"))?;
+                let id = f.get("id").and_then(|v| v.as_i64()).unwrap_or(0) as u32;
+                let text = f
+                    .get("text")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| format!("rid {rid}: token frame without text"))?
+                    .to_string();
+                tokens.push((index, id, text));
+            }
+            "done" | "error" => {
+                if terminal.is_some() {
+                    return Err(format!(
+                        "rid {rid}: second terminal frame: {}",
+                        f.to_json()
+                    ));
+                }
+                terminal = Some(f.clone());
+            }
+            other => {
+                return Err(format!(
+                    "rid {rid}: unknown event {other:?}: {}",
+                    f.to_json()
+                ))
+            }
+        }
+    }
+    let terminal = terminal.ok_or_else(|| format!("rid {rid}: no terminal frame"))?;
+    for w in tokens.windows(2) {
+        if w[1].0 <= w[0].0 {
+            return Err(format!(
+                "rid {rid}: token indices not strictly increasing: {} then {}",
+                w[0].0, w[1].0
+            ));
+        }
+    }
+    // the streaming-identity law at the frame level: a successful
+    // terminal aggregates exactly the streamed tokens
+    if terminal.get("ok").and_then(|v| v.as_bool()) == Some(true) {
+        let concat: String = tokens.iter().map(|(_, _, t)| t.as_str()).collect();
+        let output = terminal
+            .get("output")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| format!("rid {rid}: done frame without output"))?;
+        if concat != output {
+            return Err(format!(
+                "rid {rid}: concat(token.text) {concat:?} != done.output {output:?}"
+            ));
+        }
+        if terminal.get("new_tokens").and_then(|v| v.as_usize()) != Some(tokens.len()) {
+            return Err(format!(
+                "rid {rid}: done.new_tokens != {} streamed tokens",
+                tokens.len()
+            ));
+        }
+    }
+    Ok(StreamView { tokens, terminal })
+}
+
+fn front_i64(stats: &Value, key: &str) -> i64 {
+    stats
+        .get("front")
+        .and_then(|f| f.get(key))
+        .and_then(|v| v.as_i64())
+        .unwrap_or_else(|| panic!("missing front.{key} in {}", stats.to_json()))
+}
+
+fn tenant_i64(stats: &Value, tenant: &str, key: &str) -> i64 {
+    stats
+        .get("front")
+        .and_then(|f| f.get("tenants"))
+        .and_then(|t| t.get(tenant))
+        .and_then(|c| c.get(key))
+        .and_then(|v| v.as_i64())
+        .unwrap_or_else(|| panic!("missing front.tenants.{tenant}.{key} in {}", stats.to_json()))
+}
+
+fn arena_used(stats: &Value) -> i64 {
+    stats
+        .get("stats")
+        .and_then(|s| s.get("aggregate"))
+        .and_then(|a| a.get("arena_used_blocks"))
+        .and_then(|v| v.as_i64())
+        .expect("aggregate.arena_used_blocks in stats")
+}
+
+/// Poll the wire stats until the serving path is fully drained: no
+/// front-queued or inflight requests and zero arena blocks in use (the
+/// conservation law, observed over the wire).
+fn try_wait_drained(addr: SocketAddr, deadline: Instant) -> Result<(), String> {
+    let mut client = TcpClient::connect(addr).map_err(|e| e.to_string())?;
+    loop {
+        let s = client.stats().map_err(|e| e.to_string())?;
+        let used = arena_used(&s);
+        let queued = front_i64(&s, "queued");
+        let inflight = front_i64(&s, "inflight");
+        if used == 0 && queued == 0 && inflight == 0 {
+            return Ok(());
+        }
+        if Instant::now() >= deadline {
+            return Err(format!(
+                "serving path did not drain: arena_used_blocks={used} queued={queued} inflight={inflight}"
+            ));
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn wait_drained(addr: SocketAddr) {
+    try_wait_drained(addr, Instant::now() + Duration::from_secs(10)).unwrap();
+}
+
+// --- framing + identity ----------------------------------------------------
+
+#[test]
+fn streamed_tokens_reassemble_the_aggregate_reply() {
+    let (_c, server) = spawn_stack_with(drainable_cfg());
+    let mut client = TcpClient::connect(server.addr()).unwrap();
+    let prompt = "stream me the capital of france";
+    let streamed = client
+        .generate_streaming(prompt, 6, None, None)
+        .unwrap();
+    assert!(streamed.is_ok(), "terminal: {}", streamed.done.to_json());
+    assert_eq!(streamed.tokens.len(), 6);
+    assert!(
+        streamed.ttft.is_some(),
+        "a successful stream must record client-visible TTFT"
+    );
+    // done carries the aggregate payload: it IS the whole reply
+    let output = streamed
+        .done
+        .get("output")
+        .and_then(|v| v.as_str())
+        .unwrap()
+        .to_string();
+    assert_eq!(streamed.text(), output);
+    assert_eq!(
+        streamed.done.get("new_tokens").and_then(|v| v.as_usize()),
+        Some(streamed.tokens.len())
+    );
+    // the same request in aggregate mode produces the identical output
+    // (populate_cache off: both runs are cold, so byte-identical)
+    let agg = client.request(prompt, 6, None).unwrap();
+    assert_eq!(agg.get("ok").and_then(|v| v.as_bool()), Some(true));
+    assert_eq!(agg.get("output").and_then(|v| v.as_str()), Some(output.as_str()));
+    wait_drained(server.addr());
+    server.stop();
+}
+
+#[test]
+fn interleaved_streams_on_one_connection_demux_by_rid() {
+    let (_c, server) = spawn_stack_with(ServerConfig {
+        num_workers: num_workers_from_env(),
+        ..Default::default()
+    });
+    let stream = TcpStream::connect(server.addr()).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    // three streams pipelined in ONE write: their frames may interleave
+    // arbitrarily on the wire; the echoed rid is the only demux key
+    let batch: String = [
+        stream_line(0, "first interleaved stream", 3, None),
+        stream_line(1, "second interleaved stream", 4, None),
+        stream_line(2, "third interleaved stream", 5, None),
+    ]
+    .concat();
+    w.write_all(batch.as_bytes()).unwrap();
+    let mut r = FrameReader::new(stream);
+    let frames = r.collect_until_terminals(3, Instant::now() + Duration::from_secs(30));
+    for (rid, want) in [(0usize, 3usize), (1, 4), (2, 5)] {
+        let view = demux(&frames, rid).unwrap();
+        assert_eq!(event_of(&view.terminal), "done", "rid {rid} failed: {}", view.terminal.to_json());
+        assert_eq!(view.tokens.len(), want, "rid {rid}: wrong token count");
+    }
+    server.stop();
+}
+
+#[test]
+fn mid_stream_garbage_gets_typed_error_and_stream_survives() {
+    // garbage lines arriving WHILE a stream is in flight must produce
+    // typed error replies on the live connection without tearing the
+    // stream — the paced model keeps the stream open across the garbage
+    let (_c, server) = spawn_stack_opts(
+        ServerConfig {
+            num_workers: num_workers_from_env(),
+            ..Default::default()
+        },
+        Some(Duration::from_millis(2)),
+        FaultHandle::off(),
+    );
+    let stream = TcpStream::connect(server.addr()).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    w.write_all(stream_line(7, "a stream that must survive garbage", 6, None).as_bytes())
+        .unwrap();
+    w.write_all(b"this is not json\n").unwrap();
+    w.write_all(b"\xff\xfe not utf8 \x80\n").unwrap();
+    let mut r = FrameReader::new(stream);
+    // 3 terminals: the stream's done + two aggregate error replies
+    let frames = r.collect_until_terminals(3, Instant::now() + Duration::from_secs(30));
+    let garbage: Vec<&Value> = frames.iter().filter(|f| event_of(f).is_empty()).collect();
+    assert_eq!(garbage.len(), 2, "expected two aggregate error replies");
+    for g in &garbage {
+        assert_eq!(g.get("ok").and_then(|v| v.as_bool()), Some(false));
+        assert_eq!(kind_of(g), "json", "wrong kind: {}", g.to_json());
+    }
+    assert!(
+        garbage
+            .iter()
+            .any(|g| g.get("error").and_then(|v| v.as_str()).unwrap_or("").contains("UTF-8")),
+        "the invalid-UTF-8 line must say so"
+    );
+    let view = demux(&frames, 7).unwrap();
+    assert_eq!(event_of(&view.terminal), "done", "stream torn by garbage: {}", view.terminal.to_json());
+    assert_eq!(view.tokens.len(), 6);
+    // connection still serves after the garbage
+    w.write_all(br#"{"prompt": "after the garbage", "max_new_tokens": 2}"#)
+        .unwrap();
+    w.write_all(b"\n").unwrap();
+    let probe = r
+        .next_frame(Instant::now() + Duration::from_secs(10))
+        .expect("probe reply");
+    assert_eq!(probe.get("ok").and_then(|v| v.as_bool()), Some(true));
+    server.stop();
+}
+
+// --- half-close and disconnect resource release ----------------------------
+
+#[test]
+fn half_close_drains_stream_then_server_reaps() {
+    let (_c, server) = spawn_stack_with(drainable_cfg());
+    let stream = TcpStream::connect(server.addr()).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let batch: String = [
+        stream_line(0, "half closed but fully served", 4, None),
+        // pipelined aggregate request on the same dying connection
+        r#"{"prompt": "aggregate before the close", "max_new_tokens": 2}"#.to_string() + "\n",
+    ]
+    .concat();
+    w.write_all(batch.as_bytes()).unwrap();
+    // half-close: server sees EOF but must drain both replies first
+    stream.shutdown(Shutdown::Write).unwrap();
+    let mut r = FrameReader::new(stream);
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut frames = Vec::new();
+    while let Some(f) = r.next_frame(deadline) {
+        frames.push(f);
+    }
+    assert!(r.eof, "server must close the drained half-closed connection");
+    let view = demux(&frames, 0).unwrap();
+    assert_eq!(event_of(&view.terminal), "done");
+    assert_eq!(view.tokens.len(), 4);
+    let agg: Vec<&Value> = frames.iter().filter(|f| event_of(f).is_empty()).collect();
+    assert_eq!(agg.len(), 1, "exactly one aggregate reply");
+    assert_eq!(agg[0].get("ok").and_then(|v| v.as_bool()), Some(true));
+    // every slot and block released (fresh connection: the old one is gone)
+    wait_drained(server.addr());
+    server.stop();
+}
+
+#[test]
+fn mid_stream_disconnect_releases_slots_and_blocks() {
+    // a client vanishing mid-stream must not leak its slot or arena
+    // blocks: the paced model guarantees the drop lands mid-generation
+    let (_c, server) = spawn_stack_opts(
+        ServerConfig {
+            num_workers: 1,
+            populate_cache: false,
+            ..Default::default()
+        },
+        Some(Duration::from_millis(2)),
+        FaultHandle::off(),
+    );
+    {
+        let stream = TcpStream::connect(server.addr()).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        w.write_all(stream_line(0, "doomed client mid stream", 64, None).as_bytes())
+            .unwrap();
+        let mut r = FrameReader::new(stream);
+        let first = r
+            .next_frame(Instant::now() + Duration::from_secs(10))
+            .expect("at least one token frame before the disconnect");
+        assert_eq!(event_of(&first), "token");
+        // dropped here: RST/FIN mid-stream, ~126 tokens still unwritten
+    }
+    try_wait_drained(server.addr(), Instant::now() + Duration::from_secs(15)).unwrap();
+    // the front still serves new clients after the abandonment
+    let mut client = TcpClient::connect(server.addr()).unwrap();
+    let r = client.request("alive after the disconnect", 2, None).unwrap();
+    assert_eq!(r.get("ok").and_then(|v| v.as_bool()), Some(true));
+    server.stop();
+}
+
+// --- per-tenant QoS --------------------------------------------------------
+
+#[test]
+fn stats_reports_per_tenant_front_counters() {
+    let (_c, server) = spawn_stack_with(drainable_cfg());
+    let mut client = TcpClient::connect(server.addr()).unwrap();
+    let a1 = client
+        .generate_streaming("alice first question", 3, None, Some("alice"))
+        .unwrap();
+    assert!(a1.is_ok());
+    let a2 = client
+        .generate_streaming("alice second question", 5, None, Some("alice"))
+        .unwrap();
+    assert!(a2.is_ok());
+    let b = client
+        .request_opts("bob aggregate question", 2, None, Some("bob"))
+        .unwrap();
+    assert_eq!(b.get("ok").and_then(|v| v.as_bool()), Some(true));
+    let s = client.stats().unwrap();
+    assert_eq!(tenant_i64(&s, "alice", "accepted"), 2);
+    assert_eq!(tenant_i64(&s, "alice", "completed"), 2);
+    assert_eq!(tenant_i64(&s, "alice", "shed"), 0);
+    assert_eq!(tenant_i64(&s, "alice", "tokens_streamed"), 3 + 5);
+    assert_eq!(tenant_i64(&s, "alice", "first_tokens"), 2);
+    assert_eq!(tenant_i64(&s, "alice", "weight"), 1);
+    assert_eq!(tenant_i64(&s, "bob", "accepted"), 1);
+    assert_eq!(tenant_i64(&s, "bob", "completed"), 1);
+    // aggregate requests stream nothing
+    assert_eq!(tenant_i64(&s, "bob", "tokens_streamed"), 0);
+    assert_eq!(
+        s.get("front")
+            .and_then(|f| f.get("overloaded"))
+            .and_then(|v| v.as_bool()),
+        Some(false)
+    );
+    wait_drained(server.addr());
+    server.stop();
+}
+
+#[test]
+fn tenant_queue_overflow_sheds_typed_overloaded_not_silent_drops() {
+    // downstream intentionally tiny (queue_capacity 1, max_batch 1, paced
+    // model): the front's pump backs up immediately, so a burst overflows
+    // the 2-deep tenant queue and sheds — every shed must be a typed
+    // `overloaded` terminal on the live stream, never a dropped rid
+    let (_c, server) = spawn_stack_opts(
+        ServerConfig {
+            num_workers: 1,
+            queue_capacity: 1,
+            max_batch: 1,
+            tenant_queue_capacity: 2,
+            populate_cache: false,
+            ..Default::default()
+        },
+        Some(Duration::from_micros(500)),
+        FaultHandle::off(),
+    );
+    let stream = TcpStream::connect(server.addr()).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let n = 8usize;
+    let batch: String = (0..n)
+        .map(|rid| stream_line(rid, &format!("burst request number {rid}"), 4, None))
+        .collect();
+    // one write: the whole burst lands in one read pass, before any pump
+    w.write_all(batch.as_bytes()).unwrap();
+    let mut r = FrameReader::new(stream);
+    let frames = r.collect_until_terminals(n, Instant::now() + Duration::from_secs(30));
+    let mut shed = 0;
+    let mut done = 0;
+    for rid in 0..n {
+        let view = demux(&frames, rid).unwrap();
+        match event_of(&view.terminal) {
+            "done" => {
+                done += 1;
+                assert_eq!(view.tokens.len(), 4, "rid {rid}");
+            }
+            "error" => {
+                assert_eq!(
+                    kind_of(&view.terminal),
+                    "overloaded",
+                    "rid {rid}: wrong kind: {}",
+                    view.terminal.to_json()
+                );
+                assert!(view.tokens.is_empty(), "rid {rid}: shed after tokens");
+                shed += 1;
+            }
+            other => panic!("rid {rid}: unexpected terminal {other:?}"),
+        }
+    }
+    assert!(shed >= 1, "an 8-burst into a 2-deep queue must shed");
+    assert!(done >= 1, "queued requests must still complete");
+    // the sheds are visible in the per-tenant counters
+    let mut client = TcpClient::connect(server.addr()).unwrap();
+    let s = client.stats().unwrap();
+    assert_eq!(tenant_i64(&s, "anon", "shed"), shed);
+    assert_eq!(tenant_i64(&s, "anon", "completed"), done);
+    wait_drained(server.addr());
+    server.stop();
+}
+
+#[test]
+fn front_queue_deadline_is_a_typed_error_not_a_hang() {
+    // a slow backlog against a short request budget: late requests must
+    // die with `deadline_exceeded` (front-queue or scheduler-side — both
+    // carry the same kind), and early ones must still complete
+    let (_c, server) = spawn_stack_opts(
+        ServerConfig {
+            num_workers: 1,
+            queue_capacity: 1,
+            max_batch: 1,
+            request_timeout_ms: 150,
+            populate_cache: false,
+            ..Default::default()
+        },
+        Some(Duration::from_millis(5)),
+        FaultHandle::off(),
+    );
+    let stream = TcpStream::connect(server.addr()).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let n = 12usize;
+    let batch: String = (0..n)
+        .map(|rid| stream_line(rid, &format!("deadline probe {rid}"), 4, None))
+        .collect();
+    w.write_all(batch.as_bytes()).unwrap();
+    let mut r = FrameReader::new(stream);
+    let frames = r.collect_until_terminals(n, Instant::now() + Duration::from_secs(30));
+    let mut expired = 0;
+    let mut done = 0;
+    for rid in 0..n {
+        let view = demux(&frames, rid).unwrap();
+        match event_of(&view.terminal) {
+            "done" => done += 1,
+            "error" => {
+                let kind = kind_of(&view.terminal).to_string();
+                assert!(
+                    kind == "deadline_exceeded" || kind == "overloaded",
+                    "rid {rid}: unexpected kind {kind:?}"
+                );
+                if kind == "deadline_exceeded" {
+                    expired += 1;
+                }
+            }
+            other => panic!("rid {rid}: unexpected terminal {other:?}"),
+        }
+    }
+    assert!(done >= 1, "the head of the backlog must complete in budget");
+    assert!(
+        expired >= 1,
+        "a ~240ms backlog against a 150ms budget must expire some requests"
+    );
+    server.stop();
+}
+
+#[test]
+fn wait_gate_sheds_new_arrivals_under_live_overload() {
+    // qos_shed_wait_ms=1 arms the live overload gate: once the worker
+    // queue wait (differenced from scheduler snapshots) crosses 1ms, NEW
+    // arrivals shed typed instead of joining the latency tail
+    let (_c, server) = spawn_stack_opts(
+        ServerConfig {
+            num_workers: 1,
+            max_batch: 1,
+            qos_shed_wait_ms: 1,
+            populate_cache: false,
+            ..Default::default()
+        },
+        Some(Duration::from_millis(2)),
+        FaultHandle::off(),
+    );
+    // flood: 24 streams x 8 tokens x 2ms ≈ 380ms of serialized backlog
+    let flood = TcpStream::connect(server.addr()).unwrap();
+    let mut fw = flood.try_clone().unwrap();
+    let batch: String = (0..24)
+        .map(|rid| stream_line(rid, &format!("flood request {rid}"), 8, None))
+        .collect();
+    fw.write_all(batch.as_bytes()).unwrap();
+    // probe until the gate trips and sheds one of ours
+    let mut probe = TcpClient::connect(server.addr()).unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let r = probe.request("probe under overload", 1, None).unwrap();
+        if r.get("ok").and_then(|v| v.as_bool()) == Some(false) {
+            assert_eq!(kind_of(&r), "overloaded", "wrong shed kind: {}", r.to_json());
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "overload gate never tripped under a 380ms backlog"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    drop(fw);
+    drop(flood);
+    server.stop();
+}
+
+// --- socket chaos ----------------------------------------------------------
+
+#[test]
+fn prop_socket_faults_never_tear_frames_or_leak() {
+    // adversarial client I/O — stalled reads and torn writes at random
+    // rates — must delay frames, never corrupt them: per rid exactly one
+    // terminal, strictly increasing indices, identity on success, and
+    // the serving path fully drained afterwards
+    check("socket_faults_preserve_stream_contract", 5, |rng| {
+        let plan = FaultPlan::new(rng.next_u64())
+            .with_rate(FaultSite::ClientStall, rng.f64() * 0.2)
+            .with_rate(FaultSite::TornClientWrite, rng.f64() * 0.4);
+        let handle = plan.clone().install();
+        let (_c, server) = spawn_stack_opts(
+            ServerConfig {
+                num_workers: 1,
+                populate_cache: false,
+                ..Default::default()
+            },
+            None,
+            handle,
+        );
+        let n = rng.range(2, 7);
+        let stream = TcpStream::connect(server.addr()).map_err(|e| e.to_string())?;
+        let mut w = stream.try_clone().map_err(|e| e.to_string())?;
+        let specs: Vec<(usize, usize)> = (0..n).map(|rid| (rid, rng.range(1, 9))).collect();
+        let batch: String = specs
+            .iter()
+            .map(|&(rid, max_new)| {
+                let prompt = format!("chaos {rid} {}", text(rng, 30));
+                stream_line(rid, &prompt, max_new, None)
+            })
+            .collect();
+        w.write_all(batch.as_bytes()).map_err(|e| e.to_string())?;
+        let mut r = FrameReader::new(stream);
+        let deadline = Instant::now() + Duration::from_secs(20);
+        let mut frames = Vec::new();
+        let mut terminals = 0;
+        while terminals < n {
+            let Some(f) = r.next_frame(deadline) else {
+                return Err(format!(
+                    "stream ended after {terminals}/{n} terminals under {:?}",
+                    plan
+                ));
+            };
+            if is_terminal(&f) {
+                terminals += 1;
+            }
+            frames.push(f);
+        }
+        for &(rid, max_new) in &specs {
+            let view = demux(&frames, rid)?;
+            prop_assert!(
+                event_of(&view.terminal) == "done",
+                "rid {rid}: socket faults must not fail requests: {}",
+                view.terminal.to_json()
+            );
+            prop_assert!(
+                view.tokens.len() == max_new,
+                "rid {rid}: {} tokens streamed, wanted {max_new}",
+                view.tokens.len()
+            );
+        }
+        // the drain probe runs under the same fault rates — stalls and
+        // torn writes only delay it, and the deadline absorbs that
+        try_wait_drained(server.addr(), Instant::now() + Duration::from_secs(15))?;
+        server.stop();
+        Ok(())
+    });
+}

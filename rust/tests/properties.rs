@@ -8,7 +8,9 @@ use std::sync::Arc;
 
 use recycle_serve::bench::{multi_tenant_trace, TraceSpec};
 use recycle_serve::config::{CacheConfig, EvictionPolicy, ModelConfig, RoutingPolicy, ServerConfig};
-use recycle_serve::coordinator::{admission_prompt, Coordinator, SchedEvent, SessionManager};
+use recycle_serve::coordinator::{
+    admission_prompt, Coordinator, Response, SchedEvent, SessionManager, StreamEvent,
+};
 use recycle_serve::engine::{plan_chunks, DecodeStream, Engine};
 use recycle_serve::error::Error;
 use recycle_serve::faults::{FaultHandle, FaultPlan, FaultSite};
@@ -1371,6 +1373,67 @@ fn sequential_reference_on(
     expected
 }
 
+/// Per-request stream contract over a [`TraceRun`] (the harness attaches
+/// a stream channel to every request): each captured event sequence must
+/// be zero or more `Token`s followed by exactly one terminal `End` that
+/// mirrors the aggregate reply, and the reassembled token ids — applying
+/// the client's truncate-on-regression discipline, so transient-retry
+/// replays are legal — must equal the aggregate output exactly.
+fn stream_contract(run: &TraceRun) -> std::result::Result<(), String> {
+    for (i, events) in run.streams.iter().enumerate() {
+        let mut ids: Vec<u32> = Vec::new();
+        let mut end: Option<&Response> = None;
+        for ev in events {
+            match ev {
+                StreamEvent::Token { index, id, .. } => {
+                    if end.is_some() {
+                        return Err(format!("request {i}: token event after End"));
+                    }
+                    if *index > ids.len() {
+                        return Err(format!(
+                            "request {i}: token index {index} skips ahead of {}",
+                            ids.len()
+                        ));
+                    }
+                    ids.truncate(*index);
+                    ids.push(*id);
+                }
+                StreamEvent::End(resp) => {
+                    if end.is_some() {
+                        return Err(format!("request {i}: second End event"));
+                    }
+                    end = Some(resp);
+                }
+            }
+        }
+        let Some(end) = end else {
+            return Err(format!("request {i}: stream never terminated"));
+        };
+        match (&run.outputs[i], end) {
+            (Ok(out), Response::Ok(o)) => {
+                if &o.ids != out {
+                    return Err(format!(
+                        "request {i}: End outcome diverges from the aggregate reply"
+                    ));
+                }
+                if &ids != out {
+                    return Err(format!(
+                        "request {i}: streamed ids {ids:?} != aggregate output {out:?}"
+                    ));
+                }
+            }
+            (Err(_), Response::Err { .. }) => {}
+            (want, got) => {
+                return Err(format!(
+                    "request {i}: End event disagrees with the aggregate reply: \
+                     aggregate {want:?} vs End {got:?}"
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
 /// Run the chunked-prefill scheduler over `script` and compare every
 /// request's tokens against the sequential reference. `Err` carries the
 /// first mismatch (or a non-converging run) — the shrink predicate.
@@ -1392,6 +1455,7 @@ fn chunked_vs_sequential(
             }
         }
     }
+    stream_contract(&run)?;
     Ok(run)
 }
 
@@ -1527,6 +1591,69 @@ fn prop_recycled_equals_baseline_any_split() {
     });
 }
 
+#[test]
+fn prop_streamed_tokens_identical_to_aggregate_and_reference() {
+    // THE streaming-identity property, end to end through the trace
+    // harness: for random workloads, every request's streamed events
+    // reassemble to exactly the aggregate reply (ids AND incremental
+    // text — the decoder's end-of-stream flush makes text byte-exact
+    // even when a token splits a UTF-8 character), and both equal the
+    // sequential no-fault reference. The CI slow lane runs this at 10x
+    // via PALLAS_PROP_CASES; failures print a PALLAS_PROP_SEED repro.
+    check("streamed == aggregate == sequential reference", 10, |rng| {
+        let script = random_workload(rng);
+        let cfg = ServerConfig {
+            max_batch: rng.range(2, 5),
+            prefill_chunk_tokens: rng.range(1, 48),
+            max_prefilling_slots: rng.range(1, 3),
+            ..Default::default()
+        };
+        let reference = sequential_reference(RecyclePolicy::Strict, &script);
+        let run = run_script(
+            || mk_recycler(RecyclePolicy::Strict),
+            cfg.clone(),
+            &script,
+            50_000,
+        )?;
+        stream_contract(&run)?;
+        for (i, events) in run.streams.iter().enumerate() {
+            let concat: String = events
+                .iter()
+                .filter_map(|ev| match ev {
+                    StreamEvent::Token { text, .. } => Some(text.as_str()),
+                    StreamEvent::End(_) => None,
+                })
+                .collect();
+            match events.last() {
+                Some(StreamEvent::End(Response::Ok(o))) => {
+                    prop_assert!(
+                        concat == o.text,
+                        "request {i}: streamed text {concat:?} != aggregate {:?}",
+                        o.text
+                    );
+                    prop_assert!(
+                        matches!(&reference[i], Ok(w) if *w == o.ids),
+                        "request {i}: diverged from the sequential reference: \
+                         streamed {:?} vs reference {:?}",
+                        o.ids,
+                        reference[i]
+                    );
+                }
+                Some(StreamEvent::End(Response::Err { .. })) => {
+                    prop_assert!(
+                        reference[i].is_err(),
+                        "request {i}: stream failed but the fault-free reference succeeded"
+                    );
+                }
+                other => {
+                    prop_assert!(false, "request {i}: stream did not end with End: {other:?}");
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
 // ---------- chaos: fault injection vs the serving contract ----------
 
 /// The scheduler arm of a chaos run: mock backend + spill tier + arena all
@@ -1639,9 +1766,11 @@ fn random_fault_plan(rng: &mut Rng) -> FaultPlan {
 ///
 /// 1. **termination** — the run converges within the tick bound;
 /// 2. **exactly one reply** per request (no dropped reply channels);
-/// 3. **arena conservation** — blocks stay conserved and fully drain once
+/// 3. **exactly one terminal stream event** per request, with token
+///    events strictly before it and reassembling to the reply's ids;
+/// 4. **arena conservation** — blocks stay conserved and fully drain once
 ///    the scheduler is gone, however the fault schedule interleaved;
-/// 4. **fault-free identity** — every request that still succeeded emits
+/// 5. **fault-free identity** — every request that still succeeded emits
 ///    exactly the tokens an undisturbed sequential run emits (retries and
 ///    cache-path faults are invisible in the output stream).
 ///
@@ -1661,6 +1790,11 @@ fn chaos_contract(
             }
         }
     }
+    // the stream-side mirror of the one-reply contract: exactly one End
+    // per request, tokens strictly before it, and the reassembled ids
+    // (truncate-on-regression for retry replays) equal to the reply —
+    // however the fault schedule interleaved
+    stream_contract(&run)?;
     assert_arena_conserved(&arena, "after chaos run")?;
     if arena.free_blocks() != arena.capacity_blocks() {
         return Err(format!(
